@@ -1,0 +1,63 @@
+//! **Table 3 / Table 4**: the draft-model-size ablation — fixed target,
+//! draft ∈ {1h1l (draft), 2h4l (draft2), 4h6l (draft3)}; report ΔL,
+//! distance, acceptance rate α, wall times and speedup.
+//!
+//!     cargo run --release --example ablation_draft_size -- \
+//!         [--datasets multihawkes,taobao_sim] [--encoders attnhp]
+//!         [--gamma 10] [--t-end 50] [--n-seq 2] [--seeds 0,1,2]
+
+use anyhow::Result;
+use tpp_sd::bench::{synthetic_cell, EvalCfg};
+use tpp_sd::processes::from_dataset_json;
+use tpp_sd::runtime::{ArtifactDir, ModelExecutor};
+use tpp_sd::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let datasets = args.list_or("datasets", &["multihawkes", "taobao_sim"]);
+    let encoders = args.list_or("encoders", &["attnhp"]);
+    let drafts = args.list_or("draft-sizes", &["draft", "draft2", "draft3"]);
+    let cfg0 = EvalCfg {
+        t_end: args.f64_or("t-end", 50.0),
+        n_seq: args.usize_or("n-seq", 2),
+        seeds: args
+            .list_or("seeds", &["0", "1", "2"])
+            .iter()
+            .map(|s| s.parse().unwrap())
+            .collect(),
+        gamma: args.usize_or("gamma", 10),
+        ..Default::default()
+    };
+
+    let art = ArtifactDir::discover()?;
+    let ds_json = art.datasets_json()?;
+    let client = tpp_sd::runtime::cpu_client()?;
+
+    println!("=== Table 3/4: draft-model size ablation (γ={}) ===", cfg0.gamma);
+    println!(
+        "{:<13} {:<7} {:<8} | {:>8} {:>7} | {:>6} | {:>8} {:>8} | {:>7}",
+        "dataset", "enc", "draft", "ΔL_sd", "KS_sd", "α", "T_ar", "T_sd", "speedup"
+    );
+
+    for ds in &datasets {
+        let dcfg = ds_json.path(&format!("datasets.{ds}")).expect("dataset");
+        let process = from_dataset_json(dcfg)?;
+        let num_types = dcfg.usize_at("num_types").unwrap();
+        for enc in &encoders {
+            let target = ModelExecutor::load(client.clone(), &art, ds, enc, "target")?;
+            target.warmup_batch(1)?;
+            for dsize in &drafts {
+                let draft = ModelExecutor::load(client.clone(), &art, ds, enc, dsize)?;
+                draft.warmup_batch(1)?;
+                let cell =
+                    synthetic_cell(&target, &draft, process.as_ref(), num_types, &cfg0)?;
+                println!(
+                    "{:<13} {:<7} {:<8} | {:>8.3} {:>7.3} | {:>6.2} | {:>7.2}s {:>7.2}s | {:>6.2}x",
+                    ds, enc, dsize, cell.dl_sd, cell.ks_sd, cell.alpha,
+                    cell.t_ar, cell.t_sd, cell.speedup
+                );
+            }
+        }
+    }
+    Ok(())
+}

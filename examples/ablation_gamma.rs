@@ -1,0 +1,82 @@
+//! **Figure 3 / Figure 6**: the draft-length ablation — sweep γ and record
+//! ΔL, the distance metric (KS for synthetic / D_WS for real), acceptance
+//! rate α and the speedup ratio. Also ablates the adaptive-γ extension.
+//!
+//!     cargo run --release --example ablation_gamma -- \
+//!         [--dataset multihawkes] [--encoder attnhp] \
+//!         [--gammas 1,2,5,10,20,40,60] [--t-end 50] [--n-seq 2] [--seeds 0,1]
+//!         [--with-adaptive]
+
+use anyhow::Result;
+use tpp_sd::bench::{synthetic_cell, EvalCfg};
+use tpp_sd::processes::from_dataset_json;
+use tpp_sd::runtime::{ArtifactDir, ModelExecutor};
+use tpp_sd::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let dataset = args.str_or("dataset", "multihawkes").to_string();
+    let encoder = args.str_or("encoder", "attnhp").to_string();
+    let gammas: Vec<usize> = args
+        .list_or("gammas", &["1", "2", "5", "10", "20", "40", "60"])
+        .iter()
+        .map(|s| s.parse().unwrap())
+        .collect();
+    let seeds: Vec<u64> = args
+        .list_or("seeds", &["0", "1"])
+        .iter()
+        .map(|s| s.parse().unwrap())
+        .collect();
+
+    let art = ArtifactDir::discover()?;
+    let ds_json = art.datasets_json()?;
+    let dcfg = ds_json.path(&format!("datasets.{dataset}")).expect("dataset");
+    let process = from_dataset_json(dcfg)?;
+    let num_types = dcfg.usize_at("num_types").unwrap();
+    let client = tpp_sd::runtime::cpu_client()?;
+    let target = ModelExecutor::load(client.clone(), &art, &dataset, &encoder, "target")?;
+    target.warmup_batch(1)?;
+    let draft = ModelExecutor::load(client.clone(), &art, &dataset, &encoder, "draft")?;
+    draft.warmup_batch(1)?;
+
+    println!(
+        "=== Fig 3/6: draft-length sweep ({dataset}, {encoder}, {} seeds) ===",
+        seeds.len()
+    );
+    println!(
+        "{:>6} {:>9} | {:>8} {:>7} | {:>8} {:>8} | {:>7} {:>6}",
+        "γ", "mode", "ΔL_sd", "KS_sd", "T_ar", "T_sd", "speedup", "α"
+    );
+
+    let run = |gamma: usize, adaptive: bool| -> Result<()> {
+        let cfg = EvalCfg {
+            t_end: args.f64_or("t-end", 50.0),
+            n_seq: args.usize_or("n-seq", 2),
+            seeds: seeds.clone(),
+            gamma,
+            adaptive,
+            ..Default::default()
+        };
+        let cell = synthetic_cell(&target, &draft, process.as_ref(), num_types, &cfg)?;
+        println!(
+            "{:>6} {:>9} | {:>8.3} {:>7.3} | {:>7.2}s {:>7.2}s | {:>6.2}x {:>6.2}",
+            gamma,
+            if adaptive { "adaptive" } else { "fixed" },
+            cell.dl_sd,
+            cell.ks_sd,
+            cell.t_ar,
+            cell.t_sd,
+            cell.speedup,
+            cell.alpha
+        );
+        Ok(())
+    };
+
+    for &g in &gammas {
+        run(g, false)?;
+    }
+    if args.has("with-adaptive") {
+        run(args.usize_or("adaptive-init", 10), true)?;
+    }
+    Ok(())
+}

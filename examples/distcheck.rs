@@ -1,0 +1,37 @@
+use tpp_sd::runtime::{ArtifactDir, ModelExecutor};
+use tpp_sd::sampler::{sample_ar, sample_sd, Gamma, SampleCfg, SdCfg};
+use tpp_sd::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let art = ArtifactDir::discover()?;
+    let client = tpp_sd::runtime::cpu_client()?;
+    let target = ModelExecutor::load(client.clone(), &art, "hawkes", "thp", "target")?;
+    let draft = ModelExecutor::load(client, &art, "hawkes", "thp", "draft")?;
+    let cfg = SampleCfg { num_types: 1, t_end: 10.0, max_events: 4096 };
+    let n = 30;
+    let mut ar_counts = vec![]; let mut sd_counts = vec![];
+    let mut ar_taus = vec![]; let mut sd_taus = vec![];
+    for s in 0..n {
+        let mut rng = Rng::new(1000 + s);
+        let (ev, _) = sample_ar(&target, &cfg, &mut rng)?;
+        ar_counts.push(ev.len() as f64);
+        ar_taus.extend(tpp_sd::events::intervals(&ev));
+        let mut rng = Rng::new(5000 + s);
+        let sd_cfg = SdCfg { sample: cfg.clone(), gamma: Gamma::Fixed(10), ..Default::default() };
+        let (ev, _) = sample_sd(&target, &draft, &sd_cfg, &mut rng)?;
+        sd_counts.push(ev.len() as f64);
+        sd_taus.extend(tpp_sd::events::intervals(&ev));
+    }
+    let m = |v: &Vec<f64>| v.iter().sum::<f64>() / v.len() as f64;
+    println!("AR count mean {:.1}  SD count mean {:.1}", m(&ar_counts), m(&sd_counts));
+    println!("AR tau mean {:.4} (n={})  SD tau mean {:.4} (n={})", m(&ar_taus), ar_taus.len(), m(&sd_taus), sd_taus.len());
+    // two-sample KS on taus
+    let mut a = ar_taus.clone(); a.sort_by(|x,y| x.partial_cmp(y).unwrap());
+    let ks = tpp_sd::metrics::ks::ks_statistic(&sd_taus, |x| {
+        let idx = a.partition_point(|&v| v <= x);
+        idx as f64 / a.len() as f64
+    });
+    let band = 1.36*((a.len()+sd_taus.len()) as f64 /(a.len() as f64*sd_taus.len() as f64)).sqrt();
+    println!("two-sample KS {:.4} (95% crit {:.4})", ks, band);
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Quickstart: load a trained target+draft pair, sample with AR and TPP-SD,
+//! and report the speedup + acceptance rate.
+//!
+//!     cargo run --release --example quickstart -- \
+//!         [--dataset hawkes] [--encoder attnhp] [--gamma 10] [--t-end 30]
+
+use anyhow::Result;
+use tpp_sd::runtime::{ArtifactDir, ModelExecutor};
+use tpp_sd::sampler::{sample_ar, sample_sd, Gamma, SampleCfg, SdCfg};
+use tpp_sd::util::cli::Args;
+use tpp_sd::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let dataset = args.str_or("dataset", "hawkes").to_string();
+    let encoder = args.str_or("encoder", "attnhp").to_string();
+    let gamma = args.usize_or("gamma", 10);
+    let t_end = args.f64_or("t-end", 30.0);
+    let seed = args.u64_or("seed", 0);
+
+    let art = ArtifactDir::discover()?;
+    let ds = art.datasets_json()?;
+    let num_types = ds
+        .usize_at(&format!("datasets.{dataset}.num_types"))
+        .expect("unknown dataset");
+
+    println!("tpp-sd quickstart: dataset={dataset} encoder={encoder} K={num_types} γ={gamma} T={t_end}");
+
+    let client = tpp_sd::runtime::cpu_client()?;
+    let target = ModelExecutor::load(client.clone(), &art, &dataset, &encoder, "target")?;
+    let draft = ModelExecutor::load(client, &art, &dataset, &encoder, "draft")?;
+
+    let cfg = SampleCfg { num_types, t_end, max_events: 4096 };
+
+    let mut rng = Rng::new(seed);
+    let (ar_events, ar) = sample_ar(&target, &cfg, &mut rng)?;
+    println!(
+        "AR     : {:4} events  {:7.2?}  ({} target forwards)",
+        ar.events, ar.wall, ar.target_forwards
+    );
+
+    let sd_cfg = SdCfg { sample: cfg, gamma: Gamma::Fixed(gamma), ..Default::default() };
+    let mut rng = Rng::new(seed + 1);
+    let (sd_events, sd) = sample_sd(&target, &draft, &sd_cfg, &mut rng)?;
+    println!(
+        "TPP-SD : {:4} events  {:7.2?}  ({} target + {} draft forwards, α={:.2})",
+        sd.events,
+        sd.wall,
+        sd.target_forwards,
+        sd.draft_forwards,
+        sd.acceptance_rate()
+    );
+    let per_ar = ar.wall.as_secs_f64() / ar.events.max(1) as f64;
+    let per_sd = sd.wall.as_secs_f64() / sd.events.max(1) as f64;
+    println!("speedup S_AR/SD (per event): {:.2}x", per_ar / per_sd);
+    println!(
+        "first AR events: {:?}",
+        &ar_events[..ar_events.len().min(3)]
+    );
+    println!(
+        "first SD events: {:?}",
+        &sd_events[..sd_events.len().min(3)]
+    );
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! **Table 2** (+ Figure 5 histogram data): TPP-SD vs AR consistency on the
+//! four simulated real-world datasets (Taobao/Amazon/Taxi/StackOverflow
+//! stand-ins, DESIGN.md §3) across the three encoders, including the paper's
+//! AR-vs-AR stochasticity baseline.
+//!
+//!     cargo run --release --example real_eval -- \
+//!         [--t-end 50] [--n-seq 2] [--seeds 0,1,2] [--gamma 10]
+
+use anyhow::Result;
+use tpp_sd::bench::{real_cell, EvalCfg};
+use tpp_sd::processes::from_dataset_json;
+use tpp_sd::runtime::{ArtifactDir, ModelExecutor};
+use tpp_sd::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cfg = EvalCfg {
+        t_end: args.f64_or("t-end", 50.0),
+        n_seq: args.usize_or("n-seq", 2),
+        seeds: args
+            .list_or("seeds", &["0", "1", "2"])
+            .iter()
+            .map(|s| s.parse().unwrap())
+            .collect(),
+        gamma: args.usize_or("gamma", 10),
+        adaptive: args.has("adaptive"),
+        history_m: args.usize_or("history-m", 100),
+        reps_n: args.usize_or("reps-n", 100),
+    };
+    let datasets = args.list_or(
+        "datasets",
+        &["taobao_sim", "amazon_sim", "taxi_sim", "stackoverflow_sim"],
+    );
+    let encoders = args.list_or("encoders", &["thp", "sahp", "attnhp"]);
+
+    let art = ArtifactDir::discover()?;
+    let ds_json = art.datasets_json()?;
+    let client = tpp_sd::runtime::cpu_client()?;
+
+    println!(
+        "=== Table 2: real-data stand-ins (γ={}, T={}, M={}, N={}) ===",
+        cfg.gamma, cfg.t_end, cfg.history_m, cfg.reps_n
+    );
+    println!(
+        "{:<18} {:<7} | {:>8} {:>8} | {:>7} {:>7} | {:>7} {:>7} | {:>8} {:>8} | {:>7} {:>5}",
+        "dataset", "enc", "ΔL_sd", "ΔL_base", "DWSt", "DWSt_b", "DWSk", "DWSk_b", "T_ar", "T_sd", "speedup", "α"
+    );
+
+    for ds in &datasets {
+        let dcfg = ds_json.path(&format!("datasets.{ds}")).expect("dataset");
+        let process = from_dataset_json(dcfg)?;
+        let num_types = dcfg.usize_at("num_types").unwrap();
+        for enc in &encoders {
+            let target = ModelExecutor::load(client.clone(), &art, ds, enc, "target")?;
+            target.warmup_batch(1)?;
+            let draft = ModelExecutor::load(client.clone(), &art, ds, enc, "draft")?;
+            draft.warmup_batch(1)?;
+            let cell = real_cell(&target, &draft, process.as_ref(), num_types, &cfg)?;
+            println!(
+                "{:<18} {:<7} | {:>8.3} {:>8.3} | {:>7.3} {:>7.3} | {:>7.3} {:>7.3} | {:>7.2}s {:>7.2}s | {:>6.2}x {:>5.2}",
+                ds, enc, cell.dl, cell.dl_ar_baseline, cell.dws_t, cell.dws_t_baseline,
+                cell.dws_k, cell.dws_k_baseline, cell.t_ar, cell.t_sd, cell.speedup, cell.alpha
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! End-to-end serving validation (DESIGN.md §7): start the coordinator's
+//! TCP server in-process, drive concurrent sampling sessions against it,
+//! and report latency percentiles, events/s throughput, batcher occupancy,
+//! and the SD-vs-AR speedup under identical concurrency.
+//!
+//!     cargo run --release --example serve -- \
+//!         [--clients 4] [--requests 3] [--t-end 10] [--gamma 10]
+//!         [--datasets hawkes,taxi_sim] [--encoder thp]
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use tpp_sd::coordinator::{Client, Request, SampleRequest, Server};
+use tpp_sd::runtime::ArtifactDir;
+use tpp_sd::util::cli::Args;
+use tpp_sd::util::math::{mean, percentile};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let clients = args.usize_or("clients", 4);
+    let requests = args.usize_or("requests", 3);
+    let t_end = args.f64_or("t-end", 10.0);
+    let gamma = args.usize_or("gamma", 10);
+    let encoder = args.str_or("encoder", "thp").to_string();
+    let datasets = args.list_or("datasets", &["hawkes", "taxi_sim"]);
+    let window_ms = args.u64_or("batch-window-ms", 2);
+
+    let art = ArtifactDir::discover()?;
+    let server = Server::bind(art, "127.0.0.1:0", 8, Duration::from_millis(window_ms))?;
+    let addr = server.addr;
+    println!("coordinator listening on {addr} (batch window {window_ms}ms)");
+    let router = server.router();
+    std::thread::spawn(move || server.serve());
+
+    // Pre-route so executor spawn/compile time doesn't pollute latencies.
+    for ds in &datasets {
+        router.route(ds, &encoder, "draft")?;
+    }
+
+    for method in ["ar", "sd"] {
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let datasets = datasets.clone();
+            let encoder = encoder.clone();
+            handles.push(std::thread::spawn(move || -> Result<(Vec<f64>, usize)> {
+                let mut cli = Client::connect(addr)?;
+                let mut lat = Vec::new();
+                let mut events = 0usize;
+                for r in 0..requests {
+                    let req = Request::Sample(SampleRequest {
+                        dataset: datasets[(c + r) % datasets.len()].clone(),
+                        encoder: encoder.clone(),
+                        method: method.into(),
+                        gamma,
+                        t_end,
+                        seed: (c * 1000 + r) as u64,
+                        draft_size: "draft".into(),
+                    });
+                    let t = Instant::now();
+                    let resp = cli.call(&req)?;
+                    lat.push(t.elapsed().as_secs_f64());
+                    let (ev, _) = tpp_sd::coordinator::protocol::parse_response(&resp)?;
+                    events += ev.len();
+                }
+                Ok((lat, events))
+            }));
+        }
+        let mut lats = Vec::new();
+        let mut events = 0usize;
+        for h in handles {
+            let (l, e) = h.join().expect("client thread")?;
+            lats.extend(l);
+            events += e;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<3}  {} sessions × {} reqs: {:6.2}s wall  {:8.1} events/s  \
+             p50 {:6.2}s p95 {:6.2}s mean {:6.2}s  ({} events)",
+            method,
+            clients,
+            requests,
+            wall,
+            events as f64 / wall,
+            percentile(&lats, 0.5),
+            percentile(&lats, 0.95),
+            mean(&lats),
+            events,
+        );
+    }
+
+    // batcher occupancy report
+    for ds in &datasets {
+        let pair = router.route(ds, &encoder, "draft")?;
+        println!(
+            "executor {:<28} batches={:<5} occupancy={:.2}",
+            pair.target.name,
+            pair.target
+                .stats
+                .batches
+                .load(std::sync::atomic::Ordering::Relaxed),
+            pair.target.stats.occupancy()
+        );
+        println!(
+            "executor {:<28} batches={:<5} occupancy={:.2}",
+            pair.draft.name,
+            pair.draft
+                .stats
+                .batches
+                .load(std::sync::atomic::Ordering::Relaxed),
+            pair.draft.stats.occupancy()
+        );
+    }
+    Ok(())
+}

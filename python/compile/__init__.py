@@ -1,0 +1,2 @@
+"""Build-time Python package: Pallas kernels (L1), JAX model (L2), training
+and AOT export.  Never imported at serving time."""

@@ -1,0 +1,117 @@
+"""AOT export: lower the L2 forward pass to HLO **text** + manifest JSON.
+
+HLO text (not a serialized ``HloModuleProto``) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension 0.5.1
+(the version behind the Rust ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+One HLO file per *shape* configuration ``(encoder, size, bucket, batch)``;
+model weights are HLO **parameters** supplied at run time from the trained
+``.npz``, so 42 trained models share 48 compiled graphs.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import config, model
+from .config import ModelSize
+
+
+def lower_forward_hlo(
+    encoder: str,
+    size: ModelSize,
+    bucket: int,
+    batch: int,
+    *,
+    use_pallas: bool = True,
+) -> Tuple[str, Dict]:
+    """Lower ``forward`` for one shape config; returns (hlo_text, manifest)."""
+    params = model.init_params(encoder, size, seed=0)
+    names = model.params_names(params)
+    specs = [jax.ShapeDtypeStruct(v.shape, v.dtype) for _, v in params]
+
+    def fn(*args):
+        vals = args[: len(names)]
+        times, types, length = args[len(names) :]
+        return model.forward(
+            encoder, size, vals, names, times, types, length, use_pallas=use_pallas
+        )
+
+    in_specs = specs + [
+        jax.ShapeDtypeStruct((batch, bucket), jnp.float32),
+        jax.ShapeDtypeStruct((batch, bucket), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+    ]
+    lowered = jax.jit(fn).lower(*in_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    hlo_text = comp.as_hlo_text()
+
+    manifest = {
+        "kind": "forward",
+        "encoder": encoder,
+        "size": {
+            "name": size.name,
+            "n_layers": size.n_layers,
+            "n_heads": size.n_heads,
+            "d_model": size.d_model,
+            "n_mix": size.n_mix,
+            "d_ff": size.d_ff,
+        },
+        "bucket": bucket,
+        "batch": batch,
+        "k_max": config.K_MAX,
+        "bos_id": config.BOS_ID,
+        "impl": "pallas" if use_pallas else "ref",
+        "params": [
+            {"name": n, "shape": list(v.shape), "dtype": str(v.dtype)}
+            for n, v in params
+        ],
+        "inputs": [
+            {"name": "times", "shape": [batch, bucket], "dtype": "float32"},
+            {"name": "types", "shape": [batch, bucket], "dtype": "int32"},
+            {"name": "length", "shape": [batch], "dtype": "int32"},
+        ],
+        "outputs": [
+            {"name": "log_w", "shape": [batch, bucket, size.n_mix]},
+            {"name": "mu", "shape": [batch, bucket, size.n_mix]},
+            {"name": "log_sigma", "shape": [batch, bucket, size.n_mix]},
+            {"name": "type_logits", "shape": [batch, bucket, config.K_MAX]},
+        ],
+    }
+    return hlo_text, manifest
+
+
+def artifact_stem(encoder: str, size_name: str, bucket: int, batch: int) -> str:
+    return f"fwd_{encoder}_{size_name}_L{bucket}_B{batch}"
+
+
+def export_forward(
+    out_dir: str,
+    encoder: str,
+    size: ModelSize,
+    bucket: int,
+    batch: int,
+    *,
+    use_pallas: bool = True,
+) -> str:
+    import os
+
+    hlo, manifest = lower_forward_hlo(
+        encoder, size, bucket, batch, use_pallas=use_pallas
+    )
+    stem = artifact_stem(encoder, size.name, bucket, batch)
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, stem + ".hlo.txt"), "w") as f:
+        f.write(hlo)
+    with open(os.path.join(out_dir, stem + ".manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    return stem

@@ -1,0 +1,174 @@
+"""`make artifacts` entrypoint: simulate → train → AOT-export, incrementally.
+
+Every step is cached on a content stamp (a hash of the relevant config), so
+re-running after a no-op edit is free and after a config change rebuilds only
+what depends on it.
+
+Usage:
+    python -m compile.build_all [--out ../artifacts] [--steps N] [--quick]
+
+``--quick`` trains a reduced matrix (synthetic datasets only, fewer steps) —
+used by CI-style smoke runs; the default builds everything DESIGN.md §5
+lists.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import numpy as np
+
+from . import aot, config, data, train
+
+
+def _stamp(path: str, key: str) -> bool:
+    """True if ``path`` exists and was built with the same ``key``."""
+    s = path + ".stamp"
+    return (
+        os.path.exists(path)
+        and os.path.exists(s)
+        and open(s).read().strip() == key
+    )
+
+
+def _write_stamp(path: str, key: str) -> None:
+    with open(path + ".stamp", "w") as f:
+        f.write(key)
+
+
+def _hash(*parts) -> str:
+    h = hashlib.sha256()
+    for p in parts:
+        h.update(repr(p).encode())
+    return h.hexdigest()[:16]
+
+
+def save_seqs(path: str, seqs) -> None:
+    times = np.concatenate([s[0] for s in seqs]) if seqs else np.zeros(0)
+    types = np.concatenate([s[1] for s in seqs]) if seqs else np.zeros(0, np.int64)
+    offsets = np.cumsum([0] + [len(s[0]) for s in seqs])
+    np.savez(path, times=times, types=types, offsets=offsets)
+
+
+def load_seqs(path: str):
+    with np.load(path) as z:
+        times, types, offsets = z["times"], z["types"], z["offsets"]
+    return [
+        (times[a:b], types[a:b]) for a, b in zip(offsets[:-1], offsets[1:])
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--impl", choices=["pallas", "ref"], default="pallas")
+    args = ap.parse_args()
+
+    out = os.path.abspath(args.out)
+    for sub in ("data", "weights", "hlo"):
+        os.makedirs(os.path.join(out, sub), exist_ok=True)
+
+    t_start = time.time()
+
+    # ------------------------------------------------------------------ data
+    datasets = list(config.SYNTHETIC) + ([] if args.quick else list(config.REAL_SIM))
+    seq_cache = {}
+    for ds in datasets:
+        cfg = config.DATASETS[ds]
+        n = cfg.n_train if not args.quick else max(24, cfg.n_train // 4)
+        path = os.path.join(out, "data", f"{ds}.npz")
+        key = _hash("data-v1", cfg, n)
+        if not _stamp(path, key):
+            t0 = time.time()
+            seqs = data.simulate_dataset(cfg, n, seed=1234 + cfg.num_types)
+            save_seqs(path, seqs)
+            _write_stamp(path, key)
+            print(
+                f"[data] {ds}: {n} seqs, "
+                f"{np.mean([len(s[0]) for s in seqs]):.0f} events/seq, "
+                f"{time.time()-t0:.1f}s",
+                flush=True,
+            )
+        seq_cache[ds] = path
+
+    # ------------------------------------------------------------- training
+    tcfg = config.TrainCfg(steps=args.steps if not args.quick else 80)
+    jobs = [
+        j
+        for j in config.training_matrix()
+        if j[0] in datasets
+    ]
+    logs = []
+    for ds, enc, size_name in jobs:
+        size = config.SIZES[size_name]
+        wpath = os.path.join(out, "weights", f"{ds}_{enc}_{size_name}.npz")
+        key = _hash("train-v1", config.DATASETS[ds], enc, size, tcfg)
+        if _stamp(wpath, key):
+            continue
+        print(f"[train] {ds} / {enc} / {size_name}", flush=True)
+        seqs = load_seqs(seq_cache[ds])
+        named, log = train.train_model(
+            enc, size, seqs, tcfg, seed=7, log_every=0
+        )
+        train.save_weights(wpath, named)
+        _write_stamp(wpath, key)
+        log["dataset"] = ds
+        logs.append(log)
+        print(
+            f"        loss {log['loss_first']:.1f} -> {log['loss_last']:.1f} "
+            f"({log['seconds']:.0f}s)",
+            flush=True,
+        )
+    if logs:
+        logp = os.path.join(out, "train_log.json")
+        old = json.load(open(logp)) if os.path.exists(logp) else []
+        json.dump(old + logs, open(logp, "w"), indent=1)
+
+    # ------------------------------------------------------------------ HLO
+    sizes = set(s for _, _, s in jobs)
+    n_hlo = 0
+    for enc in config.ENCODERS:
+        for size_name in sorted(sizes):
+            size = config.SIZES[size_name]
+            for bucket in config.BUCKETS:
+                for batch in config.BATCH_SIZES:
+                    stem = aot.artifact_stem(enc, size_name, bucket, batch)
+                    path = os.path.join(out, "hlo", stem + ".hlo.txt")
+                    key = _hash("hlo-v1", enc, size, bucket, batch, args.impl)
+                    if _stamp(path, key):
+                        continue
+                    t0 = time.time()
+                    aot.export_forward(
+                        os.path.join(out, "hlo"),
+                        enc,
+                        size,
+                        bucket,
+                        batch,
+                        use_pallas=args.impl == "pallas",
+                    )
+                    _write_stamp(path, key)
+                    n_hlo += 1
+                    print(
+                        f"[hlo] {stem} ({time.time()-t0:.1f}s)", flush=True
+                    )
+
+    # -------------------------------------------------------------- registry
+    with open(os.path.join(out, "datasets.json"), "w") as f:
+        f.write(config.export_json())
+
+    print(
+        f"[done] artifacts in {out} "
+        f"({len(jobs)} models, {n_hlo} new HLO files, "
+        f"{time.time()-t_start:.0f}s total)",
+        flush=True,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,210 @@
+"""Configuration single-source-of-truth for the TPP-SD build pipeline.
+
+Everything the Rust coordinator needs to know about model shapes, datasets
+and artifact layout is defined here and exported to ``artifacts/*.json`` by
+``build_all.py`` so the two languages can never drift apart.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+# ---------------------------------------------------------------------------
+# Global shape constants
+# ---------------------------------------------------------------------------
+
+#: Event-type dimension every artifact is padded to.  Rust soft-maxes only the
+#: first ``K`` logits of a dataset with ``K`` real types.
+K_MAX = 24
+
+#: BOS (beginning-of-sequence) token id.  The type vocabulary therefore has
+#: ``K_MAX + 1`` entries.
+BOS_ID = K_MAX
+
+#: Sequence-length buckets the forward pass is AOT-compiled for.  The Rust
+#: executor picks the smallest bucket that fits the current context.
+BUCKETS = (64, 128, 256, 512)
+
+#: Batch sizes the forward pass is AOT-compiled for.  B=1 serves the latency
+#: path, B=8 the coordinator's batched executor.
+BATCH_SIZES = (1, 8)
+
+ENCODERS = ("thp", "sahp", "attnhp")
+
+
+# ---------------------------------------------------------------------------
+# Model size configurations
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelSize:
+    """Shape configuration of one CDF-based Transformer TPP.
+
+    The paper trains an 8-head/20-layer target and a 1-head/1-layer draft
+    (D=64, M=64) on an RTX 4090; on this single-core CPU container we keep
+    the same *draft/target asymmetry* at reduced scale (see DESIGN.md §3).
+    """
+
+    name: str
+    n_layers: int
+    n_heads: int
+    d_model: int
+    n_mix: int  # M: log-normal mixture components
+    d_ff: int  # FFN hidden width (THP/SAHP blocks only)
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+#: Default size ladder.  ``target`` vs ``draft`` drives the headline speedup;
+#: ``draft2``/``draft3`` reproduce the draft-model-size ablation (Table 3/4).
+SIZES: Dict[str, ModelSize] = {
+    "target": ModelSize("target", n_layers=6, n_heads=4, d_model=32, n_mix=8, d_ff=64),
+    "draft": ModelSize("draft", n_layers=1, n_heads=1, d_model=16, n_mix=8, d_ff=32),
+    "draft2": ModelSize("draft2", n_layers=2, n_heads=2, d_model=16, n_mix=8, d_ff=32),
+    "draft3": ModelSize("draft3", n_layers=4, n_heads=4, d_model=32, n_mix=8, d_ff=64),
+}
+
+#: Paper-scale configuration (documented, not built by default on CPU).
+PAPER_SIZES: Dict[str, ModelSize] = {
+    "target": ModelSize("target", 20, 8, 64, 64, 256),
+    "draft": ModelSize("draft", 1, 1, 64, 64, 256),
+}
+
+
+# ---------------------------------------------------------------------------
+# Dataset configurations
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DatasetCfg:
+    """One dataset: either a paper synthetic process or a simulated stand-in
+    for a paper real-world dataset (repro substitution, DESIGN.md §3)."""
+
+    name: str
+    kind: str  # "poisson" | "hawkes" | "multihawkes"
+    num_types: int
+    t_end: float
+    params: Dict[str, object] = field(default_factory=dict)
+    #: number of training sequences simulated (paper: 1000; reduced for CPU)
+    n_train: int = 120
+    n_val: int = 16
+
+
+def _kd_hawkes(name: str, k: int, seed: int, total_rate: float) -> DatasetCfg:
+    """Simulated stand-in for a real dataset: a K-dim Hawkes process with
+    heterogeneous (power-law-ish) base rates and a sparse excitation matrix.
+
+    Deterministic given ``seed`` — the same parameters are re-created inside
+    Rust from the exported JSON, so ground-truth computations agree.
+    """
+    # Power-law type masses, normalized so the *base* rate sums to
+    # ``0.6 * total_rate`` (excitation supplies the rest, branching ratio .4).
+    masses = [(i + 1.0) ** -0.8 for i in range(k)]
+    s = sum(masses)
+    mu = [0.6 * total_rate * m / s for m in masses]
+    # Sparse excitation: self-excitation for every type plus a ring coupling.
+    beta = 3.0
+    alpha = [[0.0] * k for _ in range(k)]
+    for i in range(k):
+        alpha[i][i] = 0.3 * beta  # branching contribution 0.3 from self
+        alpha[(i + 1) % k][i] = 0.1 * beta  # and 0.1 from the next type
+    return DatasetCfg(
+        name=name,
+        kind="multihawkes",
+        num_types=k,
+        t_end=100.0,
+        params={"mu": mu, "alpha": alpha, "beta": beta, "seed": seed},
+    )
+
+
+DATASETS: Dict[str, DatasetCfg] = {
+    # --- paper synthetic datasets (Appendix B.1, exact parameters) ---
+    "poisson": DatasetCfg(
+        "poisson", "poisson", 1, 100.0, {"A": 5.0, "b": 1.0, "omega": 1.0 / 50.0}
+    ),
+    "hawkes": DatasetCfg(
+        "hawkes", "hawkes", 1, 100.0, {"mu": 2.5, "alpha": 1.0, "beta": 2.0}
+    ),
+    "multihawkes": DatasetCfg(
+        "multihawkes",
+        "multihawkes",
+        2,
+        100.0,
+        {
+            "mu": [0.4, 0.4],
+            "alpha": [[1.0, 0.5], [0.1, 1.0]],
+            "beta": 2.0,
+        },
+    ),
+    # --- simulated stand-ins for the paper's real datasets (DESIGN.md §3) ---
+    "taobao_sim": _kd_hawkes("taobao_sim", 17, seed=17, total_rate=2.5),
+    "amazon_sim": _kd_hawkes("amazon_sim", 16, seed=16, total_rate=2.0),
+    "taxi_sim": _kd_hawkes("taxi_sim", 10, seed=10, total_rate=2.0),
+    "stackoverflow_sim": _kd_hawkes("stackoverflow_sim", 22, seed=22, total_rate=1.5),
+}
+
+SYNTHETIC = ("poisson", "hawkes", "multihawkes")
+REAL_SIM = ("taobao_sim", "amazon_sim", "taxi_sim", "stackoverflow_sim")
+
+#: (dataset, size) pairs trained by the default build.  Every dataset gets a
+#: target + draft per encoder; the ablation datasets additionally get the
+#: bigger draft configurations of Table 3/4.
+def training_matrix() -> List[Tuple[str, str, str]]:
+    jobs: List[Tuple[str, str, str]] = []
+    for ds in list(SYNTHETIC) + list(REAL_SIM):
+        for enc in ENCODERS:
+            jobs.append((ds, enc, "target"))
+            jobs.append((ds, enc, "draft"))
+    for ds in ("multihawkes", "taobao_sim"):  # Table 3/4 ablation
+        for enc in ENCODERS:
+            jobs.append((ds, enc, "draft2"))
+            jobs.append((ds, enc, "draft3"))
+    return jobs
+
+
+# ---------------------------------------------------------------------------
+# Training hyper-parameters
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TrainCfg:
+    steps: int = 400
+    batch: int = 4
+    crop_len: int = 160  # training crops; export length is per-bucket
+    lr: float = 1e-3
+    seed: int = 0
+    # Adam moments
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+
+
+TRAIN = TrainCfg()
+
+
+# ---------------------------------------------------------------------------
+# JSON export helpers
+# ---------------------------------------------------------------------------
+
+
+def export_json() -> str:
+    """The blob written to ``artifacts/datasets.json`` for the Rust side."""
+    out = {
+        "k_max": K_MAX,
+        "bos_id": BOS_ID,
+        "buckets": list(BUCKETS),
+        "batch_sizes": list(BATCH_SIZES),
+        "encoders": list(ENCODERS),
+        "sizes": {k: dataclasses.asdict(v) for k, v in SIZES.items()},
+        "datasets": {k: dataclasses.asdict(v) for k, v in DATASETS.items()},
+    }
+    return json.dumps(out, indent=1, sort_keys=True)

@@ -1,0 +1,220 @@
+"""Build-time dataset simulation via the classical thinning algorithm.
+
+The three synthetic processes use the paper's exact parameters (App. B.1);
+the four "real" datasets are K-dimensional Hawkes stand-ins (DESIGN.md §3).
+The same process definitions exist in Rust (``rust/src/processes``) — both
+sides are exercised against analytic statistics in their test suites, and the
+Rust side additionally reads ``artifacts/datasets.json`` exported from
+``config.py`` so parameters can never drift.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from .config import DatasetCfg
+
+Seq = Tuple[np.ndarray, np.ndarray]  # (times f64[N], types i64[N])
+
+
+# ---------------------------------------------------------------------------
+# Thinning simulators (Lewis & Shedler 1979; Ogata 1981)
+# ---------------------------------------------------------------------------
+
+
+def simulate_inhom_poisson(
+    rng: np.random.Generator, A: float, b: float, omega: float, t_end: float
+) -> Seq:
+    """λ(t) = A·(b + sin(ω·π·t)); dominating rate λ̄ = A·(b+1)."""
+    lam_bar = A * (b + 1.0)
+    t, times = 0.0, []
+    while True:
+        t += rng.exponential(1.0 / lam_bar)
+        if t > t_end:
+            break
+        lam = A * (b + np.sin(omega * np.pi * t))
+        if rng.uniform() * lam_bar < lam:
+            times.append(t)
+    ts = np.asarray(times)
+    return ts, np.zeros(len(ts), np.int64)
+
+
+def simulate_hawkes(
+    rng: np.random.Generator, mu: float, alpha: float, beta: float, t_end: float
+) -> Seq:
+    """Univariate exponential Hawkes via Ogata thinning.
+
+    Uses the O(1) recursion ``S(t) = Σ_{t_i<t} exp(-β(t-t_i))``.
+    """
+    t, s, times = 0.0, 0.0, []
+    while True:
+        lam_bar = mu + alpha * s  # intensity is non-increasing between events
+        t_next = t + rng.exponential(1.0 / lam_bar)
+        if t_next > t_end:
+            break
+        s_next = s * np.exp(-beta * (t_next - t))
+        lam = mu + alpha * s_next
+        t, s = t_next, s_next
+        if rng.uniform() * lam_bar < lam:
+            times.append(t)
+            s += 1.0
+    ts = np.asarray(times)
+    return ts, np.zeros(len(ts), np.int64)
+
+
+def simulate_multi_hawkes(
+    rng: np.random.Generator,
+    mu: np.ndarray,
+    alpha: np.ndarray,
+    beta: float,
+    t_end: float,
+) -> Seq:
+    """K-dimensional exponential Hawkes via Ogata thinning.
+
+    ``λ_j(t) = μ_j + Σ_i α_{ji} S_i(t)`` with per-source decay states
+    ``S_i(t) = Σ_{t^i_k < t} exp(-β (t - t^i_k))``  (α indexed [effect, cause];
+    the paper's α_{ij} from cause i to dimension j maps to alpha[j][i]).
+    """
+    k = len(mu)
+    s = np.zeros(k)  # decay state per *cause* dimension
+    t, times, types = 0.0, [], []
+    mu = np.asarray(mu, float)
+    alpha = np.asarray(alpha, float)
+    while True:
+        lam_vec = mu + alpha @ s
+        lam_bar = float(np.sum(lam_vec))  # non-increasing between events
+        t_next = t + rng.exponential(1.0 / lam_bar)
+        if t_next > t_end:
+            break
+        decay = np.exp(-beta * (t_next - t))
+        s_next = s * decay
+        lam_vec = mu + alpha @ s_next
+        lam = float(np.sum(lam_vec))
+        t, s = t_next, s_next
+        if rng.uniform() * lam_bar < lam:
+            j = rng.choice(k, p=lam_vec / lam)
+            times.append(t)
+            types.append(j)
+            s[j] += 1.0
+    return np.asarray(times), np.asarray(types, np.int64)
+
+
+def simulate(cfg: DatasetCfg, rng: np.random.Generator) -> Seq:
+    p = cfg.params
+    if cfg.kind == "poisson":
+        return simulate_inhom_poisson(rng, p["A"], p["b"], p["omega"], cfg.t_end)
+    if cfg.kind == "hawkes":
+        return simulate_hawkes(rng, p["mu"], p["alpha"], p["beta"], cfg.t_end)
+    if cfg.kind == "multihawkes":
+        return simulate_multi_hawkes(
+            rng, np.asarray(p["mu"]), np.asarray(p["alpha"]), p["beta"], cfg.t_end
+        )
+    raise ValueError(cfg.kind)
+
+
+def simulate_dataset(cfg: DatasetCfg, n: int, seed: int) -> List[Seq]:
+    rng = np.random.default_rng(seed)
+    return [simulate(cfg, rng) for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Ground-truth log-likelihood Eq. (1)  (used for ΔL_syn and by pytest)
+# ---------------------------------------------------------------------------
+
+
+def loglik_inhom_poisson(times, A, b, omega, t_end):
+    lam = A * (b + np.sin(omega * np.pi * times))
+    big_l = A * (b * t_end + (1.0 - np.cos(omega * np.pi * t_end)) / (omega * np.pi))
+    return float(np.sum(np.log(np.maximum(lam, 1e-12))) - big_l)
+
+
+def loglik_hawkes(times, mu, alpha, beta, t_end):
+    ll, s, prev = 0.0, 0.0, 0.0
+    for t in times:
+        s *= np.exp(-beta * (t - prev))
+        ll += np.log(max(mu + alpha * s, 1e-12))
+        s += 1.0
+        prev = t
+    comp = mu * t_end + (alpha / beta) * np.sum(1.0 - np.exp(-beta * (t_end - times)))
+    return float(ll - comp)
+
+
+def loglik_multi_hawkes(times, types, mu, alpha, beta, t_end):
+    mu = np.asarray(mu, float)
+    alpha = np.asarray(alpha, float)
+    k = len(mu)
+    s = np.zeros(k)
+    ll, prev = 0.0, 0.0
+    for t, j in zip(times, types):
+        s = s * np.exp(-beta * (t - prev))
+        lam_j = mu[j] + float(alpha[j] @ s)
+        ll += np.log(max(lam_j, 1e-12))
+        s[j] += 1.0
+        prev = t
+    comp = float(np.sum(mu) * t_end)
+    # ∫ Σ_j α_{ji} e^{-β(t-t_i)} dt = (Σ_j α_{ji})/β · (1 - e^{-β(T-t_i)})
+    col = alpha.sum(axis=0)  # total outgoing excitation per cause
+    for t, j in zip(times, types):
+        comp += col[j] / beta * (1.0 - np.exp(-beta * (t_end - t)))
+    return float(ll - comp)
+
+
+def ground_truth_loglik(cfg: DatasetCfg, times, types) -> float:
+    p = cfg.params
+    if cfg.kind == "poisson":
+        return loglik_inhom_poisson(times, p["A"], p["b"], p["omega"], cfg.t_end)
+    if cfg.kind == "hawkes":
+        return loglik_hawkes(times, p["mu"], p["alpha"], p["beta"], cfg.t_end)
+    return loglik_multi_hawkes(
+        times, types, np.asarray(p["mu"]), np.asarray(p["alpha"]), p["beta"], cfg.t_end
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batching into fixed-shape training tensors
+# ---------------------------------------------------------------------------
+
+
+def crops_to_batch(
+    seqs: List[Seq],
+    idxs: np.ndarray,
+    crop_len: int,
+    bos_id: int,
+    rng: np.random.Generator,
+):
+    """Random contiguous crops of ``crop_len - 1`` events + BOS row.
+
+    Returns ``times f32[B, crop_len]``, ``types i32[B, crop_len]``,
+    ``length i32[B]`` (incl. BOS), ``t_end f32[B]``.
+
+    The BOS carries the crop's start time so absolute-time encodings stay in
+    the window's range; the survival horizon is the next event after the crop
+    (or the sequence end for suffix crops).
+    """
+    b = len(idxs)
+    times = np.zeros((b, crop_len), np.float32)
+    types = np.full((b, crop_len), bos_id, np.int32)
+    length = np.zeros(b, np.int32)
+    t_end = np.zeros(b, np.float32)
+    for r, i in enumerate(idxs):
+        ts, ks = seqs[i]
+        n = len(ts)
+        max_events = crop_len - 1
+        if n <= max_events:
+            lo, hi = 0, n
+        else:
+            lo = int(rng.integers(0, n - max_events + 1))
+            hi = lo + max_events
+        m = hi - lo
+        bos_t = ts[lo - 1] if lo > 0 else 0.0
+        times[r, 0] = bos_t
+        times[r, 1 : m + 1] = ts[lo:hi]
+        types[r, 1 : m + 1] = ks[lo:hi]
+        length[r] = m + 1
+        if hi < n:
+            t_end[r] = ts[hi]  # censor at the next event
+        else:
+            t_end[r] = max(ts[-1] if n else 0.0, bos_t) + 1e-3
+    return times, types, length, t_end

@@ -1,0 +1,7 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the exported HLO)."""
+
+from .attention import causal_attention, causal_attention_bhld
+from .mixture_head import mixture_head
+from . import ref
+
+__all__ = ["causal_attention", "causal_attention_bhld", "mixture_head", "ref"]

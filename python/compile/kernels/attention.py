@@ -1,0 +1,142 @@
+"""Layer-1 Pallas kernel: flash-style causal attention for Transformer TPPs.
+
+TPU-shaped even though this container executes it in interpret mode (the CPU
+PJRT plugin cannot run Mosaic custom-calls):
+
+* the grid tiles **query blocks**; keys/values stream through VMEM in
+  ``block_k``-sized chunks with a running (max, denominator, accumulator)
+  triple — the classic flash-attention recurrence, which is also the right
+  HBM→VMEM schedule for the MXU;
+* the AttNHP ``1+Σexp`` denominator (paper Eq. 31) is folded into the
+  *initial state* (m₀=0, l₀=1, acc₀=0) instead of a phantom key, costing no
+  extra memory traffic;
+* padding rows (≥ ``length``) keep their diagonal unmasked so no row ever
+  normalizes over an empty set (finite outputs, masked by the consumer).
+
+VMEM budget per program instance (see DESIGN.md §10):
+``block_q·Dh + 2·block_k·Dh + block_q·block_k`` floats — ≤ 2 MiB for every
+exported configuration, leaving double-buffering headroom on a 16 MiB core.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    len_ref,
+    o_ref,
+    *,
+    block_q: int,
+    block_k: int,
+    seq_len: int,
+    plus_one: bool,
+    scale: float,
+):
+    qi = pl.program_id(0)
+    q = q_ref[...].astype(jnp.float32) * scale  # [block_q, Dh]
+    length = len_ref[0]
+
+    row = qi * block_q + jax.lax.iota(jnp.int32, block_q)  # [block_q]
+
+    if plus_one:
+        m0 = jnp.zeros((block_q,), jnp.float32)
+        l0 = jnp.ones((block_q,), jnp.float32)
+    else:
+        m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, q.shape[1]), jnp.float32)
+
+    # Causality: key block kb is only needed while kb*block_k <= row_max.
+    num_kb = (qi * block_q + block_q + block_k - 1) // block_k
+    num_kb = jnp.minimum(num_kb, seq_len // block_k)
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        col = kb * block_k + jax.lax.iota(jnp.int32, block_k)  # [block_k]
+        s = q @ k.astype(jnp.float32).T  # [block_q, block_k]
+        mask = (col[None, :] <= row[:, None]) & (
+            (col[None, :] < length) | (col[None, :] == row[:, None])
+        )
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v.astype(jnp.float32)
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, num_kb, body, (m0, l0, acc0))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def causal_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    length: jnp.ndarray,
+    *,
+    plus_one: bool = False,
+    scale: float | None = None,
+    block_q: int = 64,
+    block_k: int = 64,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Causal attention over one ``[L, Dh]`` (batch, head) slice.
+
+    ``L`` must be divisible by ``block_q`` and ``block_k`` (the exported
+    buckets are multiples of 64).  Batch/head dims are handled by ``vmap``
+    in the model layer.  ``length`` is a scalar int32 prefix length.
+    """
+    L, dh = q.shape
+    block_q = min(block_q, L)
+    block_k = min(block_k, L)
+    assert L % block_q == 0 and L % block_k == 0, (L, block_q, block_k)
+    if scale is None:
+        scale = 1.0 / float(dh) ** 0.5
+    length = jnp.reshape(length.astype(jnp.int32), (1,))
+    kernel = functools.partial(
+        _attn_kernel,
+        block_q=block_q,
+        block_k=block_k,
+        seq_len=L,
+        plus_one=plus_one,
+        scale=scale,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(L // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q, dh), lambda i: (i, 0)),
+            pl.BlockSpec((L, dh), lambda i: (0, 0)),
+            pl.BlockSpec((L, dh), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_q, dh), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((L, dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v, length)
+
+
+def causal_attention_bhld(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    length: jnp.ndarray,
+    **kw,
+) -> jnp.ndarray:
+    """vmap wrapper: ``q/k/v [B, H, L, Dh]``, ``length [B]`` → ``[B, H, L, Dh]``."""
+    fn = functools.partial(causal_attention, **kw)
+    per_head = jax.vmap(fn, in_axes=(0, 0, 0, None))  # over H
+    return jax.vmap(per_head, in_axes=(0, 0, 0, 0))(q, k, v, length)  # over B

@@ -1,0 +1,135 @@
+"""Layer-1 Pallas kernel: fused CDF decoder head (paper §4.2).
+
+One pass per position block computes everything the sampler needs from the
+history embedding ``h(t_i)``:
+
+  e = E·h + b          → sliced into (e₁, e₂, e₃)
+  log w = log_softmax(V_w e₁ + b_w)        (mixture log-weights)
+  μ     = V_μ e₂ + b_μ                     (mixture means)
+  log σ = clip(V_σ e₃ + b_σ, −8, 5)        (mixture log-scales)
+  type_logits = V₂ tanh(V₁ h + b₁) + b₂    (categorical head)
+
+Fusing the five matmuls into one kernel keeps ``h`` resident in VMEM for all
+heads instead of re-streaming it from HBM five times; the weight operands are
+small enough (< 64 KiB at the default config) to live in VMEM for the whole
+grid.  Executed with ``interpret=True`` on CPU (see attention.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _head_kernel(
+    h_ref,
+    e_w_ref,
+    e_b_ref,
+    v_w_ref,
+    b_w_ref,
+    v_mu_ref,
+    b_mu_ref,
+    v_sig_ref,
+    b_sig_ref,
+    k1_ref,
+    k1_b_ref,
+    k2_ref,
+    k2_b_ref,
+    logw_ref,
+    mu_ref,
+    logsig_ref,
+    logits_ref,
+    *,
+    d_model: int,
+):
+    h = h_ref[...].astype(jnp.float32)  # [block, D]
+    d = d_model
+    e = h @ e_w_ref[...] + e_b_ref[...]  # [block, 3D]
+    e1, e2, e3 = e[:, :d], e[:, d : 2 * d], e[:, 2 * d :]
+
+    lw = e1 @ v_w_ref[...] + b_w_ref[...]  # [block, M]
+    lw = lw - jnp.max(lw, axis=-1, keepdims=True)
+    lw = lw - jnp.log(jnp.sum(jnp.exp(lw), axis=-1, keepdims=True))
+    logw_ref[...] = lw.astype(logw_ref.dtype)
+
+    mu_ref[...] = (e2 @ v_mu_ref[...] + b_mu_ref[...]).astype(mu_ref.dtype)
+    logsig_ref[...] = jnp.clip(
+        e3 @ v_sig_ref[...] + b_sig_ref[...], -8.0, 5.0
+    ).astype(logsig_ref.dtype)
+
+    t = jnp.tanh(h @ k1_ref[...] + k1_b_ref[...])
+    logits_ref[...] = (t @ k2_ref[...] + k2_b_ref[...]).astype(logits_ref.dtype)
+
+
+def mixture_head(
+    h: jnp.ndarray,
+    params: dict,
+    *,
+    block: int = 64,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused decoder head over ``h [L, D]``.
+
+    ``params`` uses the same keys as :func:`ref.mixture_head_ref`.  Returns
+    ``(log_w [L,M], mu [L,M], log_sigma [L,M], type_logits [L,K])``.
+    """
+    L, d = h.shape
+    block = min(block, L)
+    assert L % block == 0, (L, block)
+    m = params["v_w"].shape[1]
+    kk = params["k2"].shape[1]
+    dk = params["k1"].shape[1]
+
+    grid = (L // block,)
+    full = lambda *dims: pl.BlockSpec(dims, lambda i: tuple(0 for _ in dims))
+    out_shapes = (
+        jax.ShapeDtypeStruct((L, m), h.dtype),
+        jax.ShapeDtypeStruct((L, m), h.dtype),
+        jax.ShapeDtypeStruct((L, m), h.dtype),
+        jax.ShapeDtypeStruct((L, kk), h.dtype),
+    )
+    kernel = functools.partial(_head_kernel, d_model=d)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            full(d, 3 * d),
+            full(3 * d),
+            full(d, m),
+            full(m),
+            full(d, m),
+            full(m),
+            full(d, m),
+            full(m),
+            full(d, dk),
+            full(dk),
+            full(dk, kk),
+            full(kk),
+        ],
+        out_specs=(
+            pl.BlockSpec((block, m), lambda i: (i, 0)),
+            pl.BlockSpec((block, m), lambda i: (i, 0)),
+            pl.BlockSpec((block, m), lambda i: (i, 0)),
+            pl.BlockSpec((block, kk), lambda i: (i, 0)),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(
+        h,
+        params["e_w"],
+        params["e_b"],
+        params["v_w"],
+        params["b_w"],
+        params["v_mu"],
+        params["b_mu"],
+        params["v_sig"],
+        params["b_sig"],
+        params["k1"],
+        params["k1_b"],
+        params["k2"],
+        params["k2_b"],
+    )

@@ -1,0 +1,115 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: ``pytest python/tests`` asserts the
+Pallas kernels (interpret mode) match these to tight tolerances across
+hypothesis-driven shape sweeps.  They are also used directly by the training
+loss (training is build-time; only the exported forward must be fast).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def causal_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    length: jnp.ndarray,
+    *,
+    plus_one: bool = False,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Reference causal attention for one (batch, head) slice.
+
+    Args:
+      q, k, v: ``[L, Dh]``.
+      length: scalar int32 — number of valid positions (prefix).
+      plus_one: AttNHP variant (Eq. 31): the softmax denominator carries an
+        extra ``+1`` term, equivalent to a phantom key with score 0 attending
+        to a zero value.
+      scale: logit scale; defaults to ``1/sqrt(Dh)``.
+
+    Rows at positions ``>= length`` attend to themselves only (keeps the
+    output finite; the consumer masks them out).
+    """
+    L, dh = q.shape
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    logits = (q @ k.T) * scale  # [L, L]
+    rows = jnp.arange(L)[:, None]
+    cols = jnp.arange(L)[None, :]
+    mask = (cols <= rows) & ((cols < length) | (cols == rows))
+    logits = jnp.where(mask, logits, NEG_INF)
+    if plus_one:
+        # Append the phantom key: score 0, value 0.
+        m = jnp.maximum(jnp.max(logits, axis=-1, keepdims=True), 0.0)
+        p = jnp.exp(logits - m)
+        denom = jnp.sum(p, axis=-1, keepdims=True) + jnp.exp(-m)
+        return (p / denom) @ v
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    return (p / jnp.sum(p, axis=-1, keepdims=True)) @ v
+
+
+def mixture_head_ref(
+    h: jnp.ndarray,
+    params: dict,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Reference CDF decoder head (paper §4.2).
+
+    Args:
+      h: ``[L, D]`` history embeddings.
+      params: dict with ``e_w [D, 3D]``, ``e_b [3D]``, ``v_w/v_mu/v_sig
+        [D, M]``, ``b_w/b_mu/b_sig [M]``, ``k1 [D, Dk]``, ``k1_b [Dk]``,
+        ``k2 [Dk, K]``, ``k2_b [K]``.
+
+    Returns ``(log_w, mu, log_sigma, type_logits)`` with shapes
+    ``[L, M] ×3`` and ``[L, K]``.  ``log_sigma`` is clipped to ``[-8, 5]``
+    for sampling stability on both sides of the FFI boundary.
+    """
+    d = h.shape[-1]
+    e = h @ params["e_w"] + params["e_b"]  # [L, 3D]
+    e1, e2, e3 = e[:, :d], e[:, d : 2 * d], e[:, 2 * d :]
+    logits_w = e1 @ params["v_w"] + params["b_w"]
+    log_w = logits_w - jnp.max(logits_w, axis=-1, keepdims=True)
+    log_w = log_w - jnp.log(jnp.sum(jnp.exp(log_w), axis=-1, keepdims=True))
+    mu = e2 @ params["v_mu"] + params["b_mu"]
+    log_sigma = jnp.clip(e3 @ params["v_sig"] + params["b_sig"], -8.0, 5.0)
+    t = jnp.tanh(h @ params["k1"] + params["k1_b"])
+    type_logits = t @ params["k2"] + params["k2_b"]
+    return log_w, mu, log_sigma, type_logits
+
+
+def lognormal_mixture_logpdf(
+    tau: jnp.ndarray, log_w: jnp.ndarray, mu: jnp.ndarray, log_sigma: jnp.ndarray
+) -> jnp.ndarray:
+    """log g(τ) of a log-normal mixture; broadcasting over leading dims.
+
+    ``tau``: [...], ``log_w/mu/log_sigma``: [..., M].
+    """
+    tau = jnp.maximum(tau, 1e-10)
+    log_tau = jnp.log(tau)[..., None]
+    z = (log_tau - mu) * jnp.exp(-log_sigma)
+    comp = (
+        log_w
+        - log_tau
+        - log_sigma
+        - 0.5 * jnp.log(2.0 * jnp.pi)
+        - 0.5 * z * z
+    )
+    m = jnp.max(comp, axis=-1, keepdims=True)
+    return (m + jnp.log(jnp.sum(jnp.exp(comp - m), axis=-1, keepdims=True)))[..., 0]
+
+
+def lognormal_mixture_cdf(
+    tau: jnp.ndarray, log_w: jnp.ndarray, mu: jnp.ndarray, log_sigma: jnp.ndarray
+) -> jnp.ndarray:
+    """G(τ) = Σ_m w_m Φ((log τ − μ_m)/σ_m)."""
+    from jax.scipy.stats import norm
+
+    tau = jnp.maximum(tau, 1e-10)
+    z = (jnp.log(tau)[..., None] - mu) * jnp.exp(-log_sigma)
+    return jnp.sum(jnp.exp(log_w) * norm.cdf(z), axis=-1)

@@ -1,0 +1,316 @@
+"""Layer-2 JAX model: the CDF-based Transformer TPP (paper §4.2).
+
+``M = {E, g(τ|·), f(k|·)}``:
+
+* encoder ``E``  — THP / SAHP / AttNHP Transformer backbone (App. D.2),
+  calling the Layer-1 Pallas attention kernel;
+* decoder       — log-normal mixture over inter-event intervals + categorical
+  type head, via the fused Layer-1 ``mixture_head`` kernel;
+* loss          — CDF-form log-likelihood, paper Eq. (2).
+
+A BOS event ``(t=0, type=BOS_ID)`` occupies position 0, so output row *i*
+parameterizes the distribution of event *i+1* given history ``≤ i``.
+
+Parameters are kept as an **ordered list** ``[(name, array), ...]`` — the
+exact positional order of the HLO parameters in the AOT artifact and of the
+entries in the weights ``.npz`` (see aot.py / the Rust ``runtime`` module).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import config
+from .config import ModelSize
+from .kernels import causal_attention_bhld, mixture_head, ref
+
+Params = List[Tuple[str, jnp.ndarray]]
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+
+def init_params(encoder: str, size: ModelSize, seed: int = 0) -> Params:
+    """Initialize all learnable parameters in canonical order."""
+    assert encoder in config.ENCODERS, encoder
+    rng = np.random.default_rng(seed)
+    d, m = size.d_model, size.n_mix
+    out: Params = []
+
+    def add(name: str, shape, scale=None):
+        if scale is None:
+            scale = 1.0 / math.sqrt(shape[0]) if len(shape) > 1 else 0.0
+        if scale == 0.0:
+            arr = np.zeros(shape, np.float32)
+        else:
+            arr = rng.normal(0.0, scale, size=shape).astype(np.float32)
+        out.append((name, jnp.asarray(arr)))
+
+    # Event-type embedding (vocab = K_MAX + 1 for BOS).
+    add("emb_type", (config.K_MAX + 1, d), scale=0.02)
+    if encoder == "sahp":
+        # Learned time-encoding frequencies w_j (Eq. 28).
+        out.append(
+            ("time_freq", jnp.asarray(rng.uniform(0.1, 1.0, size=(d,)).astype(np.float32)))
+        )
+
+    for l in range(size.n_layers):
+        p = f"layers.{l}."
+        if encoder == "attnhp":
+            # Q/K/V act on concat(1, z, h) ∈ R^{2D+1} (Eq. 32-34).
+            add(p + "wq", (2 * d + 1, d))
+            add(p + "wk", (2 * d + 1, d))
+            add(p + "wv", (2 * d + 1, d))
+            add(p + "wo", (d, d))
+        else:
+            add(p + "ln1_s", (d,), scale=0.0)
+            add(p + "ln1_b", (d,), scale=0.0)
+            add(p + "wq", (d, d))
+            add(p + "wk", (d, d))
+            add(p + "wv", (d, d))
+            add(p + "wo", (d, d))
+            add(p + "ln2_s", (d,), scale=0.0)
+            add(p + "ln2_b", (d,), scale=0.0)
+            add(p + "ff1", (d, size.d_ff))
+            add(p + "ff1_b", (size.d_ff,), scale=0.0)
+            add(p + "ff2", (size.d_ff, d))
+            add(p + "ff2_b", (d,), scale=0.0)
+
+    # Decoder (paper §4.2): E ∈ R^{3D×D} + three M×D heads + type MLP.
+    add("dec.e_w", (d, 3 * d))
+    add("dec.e_b", (3 * d,), scale=0.0)
+    add("dec.v_w", (d, m))
+    add("dec.b_w", (m,), scale=0.0)
+    add("dec.v_mu", (d, m))
+    # Spread initial mixture means so components differentiate early.
+    out.append(("dec.b_mu", jnp.asarray(np.linspace(-2.0, 1.0, m).astype(np.float32))))
+    add("dec.v_sig", (d, m))
+    add("dec.b_sig", (m,), scale=0.0)
+    add("dec.k1", (d, d))
+    add("dec.k1_b", (d,), scale=0.0)
+    add("dec.k2", (d, config.K_MAX))
+    add("dec.k2_b", (config.K_MAX,), scale=0.0)
+    return out
+
+
+def params_dict(params: Params) -> Dict[str, jnp.ndarray]:
+    return dict(params)
+
+
+def params_values(params: Params) -> List[jnp.ndarray]:
+    return [v for _, v in params]
+
+
+def params_names(params: Params) -> List[str]:
+    return [n for n, _ in params]
+
+
+# ---------------------------------------------------------------------------
+# Temporal encodings (paper Eq. 27-29)
+# ---------------------------------------------------------------------------
+
+
+def temporal_encoding(
+    encoder: str, times: jnp.ndarray, d: int, pd: Dict[str, jnp.ndarray]
+) -> jnp.ndarray:
+    """``times [B, L]`` → ``z [B, L, D]``.
+
+    THP (Eq. 27): interleaved sin/cos of ``t / 10000^{j/D}``.
+    SAHP (Eq. 28): phase ``j/10000^{j/D}`` plus learned frequency ``w_j t``.
+    AttNHP (Eq. 29): sin-only, geometric timescales spanning ``[m, 5·M̄]``
+      with ``M̄ = 100`` (the sampling window) and ``m = 1``.  The paper's
+      formula reads as frequencies *growing* with j, which collapses to noise
+      for large j; we use the official-AttNHP decreasing-frequency form
+      (documented deviation, DESIGN.md §2).
+    """
+    t = times[..., None]  # [B, L, 1]
+    j = jnp.arange(d, dtype=jnp.float32)  # [D]
+    even = (jnp.arange(d) % 2 == 0)
+    if encoder == "thp":
+        jj = jnp.where(even, j, j - 1)
+        angle = t / jnp.power(10000.0, jj / d)
+        return jnp.where(even, jnp.sin(angle), jnp.cos(angle))
+    if encoder == "sahp":
+        jj = jnp.where(even, j, j - 1)
+        phase = jj / jnp.power(10000.0, jj / d)
+        angle = phase + pd["time_freq"] * t
+        return jnp.where(even, jnp.sin(angle), jnp.cos(angle))
+    # attnhp
+    m_lo, m_hi = 1.0, 5.0 * 100.0
+    jj = jnp.where(even, j, j - 1)
+    period = m_lo * jnp.power(m_hi / m_lo, jj / d)
+    return jnp.sin(t / period + jnp.where(even, 0.0, 0.5 * jnp.pi))
+
+
+# ---------------------------------------------------------------------------
+# Encoder blocks
+# ---------------------------------------------------------------------------
+
+
+def _layer_norm(x: jnp.ndarray, s: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * (1.0 + s) + b
+
+
+def _split_heads(x: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    b, l, d = x.shape
+    return x.reshape(b, l, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jnp.ndarray) -> jnp.ndarray:
+    b, h, l, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, l, h * dh)
+
+
+def encode(
+    encoder: str,
+    size: ModelSize,
+    pd: Dict[str, jnp.ndarray],
+    times: jnp.ndarray,
+    types: jnp.ndarray,
+    length: jnp.ndarray,
+    *,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """Run the Transformer backbone. Returns ``h [B, L, D]``."""
+    d = size.d_model
+    z = temporal_encoding(encoder, times, d, pd)  # [B, L, D]
+    x = pd["emb_type"][types] + z  # fusion f(KW, Z) = sum (paper §4.2)
+    h = x
+
+    def attn(q, k, v, plus_one):
+        if use_pallas:
+            return causal_attention_bhld(q, k, v, length, plus_one=plus_one)
+        fn = lambda q1, k1, v1, ln: ref.causal_attention_ref(
+            q1, k1, v1, ln, plus_one=plus_one
+        )
+        per_head = jax.vmap(fn, in_axes=(0, 0, 0, None))
+        return jax.vmap(per_head, in_axes=(0, 0, 0, 0))(q, k, v, length)
+
+    for l in range(size.n_layers):
+        p = f"layers.{l}."
+        if encoder == "attnhp":
+            # Eq. 31: h ← h + tanh(attn(concat(1, z, h))) with 1+Σexp denom.
+            ones = jnp.ones(h.shape[:-1] + (1,), h.dtype)
+            cat = jnp.concatenate([ones, z, h], axis=-1)  # [B, L, 2D+1]
+            q = _split_heads(cat @ pd[p + "wq"], size.n_heads)
+            k = _split_heads(cat @ pd[p + "wk"], size.n_heads)
+            v = _split_heads(cat @ pd[p + "wv"], size.n_heads)
+            a = _merge_heads(attn(q, k, v, plus_one=True)) @ pd[p + "wo"]
+            h = h + jnp.tanh(a)
+        else:
+            # Eq. 30 with pre-LN and an FFN sublayer (standard THP/SAHP impl).
+            n = _layer_norm(h, pd[p + "ln1_s"], pd[p + "ln1_b"])
+            q = _split_heads(n @ pd[p + "wq"], size.n_heads)
+            k = _split_heads(n @ pd[p + "wk"], size.n_heads)
+            v = _split_heads(n @ pd[p + "wv"], size.n_heads)
+            a = _merge_heads(attn(q, k, v, plus_one=False)) @ pd[p + "wo"]
+            h = h + a
+            n = _layer_norm(h, pd[p + "ln2_s"], pd[p + "ln2_b"])
+            f = jax.nn.relu(n @ pd[p + "ff1"] + pd[p + "ff1_b"])
+            h = h + f @ pd[p + "ff2"] + pd[p + "ff2_b"]
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Full forward pass (the exported computation)
+# ---------------------------------------------------------------------------
+
+
+def _dec_params(pd: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    return {k[len("dec.") :]: v for k, v in pd.items() if k.startswith("dec.")}
+
+
+def forward(
+    encoder: str,
+    size: ModelSize,
+    params: Sequence[jnp.ndarray],
+    names: Sequence[str],
+    times: jnp.ndarray,
+    types: jnp.ndarray,
+    length: jnp.ndarray,
+    *,
+    use_pallas: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """The AOT-exported computation.
+
+    Args:
+      params: flat list of parameter arrays (canonical order).
+      names: matching names (static).
+      times: ``[B, L]`` absolute event times (position 0 = BOS at window
+        start).
+      types: ``[B, L]`` int32 event types (position 0 = BOS_ID).
+      length: ``[B]`` int32 valid prefix lengths (including BOS).
+
+    Returns ``(log_w, mu, log_sigma, type_logits)`` of shapes
+    ``[B, L, M] ×3`` and ``[B, L, K_MAX]``.  Row *i* parameterizes the
+    distribution of event *i+1*.
+    """
+    pd = dict(zip(names, params))
+    h = encode(encoder, size, pd, times, types, length, use_pallas=use_pallas)
+    dec = _dec_params(pd)
+    if use_pallas:
+        head = jax.vmap(lambda hb: mixture_head(hb, dec))
+    else:
+        head = jax.vmap(lambda hb: ref.mixture_head_ref(hb, dec))
+    return head(h)
+
+
+# ---------------------------------------------------------------------------
+# Log-likelihood (paper Eq. 2) — the training objective
+# ---------------------------------------------------------------------------
+
+
+def log_likelihood(
+    encoder: str,
+    size: ModelSize,
+    params: Sequence[jnp.ndarray],
+    names: Sequence[str],
+    times: jnp.ndarray,
+    types: jnp.ndarray,
+    length: jnp.ndarray,
+    t_end: jnp.ndarray,
+    *,
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """Mean per-sequence CDF-form log-likelihood Eq. (2).
+
+    ``times/types`` include the BOS row; ``length`` counts it.  ``t_end [B]``
+    is the right edge of the observation window (for the survival term
+    ``log(1 − G(T − t_N | h_N))``).  Training uses the pure-jnp reference
+    path (faster to trace; the Pallas path is what gets exported — pytest
+    asserts they agree).
+    """
+    b, l = times.shape
+    log_w, mu, log_sig, logits = forward(
+        encoder, size, params, names, times, types, length, use_pallas=use_pallas
+    )
+    # Event i (1-indexed) lives at row i; its distribution comes from row i-1.
+    tau = times[:, 1:] - times[:, :-1]  # [B, L-1]
+    lw, m_, ls = log_w[:, :-1], mu[:, :-1], log_sig[:, :-1]
+    log_g = ref.lognormal_mixture_logpdf(tau, lw, m_, ls)  # [B, L-1]
+    lsm = jax.nn.log_softmax(logits[:, :-1], axis=-1)  # [B, L-1, K]
+    log_f = jnp.take_along_axis(lsm, types[:, 1:, None], axis=-1)[..., 0]
+
+    idx = jnp.arange(1, l)[None, :]  # event positions
+    valid = idx < length[:, None]  # [B, L-1]
+    ll_events = jnp.sum(jnp.where(valid, log_g + log_f, 0.0), axis=-1)  # [B]
+
+    # Survival term at the last observed event.
+    last = length - 1  # row of last event
+    bidx = jnp.arange(b)
+    t_last = times[bidx, last]
+    rem = jnp.maximum(t_end - t_last, 1e-6)
+    cdf = ref.lognormal_mixture_cdf(
+        rem, log_w[bidx, last], mu[bidx, last], log_sig[bidx, last]
+    )
+    ll_surv = jnp.log1p(-jnp.clip(cdf, 0.0, 1.0 - 1e-6))
+    return jnp.mean(ll_events + ll_surv)

@@ -1,0 +1,109 @@
+"""Build-time training: hand-rolled Adam on the Eq. (2) log-likelihood.
+
+optax is not available in this offline container, so Adam is implemented
+directly (Kingma & Ba 2017); it is ~15 lines and exercised by pytest
+(loss must decrease on a smoke problem).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import config, data, model
+from .config import DatasetCfg, ModelSize, TrainCfg
+
+
+def adam_init(params: List[jnp.ndarray]):
+    zeros = [jnp.zeros_like(p) for p in params]
+    return {"m": zeros, "v": [jnp.zeros_like(p) for p in params], "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, cfg: TrainCfg):
+    t = state["t"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    m = [b1 * m_ + (1 - b1) * g for m_, g in zip(state["m"], grads)]
+    v = [b2 * v_ + (1 - b2) * g * g for v_, g in zip(state["v"], grads)]
+    # bias correction
+    c1 = 1.0 - b1 ** t.astype(jnp.float32)
+    c2 = 1.0 - b2 ** t.astype(jnp.float32)
+    new = [
+        p - cfg.lr * (m_ / c1) / (jnp.sqrt(v_ / c2) + cfg.eps)
+        for p, m_, v_ in zip(params, m, v)
+    ]
+    return new, {"m": m, "v": v, "t": t}
+
+
+def train_model(
+    encoder: str,
+    size: ModelSize,
+    seqs: List[data.Seq],
+    cfg: TrainCfg = config.TRAIN,
+    seed: int = 0,
+    log_every: int = 100,
+) -> Tuple[List[Tuple[str, jnp.ndarray]], Dict]:
+    """Train one model; returns (named params, training log)."""
+    params = model.init_params(encoder, size, seed=seed)
+    names = model.params_names(params)
+    values = model.params_values(params)
+
+    def loss_fn(values, times, types, length, t_end):
+        ll = model.log_likelihood(
+            encoder, size, values, names, times, types, length, t_end
+        )
+        return -ll
+
+    loss_grad = jax.jit(jax.value_and_grad(loss_fn))
+
+    state = adam_init(values)
+    rng = np.random.default_rng(seed + 1)
+    losses = []
+    t0 = time.time()
+    n = len(seqs)
+    for step in range(cfg.steps):
+        idxs = rng.integers(0, n, size=cfg.batch)
+        times, types, length, t_end = data.crops_to_batch(
+            seqs, idxs, cfg.crop_len, config.BOS_ID, rng
+        )
+        loss, grads = loss_grad(
+            values,
+            jnp.asarray(times),
+            jnp.asarray(types),
+            jnp.asarray(length),
+            jnp.asarray(t_end),
+        )
+        values, state = adam_update(values, grads, state, cfg)
+        losses.append(float(loss))
+        if log_every and step % log_every == 0:
+            print(f"    step {step:4d} loss {float(loss):10.3f}", flush=True)
+    log = {
+        "encoder": encoder,
+        "size": size.name,
+        "steps": cfg.steps,
+        "loss_first": losses[0] if losses else None,
+        "loss_last": float(np.mean(losses[-20:])) if losses else None,
+        "seconds": time.time() - t0,
+    }
+    return list(zip(names, values)), log
+
+
+def save_weights(path: str, named_params: List[Tuple[str, jnp.ndarray]]) -> None:
+    """Write an .npz whose keys encode the canonical parameter order.
+
+    Keys are ``{idx:03d}|{name}`` — the Rust loader sorts by key to recover
+    positional order (``Literal::read_npz`` gives no order guarantee).
+    """
+    arrays = {
+        f"{i:03d}|{name}": np.asarray(v) for i, (name, v) in enumerate(named_params)
+    }
+    np.savez(path, **arrays)
+
+
+def load_weights(path: str) -> List[Tuple[str, np.ndarray]]:
+    with np.load(path) as z:
+        items = sorted(z.items())
+    return [(k.split("|", 1)[1], v) for k, v in items]

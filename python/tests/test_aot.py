@@ -1,0 +1,56 @@
+"""AOT export: the lowered HLO text + manifest must describe exactly the
+computation the Rust runtime expects (interface pinned by these tests +
+`rust/src/bin/validate_artifact.rs` for the numeric round-trip)."""
+
+import json
+import os
+import tempfile
+
+import pytest
+
+from compile import aot, config
+
+
+@pytest.mark.parametrize("encoder", config.ENCODERS)
+def test_lowering_produces_hlo_and_manifest(encoder):
+    hlo, man = aot.lower_forward_hlo(encoder, config.SIZES["draft"], 64, 1)
+    assert "HloModule" in hlo
+    assert man["encoder"] == encoder
+    assert man["bucket"] == 64 and man["batch"] == 1
+    # inputs: params + times/types/length
+    n_params = len(man["params"])
+    assert n_params > 5
+    # parameter count in HLO text matches manifest + 3 data inputs
+    assert hlo.count("parameter(") >= n_params + 3
+    assert [o["name"] for o in man["outputs"]] == [
+        "log_w",
+        "mu",
+        "log_sigma",
+        "type_logits",
+    ]
+
+
+def test_export_writes_files_with_stamped_names():
+    with tempfile.TemporaryDirectory() as d:
+        stem = aot.export_forward(d, "thp", config.SIZES["draft"], 64, 1)
+        assert stem == "fwd_thp_draft_L64_B1"
+        hlo = os.path.join(d, stem + ".hlo.txt")
+        man = os.path.join(d, stem + ".manifest.json")
+        assert os.path.getsize(hlo) > 1000
+        m = json.load(open(man))
+        assert m["size"]["n_layers"] == config.SIZES["draft"].n_layers
+        assert m["k_max"] == config.K_MAX
+
+
+def test_pallas_and_ref_lowerings_have_same_interface():
+    h1, m1 = aot.lower_forward_hlo("thp", config.SIZES["draft"], 64, 1, use_pallas=True)
+    h2, m2 = aot.lower_forward_hlo("thp", config.SIZES["draft"], 64, 1, use_pallas=False)
+    assert [p["name"] for p in m1["params"]] == [p["name"] for p in m2["params"]]
+    assert m1["outputs"] == m2["outputs"]
+    assert m1["impl"] == "pallas" and m2["impl"] == "ref"
+
+
+def test_batched_bucket_shapes():
+    _, man = aot.lower_forward_hlo("sahp", config.SIZES["draft"], 128, 8)
+    assert man["inputs"][0]["shape"] == [8, 128]
+    assert man["outputs"][0]["shape"] == [8, 128, config.SIZES["draft"].n_mix]

@@ -1,0 +1,122 @@
+"""Data substrate: thinning simulators against analytic statistics, and the
+Eq. (1) ground-truth likelihoods (cross-checked with the time-rescaling
+identity)."""
+
+import numpy as np
+import pytest
+
+from compile import config, data
+
+
+def test_poisson_count_matches_integrated_intensity():
+    cfg = config.DATASETS["poisson"]
+    rng = np.random.default_rng(0)
+    counts = [len(data.simulate(cfg, rng)[0]) for _ in range(100)]
+    A, b, om = cfg.params["A"], cfg.params["b"], cfg.params["omega"]
+    w = om * np.pi
+    expect = A * (b * cfg.t_end + (1 - np.cos(w * cfg.t_end)) / w)
+    se = np.sqrt(expect / len(counts))
+    assert abs(np.mean(counts) - expect) < 4 * se + 1
+
+
+def test_hawkes_stationary_rate():
+    cfg = config.DATASETS["hawkes"]
+    rng = np.random.default_rng(1)
+    counts = [len(data.simulate(cfg, rng)[0]) for _ in range(40)]
+    # μ/(1−α/β) = 2.5/(1−0.5) = 5 events per unit time
+    assert abs(np.mean(counts) / cfg.t_end - 5.0) < 0.4
+
+
+def test_multihawkes_type_marginals():
+    cfg = config.DATASETS["multihawkes"]
+    rng = np.random.default_rng(2)
+    times, types = data.simulate(cfg, rng)
+    # dim 0 gets more excitation (α row [1, .5] vs [.1, 1])
+    assert (types == 0).sum() > (types == 1).sum()
+
+
+def test_realsim_datasets_have_expected_types_and_rate():
+    for name in config.REAL_SIM:
+        cfg = config.DATASETS[name]
+        rng = np.random.default_rng(3)
+        times, types = data.simulate(cfg, rng)
+        assert types.max() < cfg.num_types
+        assert 20 < len(times) < 1000, (name, len(times))
+        assert np.all(np.diff(times) > 0)
+
+
+@pytest.mark.parametrize("name", ["poisson", "hawkes", "multihawkes"])
+def test_loglik_prefers_true_parameters(name):
+    """Ground-truth Eq.(1) log-lik should on average beat a perturbed model."""
+    cfg = config.DATASETS[name]
+    rng = np.random.default_rng(4)
+    diffs = []
+    for _ in range(10):
+        times, types = data.simulate(cfg, rng)
+        ll_true = data.ground_truth_loglik(cfg, times, types)
+        # perturb: double base rates
+        import dataclasses
+        p2 = dict(cfg.params)
+        if name == "poisson":
+            p2["A"] = cfg.params["A"] * 1.5
+        elif name == "hawkes":
+            p2["mu"] = cfg.params["mu"] * 1.7
+        else:
+            p2["mu"] = [m * 1.9 for m in cfg.params["mu"]]
+        cfg2 = dataclasses.replace(cfg, params=p2)
+        ll_wrong = data.ground_truth_loglik(cfg2, times, types)
+        diffs.append(ll_true - ll_wrong)
+    assert np.mean(diffs) > 0
+
+
+def test_rescaling_identity_hawkes():
+    """z_i = Λ(t_{i-1}, t_i) are Exp(1) under the true Hawkes model."""
+    cfg = config.DATASETS["hawkes"]
+    p = cfg.params
+    rng = np.random.default_rng(5)
+    zs = []
+    for _ in range(5):
+        times, _ = data.simulate(cfg, rng)
+        s, prev = 0.0, 0.0
+        for t in times:
+            # Λ(prev, t) = μΔ + (α/β)·S(prev)·(1−e^{−βΔ})
+            delta = t - prev
+            zs.append(
+                p["mu"] * delta
+                + p["alpha"] / p["beta"] * s * (1 - np.exp(-p["beta"] * delta))
+            )
+            s = s * np.exp(-p["beta"] * delta) + 1.0
+            prev = t
+    zs = np.asarray(zs)
+    assert abs(zs.mean() - 1.0) < 0.06
+    assert abs(zs.std() - 1.0) < 0.1
+
+
+def test_crops_to_batch_layout():
+    rng = np.random.default_rng(6)
+    seqs = [
+        (np.array([1.0, 2.0, 3.0]), np.array([0, 1, 0])),
+        (np.sort(rng.uniform(0, 50, size=300)), rng.integers(0, 2, size=300)),
+    ]
+    times, types, length, t_end = data.crops_to_batch(
+        seqs, np.array([0, 1]), crop_len=64, bos_id=config.BOS_ID, rng=rng
+    )
+    assert times.shape == (2, 64) and types.shape == (2, 64)
+    # short sequence: all events + BOS
+    assert length[0] == 4
+    assert types[0, 0] == config.BOS_ID
+    assert np.allclose(times[0, 1:4], [1.0, 2.0, 3.0])
+    assert t_end[0] > 3.0
+    # long sequence: crop of 63 events, survival horizon = next event
+    assert length[1] == 64
+    assert t_end[1] >= times[1, 63]
+
+
+def test_export_json_contains_everything():
+    import json
+
+    j = json.loads(config.export_json())
+    assert j["k_max"] == config.K_MAX
+    assert set(j["datasets"]) == set(config.DATASETS)
+    assert set(j["sizes"]) == set(config.SIZES)
+    assert j["datasets"]["taobao_sim"]["num_types"] == 17

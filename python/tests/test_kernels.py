@@ -1,0 +1,157 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (the core signal).
+
+Hypothesis sweeps shapes, prefix lengths and the AttNHP denominator variant;
+interpret-mode Pallas must match ref.py to float32 tolerance everywhere.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import causal_attention, causal_attention_bhld, mixture_head, ref
+
+TOL = 5e-5
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    lq=st.sampled_from([64, 128, 192]),
+    dh=st.sampled_from([4, 8, 16]),
+    frac=st.floats(0.05, 1.0),
+    plus_one=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(lq, dh, frac, plus_one, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = (_rand(rng, lq, dh) for _ in range(3))
+    length = jnp.asarray(max(1, int(frac * lq)), jnp.int32)
+    got = causal_attention(q, k, v, length, plus_one=plus_one)
+    want = ref.causal_attention_ref(q, k, v, length, plus_one=plus_one)
+    np.testing.assert_allclose(got, want, atol=TOL, rtol=TOL)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.sampled_from([1, 2, 4]),
+    plus_one=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_batched_heads(b, h, plus_one, seed):
+    rng = np.random.default_rng(seed)
+    L, dh = 64, 8
+    q, k, v = (_rand(rng, b, h, L, dh) for _ in range(3))
+    length = jnp.asarray(rng.integers(1, L + 1, size=b), jnp.int32)
+    got = causal_attention_bhld(q, k, v, length, plus_one=plus_one)
+    for bi in range(b):
+        for hi in range(h):
+            want = ref.causal_attention_ref(
+                q[bi, hi], k[bi, hi], v[bi, hi], length[bi], plus_one=plus_one
+            )
+            np.testing.assert_allclose(got[bi, hi], want, atol=TOL, rtol=TOL)
+
+
+def test_attention_respects_causality():
+    """Changing a future event must not change earlier outputs."""
+    rng = np.random.default_rng(0)
+    L, dh = 64, 8
+    q, k, v = (_rand(rng, L, dh) for _ in range(3))
+    length = jnp.asarray(L, jnp.int32)
+    base = causal_attention(q, k, v, length)
+    k2 = k.at[40].set(99.0)
+    v2 = v.at[40].set(-99.0)
+    pert = causal_attention(q, k2, v2, length)
+    np.testing.assert_allclose(base[:40], pert[:40], atol=1e-6)
+    assert not np.allclose(base[40:], pert[40:])
+
+
+def test_attention_padding_rows_are_finite():
+    rng = np.random.default_rng(1)
+    L, dh = 64, 8
+    q, k, v = (_rand(rng, L, dh) for _ in range(3))
+    out = causal_attention(q, k, v, jnp.asarray(3, jnp.int32))
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_plus_one_shrinks_attention_mass():
+    """The AttNHP +1 denominator strictly shrinks output magnitude at row 0
+    (single key: softmax gives weight 1, plus-one gives exp(s)/(exp(s)+1))."""
+    rng = np.random.default_rng(2)
+    L, dh = 64, 4
+    q, k, v = (_rand(rng, L, dh) for _ in range(3))
+    length = jnp.asarray(L, jnp.int32)
+    soft = causal_attention(q, k, v, length, plus_one=False)
+    plus = causal_attention(q, k, v, length, plus_one=True)
+    assert np.linalg.norm(plus[0]) < np.linalg.norm(soft[0])
+
+
+def _head_params(rng, d, m, kk):
+    r = lambda *s: _rand(rng, *s)
+    return {
+        "e_w": r(d, 3 * d), "e_b": r(3 * d),
+        "v_w": r(d, m), "b_w": r(m),
+        "v_mu": r(d, m), "b_mu": r(m),
+        "v_sig": r(d, m), "b_sig": r(m),
+        "k1": r(d, d), "k1_b": r(d),
+        "k2": r(d, kk), "k2_b": r(kk),
+    }
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    l=st.sampled_from([64, 128]),
+    d=st.sampled_from([16, 32]),
+    m=st.sampled_from([4, 8]),
+    kk=st.sampled_from([2, 24]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mixture_head_matches_ref(l, d, m, kk, seed):
+    rng = np.random.default_rng(seed)
+    params = _head_params(rng, d, m, kk)
+    h = _rand(rng, l, d)
+    got = mixture_head(h, params)
+    want = ref.mixture_head_ref(h, params)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, atol=TOL, rtol=TOL)
+
+
+def test_mixture_head_outputs_normalized_and_clipped():
+    rng = np.random.default_rng(3)
+    params = _head_params(rng, 32, 8, 24)
+    h = 50.0 * _rand(rng, 64, 32)  # extreme inputs
+    log_w, mu, log_sig, logits = mixture_head(h, params)
+    np.testing.assert_allclose(
+        np.exp(np.asarray(log_w)).sum(-1), 1.0, atol=1e-4
+    )
+    assert np.asarray(log_sig).max() <= 5.0 + 1e-6
+    assert np.asarray(log_sig).min() >= -8.0 - 1e-6
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_lognormal_mixture_pdf_integrates_to_one():
+    rng = np.random.default_rng(4)
+    m = 4
+    log_w = jnp.log(jnp.asarray([0.1, 0.2, 0.3, 0.4], jnp.float32))
+    mu = _rand(rng, m)
+    log_sigma = jnp.clip(_rand(rng, m), -1.0, 0.5)
+    taus = jnp.linspace(1e-4, 80.0, 200_000)
+    pdf = jnp.exp(ref.lognormal_mixture_logpdf(taus, log_w, mu, log_sigma))
+    integral = float(jnp.trapezoid(pdf, taus))
+    assert abs(integral - 1.0) < 5e-3, integral
+
+
+def test_lognormal_cdf_consistent_with_pdf():
+    log_w = jnp.log(jnp.asarray([0.5, 0.5], jnp.float32))
+    mu = jnp.asarray([0.0, 1.0], jnp.float32)
+    log_sigma = jnp.asarray([-0.5, 0.2], jnp.float32)
+    taus = jnp.linspace(1e-4, 30.0, 100_000)
+    pdf = jnp.exp(ref.lognormal_mixture_logpdf(taus, log_w, mu, log_sigma))
+    cdf_num = jnp.cumsum(pdf) * (taus[1] - taus[0])
+    cdf_ana = ref.lognormal_mixture_cdf(taus, log_w, mu, log_sigma)
+    np.testing.assert_allclose(cdf_num[::10_000], cdf_ana[::10_000], atol=5e-3)

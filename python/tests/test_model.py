@@ -1,0 +1,116 @@
+"""L2 model invariants: encoder shapes, Pallas/ref path agreement, causality
+through the full stack, and the Eq. (2) likelihood."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import config, model
+
+
+def _batch(rng, b, l, k, max_t=50.0):
+    times = np.sort(rng.uniform(0, max_t, size=(b, l)), axis=1).astype(np.float32)
+    times[:, 0] = 0.0
+    types = rng.integers(0, k, size=(b, l)).astype(np.int32)
+    types[:, 0] = config.BOS_ID
+    length = rng.integers(2, l + 1, size=b).astype(np.int32)
+    return jnp.asarray(times), jnp.asarray(types), jnp.asarray(length)
+
+
+@pytest.mark.parametrize("encoder", config.ENCODERS)
+def test_forward_shapes_and_pallas_agreement(encoder):
+    size = config.SIZES["draft"]
+    params = model.init_params(encoder, size, seed=0)
+    names, vals = model.params_names(params), model.params_values(params)
+    rng = np.random.default_rng(0)
+    times, types, length = _batch(rng, 2, 64, 2)
+    outs_p = model.forward(encoder, size, vals, names, times, types, length)
+    outs_r = model.forward(
+        encoder, size, vals, names, times, types, length, use_pallas=False
+    )
+    assert [o.shape for o in outs_p] == [
+        (2, 64, size.n_mix),
+        (2, 64, size.n_mix),
+        (2, 64, size.n_mix),
+        (2, 64, config.K_MAX),
+    ]
+    for p, r in zip(outs_p, outs_r):
+        np.testing.assert_allclose(p, r, atol=5e-5, rtol=5e-5)
+
+
+@pytest.mark.parametrize("encoder", config.ENCODERS)
+def test_forward_is_causal(encoder):
+    """Output rows before position j must not depend on event j."""
+    size = config.SIZES["draft"]
+    params = model.init_params(encoder, size, seed=1)
+    names, vals = model.params_names(params), model.params_values(params)
+    rng = np.random.default_rng(1)
+    times, types, length = _batch(rng, 1, 64, 2)
+    length = jnp.asarray([64], jnp.int32)
+    base = model.forward(encoder, size, vals, names, times, types, length)
+    times2 = times.at[0, 40].set(times[0, 40] + 0.01)
+    types2 = types.at[0, 40].set((types[0, 40] + 1) % 2)
+    pert = model.forward(encoder, size, vals, names, times2, types2, length)
+    for b, p in zip(base, pert):
+        np.testing.assert_allclose(b[0, :39], p[0, :39], atol=1e-5)
+    assert not np.allclose(base[0][0, 40:], pert[0][0, 40:], atol=1e-6)
+
+
+def test_param_order_is_deterministic():
+    for enc in config.ENCODERS:
+        a = model.init_params(enc, config.SIZES["target"], seed=0)
+        b = model.init_params(enc, config.SIZES["target"], seed=0)
+        assert model.params_names(a) == model.params_names(b)
+        for (_, x), (_, y) in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    encoder=st.sampled_from(config.ENCODERS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_loglik_finite_and_scales(encoder, seed):
+    size = config.SIZES["draft"]
+    params = model.init_params(encoder, size, seed=2)
+    names, vals = model.params_names(params), model.params_values(params)
+    rng = np.random.default_rng(seed)
+    times, types, length = _batch(rng, 2, 64, 2)
+    t_end = jnp.asarray(np.full(2, 60.0, np.float32))
+    ll = model.log_likelihood(
+        encoder, size, vals, names, times, types, length, t_end
+    )
+    assert np.isfinite(float(ll))
+
+
+def test_survival_term_decreases_loglik_with_horizon():
+    """A longer empty horizon after the last event must not increase Eq.(2)."""
+    encoder, size = "thp", config.SIZES["draft"]
+    params = model.init_params(encoder, size, seed=3)
+    names, vals = model.params_names(params), model.params_values(params)
+    rng = np.random.default_rng(3)
+    times, types, length = _batch(rng, 1, 64, 2)
+    lls = []
+    for t_end in (50.0, 200.0):
+        lls.append(
+            float(
+                model.log_likelihood(
+                    encoder, size, vals, names, times, types, length,
+                    jnp.asarray([t_end], jnp.float32),
+                )
+            )
+        )
+    assert lls[1] <= lls[0]
+
+
+def test_temporal_encodings_differ_across_encoders():
+    rng = np.random.default_rng(4)
+    t = jnp.asarray(rng.uniform(0, 100, size=(1, 16)).astype(np.float32))
+    d = 32
+    pd = {"time_freq": jnp.asarray(np.linspace(0.1, 1, d).astype(np.float32))}
+    zs = {e: model.temporal_encoding(e, t, d, pd) for e in config.ENCODERS}
+    assert not np.allclose(zs["thp"], zs["sahp"])
+    assert not np.allclose(zs["thp"], zs["attnhp"])
+    for z in zs.values():
+        assert np.abs(np.asarray(z)).max() <= 1.0 + 1e-6  # sin/cos bounded

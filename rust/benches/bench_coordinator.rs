@@ -1,0 +1,108 @@
+//! Bench: coordinator overhead + batching ablation (DESIGN.md §9).
+//!
+//! (a) ExecutorHandle (channel hop, batch window) vs direct ModelExecutor
+//!     at concurrency 1 — the coordinator's overhead budget (<10% target);
+//! (b) N concurrent AR sessions through one batching executor vs N
+//!     sequential direct sessions — what dynamic batching buys.
+//!
+//!     cargo bench --bench bench_coordinator [-- --sessions 4 --t-end 5]
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use tpp_sd::coordinator::ExecutorHandle;
+use tpp_sd::runtime::{ArtifactDir, ModelExecutor};
+use tpp_sd::sampler::{sample_ar, SampleCfg};
+use tpp_sd::util::cli::Args;
+use tpp_sd::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let dataset = args.str_or("dataset", "hawkes").to_string();
+    let encoder = args.str_or("encoder", "thp").to_string();
+    let sessions = args.usize_or("sessions", 4);
+    let t_end = args.f64_or("t-end", 5.0);
+    let cfg = SampleCfg { num_types: 1, t_end, max_events: 16 * 1024 };
+
+    let art = ArtifactDir::discover()?;
+
+    // (a) direct vs handle, concurrency 1
+    {
+        let client = tpp_sd::runtime::cpu_client()?;
+        let direct = ModelExecutor::load(client, &art, &dataset, &encoder, "target")?;
+        direct.warmup()?;
+        // one throwaway run: XLA's first execution of each graph carries
+        // one-time autotuning cost even after compilation
+        let mut rng = Rng::new(0);
+        sample_ar(&direct, &cfg, &mut rng)?;
+        let t = Instant::now();
+        let mut rng = Rng::new(1);
+        let (ev, _) = sample_ar(&direct, &cfg, &mut rng)?;
+        let t_direct = t.elapsed().as_secs_f64();
+        println!("direct  AR: {:.3}s ({} events)", t_direct, ev.len());
+
+        let handle = ExecutorHandle::spawn(
+            art.clone(),
+            &dataset,
+            &encoder,
+            "target",
+            8,
+            Duration::from_millis(0),
+        )?;
+        // warm the handle's lazy compile cache so both paths time pure
+        // sampling (the direct path was warmed above)
+        let mut rng = Rng::new(0);
+        sample_ar(&handle, &cfg, &mut rng)?;
+        let mut rng = Rng::new(1);
+        let t = Instant::now();
+        let (ev, _) = sample_ar(&handle, &cfg, &mut rng)?;
+        let t_handle = t.elapsed().as_secs_f64();
+        println!(
+            "handle  AR: {:.3}s ({} events) — overhead {:+.1}%",
+            t_handle,
+            ev.len(),
+            (t_handle / t_direct - 1.0) * 100.0
+        );
+    }
+
+    // (b) N concurrent sessions through one batching executor
+    for window_ms in [0u64, 2] {
+        let handle = ExecutorHandle::spawn(
+            art.clone(),
+            &dataset,
+            &encoder,
+            "target",
+            8,
+            Duration::from_millis(window_ms),
+        )?;
+        // warm the compile caches
+        let mut rng = Rng::new(9);
+        sample_ar(&handle, &SampleCfg { t_end: 1.0, ..cfg.clone() }, &mut rng)?;
+
+        let t = Instant::now();
+        let mut join = Vec::new();
+        for s in 0..sessions {
+            let h = handle.clone();
+            let cfg = cfg.clone();
+            join.push(std::thread::spawn(move || -> Result<usize> {
+                let mut rng = Rng::new(100 + s as u64);
+                let (ev, _) = sample_ar(&h, &cfg, &mut rng)?;
+                Ok(ev.len())
+            }));
+        }
+        let mut events = 0;
+        for j in join {
+            events += j.join().expect("session")?;
+        }
+        let wall = t.elapsed().as_secs_f64();
+        println!(
+            "batched {} sessions (window {}ms): {:.3}s  {:.1} events/s  occupancy {:.2}",
+            sessions,
+            window_ms,
+            wall,
+            events as f64 / wall,
+            handle.stats.occupancy()
+        );
+    }
+    Ok(())
+}

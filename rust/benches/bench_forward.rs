@@ -1,0 +1,78 @@
+//! Bench: raw forward-pass latency per (size × bucket × batch) — the L2/L3
+//! hot path that every sampler cost model builds on, plus the
+//! length-bucketing ablation of DESIGN.md §9 (what a single max-length
+//! graph would cost instead).
+//!
+//!     cargo bench --bench bench_forward [-- --encoder thp --dataset hawkes]
+
+use anyhow::Result;
+use tpp_sd::bench::bench_loop;
+use tpp_sd::runtime::{ArtifactDir, ModelExecutor, SeqInput};
+use tpp_sd::util::cli::Args;
+use tpp_sd::util::rng::Rng;
+
+fn seq_of_len(rng: &mut Rng, n: usize, k: usize) -> SeqInput {
+    let mut t = 0.0;
+    let mut s = SeqInput::default();
+    for _ in 0..n {
+        t += rng.exponential(5.0);
+        s.times.push(t);
+        s.types.push(rng.below(k) as u32);
+    }
+    s
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let dataset = args.str_or("dataset", "hawkes").to_string();
+    let encoder = args.str_or("encoder", "thp").to_string();
+    let iters = args.usize_or("iters", 20);
+
+    let art = ArtifactDir::discover()?;
+    let client = tpp_sd::runtime::cpu_client()?;
+    println!("== forward latency ({dataset}/{encoder}) ==");
+    let mut rng = Rng::new(1);
+
+    for size in ["draft", "target"] {
+        let exec = ModelExecutor::load(client.clone(), &art, &dataset, &encoder, size)?;
+        exec.warmup()?;
+        for &fill in &[40usize, 100, 220, 460] {
+            let seq = seq_of_len(&mut rng, fill, 1);
+            let r = bench_loop(
+                &format!("{size} len={fill} (bucket {})", exec.pick_bucket(fill + 1)?),
+                2,
+                iters,
+                || {
+                    exec.forward(std::slice::from_ref(&seq)).unwrap();
+                },
+            );
+            println!("{}", r.report());
+        }
+        // batched: 8 sequences in one call vs 8 calls (batching ablation)
+        let seqs: Vec<SeqInput> = (0..8).map(|_| seq_of_len(&mut rng, 100, 1)).collect();
+        let r = bench_loop(&format!("{size} len=100 batch=8 (one call)"), 2, iters, || {
+            exec.forward(&seqs).unwrap();
+        });
+        println!("{}", r.report());
+        let r = bench_loop(&format!("{size} len=100 batch=8 (8 calls)"), 2, iters, || {
+            for s in &seqs {
+                exec.forward(std::slice::from_ref(s)).unwrap();
+            }
+        });
+        println!("{}", r.report());
+        // bucketing ablation: same short sequence forced through max bucket
+        let short = seq_of_len(&mut rng, 40, 1);
+        let mut padded = short.clone();
+        // pad with events far in the future; length masks them out — this
+        // emulates a single max-length graph (no bucketing)
+        while padded.times.len() + 1 < exec.max_bucket() {
+            padded.times.push(1e6);
+            padded.types.push(0);
+        }
+        let r = bench_loop(&format!("{size} len=40 WITHOUT bucketing"), 2, iters, || {
+            exec.forward(std::slice::from_ref(&padded)).unwrap();
+        });
+        println!("{}", r.report());
+    }
+    Ok(())
+}

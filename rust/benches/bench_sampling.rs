@@ -1,0 +1,66 @@
+//! Bench: end-to-end sampling wall-time, AR vs TPP-SD — the Table-1/2
+//! headline measurement, reduced to one (dataset × encoder) pair per run.
+//!
+//!     cargo bench --bench bench_sampling [-- --dataset hawkes --encoder attnhp
+//!                                           --gamma 10 --t-end 20 --runs 3]
+
+use anyhow::Result;
+use tpp_sd::runtime::{ArtifactDir, ModelExecutor};
+use tpp_sd::sampler::{sample_ar, sample_sd, Gamma, SampleCfg, SdCfg};
+use tpp_sd::util::cli::Args;
+use tpp_sd::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let dataset = args.str_or("dataset", "hawkes").to_string();
+    let encoder = args.str_or("encoder", "attnhp").to_string();
+    let gamma = args.usize_or("gamma", 10);
+    let t_end = args.f64_or("t-end", 20.0);
+    let runs = args.usize_or("runs", 3);
+
+    let art = ArtifactDir::discover()?;
+    let ds = art.datasets_json()?;
+    let num_types = ds
+        .usize_at(&format!("datasets.{dataset}.num_types"))
+        .expect("dataset");
+    let client = tpp_sd::runtime::cpu_client()?;
+    let target = ModelExecutor::load(client.clone(), &art, &dataset, &encoder, "target")?;
+    let draft = ModelExecutor::load(client, &art, &dataset, &encoder, "draft")?;
+    target.warmup()?;
+    draft.warmup()?;
+
+    let cfg = SampleCfg { num_types, t_end, max_events: 16 * 1024 };
+    println!("== sampling wall-time ({dataset}/{encoder}, γ={gamma}, T={t_end}) ==");
+
+    let (mut t_ar, mut t_sd, mut ev_ar, mut ev_sd, mut alpha) = (0.0, 0.0, 0, 0, 0.0);
+    for seed in 0..runs as u64 {
+        let mut rng = Rng::new(seed);
+        let (ev, st) = sample_ar(&target, &cfg, &mut rng)?;
+        t_ar += st.wall.as_secs_f64();
+        ev_ar += ev.len();
+        let sd_cfg =
+            SdCfg { sample: cfg.clone(), gamma: Gamma::Fixed(gamma), ..Default::default() };
+        let mut rng = Rng::new(seed + 1000);
+        let (ev, st) = sample_sd(&target, &draft, &sd_cfg, &mut rng)?;
+        t_sd += st.wall.as_secs_f64();
+        ev_sd += ev.len();
+        alpha += st.acceptance_rate();
+    }
+    let per_ar = t_ar / ev_ar.max(1) as f64;
+    let per_sd = t_sd / ev_sd.max(1) as f64;
+    println!(
+        "AR     : {:8.2}ms/event ({} events, {:.2}s total)",
+        per_ar * 1e3,
+        ev_ar,
+        t_ar
+    );
+    println!(
+        "TPP-SD : {:8.2}ms/event ({} events, {:.2}s total, α={:.2})",
+        per_sd * 1e3,
+        ev_sd,
+        t_sd,
+        alpha / runs as f64
+    );
+    println!("speedup S_AR/SD = {:.2}x", per_ar / per_sd);
+    Ok(())
+}

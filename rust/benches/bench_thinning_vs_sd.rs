@@ -1,0 +1,68 @@
+//! Bench: classical thinning vs model sampling (paper §2.2 / App. D.1).
+//!
+//! Thinning on the *analytic* ground-truth process is nearly free (no
+//! Transformer forwards) — the point of the comparison is the acceptance
+//! behaviour: thinning's per-candidate acceptance rate λ*/λ̄ vs TPP-SD's
+//! draft acceptance rate α, and the forwards-per-event budget that makes
+//! CIF-based SD unattractive (App. D.1's argument).
+//!
+//!     cargo bench --bench bench_thinning_vs_sd [-- --t-end 20]
+
+use anyhow::Result;
+use tpp_sd::processes::{GroundTruth, Hawkes, InhomPoisson};
+use tpp_sd::runtime::{ArtifactDir, ModelExecutor};
+use tpp_sd::sampler::{sample_ar, sample_sd, Gamma, SampleCfg, SdCfg};
+use tpp_sd::util::cli::Args;
+use tpp_sd::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let t_end = args.f64_or("t-end", 20.0);
+
+    // (a) thinning on analytic processes: candidates per accepted event
+    //     = 1/acceptance — the CIF-based bound the paper discusses.
+    let mut rng = Rng::new(4);
+    for (name, p) in [
+        ("poisson", Box::new(InhomPoisson::new(5.0, 1.0, 0.02)) as Box<dyn GroundTruth>),
+        ("hawkes", Box::new(Hawkes::new(2.5, 1.0, 2.0))),
+    ] {
+        let t0 = std::time::Instant::now();
+        let mut events = 0;
+        for _ in 0..50 {
+            events += p.simulate(&mut rng, t_end).len();
+        }
+        println!(
+            "thinning {name:<8}: {:>8.3}ms for 50 sequences ({} events) — no forwards",
+            t0.elapsed().as_secs_f64() * 1e3,
+            events
+        );
+    }
+
+    // (b) model sampling: forwards per event, AR vs SD
+    let art = ArtifactDir::discover()?;
+    let client = tpp_sd::runtime::cpu_client()?;
+    let target = ModelExecutor::load(client.clone(), &art, "hawkes", "thp", "target")?;
+    let draft = ModelExecutor::load(client, &art, "hawkes", "thp", "draft")?;
+    target.warmup()?;
+    draft.warmup()?;
+    let cfg = SampleCfg { num_types: 1, t_end, max_events: 16 * 1024 };
+    let mut rng = Rng::new(5);
+    let (ev, st) = sample_ar(&target, &cfg, &mut rng)?;
+    println!(
+        "model AR        : {:.2} target-forwards/event ({} events, {:.2?})",
+        st.target_forwards as f64 / ev.len().max(1) as f64,
+        ev.len(),
+        st.wall
+    );
+    let sd_cfg = SdCfg { sample: cfg, gamma: Gamma::Fixed(10), ..Default::default() };
+    let (ev, st) = sample_sd(&target, &draft, &sd_cfg, &mut rng)?;
+    println!(
+        "model TPP-SD    : {:.2} target + {:.2} draft forwards/event (α={:.2}, {} events, {:.2?})",
+        st.target_forwards as f64 / ev.len().max(1) as f64,
+        st.draft_forwards as f64 / ev.len().max(1) as f64,
+        st.acceptance_rate(),
+        ev.len(),
+        st.wall
+    );
+    Ok(())
+}

@@ -1,0 +1,336 @@
+//! Table/figure cell runners (DESIGN.md §6 experiment index).
+//!
+//! `synthetic_cell` reproduces one (dataset × encoder) cell of **Table 1**
+//! (and the KS series of Figures 2/4); `real_cell` one cell of **Table 2**
+//! (and the type histograms of Figure 5). The γ- and draft-size ablations
+//! (Figure 3/6, Table 3/4) reuse the same runners with different knobs.
+
+use anyhow::Result;
+
+use crate::events::Event;
+use crate::metrics::{delta_l, emd_labels, ks_vs_exp1, model_loglik, wasserstein_1d};
+use crate::processes::GroundTruth;
+use crate::runtime::executor::Forward;
+use crate::sampler::{sample_ar, sample_sd, Gamma, SampleCfg, SampleStats, SdCfg};
+use crate::util::rng::Rng;
+
+/// Knobs shared by the cell runners (paper defaults in brackets).
+#[derive(Debug, Clone)]
+pub struct EvalCfg {
+    /// sampling window end [100]
+    pub t_end: f64,
+    /// sequences sampled per method per seed [paper: "the dataset"]
+    pub n_seq: usize,
+    /// random seeds [3 (tables) / 5 (figures)]
+    pub seeds: Vec<u64>,
+    /// draft length γ [10]
+    pub gamma: usize,
+    /// adaptive-γ extension instead of fixed
+    pub adaptive: bool,
+    /// history length M for Table-2 next-event sampling [100]
+    pub history_m: usize,
+    /// repetitions N for Table-2 next-event sampling [100]
+    pub reps_n: usize,
+}
+
+impl Default for EvalCfg {
+    fn default() -> Self {
+        EvalCfg {
+            t_end: 100.0,
+            n_seq: 3,
+            seeds: vec![0, 1, 2],
+            gamma: 10,
+            adaptive: false,
+            history_m: 100,
+            reps_n: 100,
+        }
+    }
+}
+
+impl EvalCfg {
+    pub fn gamma_policy(&self) -> Gamma {
+        if self.adaptive {
+            Gamma::Adaptive { init: self.gamma, min: 2, max: 4 * self.gamma.max(1) }
+        } else {
+            Gamma::Fixed(self.gamma)
+        }
+    }
+}
+
+/// One Table-1 cell: likelihood discrepancies vs ground truth, KS
+/// statistics of time-rescaled intervals, wall-times and the speedup ratio.
+#[derive(Debug, Clone, Default)]
+pub struct SyntheticCell {
+    pub dl_ar: f64,
+    pub dl_sd: f64,
+    pub ks_ar: f64,
+    pub ks_sd: f64,
+    pub ks_gt: f64,
+    pub t_ar: f64,
+    pub t_sd: f64,
+    pub speedup: f64,
+    pub alpha: f64,
+    /// KS-plot series (F(z), F_n(z)) for Figures 2/4: sd / ar / ground truth
+    pub ks_points_sd: Vec<(f64, f64)>,
+    pub ks_points_ar: Vec<(f64, f64)>,
+    pub ks_points_gt: Vec<(f64, f64)>,
+    pub n_rescaled: usize,
+}
+
+/// Run one synthetic cell (Table 1 / Fig. 2 / Fig. 4).
+///
+/// For each seed: sample `n_seq` sequences with AR and with TPP-SD from the
+/// target model; compute (a) per-event |L_gt(Eq.1) − L_model(Eq.2)|,
+/// (b) the KS statistic of ground-truth-rescaled intervals, (c) wall times.
+/// Ground-truth sequences (thinning) provide the reference KS series.
+pub fn synthetic_cell<FT, FD>(
+    target: &FT,
+    draft: &FD,
+    process: &dyn GroundTruth,
+    num_types: usize,
+    cfg: &EvalCfg,
+) -> Result<SyntheticCell>
+where
+    FT: Forward + ?Sized,
+    FD: Forward + ?Sized,
+{
+    let scfg = SampleCfg { num_types, t_end: cfg.t_end, max_events: 16 * 1024 };
+    let mut cell = SyntheticCell::default();
+    let mut z_ar = Vec::new();
+    let mut z_sd = Vec::new();
+    let mut z_gt = Vec::new();
+    let mut sd_stats = SampleStats::default();
+    let (mut dl_ar, mut dl_sd) = (Vec::new(), Vec::new());
+    let (mut t_ar, mut t_sd) = (0.0, 0.0);
+
+    for &seed in &cfg.seeds {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9).wrapping_add(1));
+        for i in 0..cfg.n_seq {
+            // --- AR ---
+            let (ev, st) = sample_ar(target, &scfg, &mut rng)?;
+            t_ar += st.wall.as_secs_f64();
+            if !ev.is_empty() {
+                let lgt = process.loglik(&ev, cfg.t_end);
+                let lm = model_loglik(target, &ev, num_types, cfg.t_end)?;
+                dl_ar.push(delta_l(lgt, lm, ev.len()));
+                z_ar.extend(process.rescale(&ev));
+            }
+            // --- SD ---
+            let sd_cfg = SdCfg {
+                sample: scfg.clone(),
+                gamma: cfg.gamma_policy(),
+                ..Default::default()
+            };
+            let (ev, st) = sample_sd(target, draft, &sd_cfg, &mut rng)?;
+            t_sd += st.wall.as_secs_f64();
+            sd_stats.merge(&st);
+            if !ev.is_empty() {
+                let lgt = process.loglik(&ev, cfg.t_end);
+                let lm = model_loglik(target, &ev, num_types, cfg.t_end)?;
+                dl_sd.push(delta_l(lgt, lm, ev.len()));
+                z_sd.extend(process.rescale(&ev));
+            }
+            // --- ground truth (thinning) for the KS reference series ---
+            let mut gt_rng = Rng::new(seed * 1000 + i as u64 + 7);
+            let gt = process.simulate(&mut gt_rng, cfg.t_end);
+            z_gt.extend(process.rescale(&gt));
+        }
+    }
+
+    cell.dl_ar = crate::util::math::mean(&dl_ar);
+    cell.dl_sd = crate::util::math::mean(&dl_sd);
+    cell.ks_ar = ks_vs_exp1(&z_ar);
+    cell.ks_sd = ks_vs_exp1(&z_sd);
+    cell.ks_gt = ks_vs_exp1(&z_gt);
+    cell.t_ar = t_ar / cfg.seeds.len() as f64;
+    cell.t_sd = t_sd / cfg.seeds.len() as f64;
+    cell.speedup = cell.t_ar / cell.t_sd;
+    cell.alpha = sd_stats.acceptance_rate();
+    cell.ks_points_sd = crate::metrics::ks_plot_points(&z_sd);
+    cell.ks_points_ar = crate::metrics::ks_plot_points(&z_ar);
+    cell.ks_points_gt = crate::metrics::ks_plot_points(&z_gt);
+    cell.n_rescaled = z_sd.len().min(z_ar.len());
+    Ok(cell)
+}
+
+/// One Table-2 cell: AR-vs-SD consistency on a "real" dataset.
+#[derive(Debug, Clone, Default)]
+pub struct RealCell {
+    pub dl: f64,
+    /// self-consistency baseline: two independent AR runs
+    pub dl_ar_baseline: f64,
+    pub dws_t: f64,
+    pub dws_t_baseline: f64,
+    pub dws_k: f64,
+    pub dws_k_baseline: f64,
+    pub t_ar: f64,
+    pub t_sd: f64,
+    pub speedup: f64,
+    pub alpha: f64,
+    /// type histograms for Figure 5
+    pub hist_ar: Vec<f64>,
+    pub hist_sd: Vec<f64>,
+}
+
+/// Run one real-data cell (Table 2 / Fig. 5).
+///
+/// Likelihood discrepancy: per-event |L(Eq.2) of AR samples − of SD
+/// samples| under the target model, with an AR-vs-AR run as the paper's
+/// stochasticity baseline. Wasserstein: fix the first M events of a history
+/// sequence, redraw the (M+1)-th event N times with each sampler, compare
+/// the time and type marginals.
+pub fn real_cell<FT, FD>(
+    target: &FT,
+    draft: &FD,
+    history_source: &dyn GroundTruth,
+    num_types: usize,
+    cfg: &EvalCfg,
+) -> Result<RealCell>
+where
+    FT: Forward + ?Sized,
+    FD: Forward + ?Sized,
+{
+    let scfg = SampleCfg { num_types, t_end: cfg.t_end, max_events: 16 * 1024 };
+    let mut cell = RealCell::default();
+    let mut sd_stats = SampleStats::default();
+    let (mut dl, mut dl_base) = (Vec::new(), Vec::new());
+    let (mut t_ar, mut t_sd) = (0.0, 0.0);
+    let mut types_ar: Vec<u32> = Vec::new();
+    let mut types_sd: Vec<u32> = Vec::new();
+
+    for &seed in &cfg.seeds {
+        let mut rng = Rng::new(seed.wrapping_mul(0xA5A5_5A5A).wrapping_add(3));
+        for _ in 0..cfg.n_seq {
+            let (ev_ar, st_ar) = sample_ar(target, &scfg, &mut rng)?;
+            let (ev_ar2, _) = sample_ar(target, &scfg, &mut rng)?;
+            let sd_cfg = SdCfg {
+                sample: scfg.clone(),
+                gamma: cfg.gamma_policy(),
+                ..Default::default()
+            };
+            let (ev_sd, st_sd) = sample_sd(target, draft, &sd_cfg, &mut rng)?;
+            t_ar += st_ar.wall.as_secs_f64();
+            t_sd += st_sd.wall.as_secs_f64();
+            sd_stats.merge(&st_sd);
+            if !ev_ar.is_empty() && !ev_sd.is_empty() && !ev_ar2.is_empty() {
+                let l_ar = model_loglik(target, &ev_ar, num_types, cfg.t_end)?;
+                let l_ar2 = model_loglik(target, &ev_ar2, num_types, cfg.t_end)?;
+                let l_sd = model_loglik(target, &ev_sd, num_types, cfg.t_end)?;
+                let n = ev_ar.len().min(ev_sd.len());
+                dl.push(delta_l(l_ar / ev_ar.len() as f64 * n as f64, l_sd / ev_sd.len() as f64 * n as f64, n));
+                dl_base.push(delta_l(
+                    l_ar / ev_ar.len() as f64 * n as f64,
+                    l_ar2 / ev_ar2.len() as f64 * n as f64,
+                    n,
+                ));
+            }
+            types_ar.extend(ev_ar.iter().map(|e| e.k));
+            types_sd.extend(ev_sd.iter().map(|e| e.k));
+        }
+    }
+
+    // --- Wasserstein next-event experiment (M history events, N reps) ---
+    let mut hist_rng = Rng::new(0xBEEF);
+    let mut history = history_source.simulate(&mut hist_rng, cfg.t_end * 10.0);
+    history.truncate(cfg.history_m);
+    let (nt_ar, nk_ar, nt_ar2, nk_ar2, nt_sd, nk_sd) =
+        next_event_reps(target, draft, &history, num_types, cfg)?;
+    cell.dws_t = wasserstein_1d(&nt_ar, &nt_sd);
+    cell.dws_t_baseline = wasserstein_1d(&nt_ar, &nt_ar2);
+    cell.dws_k = emd_labels(&nk_ar, &nk_sd, num_types);
+    cell.dws_k_baseline = emd_labels(&nk_ar, &nk_ar2, num_types);
+
+    cell.dl = crate::util::math::mean(&dl);
+    cell.dl_ar_baseline = crate::util::math::mean(&dl_base);
+    cell.t_ar = t_ar / cfg.seeds.len() as f64;
+    cell.t_sd = t_sd / cfg.seeds.len() as f64;
+    cell.speedup = cell.t_ar / cell.t_sd;
+    cell.alpha = sd_stats.acceptance_rate();
+    cell.hist_ar = crate::metrics::type_histogram(&types_ar, num_types);
+    cell.hist_sd = crate::metrics::type_histogram(&types_sd, num_types);
+    Ok(cell)
+}
+
+/// Redraw the (M+1)-th event N times per sampler given a fixed history.
+#[allow(clippy::type_complexity)]
+fn next_event_reps<FT, FD>(
+    target: &FT,
+    draft: &FD,
+    history: &[Event],
+    num_types: usize,
+    cfg: &EvalCfg,
+) -> Result<(Vec<f64>, Vec<u32>, Vec<f64>, Vec<u32>, Vec<f64>, Vec<u32>)>
+where
+    FT: Forward + ?Sized,
+    FD: Forward + ?Sized,
+{
+    let t_last = history.last().map(|e| e.t).unwrap_or(0.0);
+    // Next-event redraws share the target forward (same history ⇒ same
+    // distribution parameters); the SD column still exercises the draft:
+    // draft proposes, target verifies — exactly one SD round restricted to
+    // its first event.
+    let mut seq = crate::runtime::SeqInput::default();
+    // clamp history into the bucket capacity
+    let cap = target.max_bucket().min(draft.max_bucket()) - 2;
+    let hist = if history.len() > cap { &history[history.len() - cap..] } else { history };
+    seq.t0 = if hist.len() < history.len() {
+        history[history.len() - cap - 1].t
+    } else {
+        0.0
+    };
+    seq.times = hist.iter().map(|e| e.t).collect();
+    seq.types = hist.iter().map(|e| e.k).collect();
+    let row = hist.len();
+    let fwd_t = target.forward1(seq.clone())?;
+    let fwd_d = draft.forward1(seq)?;
+    let t_mix = fwd_t.mixture(row);
+    let t_td = fwd_t.type_dist(row, num_types);
+    let d_mix = fwd_d.mixture(row);
+    let d_td = fwd_d.type_dist(row, num_types);
+
+    let mut rng = Rng::new(0xFACE);
+    let draw_ar = |rng: &mut Rng| {
+        let tau = t_mix.sample(rng);
+        let k = t_td.sample(rng) as u32;
+        (t_last + tau, k)
+    };
+    let draw_sd = |rng: &mut Rng| {
+        // one-candidate SD round: draft proposes, target verifies.
+        let tau_hat = d_mix.sample(rng);
+        let k_hat = d_td.sample(rng);
+        let lr = t_mix.logpdf(tau_hat) - d_mix.logpdf(tau_hat);
+        if rng.uniform().ln() >= lr {
+            let (tau2, _) = crate::model::mixture::sample_adjusted_interval(
+                &t_mix, &d_mix, rng, 64,
+            );
+            return (t_last + tau2, t_td.sample(rng) as u32);
+        }
+        if rng.uniform() * d_td.pmf(k_hat) >= t_td.pmf(k_hat) {
+            let adj = crate::model::TypeDist::adjusted(&t_td, &d_td);
+            return (t_last + tau_hat, adj.sample(rng) as u32);
+        }
+        (t_last + tau_hat, k_hat as u32)
+    };
+
+    let n = cfg.reps_n;
+    let mut out = (
+        Vec::with_capacity(n),
+        Vec::with_capacity(n),
+        Vec::with_capacity(n),
+        Vec::with_capacity(n),
+        Vec::with_capacity(n),
+        Vec::with_capacity(n),
+    );
+    for _ in 0..n {
+        let (t, k) = draw_ar(&mut rng);
+        out.0.push(t);
+        out.1.push(k);
+        let (t, k) = draw_ar(&mut rng);
+        out.2.push(t);
+        out.3.push(k);
+        let (t, k) = draw_sd(&mut rng);
+        out.4.push(t);
+        out.5.push(k);
+    }
+    Ok(out)
+}

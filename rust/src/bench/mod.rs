@@ -1,0 +1,10 @@
+//! Benchmark & evaluation harness: timing utilities and the cell runners
+//! that regenerate every table and figure of the paper's evaluation
+//! (experiment index in DESIGN.md §6). Examples and `cargo bench` targets
+//! are thin CLI wrappers around this module.
+
+pub mod eval;
+pub mod timing;
+
+pub use eval::{real_cell, synthetic_cell, EvalCfg, RealCell, SyntheticCell};
+pub use timing::{bench_loop, BenchResult};

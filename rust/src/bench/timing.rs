@@ -1,0 +1,77 @@
+//! Micro-benchmark substrate (no criterion in the offline registry):
+//! warmup + timed iterations + percentile reporting.
+
+use std::time::{Duration, Instant};
+
+use crate::util::math::{mean, percentile, std_dev};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// per-iteration wall times in seconds
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn mean_s(&self) -> f64 {
+        mean(&self.samples)
+    }
+    pub fn std_s(&self) -> f64 {
+        std_dev(&self.samples)
+    }
+    pub fn p50_s(&self) -> f64 {
+        percentile(&self.samples, 0.5)
+    }
+    pub fn p95_s(&self) -> f64 {
+        percentile(&self.samples, 0.95)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>10.3}ms ±{:>8.3}ms  p50 {:>8.3}ms  p95 {:>8.3}ms  (n={})",
+            self.name,
+            self.mean_s() * 1e3,
+            self.std_s() * 1e3,
+            self.p50_s() * 1e3,
+            self.p95_s() * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Run `f` for `warmup` unmeasured and `iters` measured iterations.
+pub fn bench_loop<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), iters, samples }
+}
+
+/// Time a single closure invocation.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_loop_counts() {
+        let mut n = 0;
+        let r = bench_loop("noop", 3, 10, || n += 1);
+        assert_eq!(n, 13);
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_s() >= 0.0);
+        assert!(r.report().contains("noop"));
+    }
+}

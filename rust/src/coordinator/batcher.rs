@@ -1,0 +1,163 @@
+//! Batching executor: the serving-path heart of the coordinator.
+//!
+//! XLA wrapper objects are not `Send`, so each trained model lives on a
+//! dedicated executor thread that owns its [`ModelExecutor`]. Concurrent
+//! sessions submit single-sequence forward requests over a channel; the
+//! thread coalesces up to `max_batch` requests that arrive within
+//! `batch_window` into ONE batched HLO call (the B=8 graphs), then fans the
+//! slots back out. This is the same dynamic-batching idea vLLM's router
+//! applies to token steps, transplanted to TPP forward passes.
+//!
+//! Invariants (property-tested in `rust/tests/coordinator.rs`):
+//!   * every request gets exactly one reply (no loss, no duplication);
+//!   * replies carry the requester's own sequence results regardless of
+//!     how requests were grouped into batches;
+//!   * numerical results are identical to the direct path (same HLO).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::executor::{Forward, SlotOut};
+use crate::runtime::{ArtifactDir, ModelExecutor, SeqInput};
+
+/// Aggregate counters exposed by an executor thread.
+#[derive(Debug, Default)]
+pub struct BatcherStats {
+    pub requests: AtomicUsize,
+    pub batches: AtomicUsize,
+    pub batched_requests: AtomicUsize,
+    /// Σ batch-size — occupancy = batched_requests / batches
+    pub max_batch_seen: AtomicUsize,
+}
+
+impl BatcherStats {
+    pub fn occupancy(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+}
+
+struct Request {
+    seq: SeqInput,
+    reply: SyncSender<Result<SlotOut>>,
+}
+
+/// Cloneable, `Send` handle to a model executor thread. Implements
+/// [`Forward`], so samplers run unchanged on the serving path.
+#[derive(Clone)]
+pub struct ExecutorHandle {
+    tx: SyncSender<Request>,
+    max_bucket: usize,
+    pub stats: Arc<BatcherStats>,
+    pub name: String,
+}
+
+impl ExecutorHandle {
+    /// Spawn an executor thread for `(dataset, encoder, size)`.
+    ///
+    /// `batch_window`: how long the thread waits for co-batchable requests
+    /// after the first arrives (0 ⇒ opportunistic draining only).
+    pub fn spawn(
+        art: ArtifactDir,
+        dataset: &str,
+        encoder: &str,
+        size: &str,
+        max_batch: usize,
+        batch_window: Duration,
+    ) -> Result<ExecutorHandle> {
+        let (tx, rx) = sync_channel::<Request>(1024);
+        let stats = Arc::new(BatcherStats::default());
+        let stats2 = stats.clone();
+        let (ready_tx, ready_rx) = sync_channel::<Result<usize>>(1);
+        let (ds, enc, sz) = (dataset.to_string(), encoder.to_string(), size.to_string());
+        let name = format!("{ds}/{enc}/{sz}");
+        std::thread::Builder::new()
+            .name(format!("exec-{name}"))
+            .spawn(move || {
+                // XLA objects are created on this thread and never leave it.
+                let exec = match crate::runtime::cpu_client()
+                    .and_then(|c| ModelExecutor::load(c, &art, &ds, &enc, &sz))
+                {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(e.max_bucket()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                run_loop(exec, rx, stats2, max_batch, batch_window);
+            })
+            .expect("spawn executor thread");
+        let max_bucket = ready_rx
+            .recv()
+            .map_err(|_| anyhow!("executor thread died during load"))??;
+        Ok(ExecutorHandle { tx, max_bucket, stats, name })
+    }
+}
+
+fn run_loop(
+    exec: ModelExecutor,
+    rx: Receiver<Request>,
+    stats: Arc<BatcherStats>,
+    max_batch: usize,
+    batch_window: Duration,
+) {
+    let cap = exec.max_batch().min(max_batch).max(1);
+    while let Ok(first) = rx.recv() {
+        let mut pending = vec![first];
+        let deadline = Instant::now() + batch_window;
+        while pending.len() < cap {
+            let now = Instant::now();
+            let wait = deadline.saturating_duration_since(now);
+            match if wait.is_zero() { rx.try_recv().map_err(|_| RecvTimeoutError::Timeout) } else { rx.recv_timeout(wait) } {
+                Ok(r) => pending.push(r),
+                Err(_) => break,
+            }
+        }
+        stats.requests.fetch_add(pending.len(), Ordering::Relaxed);
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        stats.batched_requests.fetch_add(pending.len(), Ordering::Relaxed);
+        stats.max_batch_seen.fetch_max(pending.len(), Ordering::Relaxed);
+
+        let seqs: Vec<SeqInput> = pending.iter().map(|r| r.seq.clone()).collect();
+        match exec.forward(&seqs) {
+            Ok(out) => {
+                let out = Arc::new(out);
+                for (b, req) in pending.into_iter().enumerate() {
+                    let _ = req.reply.send(Ok(SlotOut::new(out.clone(), b)));
+                }
+            }
+            Err(e) => {
+                // replicate the error per requester
+                let msg = format!("{e:#}");
+                for req in pending {
+                    let _ = req.reply.send(Err(anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+}
+
+impl Forward for ExecutorHandle {
+    fn forward1(&self, seq: SeqInput) -> Result<SlotOut> {
+        let (reply, rx) = sync_channel(1);
+        self.tx
+            .send(Request { seq, reply })
+            .map_err(|_| anyhow!("executor '{}' stopped", self.name))?;
+        rx.recv()
+            .map_err(|_| anyhow!("executor '{}' dropped request", self.name))?
+    }
+
+    fn max_bucket(&self) -> usize {
+        self.max_bucket
+    }
+}

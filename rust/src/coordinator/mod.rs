@@ -1,0 +1,25 @@
+//! Layer-3 serving coordinator (the vLLM-router-shaped part of the repo):
+//! per-model batching executors, a lazy model router, and a TCP front-end.
+//!
+//! Architecture (thread-based — the offline registry has no tokio, and the
+//! workload is CPU-bound on a single PJRT device, so a reactor would add
+//! nothing; bounded channels give the same backpressure):
+//!
+//! ```text
+//!   client conns ──> session threads ──┐
+//!                                      ├─> ExecutorHandle(target) ─┐
+//!        (sampler code, generic over   │      batching thread      ├─ PJRT
+//!         runtime::executor::Forward)  ├─> ExecutorHandle(draft)  ─┘
+//!                                      │      batching thread
+//!   Router: (dataset, encoder) ────────┘
+//! ```
+
+pub mod batcher;
+pub mod protocol;
+pub mod router;
+pub mod server;
+
+pub use batcher::{BatcherStats, ExecutorHandle};
+pub use protocol::{Request, SampleRequest};
+pub use router::{ModelPair, Router};
+pub use server::{Client, Server};

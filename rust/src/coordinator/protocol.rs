@@ -1,0 +1,164 @@
+//! Wire protocol of the sampling server: one JSON object per line.
+//!
+//! Request:
+//!   {"op":"sample","dataset":"hawkes","encoder":"attnhp","method":"sd",
+//!    "gamma":10,"t_end":30.0,"seed":1,"draft_size":"draft"}
+//!   {"op":"ping"} | {"op":"stats"}
+//!
+//! Response:
+//!   {"ok":true,"events":[[t,k],...],"stats":{...}}
+//!   {"ok":false,"error":"..."}
+
+use anyhow::{bail, Result};
+
+use crate::events::Event;
+use crate::sampler::SampleStats;
+use crate::util::json::{obj, Json};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Ping,
+    Stats,
+    Sample(SampleRequest),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct SampleRequest {
+    pub dataset: String,
+    pub encoder: String,
+    /// "ar" | "sd" | "sd-adaptive"
+    pub method: String,
+    pub gamma: usize,
+    pub t_end: f64,
+    pub seed: u64,
+    pub draft_size: String,
+}
+
+impl Request {
+    pub fn parse(line: &str) -> Result<Request> {
+        let j = Json::parse(line.trim())?;
+        match j.str_at("op") {
+            Some("ping") => Ok(Request::Ping),
+            Some("stats") => Ok(Request::Stats),
+            Some("sample") => Ok(Request::Sample(SampleRequest {
+                dataset: j.str_at("dataset").unwrap_or("hawkes").to_string(),
+                encoder: j.str_at("encoder").unwrap_or("attnhp").to_string(),
+                method: j.str_at("method").unwrap_or("sd").to_string(),
+                gamma: j.usize_at("gamma").unwrap_or(10),
+                t_end: j.f64_at("t_end").unwrap_or(30.0),
+                seed: j.f64_at("seed").unwrap_or(0.0) as u64,
+                draft_size: j.str_at("draft_size").unwrap_or("draft").to_string(),
+            })),
+            other => bail!("unknown op {other:?}"),
+        }
+    }
+
+    pub fn to_line(&self) -> String {
+        match self {
+            Request::Ping => r#"{"op":"ping"}"#.to_string(),
+            Request::Stats => r#"{"op":"stats"}"#.to_string(),
+            Request::Sample(s) => obj(vec![
+                ("op", Json::Str("sample".into())),
+                ("dataset", Json::Str(s.dataset.clone())),
+                ("encoder", Json::Str(s.encoder.clone())),
+                ("method", Json::Str(s.method.clone())),
+                ("gamma", Json::Num(s.gamma as f64)),
+                ("t_end", Json::Num(s.t_end)),
+                ("seed", Json::Num(s.seed as f64)),
+                ("draft_size", Json::Str(s.draft_size.clone())),
+            ])
+            .to_string(),
+        }
+    }
+}
+
+pub fn stats_json(s: &SampleStats) -> Json {
+    obj(vec![
+        ("events", Json::Num(s.events as f64)),
+        ("rounds", Json::Num(s.rounds as f64)),
+        ("target_forwards", Json::Num(s.target_forwards as f64)),
+        ("draft_forwards", Json::Num(s.draft_forwards as f64)),
+        ("drafted", Json::Num(s.drafted as f64)),
+        ("accepted", Json::Num(s.accepted as f64)),
+        ("resampled", Json::Num(s.resampled as f64)),
+        ("bonus", Json::Num(s.bonus as f64)),
+        ("wall_ms", Json::Num(s.wall.as_secs_f64() * 1e3)),
+    ])
+}
+
+pub fn ok_response(events: &[Event], stats: &SampleStats) -> String {
+    let evs = Json::Arr(
+        events
+            .iter()
+            .map(|e| Json::Arr(vec![Json::Num(e.t), Json::Num(e.k as f64)]))
+            .collect(),
+    );
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("events", evs),
+        ("stats", stats_json(stats)),
+    ])
+    .to_string()
+}
+
+pub fn err_response(msg: &str) -> String {
+    obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(msg.to_string())),
+    ])
+    .to_string()
+}
+
+/// Parse a server response into (events, wall_ms).
+pub fn parse_response(line: &str) -> Result<(Vec<Event>, f64)> {
+    let j = Json::parse(line.trim())?;
+    if j.get("ok") != Some(&Json::Bool(true)) {
+        bail!("server error: {}", j.str_at("error").unwrap_or("?"));
+    }
+    let events = j
+        .get("events")
+        .and_then(Json::as_arr)
+        .map(|a| {
+            a.iter()
+                .filter_map(|e| {
+                    let p = e.as_arr()?;
+                    Some(Event::new(p[0].as_f64()?, p[1].as_f64()? as u32))
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    let wall = j.f64_at("stats.wall_ms").unwrap_or(f64::NAN);
+    Ok((events, wall))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let r = Request::Sample(SampleRequest {
+            dataset: "taxi_sim".into(),
+            encoder: "thp".into(),
+            method: "sd".into(),
+            gamma: 7,
+            t_end: 42.5,
+            seed: 3,
+            draft_size: "draft".into(),
+        });
+        let line = r.to_line();
+        assert_eq!(Request::parse(&line).unwrap(), r);
+        assert_eq!(Request::parse(r#"{"op":"ping"}"#).unwrap(), Request::Ping);
+        assert!(Request::parse(r#"{"op":"bogus"}"#).is_err());
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let evs = vec![Event::new(1.5, 2), Event::new(3.25, 0)];
+        let stats = SampleStats { events: 2, ..Default::default() };
+        let line = ok_response(&evs, &stats);
+        let (parsed, _) = parse_response(&line).unwrap();
+        assert_eq!(parsed, evs);
+        assert!(parse_response(&err_response("boom")).is_err());
+    }
+}

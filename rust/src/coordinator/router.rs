@@ -1,0 +1,85 @@
+//! Model router: maps `(dataset, encoder)` to a target/draft executor pair,
+//! spawning executor threads lazily and reusing them across sessions.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{Context as _, Result};
+
+use super::batcher::ExecutorHandle;
+use crate::runtime::ArtifactDir;
+use crate::util::json::Json;
+
+/// A routed model pair ready for sampling.
+#[derive(Clone)]
+pub struct ModelPair {
+    pub target: ExecutorHandle,
+    pub draft: ExecutorHandle,
+    pub num_types: usize,
+}
+
+pub struct Router {
+    art: ArtifactDir,
+    datasets: Json,
+    pairs: Mutex<BTreeMap<(String, String, String), ModelPair>>,
+    pub max_batch: usize,
+    pub batch_window: Duration,
+}
+
+impl Router {
+    pub fn new(art: ArtifactDir, max_batch: usize, batch_window: Duration) -> Result<Router> {
+        let datasets = art.datasets_json()?;
+        Ok(Router {
+            art,
+            datasets,
+            pairs: Mutex::new(BTreeMap::new()),
+            max_batch,
+            batch_window,
+        })
+    }
+
+    /// Number of real event types for a dataset.
+    pub fn num_types(&self, dataset: &str) -> Result<usize> {
+        self.datasets
+            .usize_at(&format!("datasets.{dataset}.num_types"))
+            .with_context(|| format!("unknown dataset '{dataset}'"))
+    }
+
+    /// Datasets known to the artifact registry.
+    pub fn datasets(&self) -> Vec<String> {
+        self.datasets
+            .get("datasets")
+            .and_then(Json::as_obj)
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// Get (spawning if needed) the executor pair for a model.
+    pub fn route(&self, dataset: &str, encoder: &str, draft_size: &str) -> Result<ModelPair> {
+        let key = (dataset.to_string(), encoder.to_string(), draft_size.to_string());
+        if let Some(p) = self.pairs.lock().unwrap().get(&key) {
+            return Ok(p.clone());
+        }
+        let num_types = self.num_types(dataset)?;
+        let target = ExecutorHandle::spawn(
+            self.art.clone(),
+            dataset,
+            encoder,
+            "target",
+            self.max_batch,
+            self.batch_window,
+        )?;
+        let draft = ExecutorHandle::spawn(
+            self.art.clone(),
+            dataset,
+            encoder,
+            draft_size,
+            self.max_batch,
+            self.batch_window,
+        )?;
+        let pair = ModelPair { target, draft, num_types };
+        self.pairs.lock().unwrap().insert(key, pair.clone());
+        Ok(pair)
+    }
+}

@@ -1,0 +1,150 @@
+//! TCP sampling server: line-protocol front-end over the router + batching
+//! executors. One lightweight thread per connection (sessions); the heavy
+//! lifting batches on the per-model executor threads.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::protocol::{err_response, ok_response, Request, SampleRequest};
+use super::router::Router;
+use crate::sampler::{sample_ar, sample_sd, Gamma, SampleCfg, SdCfg};
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    listener: TcpListener,
+    router: Arc<Router>,
+    sessions: Arc<AtomicUsize>,
+}
+
+impl Server {
+    /// Bind (use port 0 for an ephemeral port) and build the router.
+    pub fn bind(
+        art: crate::runtime::ArtifactDir,
+        host_port: &str,
+        max_batch: usize,
+        batch_window: Duration,
+    ) -> Result<Server> {
+        let router = Arc::new(Router::new(art, max_batch, batch_window)?);
+        let listener = TcpListener::bind(host_port)?;
+        let addr = listener.local_addr()?;
+        Ok(Server { addr, listener, router, sessions: Arc::new(AtomicUsize::new(0)) })
+    }
+
+    pub fn router(&self) -> Arc<Router> {
+        self.router.clone()
+    }
+
+    /// Accept loop; blocks forever. Call from a dedicated thread when
+    /// embedding (see `examples/serve.rs`).
+    pub fn serve(&self) -> Result<()> {
+        for stream in self.listener.incoming() {
+            let stream = match stream {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let router = self.router.clone();
+            let sessions = self.sessions.clone();
+            std::thread::spawn(move || {
+                sessions.fetch_add(1, Ordering::Relaxed);
+                let _ = handle_conn(stream, &router, &sessions);
+                sessions.fetch_sub(1, Ordering::Relaxed);
+            });
+        }
+        Ok(())
+    }
+}
+
+fn handle_conn(stream: TcpStream, router: &Router, sessions: &AtomicUsize) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // connection closed
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match Request::parse(&line) {
+            Ok(Request::Ping) => r#"{"ok":true,"pong":true}"#.to_string(),
+            Ok(Request::Stats) => stats_response(router, sessions),
+            Ok(Request::Sample(req)) => match run_sample(router, &req) {
+                Ok(resp) => resp,
+                Err(e) => err_response(&format!("{e:#}")),
+            },
+            Err(e) => err_response(&format!("{e:#}")),
+        };
+        writer.write_all(resp.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+}
+
+fn run_sample(router: &Router, req: &SampleRequest) -> Result<String> {
+    let pair = router.route(&req.dataset, &req.encoder, &req.draft_size)?;
+    let cfg = SampleCfg {
+        num_types: pair.num_types,
+        t_end: req.t_end,
+        max_events: 16 * 1024,
+    };
+    let mut rng = Rng::new(req.seed);
+    let (events, stats) = match req.method.as_str() {
+        "ar" => sample_ar(&pair.target, &cfg, &mut rng)?,
+        "sd" => {
+            let sd = SdCfg { sample: cfg, gamma: Gamma::Fixed(req.gamma), ..Default::default() };
+            sample_sd(&pair.target, &pair.draft, &sd, &mut rng)?
+        }
+        "sd-adaptive" => {
+            let sd = SdCfg {
+                sample: cfg,
+                gamma: Gamma::Adaptive { init: req.gamma, min: 2, max: 4 * req.gamma.max(1) },
+                ..Default::default()
+            };
+            sample_sd(&pair.target, &pair.draft, &sd, &mut rng)?
+        }
+        other => anyhow::bail!("unknown method '{other}' (ar|sd|sd-adaptive)"),
+    };
+    Ok(ok_response(&events, &stats))
+}
+
+fn stats_response(router: &Router, sessions: &AtomicUsize) -> String {
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("sessions", Json::Num(sessions.load(Ordering::Relaxed) as f64)),
+        (
+            "datasets",
+            Json::Arr(router.datasets().into_iter().map(Json::Str).collect()),
+        ),
+    ])
+    .to_string()
+}
+
+/// Minimal blocking client for tests and the serve example.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    pub fn call(&mut self, req: &Request) -> Result<String> {
+        self.writer.write_all(req.to_line().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(line)
+    }
+}

@@ -1,0 +1,60 @@
+//! Core event type shared by processes, samplers, metrics and coordinator.
+
+/// One marked event: absolute time `t` and type `k ∈ [0, K)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    pub t: f64,
+    pub k: u32,
+}
+
+impl Event {
+    pub fn new(t: f64, k: u32) -> Event {
+        Event { t, k }
+    }
+}
+
+/// Inter-event intervals of a sorted event sequence (τ₁ = t₁ − t₀ with
+/// t₀ = 0 by convention).
+pub fn intervals(events: &[Event]) -> Vec<f64> {
+    let mut prev = 0.0;
+    events
+        .iter()
+        .map(|e| {
+            let tau = e.t - prev;
+            prev = e.t;
+            tau
+        })
+        .collect()
+}
+
+/// True if times are strictly increasing and within (0, t_end].
+pub fn is_valid_sequence(events: &[Event], t_end: f64) -> bool {
+    let mut prev = 0.0;
+    for e in events {
+        if !(e.t > prev) || e.t > t_end {
+            return false;
+        }
+        prev = e.t;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intervals_basic() {
+        let ev = vec![Event::new(1.0, 0), Event::new(2.5, 1), Event::new(4.0, 0)];
+        assert_eq!(intervals(&ev), vec![1.0, 1.5, 1.5]);
+    }
+
+    #[test]
+    fn validity() {
+        let ok = vec![Event::new(0.5, 0), Event::new(1.0, 0)];
+        assert!(is_valid_sequence(&ok, 2.0));
+        assert!(!is_valid_sequence(&ok, 0.9));
+        let bad = vec![Event::new(1.0, 0), Event::new(1.0, 0)];
+        assert!(!is_valid_sequence(&bad, 2.0));
+    }
+}

@@ -1,0 +1,23 @@
+//! TPP-SD: Accelerating Transformer Point Process Sampling with Speculative
+//! Decoding (NeurIPS 2025) — Rust coordinator (Layer 3).
+//!
+//! See `DESIGN.md` for the full architecture: Pallas kernels (L1) and the
+//! JAX CDF-Transformer TPP (L2) are AOT-compiled at build time to HLO text;
+//! this crate loads them via PJRT and owns everything on the request path —
+//! AR sampling, speculative decoding, ground-truth processes, metrics and
+//! the serving coordinator.
+
+pub mod bench;
+pub mod coordinator;
+pub mod events;
+pub mod metrics;
+pub mod model;
+pub mod processes;
+pub mod runtime;
+pub mod sampler;
+pub mod util;
+
+pub use events::Event;
+
+/// Crate version string.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

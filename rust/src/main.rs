@@ -1,0 +1,151 @@
+//! `tppsd` — the leader CLI.
+//!
+//! Subcommands:
+//!   serve   — start the sampling coordinator (TCP line protocol)
+//!   sample  — sample sequences from a trained model (ar | sd | sd-adaptive)
+//!   info    — list artifacts, datasets and model configurations
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+use tpp_sd::coordinator::Server;
+use tpp_sd::runtime::{ArtifactDir, ModelExecutor};
+use tpp_sd::sampler::{sample_ar, sample_sd, Gamma, SampleCfg, SdCfg};
+use tpp_sd::util::cli::Args;
+use tpp_sd::util::json::Json;
+use tpp_sd::util::rng::Rng;
+
+const USAGE: &str = "\
+tppsd — TPP-SD sampling coordinator
+
+usage: tppsd <command> [options]
+
+commands:
+  info                              list datasets / models in the artifact dir
+  sample  --dataset D --encoder E   sample one sequence and print it
+          [--method ar|sd|sd-adaptive] [--gamma 10] [--t-end 30]
+          [--seed 0] [--draft-size draft] [--csv]
+  serve   [--listen 127.0.0.1:7077] [--max-batch 8] [--batch-window-ms 2]
+
+environment:
+  TPP_SD_ARTIFACTS   artifact directory (default ./artifacts)
+";
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().cloned().unwrap_or_default();
+    let args = Args::parse(argv.into_iter().skip(1));
+    match cmd.as_str() {
+        "info" => info(),
+        "sample" => sample(&args),
+        "serve" => serve(&args),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn info() -> Result<()> {
+    let art = ArtifactDir::discover()?;
+    let ds = art.datasets_json()?;
+    println!("artifact dir: {}", art.root.display());
+    println!("k_max={} buckets={:?}", ds.usize_at("k_max").unwrap_or(0),
+        ds.get("buckets").map(|b| b.to_string()).unwrap_or_default());
+    if let Some(sizes) = ds.get("sizes").and_then(Json::as_obj) {
+        println!("model sizes:");
+        for (name, s) in sizes {
+            println!(
+                "  {:<8} layers={} heads={} d_model={} M={}",
+                name,
+                s.usize_at("n_layers").unwrap_or(0),
+                s.usize_at("n_heads").unwrap_or(0),
+                s.usize_at("d_model").unwrap_or(0),
+                s.usize_at("n_mix").unwrap_or(0)
+            );
+        }
+    }
+    if let Some(dss) = ds.get("datasets").and_then(Json::as_obj) {
+        println!("datasets:");
+        for (name, d) in dss {
+            println!(
+                "  {:<18} kind={:<12} K={}",
+                name,
+                d.str_at("kind").unwrap_or("?"),
+                d.usize_at("num_types").unwrap_or(0)
+            );
+        }
+    }
+    Ok(())
+}
+
+fn sample(args: &Args) -> Result<()> {
+    let dataset = args.str_or("dataset", "hawkes").to_string();
+    let encoder = args.str_or("encoder", "attnhp").to_string();
+    let method = args.str_or("method", "sd").to_string();
+    let art = ArtifactDir::discover()?;
+    let ds = art.datasets_json()?;
+    let Some(num_types) = ds.usize_at(&format!("datasets.{dataset}.num_types")) else {
+        bail!("unknown dataset '{dataset}' (see `tppsd info`)");
+    };
+    let cfg = SampleCfg {
+        num_types,
+        t_end: args.f64_or("t-end", 30.0),
+        max_events: args.usize_or("max-events", 16 * 1024),
+    };
+    let client = tpp_sd::runtime::cpu_client()?;
+    let target = ModelExecutor::load(client.clone(), &art, &dataset, &encoder, "target")?;
+    let mut rng = Rng::new(args.u64_or("seed", 0));
+    let gamma = args.usize_or("gamma", 10);
+    let (events, stats) = match method.as_str() {
+        "ar" => sample_ar(&target, &cfg, &mut rng)?,
+        "sd" | "sd-adaptive" => {
+            let draft = ModelExecutor::load(
+                client,
+                &art,
+                &dataset,
+                &encoder,
+                args.str_or("draft-size", "draft"),
+            )?;
+            let g = if method == "sd" {
+                Gamma::Fixed(gamma)
+            } else {
+                Gamma::Adaptive { init: gamma, min: 2, max: 4 * gamma.max(1) }
+            };
+            let sd = SdCfg { sample: cfg, gamma: g, ..Default::default() };
+            sample_sd(&target, &draft, &sd, &mut rng)?
+        }
+        other => bail!("unknown method '{other}'"),
+    };
+    if args.has("csv") {
+        println!("t,k");
+        for e in &events {
+            println!("{:.6},{}", e.t, e.k);
+        }
+    } else {
+        for e in &events {
+            println!("{:10.5}  {}", e.t, e.k);
+        }
+    }
+    eprintln!(
+        "# {} events in {:?} ({} target + {} draft forwards, α={:.2})",
+        stats.events,
+        stats.wall,
+        stats.target_forwards,
+        stats.draft_forwards,
+        stats.acceptance_rate()
+    );
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let art = ArtifactDir::discover()?;
+    let server = Server::bind(
+        art,
+        args.str_or("listen", "127.0.0.1:7077"),
+        args.usize_or("max-batch", 8),
+        Duration::from_millis(args.u64_or("batch-window-ms", 2)),
+    )?;
+    println!("tppsd serving on {}", server.addr);
+    server.serve()
+}

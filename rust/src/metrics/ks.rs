@@ -1,0 +1,99 @@
+//! Kolmogorov–Smirnov machinery (paper App. A.4): KS statistic of
+//! time-rescaled intervals against Exp(1), 95% confidence bands, and the
+//! KS-plot point series of Figures 2/4.
+
+/// Exp(1) CDF.
+#[inline]
+pub fn exp1_cdf(z: f64) -> f64 {
+    1.0 - (-z.max(0.0)).exp()
+}
+
+/// Two-sided KS statistic of `samples` against a CDF `f`.
+/// D = sup_x |F_n(x) − F(x)| computed exactly at the jump points.
+pub fn ks_statistic(samples: &[f64], f: impl Fn(f64) -> f64) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    let mut xs = samples.to_vec();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = xs.len() as f64;
+    let mut d: f64 = 0.0;
+    for (i, x) in xs.iter().enumerate() {
+        let fx = f(*x);
+        d = d.max((((i + 1) as f64) / n - fx).abs());
+        d = d.max((fx - (i as f64) / n).abs());
+    }
+    d
+}
+
+/// KS statistic of rescaled intervals vs Exp(1) (Theorem 2).
+pub fn ks_vs_exp1(z: &[f64]) -> f64 {
+    ks_statistic(z, exp1_cdf)
+}
+
+/// 95% confidence band half-width c(α)/√n with c(0.05) = 1.36 (Knuth).
+pub fn ks_band(n: usize) -> f64 {
+    1.36 / (n as f64).sqrt()
+}
+
+/// Reject H₀: F_n = Exp(1) at the 95% level?
+pub fn ks_reject(z: &[f64]) -> bool {
+    ks_vs_exp1(z) > ks_band(z.len())
+}
+
+/// KS-plot series: points (F(z_i), F_n(z_i)) on the unit square (Fig. 2/4);
+/// perfect sampling lies on the diagonal.
+pub fn ks_plot_points(z: &[f64]) -> Vec<(f64, f64)> {
+    let mut xs = z.to_vec();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = xs.len() as f64;
+    xs.iter()
+        .enumerate()
+        .map(|(i, x)| (exp1_cdf(*x), (i + 1) as f64 / n))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ks_zero_for_perfect_grid() {
+        // quantile grid has the minimal possible D = 1/(2n)
+        let n = 1000;
+        let z: Vec<f64> = (0..n)
+            .map(|i| -(1.0 - (i as f64 + 0.5) / n as f64).ln())
+            .collect();
+        assert!(ks_vs_exp1(&z) <= 0.5 / n as f64 + 1e-9);
+    }
+
+    #[test]
+    fn exp1_samples_pass_wrong_dist_fails() {
+        let mut rng = Rng::new(77);
+        let z: Vec<f64> = (0..5000).map(|_| rng.exponential(1.0)).collect();
+        assert!(!ks_reject(&z), "true Exp(1) rejected: D={}", ks_vs_exp1(&z));
+        let z2: Vec<f64> = (0..5000).map(|_| rng.exponential(1.3)).collect();
+        assert!(ks_reject(&z2), "Exp(1.3) not rejected");
+    }
+
+    #[test]
+    fn plot_points_monotone_on_diag() {
+        let mut rng = Rng::new(1);
+        let z: Vec<f64> = (0..2000).map(|_| rng.exponential(1.0)).collect();
+        let pts = ks_plot_points(&z);
+        let band = ks_band(z.len());
+        let mut prev = (0.0, 0.0);
+        for (x, y) in pts {
+            assert!(x >= prev.0 && y >= prev.1);
+            assert!((y - x).abs() <= band * 1.6, "({x},{y}) off-diagonal");
+            prev = (x, y);
+        }
+    }
+
+    #[test]
+    fn band_shrinks_with_n() {
+        assert!(ks_band(100) > ks_band(10_000));
+        assert!((ks_band(10_000) - 0.0136).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,11 @@
+//! Evaluation metrics of §5.1: KS statistic + bands (synthetic),
+//! 1-Wasserstein / EMD (real), and model/ground-truth likelihood
+//! discrepancies.
+
+pub mod ks;
+pub mod loglik;
+pub mod wasserstein;
+
+pub use ks::{ks_band, ks_plot_points, ks_reject, ks_vs_exp1};
+pub use loglik::{delta_l, model_loglik};
+pub use wasserstein::{emd_labels, emd_types, type_histogram, wasserstein_1d};

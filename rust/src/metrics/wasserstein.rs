@@ -1,0 +1,158 @@
+//! 1-D optimal transport distances (paper §5.1, Table 2): the 1-Wasserstein
+//! distance between empirical samples (`D_WS^t`, continuous times) and the
+//! earth mover's distance between event-type distributions (`D_WS^k`).
+//!
+//! In one dimension both are exact CDF formulas — the paper's POT calls
+//! (`ot.wasserstein_1d`, `ot.emd2` with |i−j| ground cost) reduce to the
+//! same quantities, so no generic OT solver is needed (DESIGN.md §3).
+
+/// W₁ between two empirical distributions: ∫ |F_a⁻¹(q) − F_b⁻¹(q)| dq.
+/// Handles unequal sample counts by integrating over merged quantile
+/// breakpoints; for equal n it reduces to mean |sorted_a − sorted_b|.
+pub fn wasserstein_1d(a: &[f64], b: &[f64]) -> f64 {
+    assert!(!a.is_empty() && !b.is_empty());
+    let mut xa = a.to_vec();
+    let mut xb = b.to_vec();
+    xa.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    xb.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let (na, nb) = (xa.len(), xb.len());
+    let (mut ia, mut ib) = (0usize, 0usize);
+    let mut q = 0.0;
+    let mut acc = 0.0;
+    while ia < na && ib < nb {
+        let qa = (ia + 1) as f64 / na as f64;
+        let qb = (ib + 1) as f64 / nb as f64;
+        let q_next = qa.min(qb);
+        acc += (q_next - q) * (xa[ia] - xb[ib]).abs();
+        q = q_next;
+        if qa <= q_next + 1e-15 {
+            ia += 1;
+        }
+        if qb <= q_next + 1e-15 {
+            ib += 1;
+        }
+    }
+    acc
+}
+
+/// EMD between two discrete distributions over ordered types 0..K with
+/// ground cost |i − j|: Σ_k |CDF_a(k) − CDF_b(k)|.
+pub fn emd_types(pa: &[f64], pb: &[f64]) -> f64 {
+    assert_eq!(pa.len(), pb.len());
+    let mut ca = 0.0;
+    let mut cb = 0.0;
+    let mut acc = 0.0;
+    for (x, y) in pa.iter().zip(pb) {
+        ca += x;
+        cb += y;
+        acc += (ca - cb).abs();
+    }
+    acc
+}
+
+/// Empirical type distribution over `k` types from labels.
+pub fn type_histogram(labels: &[u32], k: usize) -> Vec<f64> {
+    let mut h = vec![0.0; k];
+    for &l in labels {
+        h[(l as usize).min(k - 1)] += 1.0;
+    }
+    let n = labels.len().max(1) as f64;
+    for x in &mut h {
+        *x /= n;
+    }
+    h
+}
+
+/// EMD between two label samples over `k` types (the paper's `D_WS^k`).
+pub fn emd_labels(a: &[u32], b: &[u32], k: usize) -> f64 {
+    emd_types(&type_histogram(a, k), &type_histogram(b, k))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::checker::{check, close};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identical_samples_zero() {
+        let a = [1.0, 3.0, 2.0];
+        assert_eq!(wasserstein_1d(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn translation_equals_shift() {
+        let a = [0.0, 1.0, 2.0, 5.0];
+        let b: Vec<f64> = a.iter().map(|x| x + 2.5).collect();
+        close(wasserstein_1d(&a, &b), 2.5, 1e-12, "shift").unwrap();
+    }
+
+    #[test]
+    fn equal_n_reduces_to_sorted_mean_abs_diff() {
+        let mut rng = Rng::new(3);
+        let a: Vec<f64> = (0..50).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..50).map(|_| rng.normal() + 0.3).collect();
+        let mut sa = a.clone();
+        let mut sb = b.clone();
+        sa.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        sb.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        let want: f64 =
+            sa.iter().zip(&sb).map(|(x, y)| (x - y).abs()).sum::<f64>() / 50.0;
+        close(wasserstein_1d(&a, &b), want, 1e-12, "equal-n").unwrap();
+    }
+
+    #[test]
+    fn unequal_n_matches_subdivision() {
+        // W1({0,1}, {0,0.5,1}) via quantile integral
+        let a = [0.0, 1.0];
+        let b = [0.0, 0.5, 1.0];
+        // breakpoints: q∈(0,1/3]:|0-0|, (1/3,1/2]:|1-0.5|... compute directly
+        let got = wasserstein_1d(&a, &b);
+        // integral: q in (1/3,1/2): |F_a^{-1}=0? (q<=1/2 → a=0)|
+        // a-quantiles: 0 for q≤.5, 1 for q>.5; b: 0 q≤1/3, .5 q≤2/3, 1 else
+        // ∫ = (1/3..1/2):|0-.5| * 1/6 + (1/2..2/3):|1-.5| *1/6 + 0 elsewhere
+        let want = 0.5 / 6.0 + 0.5 / 6.0;
+        close(got, want, 1e-12, "unequal").unwrap();
+    }
+
+    #[test]
+    fn property_metric_axioms() {
+        check(
+            "W1 symmetry + triangle-ish",
+            30,
+            |r| {
+                let n = 5 + r.below(20);
+                let m = 5 + r.below(20);
+                let a: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+                let b: Vec<f64> = (0..m).map(|_| r.normal() * 2.0).collect();
+                (a, b)
+            },
+            |(a, b)| {
+                let d1 = wasserstein_1d(a, b);
+                let d2 = wasserstein_1d(b, a);
+                if d1 < 0.0 {
+                    return Err("negative".into());
+                }
+                close(d1, d2, 1e-9, "symmetry")
+            },
+        );
+    }
+
+    #[test]
+    fn emd_types_basics() {
+        let p = [1.0, 0.0, 0.0];
+        let q = [0.0, 0.0, 1.0];
+        // all mass moves distance 2
+        close(emd_types(&p, &q), 2.0, 1e-12, "corner").unwrap();
+        assert_eq!(emd_types(&p, &p), 0.0);
+    }
+
+    #[test]
+    fn emd_labels_and_histograms() {
+        let a = [0u32, 0, 1, 1];
+        let b = [0u32, 1, 1, 1];
+        let h = type_histogram(&a, 2);
+        close(h[0], 0.5, 1e-12, "hist").unwrap();
+        close(emd_labels(&a, &b, 2), 0.25, 1e-12, "emd").unwrap();
+    }
+}

@@ -1,0 +1,8 @@
+//! Model-side math over AOT forward outputs: log-normal mixtures, type
+//! distributions, and the model log-likelihood (Eq. 2).
+
+pub mod mixture;
+pub mod mock;
+
+pub use mixture::{sample_adjusted_interval, Mixture, TypeDist};
+pub use mock::MockModel;

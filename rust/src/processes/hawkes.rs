@@ -1,0 +1,164 @@
+//! Univariate exponential Hawkes process (paper App. B.1):
+//! λ(t) = μ + Σ_{t_i < t} α·exp(−β(t − t_i)).
+
+use super::GroundTruth;
+use crate::events::Event;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Hawkes {
+    pub mu: f64,
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+impl Hawkes {
+    pub fn new(mu: f64, alpha: f64, beta: f64) -> Hawkes {
+        assert!(alpha < beta, "subcritical Hawkes requires α < β");
+        Hawkes { mu, alpha, beta }
+    }
+
+    /// Decay state S(t) = Σ_{t_i < t} exp(−β(t − t_i)) from scratch.
+    fn decay_state(&self, t: f64, history: &[Event]) -> f64 {
+        history
+            .iter()
+            .map(|e| (-self.beta * (t - e.t)).exp())
+            .sum()
+    }
+}
+
+impl GroundTruth for Hawkes {
+    fn num_types(&self) -> usize {
+        1
+    }
+
+    fn total_intensity(&self, t: f64, history: &[Event]) -> f64 {
+        self.mu + self.alpha * self.decay_state(t, history)
+    }
+
+    fn integrated_total(&self, a: f64, b: f64, history: &[Event]) -> f64 {
+        // All history < a: ∫_a^b α S(s) ds = (α/β)·S(a)·(1 − e^{−β(b−a)})
+        let s_a = self.decay_state(a, history);
+        self.mu * (b - a) + self.alpha / self.beta * s_a * (1.0 - (-self.beta * (b - a)).exp())
+    }
+
+    fn loglik(&self, events: &[Event], t_end: f64) -> f64 {
+        // O(N) recursion on the decay state.
+        let mut s = 0.0;
+        let mut prev = 0.0;
+        let mut ll = 0.0;
+        for e in events {
+            s *= (-self.beta * (e.t - prev)).exp();
+            ll += (self.mu + self.alpha * s).max(1e-12).ln();
+            s += 1.0;
+            prev = e.t;
+        }
+        let mut comp = self.mu * t_end;
+        for e in events {
+            comp += self.alpha / self.beta * (1.0 - (-self.beta * (t_end - e.t)).exp());
+        }
+        ll - comp
+    }
+
+    fn simulate(&self, rng: &mut Rng, t_end: f64) -> Vec<Event> {
+        // Ogata thinning with the O(1) decay-state recursion; between events
+        // the intensity is non-increasing, so λ(t⁺) dominates.
+        let mut t = 0.0;
+        let mut s = 0.0;
+        let mut out = Vec::new();
+        loop {
+            let lam_bar = self.mu + self.alpha * s;
+            let t_next = t + rng.exponential(lam_bar);
+            if t_next > t_end {
+                return out;
+            }
+            let s_next = s * (-self.beta * (t_next - t)).exp();
+            let lam = self.mu + self.alpha * s_next;
+            t = t_next;
+            s = s_next;
+            if rng.uniform() * lam_bar < lam {
+                out.push(Event::new(t, 0));
+                s += 1.0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::checker::close;
+    use crate::util::math::{mean, std_dev};
+
+    fn proc() -> Hawkes {
+        Hawkes::new(2.5, 1.0, 2.0)
+    }
+
+    #[test]
+    fn integrated_matches_numeric() {
+        let p = proc();
+        let hist = vec![Event::new(0.5, 0), Event::new(1.2, 0), Event::new(2.9, 0)];
+        let (a, b) = (3.0, 6.0);
+        let n = 400_000;
+        let dt = (b - a) / n as f64;
+        let num: f64 = (0..n)
+            .map(|i| p.total_intensity(a + (i as f64 + 0.5) * dt, &hist) * dt)
+            .sum();
+        close(p.integrated_total(a, b, &hist), num, 1e-6, "Λ").unwrap();
+    }
+
+    #[test]
+    fn stationary_rate() {
+        // E[N(0,T)]/T → μ/(1−α/β) = 2.5/0.5 = 5.
+        let p = proc();
+        let mut rng = Rng::new(3);
+        let t_end = 200.0;
+        let runs = 40;
+        let mean_rate = (0..runs)
+            .map(|_| p.simulate(&mut rng, t_end).len() as f64 / t_end)
+            .sum::<f64>()
+            / runs as f64;
+        assert!((mean_rate - 5.0).abs() < 0.35, "rate={mean_rate}");
+    }
+
+    #[test]
+    fn rescaled_intervals_are_exp1() {
+        let p = proc();
+        let mut rng = Rng::new(4);
+        let mut zs = Vec::new();
+        for _ in 0..6 {
+            let ev = p.simulate(&mut rng, 60.0);
+            zs.extend(p.rescale(&ev));
+        }
+        assert!((mean(&zs) - 1.0).abs() < 0.06, "mean={}", mean(&zs));
+        assert!((std_dev(&zs) - 1.0).abs() < 0.1, "sd={}", std_dev(&zs));
+    }
+
+    #[test]
+    fn loglik_matches_rescaling_identity() {
+        // Σ log λ(t_i) − Λ(0,T) computed two ways must agree.
+        let p = proc();
+        let mut rng = Rng::new(6);
+        let ev = p.simulate(&mut rng, 20.0);
+        let ll = p.loglik(&ev, 20.0);
+        // brute force from trait methods
+        let mut sum_log = 0.0;
+        for (i, e) in ev.iter().enumerate() {
+            sum_log += p.total_intensity(e.t, &ev[..i]).max(1e-12).ln();
+        }
+        let mut comp = 0.0;
+        let mut prev = 0.0;
+        for (i, e) in ev.iter().enumerate() {
+            comp += p.integrated_total(prev, e.t, &ev[..i]);
+            prev = e.t;
+        }
+        comp += p.integrated_total(prev, 20.0, &ev);
+        close(ll, sum_log - comp, 1e-9, "loglik").unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "subcritical")]
+    fn rejects_supercritical() {
+        Hawkes::new(1.0, 3.0, 2.0);
+    }
+}

@@ -1,0 +1,86 @@
+//! Ground-truth point-process substrates (paper App. B.1): inhomogeneous
+//! Poisson, univariate Hawkes and multivariate Hawkes — with thinning
+//! simulation (Lewis–Shedler / Ogata), analytic integrated intensities for
+//! the time-rescaling theorem, and the CIF-form log-likelihood Eq. (1).
+//!
+//! These are the processes the synthetic experiments (Table 1, Fig. 2/4)
+//! measure against, and the substrate the training corpora were simulated
+//! from (same definitions, mirrored in `python/compile/data.py`).
+
+pub mod hawkes;
+pub mod multi_hawkes;
+pub mod poisson;
+
+pub use hawkes::Hawkes;
+pub use multi_hawkes::MultiHawkes;
+pub use poisson::InhomPoisson;
+
+use crate::events::Event;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// A ground-truth process: everything the evaluation harness needs.
+pub trait GroundTruth {
+    fn num_types(&self) -> usize;
+
+    /// Total conditional intensity λ*(t) = Σ_k λ*(t, k) given the (strictly
+    /// earlier) events of `history`.
+    fn total_intensity(&self, t: f64, history: &[Event]) -> f64;
+
+    /// ∫_a^b λ*(s) ds given that all events of `history` are < a.
+    fn integrated_total(&self, a: f64, b: f64, history: &[Event]) -> f64;
+
+    /// CIF-form log-likelihood Eq. (1) of `events` on the window [0, t_end].
+    fn loglik(&self, events: &[Event], t_end: f64) -> f64;
+
+    /// Simulate one realization on [0, t_end] via thinning.
+    fn simulate(&self, rng: &mut Rng, t_end: f64) -> Vec<Event>;
+
+    /// Time-rescaling transform (Theorem 2): z_i = ∫_{t_{i-1}}^{t_i} λ*(s) ds.
+    /// Under the true model the z_i are i.i.d. Exp(1).
+    fn rescale(&self, events: &[Event]) -> Vec<f64> {
+        let mut out = Vec::with_capacity(events.len());
+        let mut prev = 0.0;
+        for (i, e) in events.iter().enumerate() {
+            out.push(self.integrated_total(prev, e.t, &events[..i]));
+            prev = e.t;
+        }
+        out
+    }
+}
+
+/// Construct a ground-truth process from a `datasets.json` entry.
+pub fn from_dataset_json(cfg: &Json) -> anyhow::Result<Box<dyn GroundTruth>> {
+    let kind = cfg.str_at("kind").unwrap_or("");
+    let p = cfg.get("params").ok_or_else(|| anyhow::anyhow!("params"))?;
+    match kind {
+        "poisson" => Ok(Box::new(InhomPoisson::new(
+            p.f64_at("A").unwrap(),
+            p.f64_at("b").unwrap(),
+            p.f64_at("omega").unwrap(),
+        ))),
+        "hawkes" => Ok(Box::new(Hawkes::new(
+            p.f64_at("mu").unwrap(),
+            p.f64_at("alpha").unwrap(),
+            p.f64_at("beta").unwrap(),
+        ))),
+        "multihawkes" => {
+            let mu: Vec<f64> = p
+                .get("mu")
+                .and_then(Json::as_arr)
+                .unwrap()
+                .iter()
+                .filter_map(Json::as_f64)
+                .collect();
+            let alpha: Vec<Vec<f64>> = p
+                .get("alpha")
+                .and_then(Json::as_arr)
+                .unwrap()
+                .iter()
+                .map(|row| row.as_arr().unwrap().iter().filter_map(Json::as_f64).collect())
+                .collect();
+            Ok(Box::new(MultiHawkes::new(mu, alpha, p.f64_at("beta").unwrap())))
+        }
+        other => anyhow::bail!("unknown process kind {other}"),
+    }
+}

@@ -1,0 +1,133 @@
+//! Inhomogeneous Poisson process λ(t) = A·(b + sin(ω·π·t)) — paper App. B.1.
+
+use super::GroundTruth;
+use crate::events::Event;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct InhomPoisson {
+    pub a: f64,
+    pub b: f64,
+    pub omega: f64,
+}
+
+impl InhomPoisson {
+    pub fn new(a: f64, b: f64, omega: f64) -> InhomPoisson {
+        assert!(b >= 1.0, "intensity must stay positive (b ≥ 1)");
+        InhomPoisson { a, b, omega }
+    }
+
+    #[inline]
+    fn lambda(&self, t: f64) -> f64 {
+        self.a * (self.b + (self.omega * std::f64::consts::PI * t).sin())
+    }
+
+    /// Λ(t) = A·(b·t + (1 − cos(ωπt))/(ωπ)); Λ(0) = 0.
+    #[inline]
+    fn big_lambda(&self, t: f64) -> f64 {
+        let w = self.omega * std::f64::consts::PI;
+        self.a * (self.b * t + (1.0 - (w * t).cos()) / w)
+    }
+}
+
+impl GroundTruth for InhomPoisson {
+    fn num_types(&self) -> usize {
+        1
+    }
+
+    fn total_intensity(&self, t: f64, _history: &[Event]) -> f64 {
+        self.lambda(t)
+    }
+
+    fn integrated_total(&self, a: f64, b: f64, _history: &[Event]) -> f64 {
+        self.big_lambda(b) - self.big_lambda(a)
+    }
+
+    fn loglik(&self, events: &[Event], t_end: f64) -> f64 {
+        let sum_log: f64 = events.iter().map(|e| self.lambda(e.t).max(1e-12).ln()).sum();
+        sum_log - self.big_lambda(t_end)
+    }
+
+    fn simulate(&self, rng: &mut Rng, t_end: f64) -> Vec<Event> {
+        let lam_bar = self.a * (self.b + 1.0);
+        let mut t = 0.0;
+        let mut out = Vec::new();
+        loop {
+            t += rng.exponential(lam_bar);
+            if t > t_end {
+                return out;
+            }
+            if rng.uniform() * lam_bar < self.lambda(t) {
+                out.push(Event::new(t, 0));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::checker::close;
+
+    fn proc() -> InhomPoisson {
+        InhomPoisson::new(5.0, 1.0, 1.0 / 50.0)
+    }
+
+    #[test]
+    fn integral_matches_numeric() {
+        let p = proc();
+        let (a, b) = (3.0, 47.0);
+        let n = 200_000;
+        let dt = (b - a) / n as f64;
+        let num: f64 = (0..n)
+            .map(|i| p.lambda(a + (i as f64 + 0.5) * dt) * dt)
+            .sum();
+        close(p.integrated_total(a, b, &[]), num, 1e-6, "Λ(a,b)").unwrap();
+    }
+
+    #[test]
+    fn expected_count_matches_big_lambda() {
+        let p = proc();
+        let mut rng = Rng::new(11);
+        let t_end = 100.0;
+        let n_seq = 200;
+        let mean =
+            (0..n_seq).map(|_| p.simulate(&mut rng, t_end).len()).sum::<usize>() as f64
+                / n_seq as f64;
+        let want = p.big_lambda(t_end);
+        assert!(
+            (mean - want).abs() < 3.0 * (want / n_seq as f64).sqrt() + 1.0,
+            "mean={mean} want={want}"
+        );
+    }
+
+    #[test]
+    fn rescaled_intervals_are_exp1() {
+        // Time-rescaling sanity: mean and variance of z ≈ 1.
+        let p = proc();
+        let mut rng = Rng::new(5);
+        let mut zs = Vec::new();
+        for _ in 0..20 {
+            let ev = p.simulate(&mut rng, 100.0);
+            zs.extend(p.rescale(&ev));
+        }
+        let mean = crate::util::math::mean(&zs);
+        let sd = crate::util::math::std_dev(&zs);
+        assert!((mean - 1.0).abs() < 0.05, "mean={mean}");
+        assert!((sd - 1.0).abs() < 0.08, "sd={sd}");
+    }
+
+    #[test]
+    fn loglik_prefers_truth() {
+        // The true parameters should beat perturbed ones on average.
+        let p = proc();
+        let wrong = InhomPoisson::new(6.5, 1.0, 1.0 / 50.0);
+        let mut rng = Rng::new(2);
+        let mut diff = 0.0;
+        for _ in 0..20 {
+            let ev = p.simulate(&mut rng, 100.0);
+            diff += p.loglik(&ev, 100.0) - wrong.loglik(&ev, 100.0);
+        }
+        assert!(diff > 0.0, "diff={diff}");
+    }
+}

@@ -1,0 +1,398 @@
+//! The model executor: one trained TPP model, loaded onto the PJRT CPU
+//! client, with length-bucketed AOT executables and cached weights.
+//!
+//! Forward calls pick the smallest compiled bucket that fits the sequence
+//! (quadratic attention cost ⇒ small-context calls are much cheaper), and
+//! the B=8 graph when a batch of sequences is supplied (the coordinator's
+//! batching path). Executables are compiled lazily on first use and cached.
+//!
+//! XLA wrapper objects hold raw pointers and are not `Send`; the
+//! coordinator therefore owns each executor on a dedicated thread and talks
+//! to it over channels (see `coordinator::batcher`).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+use xla::FromRawBytes;
+
+use super::manifest::{ArtifactDir, Manifest};
+use crate::model::mixture::{Mixture, TypeDist};
+
+/// One sequence's model input: absolute event times/types (BOS excluded —
+/// the executor prepends it).
+#[derive(Debug, Clone, Default)]
+pub struct SeqInput {
+    /// window-start time carried by the BOS row
+    pub t0: f64,
+    pub times: Vec<f64>,
+    pub types: Vec<u32>,
+}
+
+impl SeqInput {
+    pub fn len_with_bos(&self) -> usize {
+        self.times.len() + 1
+    }
+}
+
+/// One batch slot of a [`ForwardOut`] — what a single-sequence consumer
+/// (sampler, likelihood scorer) sees. Cheap to clone (Arc-backed).
+#[derive(Debug, Clone)]
+pub struct SlotOut {
+    out: std::sync::Arc<ForwardOut>,
+    b: usize,
+}
+
+impl SlotOut {
+    pub fn new(out: std::sync::Arc<ForwardOut>, b: usize) -> SlotOut {
+        assert!(b < out.batch);
+        SlotOut { out, b }
+    }
+
+    pub fn mixture(&self, row: usize) -> Mixture {
+        self.out.mixture(self.b, row)
+    }
+
+    pub fn type_dist(&self, row: usize, k: usize) -> TypeDist {
+        self.out.type_dist(self.b, row, k)
+    }
+
+    pub fn bucket(&self) -> usize {
+        self.out.bucket
+    }
+}
+
+/// Anything that can run the model forward pass for one sequence: the
+/// in-process [`ModelExecutor`] (direct path) or a
+/// [`crate::coordinator::ExecutorHandle`] (batched serving path). Samplers
+/// and scorers are generic over this, so the exact same algorithm code runs
+/// on both paths.
+pub trait Forward {
+    fn forward1(&self, seq: SeqInput) -> anyhow::Result<SlotOut>;
+    /// Largest sequence length (incl. BOS) a forward can take.
+    fn max_bucket(&self) -> usize;
+}
+
+impl Forward for ModelExecutor {
+    fn forward1(&self, seq: SeqInput) -> anyhow::Result<SlotOut> {
+        let out = self.forward(std::slice::from_ref(&seq))?;
+        Ok(SlotOut::new(std::sync::Arc::new(out), 0))
+    }
+
+    fn max_bucket(&self) -> usize {
+        ModelExecutor::max_bucket(self)
+    }
+}
+
+/// Flattened forward outputs for a batch (row-major `[B, L, ·]`).
+#[derive(Debug)]
+pub struct ForwardOut {
+    pub batch: usize,
+    pub bucket: usize,
+    pub n_mix: usize,
+    pub k_max: usize,
+    log_w: Vec<f32>,
+    mu: Vec<f32>,
+    log_sigma: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+impl ForwardOut {
+    /// Construct from raw flattened buffers (used by mock models in tests
+    /// and by any alternative backend).
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_raw(
+        batch: usize,
+        bucket: usize,
+        n_mix: usize,
+        k_max: usize,
+        log_w: Vec<f32>,
+        mu: Vec<f32>,
+        log_sigma: Vec<f32>,
+        logits: Vec<f32>,
+    ) -> ForwardOut {
+        assert_eq!(log_w.len(), batch * bucket * n_mix);
+        assert_eq!(mu.len(), batch * bucket * n_mix);
+        assert_eq!(log_sigma.len(), batch * bucket * n_mix);
+        assert_eq!(logits.len(), batch * bucket * k_max);
+        ForwardOut { batch, bucket, n_mix, k_max, log_w, mu, log_sigma, logits }
+    }
+
+    /// Mixture parameters of `g(τ_{row+1} | history ≤ row)` for batch row b.
+    pub fn mixture(&self, b: usize, row: usize) -> Mixture {
+        debug_assert!(b < self.batch && row < self.bucket);
+        let m = self.n_mix;
+        let off = (b * self.bucket + row) * m;
+        Mixture {
+            log_w: self.log_w[off..off + m].iter().map(|&x| x as f64).collect(),
+            mu: self.mu[off..off + m].iter().map(|&x| x as f64).collect(),
+            log_sigma: self.log_sigma[off..off + m]
+                .iter()
+                .map(|&x| x as f64)
+                .collect(),
+        }
+    }
+
+    /// Event-type distribution at `row`, restricted to `k` real types.
+    pub fn type_dist(&self, b: usize, row: usize, k: usize) -> TypeDist {
+        debug_assert!(b < self.batch && row < self.bucket);
+        let off = (b * self.bucket + row) * self.k_max;
+        let logits: Vec<f64> = self.logits[off..off + self.k_max]
+            .iter()
+            .map(|&x| x as f64)
+            .collect();
+        TypeDist::from_logits(&logits, k)
+    }
+}
+
+/// A trained model (weights) + its bucketed executables, lazily compiled.
+pub struct ModelExecutor {
+    client: Rc<xla::PjRtClient>,
+    art: ArtifactDir,
+    pub encoder: String,
+    pub size_name: String,
+    pub n_mix: usize,
+    pub k_max: usize,
+    pub bos_id: u32,
+    manifests: BTreeMap<(usize, usize), Manifest>,
+    exes: RefCell<BTreeMap<(usize, usize), xla::PjRtLoadedExecutable>>,
+    weights: Vec<xla::Literal>,
+    /// weights pre-uploaded to the device — forwards then use `execute_b`
+    /// and only transfer the 3 small input tensors per call (§Perf: saves
+    /// the per-call host→device copy of every parameter literal). Disabled
+    /// via TPP_SD_LITERAL_ARGS=1 for the ablation bench.
+    weight_bufs: Option<Vec<xla::PjRtBuffer>>,
+    /// forward-call counter (perf accounting)
+    calls: RefCell<usize>,
+}
+
+impl ModelExecutor {
+    /// Load weights + manifests for `(dataset, encoder, size)`.
+    pub fn load(
+        client: Rc<xla::PjRtClient>,
+        art: &ArtifactDir,
+        dataset: &str,
+        encoder: &str,
+        size: &str,
+    ) -> Result<ModelExecutor> {
+        let mut manifests = BTreeMap::new();
+        for m in art.manifests_for(encoder, size)? {
+            manifests.insert((m.bucket, m.batch), m);
+        }
+        let m0 = manifests.values().next().unwrap().clone();
+        let weights = load_weights(&art.weights_path(dataset, encoder, size), &m0)?;
+        let weight_bufs = if std::env::var_os("TPP_SD_LITERAL_ARGS").is_some() {
+            None
+        } else {
+            let bufs = weights
+                .iter()
+                .map(|w| client.buffer_from_host_literal(None, w))
+                .collect::<std::result::Result<Vec<_>, _>>()?;
+            // buffer_from_host_literal copies ASYNCHRONOUSLY on a PJRT
+            // worker thread while reading the source literal; block until
+            // every copy has materialized before the literals can be freed
+            // (a cheap one-time sync read per buffer — dropping an executor
+            // right after load would otherwise race the copy: SIGSEGV in
+            // AbstractTfrtCpuBuffer::CopyFromLiteral).
+            for b in &bufs {
+                let _ = b.on_device_shape()?;
+                let _ = b.to_literal_sync()?;
+            }
+            Some(bufs)
+        };
+        Ok(ModelExecutor {
+            client,
+            art: art.clone(),
+            encoder: encoder.to_string(),
+            size_name: size.to_string(),
+            n_mix: m0.n_mix,
+            k_max: m0.k_max,
+            bos_id: m0.bos_id as u32,
+            manifests,
+            exes: RefCell::new(BTreeMap::new()),
+            weights,
+            weight_bufs,
+            calls: RefCell::new(0),
+        })
+    }
+
+    /// Number of forward calls so far (perf accounting).
+    pub fn call_count(&self) -> usize {
+        *self.calls.borrow()
+    }
+
+    pub fn reset_call_count(&self) {
+        *self.calls.borrow_mut() = 0;
+    }
+
+    /// Buckets available, ascending and deduplicated.
+    pub fn buckets(&self) -> Vec<usize> {
+        let mut b: Vec<usize> = self.manifests.keys().map(|(bucket, _)| *bucket).collect();
+        b.dedup();
+        b
+    }
+
+    pub fn max_bucket(&self) -> usize {
+        *self.buckets().last().unwrap()
+    }
+
+    /// Largest batch capacity compiled for any bucket.
+    pub fn max_batch(&self) -> usize {
+        self.manifests.keys().map(|(_, n)| *n).max().unwrap()
+    }
+
+    /// Smallest compiled bucket with capacity ≥ `len` (incl. BOS).
+    pub fn pick_bucket(&self, len: usize) -> Result<usize> {
+        self.buckets()
+            .into_iter()
+            .find(|&b| b >= len)
+            .with_context(|| format!("sequence length {len} exceeds max bucket"))
+    }
+
+    fn ensure_compiled(&self, bucket: usize, batch: usize) -> Result<()> {
+        let key = (bucket, batch);
+        if self.exes.borrow().contains_key(&key) {
+            return Ok(());
+        }
+        let manifest = self
+            .manifests
+            .get(&key)
+            .with_context(|| format!("no artifact for bucket={bucket} batch={batch}"))?;
+        let path = self.art.hlo_path(&manifest.stem());
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("loading {}", path.display()))?;
+        let exe = self
+            .client
+            .compile(&xla::XlaComputation::from_proto(&proto))
+            .with_context(|| format!("compiling {}", manifest.stem()))?;
+        self.exes.borrow_mut().insert(key, exe);
+        Ok(())
+    }
+
+    /// Pre-compile every (bucket, batch) graph (avoids first-call latency
+    /// spikes in benchmarks; the serving path normally compiles lazily).
+    pub fn warmup(&self) -> Result<()> {
+        let keys: Vec<_> = self.manifests.keys().cloned().collect();
+        for (bucket, batch) in keys {
+            self.ensure_compiled(bucket, batch)?;
+        }
+        Ok(())
+    }
+
+    /// Pre-compile only the graphs of one batch capacity (the evaluation
+    /// harness uses B=1 exclusively; compiling the B=8 graphs too would
+    /// waste minutes of XLA compile time).
+    pub fn warmup_batch(&self, batch: usize) -> Result<()> {
+        let keys: Vec<_> = self
+            .manifests
+            .keys()
+            .filter(|(_, n)| *n == batch)
+            .cloned()
+            .collect();
+        for (bucket, batch) in keys {
+            self.ensure_compiled(bucket, batch)?;
+        }
+        Ok(())
+    }
+
+    /// Run the forward pass for 1..=max_batch sequences.
+    pub fn forward(&self, seqs: &[SeqInput]) -> Result<ForwardOut> {
+        assert!(!seqs.is_empty());
+        let max_len = seqs.iter().map(SeqInput::len_with_bos).max().unwrap();
+        let bucket = self.pick_bucket(max_len)?;
+        let batch = self
+            .manifests
+            .keys()
+            .filter(|(b, _)| *b == bucket)
+            .map(|(_, n)| *n)
+            .find(|&n| n >= seqs.len())
+            .with_context(|| format!("no compiled batch size ≥ {}", seqs.len()))?;
+        self.ensure_compiled(bucket, batch)?;
+
+        let mut times = vec![0f32; batch * bucket];
+        let mut types = vec![self.bos_id as i32; batch * bucket];
+        let mut length = vec![1i32; batch];
+        for (b, s) in seqs.iter().enumerate() {
+            debug_assert_eq!(s.times.len(), s.types.len());
+            let row = b * bucket;
+            times[row] = s.t0 as f32;
+            for (i, (&t, &k)) in s.times.iter().zip(&s.types).enumerate() {
+                times[row + 1 + i] = t as f32;
+                types[row + 1 + i] = k as i32;
+            }
+            length[b] = (s.times.len() + 1) as i32;
+        }
+
+        let exes = self.exes.borrow();
+        let exe = &exes[&(bucket, batch)];
+        *self.calls.borrow_mut() += 1;
+        let result = if let Some(wbufs) = &self.weight_bufs {
+            // fast path: weights resident on device, upload only inputs
+            let t_buf =
+                self.client.buffer_from_host_buffer::<f32>(&times, &[batch, bucket], None)?;
+            let k_buf =
+                self.client.buffer_from_host_buffer::<i32>(&types, &[batch, bucket], None)?;
+            let l_buf = self.client.buffer_from_host_buffer::<i32>(&length, &[batch], None)?;
+            let mut args: Vec<&xla::PjRtBuffer> = wbufs.iter().collect();
+            args.push(&t_buf);
+            args.push(&k_buf);
+            args.push(&l_buf);
+            exe.execute_b::<&xla::PjRtBuffer>(&args)?[0][0].to_literal_sync()?
+        } else {
+            let t_lit = xla::Literal::vec1(&times).reshape(&[batch as i64, bucket as i64])?;
+            let k_lit = xla::Literal::vec1(&types).reshape(&[batch as i64, bucket as i64])?;
+            let l_lit = xla::Literal::vec1(&length);
+            let mut args: Vec<&xla::Literal> = self.weights.iter().collect();
+            args.push(&t_lit);
+            args.push(&k_lit);
+            args.push(&l_lit);
+            exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?
+        };
+        let outs = result.to_tuple()?;
+        if outs.len() != 4 {
+            bail!("expected 4 outputs, got {}", outs.len());
+        }
+        Ok(ForwardOut {
+            batch,
+            bucket,
+            n_mix: self.n_mix,
+            k_max: self.k_max,
+            log_w: outs[0].to_vec::<f32>()?,
+            mu: outs[1].to_vec::<f32>()?,
+            log_sigma: outs[2].to_vec::<f32>()?,
+            logits: outs[3].to_vec::<f32>()?,
+        })
+    }
+}
+
+fn load_weights(path: &Path, manifest: &Manifest) -> Result<Vec<xla::Literal>> {
+    let mut entries: Vec<(String, xla::Literal)> = xla::Literal::read_npz(path, &())
+        .with_context(|| format!("reading weights {}", path.display()))?;
+    entries.sort_by(|a, b| a.0.cmp(&b.0));
+    if entries.len() != manifest.params.len() {
+        bail!(
+            "weights {} has {} arrays, manifest expects {}",
+            path.display(),
+            entries.len(),
+            manifest.params.len()
+        );
+    }
+    let mut out = Vec::with_capacity(entries.len());
+    for ((key, lit), (name, shape)) in entries.into_iter().zip(&manifest.params) {
+        let got_name = key.split_once('|').map(|(_, n)| n).unwrap_or(&key);
+        if got_name != name {
+            bail!("weight order mismatch: npz '{got_name}' vs manifest '{name}'");
+        }
+        let dims: Vec<usize> = lit
+            .array_shape()
+            .map(|s| s.dims().iter().map(|&d| d as usize).collect())
+            .unwrap_or_default();
+        if &dims != shape {
+            bail!("weight '{name}' shape {dims:?} != manifest {shape:?}");
+        }
+        out.push(lit);
+    }
+    Ok(out)
+}

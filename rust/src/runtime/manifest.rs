@@ -1,0 +1,164 @@
+//! Artifact manifests: the JSON sidecar emitted by `python/compile/aot.py`
+//! describing one AOT-compiled forward graph (shapes, parameter order).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape metadata of one exported HLO graph.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub encoder: String,
+    pub size_name: String,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_model: usize,
+    pub n_mix: usize,
+    pub bucket: usize,
+    pub batch: usize,
+    pub k_max: usize,
+    pub bos_id: usize,
+    pub impl_name: String,
+    /// parameter (name, shape) in positional order
+    pub params: Vec<(String, Vec<usize>)>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        let need = |k: &str| -> Result<usize> {
+            j.usize_at(k).with_context(|| format!("manifest missing {k}"))
+        };
+        let params = j
+            .get("params")
+            .and_then(Json::as_arr)
+            .context("manifest missing params")?
+            .iter()
+            .map(|p| {
+                let name = p.str_at("name").unwrap_or("").to_string();
+                let shape = p
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or_default();
+                (name, shape)
+            })
+            .collect();
+        Ok(Manifest {
+            encoder: j.str_at("encoder").context("encoder")?.to_string(),
+            size_name: j.str_at("size.name").context("size.name")?.to_string(),
+            n_layers: need("size.n_layers")?,
+            n_heads: need("size.n_heads")?,
+            d_model: need("size.d_model")?,
+            n_mix: need("size.n_mix")?,
+            bucket: need("bucket")?,
+            batch: need("batch")?,
+            k_max: need("k_max")?,
+            bos_id: need("bos_id")?,
+            impl_name: j.str_at("impl").unwrap_or("pallas").to_string(),
+            params,
+        })
+    }
+
+    /// `fwd_{enc}_{size}_L{bucket}_B{batch}`
+    pub fn stem(&self) -> String {
+        format!(
+            "fwd_{}_{}_L{}_B{}",
+            self.encoder, self.size_name, self.bucket, self.batch
+        )
+    }
+}
+
+/// The artifact directory layout produced by `make artifacts`.
+#[derive(Debug, Clone)]
+pub struct ArtifactDir {
+    pub root: PathBuf,
+}
+
+impl ArtifactDir {
+    pub fn new<P: Into<PathBuf>>(root: P) -> Result<ArtifactDir> {
+        let root = root.into();
+        if !root.join("hlo").is_dir() {
+            bail!(
+                "artifact dir {} not built (run `make artifacts`)",
+                root.display()
+            );
+        }
+        Ok(ArtifactDir { root })
+    }
+
+    /// Default location: `$TPP_SD_ARTIFACTS` or `./artifacts`.
+    pub fn discover() -> Result<ArtifactDir> {
+        let root = std::env::var("TPP_SD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        ArtifactDir::new(root)
+    }
+
+    pub fn hlo_path(&self, stem: &str) -> PathBuf {
+        self.root.join("hlo").join(format!("{stem}.hlo.txt"))
+    }
+
+    pub fn manifest_path(&self, stem: &str) -> PathBuf {
+        self.root.join("hlo").join(format!("{stem}.manifest.json"))
+    }
+
+    pub fn weights_path(&self, dataset: &str, encoder: &str, size: &str) -> PathBuf {
+        self.root
+            .join("weights")
+            .join(format!("{dataset}_{encoder}_{size}.npz"))
+    }
+
+    pub fn datasets_json(&self) -> Result<Json> {
+        let p = self.root.join("datasets.json");
+        let text = std::fs::read_to_string(&p)
+            .with_context(|| format!("reading {}", p.display()))?;
+        Ok(Json::parse(&text)?)
+    }
+
+    /// All manifests for an (encoder, size) pair, sorted by (bucket, batch).
+    pub fn manifests_for(&self, encoder: &str, size: &str) -> Result<Vec<Manifest>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(self.root.join("hlo"))? {
+            let p = entry?.path();
+            let name = p.file_name().unwrap().to_string_lossy().to_string();
+            if name.starts_with(&format!("fwd_{encoder}_{size}_L"))
+                && name.ends_with(".manifest.json")
+            {
+                out.push(Manifest::load(&p)?);
+            }
+        }
+        if out.is_empty() {
+            bail!("no artifacts for encoder={encoder} size={size} under {}", self.root.display());
+        }
+        out.sort_by_key(|m| (m.bucket, m.batch));
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_json() {
+        let tmp = std::env::temp_dir().join("tppsd_manifest_test.json");
+        std::fs::write(
+            &tmp,
+            r#"{"encoder":"thp","size":{"name":"draft","n_layers":1,"n_heads":1,
+                "d_model":16,"n_mix":8,"d_ff":32},"bucket":64,"batch":1,
+                "k_max":24,"bos_id":24,"impl":"pallas",
+                "params":[{"name":"emb_type","shape":[25,16],"dtype":"float32"}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&tmp).unwrap();
+        assert_eq!(m.encoder, "thp");
+        assert_eq!(m.bucket, 64);
+        assert_eq!(m.params[0].0, "emb_type");
+        assert_eq!(m.params[0].1, vec![25, 16]);
+        assert_eq!(m.stem(), "fwd_thp_draft_L64_B1");
+        std::fs::remove_file(tmp).ok();
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime (Layer 3 ↔ AOT artifacts): manifest registry, weight
+//! loading, and the bucketed forward executor.
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::{ForwardOut, ModelExecutor, SeqInput};
+pub use manifest::{ArtifactDir, Manifest};
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+/// Open a PJRT CPU client.
+pub fn cpu_client() -> Result<Rc<xla::PjRtClient>> {
+    Ok(Rc::new(xla::PjRtClient::cpu()?))
+}

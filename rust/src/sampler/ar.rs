@@ -1,0 +1,59 @@
+//! Baseline autoregressive (AR) sampling from the target model (paper
+//! §4.2 "Naïve autoregressive sampling"): one target forward pass per
+//! generated event.
+
+use anyhow::Result;
+
+use crate::events::Event;
+use crate::runtime::executor::Forward;
+use crate::util::rng::Rng;
+
+use super::context::Context;
+use super::SampleStats;
+
+/// Configuration shared by the samplers.
+#[derive(Debug, Clone)]
+pub struct SampleCfg {
+    /// number of real event types of the dataset (≤ K_MAX)
+    pub num_types: usize,
+    /// sampling window end T
+    pub t_end: f64,
+    /// hard cap on generated events (guards runaway intensity)
+    pub max_events: usize,
+}
+
+impl Default for SampleCfg {
+    fn default() -> Self {
+        SampleCfg { num_types: 1, t_end: 100.0, max_events: 4096 }
+    }
+}
+
+/// Sample one sequence autoregressively from `target`.
+pub fn sample_ar<F: Forward + ?Sized>(
+    target: &F,
+    cfg: &SampleCfg,
+    rng: &mut Rng,
+) -> Result<(Vec<Event>, SampleStats)> {
+    let mut ctx = Context::new(target.max_bucket(), 0);
+    let mut out = Vec::new();
+    let mut stats = SampleStats::default();
+    let t_start = std::time::Instant::now();
+
+    while out.len() < cfg.max_events {
+        let fwd = target.forward1(ctx.seq_input(&[]))?;
+        stats.target_forwards += 1;
+        let row = ctx.next_row(0);
+        let tau = fwd.mixture(row).sample(rng);
+        let k = fwd.type_dist(row, cfg.num_types).sample(rng) as u32;
+        let t = ctx.last_time() + tau;
+        if t > cfg.t_end {
+            break;
+        }
+        let e = Event::new(t, k);
+        out.push(e);
+        ctx.push(e);
+    }
+    stats.events = out.len();
+    stats.wall = t_start.elapsed();
+    Ok((out, stats))
+}

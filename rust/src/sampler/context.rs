@@ -1,0 +1,125 @@
+//! Rolling context window: Transformer TPPs condition on unbounded history,
+//! but the AOT graphs have a maximum bucket. When a sequence outgrows the
+//! largest bucket (minus the draft margin), the oldest half of the window is
+//! dropped and the BOS row inherits the last dropped event's timestamp — the
+//! standard sliding-window approximation, applied identically to AR and SD
+//! so their comparison stays apples-to-apples.
+
+use crate::events::Event;
+use crate::runtime::SeqInput;
+
+#[derive(Debug, Clone)]
+pub struct Context {
+    /// time carried by the BOS row (start of the current window)
+    pub t0: f64,
+    /// events inside the window (absolute times)
+    pub window: Vec<Event>,
+    /// max model positions = bucket capacity (incl. BOS)
+    capacity: usize,
+    /// positions reserved for draft candidates (γ for SD, 0 for AR)
+    margin: usize,
+    /// total events ever pushed (window may be smaller)
+    pub total_events: usize,
+    /// number of window truncations performed
+    pub truncations: usize,
+}
+
+impl Context {
+    pub fn new(capacity: usize, margin: usize) -> Context {
+        assert!(capacity >= 2 * (margin + 2), "capacity too small for margin");
+        Context {
+            t0: 0.0,
+            window: Vec::new(),
+            capacity,
+            margin,
+            total_events: 0,
+            truncations: 0,
+        }
+    }
+
+    /// Last event time (or window start if empty).
+    pub fn last_time(&self) -> f64 {
+        self.window.last().map(|e| e.t).unwrap_or(self.t0)
+    }
+
+    /// Events currently in the window.
+    pub fn len(&self) -> usize {
+        self.window.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.window.is_empty()
+    }
+
+    /// Append one accepted event, truncating the window if the *next* round
+    /// (current events + BOS + margin + 1) would overflow the capacity.
+    pub fn push(&mut self, e: Event) {
+        debug_assert!(e.t >= self.last_time());
+        self.window.push(e);
+        self.total_events += 1;
+        if self.window.len() + 1 + self.margin + 1 > self.capacity {
+            let keep_from = self.window.len() / 2;
+            self.t0 = self.window[keep_from - 1].t;
+            self.window.drain(..keep_from);
+            self.truncations += 1;
+        }
+    }
+
+    /// Model input for the current window plus `extra` candidate events.
+    pub fn seq_input(&self, extra: &[Event]) -> SeqInput {
+        let mut times = Vec::with_capacity(self.window.len() + extra.len());
+        let mut types = Vec::with_capacity(self.window.len() + extra.len());
+        for e in self.window.iter().chain(extra) {
+            times.push(e.t);
+            types.push(e.k);
+        }
+        SeqInput { t0: self.t0, times, types }
+    }
+
+    /// Output row that parameterizes the next event's distribution when
+    /// `extra` candidates are appended: row (BOS + window + extra) − 1.
+    pub fn next_row(&self, n_extra: usize) -> usize {
+        self.window.len() + n_extra
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grows_then_truncates() {
+        let mut c = Context::new(16, 2);
+        for i in 0..14 {
+            c.push(Event::new(i as f64 + 1.0, 0));
+        }
+        assert!(c.window.len() + 1 + 2 + 1 <= 16);
+        assert!(c.truncations >= 1);
+        assert_eq!(c.total_events, 14);
+        // t0 = last dropped event's time
+        assert!(c.t0 > 0.0);
+        assert!(c.window[0].t > c.t0);
+    }
+
+    #[test]
+    fn seq_input_layout() {
+        let mut c = Context::new(64, 4);
+        c.push(Event::new(1.0, 3));
+        c.push(Event::new(2.0, 1));
+        let s = c.seq_input(&[Event::new(2.5, 0)]);
+        assert_eq!(s.times, vec![1.0, 2.0, 2.5]);
+        assert_eq!(s.types, vec![3, 1, 0]);
+        assert_eq!(s.t0, 0.0);
+        assert_eq!(c.next_row(1), 3);
+        assert_eq!(s.len_with_bos(), 4);
+    }
+
+    #[test]
+    fn last_time_tracks_window_start_after_truncation() {
+        let mut c = Context::new(12, 1);
+        for i in 0..20 {
+            c.push(Event::new(i as f64, 0));
+        }
+        assert!(c.last_time() >= c.t0);
+    }
+}

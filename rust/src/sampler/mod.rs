@@ -1,0 +1,80 @@
+//! Sampling engines: baseline autoregressive sampling (`ar`), speculative
+//! decoding (`sd`, the paper's contribution), and the rolling context
+//! window shared by both.
+//!
+//! The classical thinning sampler — the third algorithm the paper discusses
+//! (§2.2, App. D.1) — lives with the ground-truth processes as
+//! [`crate::processes::GroundTruth::simulate`]: thinning needs a CIF, which
+//! the analytic processes have and the CDF-parameterized Transformer model
+//! deliberately does not (that is the paper's App. D.1 argument).
+
+pub mod ar;
+pub mod context;
+pub mod sd;
+
+pub use ar::{sample_ar, SampleCfg};
+pub use context::Context;
+pub use sd::{sample_sd, Gamma, SdCfg};
+
+use std::time::Duration;
+
+/// Counters every sampling run reports (speedup, acceptance rate α,
+/// forward-pass budgets — the quantities in Tables 1–4).
+#[derive(Debug, Clone, Default)]
+pub struct SampleStats {
+    pub events: usize,
+    pub rounds: usize,
+    pub target_forwards: usize,
+    pub draft_forwards: usize,
+    /// candidates proposed by the draft model
+    pub drafted: usize,
+    /// candidates fully accepted (τ and k)
+    pub accepted: usize,
+    /// events re-drawn from adjusted distributions
+    pub resampled: usize,
+    /// bonus events after all-accepted rounds
+    pub bonus: usize,
+    /// proposals consumed by Theorem-1 rejection loops
+    pub adjust_proposals: usize,
+    pub wall: Duration,
+}
+
+impl SampleStats {
+    /// Paper §5.4: α = #accepted / #drafted.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            f64::NAN
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+
+    /// Merge counters from another run (for per-dataset aggregation).
+    pub fn merge(&mut self, other: &SampleStats) {
+        self.events += other.events;
+        self.rounds += other.rounds;
+        self.target_forwards += other.target_forwards;
+        self.draft_forwards += other.draft_forwards;
+        self.drafted += other.drafted;
+        self.accepted += other.accepted;
+        self.resampled += other.resampled;
+        self.bonus += other.bonus;
+        self.adjust_proposals += other.adjust_proposals;
+        self.wall += other.wall;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acceptance_rate_and_merge() {
+        let mut a = SampleStats { drafted: 10, accepted: 7, ..Default::default() };
+        let b = SampleStats { drafted: 10, accepted: 3, ..Default::default() };
+        assert!((a.acceptance_rate() - 0.7).abs() < 1e-12);
+        a.merge(&b);
+        assert!((a.acceptance_rate() - 0.5).abs() < 1e-12);
+        assert!(SampleStats::default().acceptance_rate().is_nan());
+    }
+}

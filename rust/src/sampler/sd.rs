@@ -1,0 +1,207 @@
+//! TPP-SD (paper §4.3, Algorithm 1): speculative decoding for Transformer
+//! TPP sampling.
+//!
+//! Per round: (1) **draft** γ candidate events autoregressively from the
+//! small model, recording its interval densities g_D and type pmfs f_D;
+//! (2) **verify** all candidates with ONE parallel forward pass of the
+//! target model; accept candidate l while all previous ones were accepted
+//! and u < g_T/g_D (interval) then u < f_T/f_D (type); (3) on first
+//! rejection, **resample from the adjusted distribution** — Theorem 1's
+//! acceptance–rejection scheme for the continuous interval (sample g_T,
+//! accept w.p. max(0, g_T−g_D)/g_T), `norm(max(0, f_T−f_D))` for the type;
+//! (4) if everything was accepted, sample a **bonus event** from the
+//! target's extra row. Output distribution provably equals AR sampling
+//! from the target (paper App. A.2).
+//!
+//! Rejection handling is the *strictly correct* variant (DESIGN.md §9):
+//! τ rejected ⇒ τ′ ~ g′ and k ~ f_T fresh; τ accepted but k rejected ⇒
+//! keep τ̂ and k′ ~ f′.
+
+use anyhow::Result;
+
+use crate::events::Event;
+use crate::model::mixture::{sample_adjusted_interval, TypeDist};
+use crate::runtime::executor::Forward;
+use crate::util::rng::Rng;
+
+use super::ar::SampleCfg;
+use super::context::Context;
+use super::SampleStats;
+
+/// Draft-length policy.
+#[derive(Debug, Clone, Copy)]
+pub enum Gamma {
+    /// the paper's fixed draft length
+    Fixed(usize),
+    /// extension (paper §6 future work): per-round adaptation from the
+    /// rejection position — AIMD-style, clamped to [min, max]
+    Adaptive { init: usize, min: usize, max: usize },
+}
+
+impl Gamma {
+    pub fn initial(&self) -> usize {
+        match *self {
+            Gamma::Fixed(g) => g,
+            Gamma::Adaptive { init, .. } => init,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SdCfg {
+    pub sample: SampleCfg,
+    pub gamma: Gamma,
+    /// cap for Theorem-1 rejection loops (g_T ≈ g_D degeneracy guard)
+    pub max_adjust_tries: usize,
+}
+
+impl Default for SdCfg {
+    fn default() -> Self {
+        SdCfg {
+            sample: SampleCfg::default(),
+            gamma: Gamma::Fixed(10),
+            max_adjust_tries: 64,
+        }
+    }
+}
+
+/// Sample one sequence with TPP-SD; distributionally identical to
+/// [`super::ar::sample_ar`] on the target model.
+pub fn sample_sd<FT: Forward + ?Sized, FD: Forward + ?Sized>(
+    target: &FT,
+    draft: &FD,
+    cfg: &SdCfg,
+    rng: &mut Rng,
+) -> Result<(Vec<Event>, SampleStats)> {
+    let scfg = &cfg.sample;
+    let mut gamma = cfg.gamma.initial().max(1);
+    let cap = target.max_bucket().min(draft.max_bucket());
+    let max_gamma = match cfg.gamma {
+        Gamma::Fixed(g) => g,
+        Gamma::Adaptive { max, .. } => max,
+    };
+    let mut ctx = Context::new(cap, max_gamma.max(1));
+    let mut out: Vec<Event> = Vec::new();
+    let mut stats = SampleStats::default();
+    let t_start = std::time::Instant::now();
+
+    'outer: while out.len() < scfg.max_events {
+        stats.rounds += 1;
+        // ------------------------------------------------------- drafting
+        let mut cand: Vec<Event> = Vec::with_capacity(gamma);
+        let mut d_mix = Vec::with_capacity(gamma);
+        let mut d_type = Vec::with_capacity(gamma);
+        for l in 0..gamma {
+            let fwd = draft.forward1(ctx.seq_input(&cand))?;
+            stats.draft_forwards += 1;
+            let row = ctx.next_row(l);
+            let mix = fwd.mixture(row);
+            let td = fwd.type_dist(row, scfg.num_types);
+            let tau = mix.sample(rng);
+            let k = td.sample(rng) as u32;
+            let prev = cand.last().map(|e| e.t).unwrap_or(ctx.last_time());
+            cand.push(Event::new(prev + tau, k));
+            d_mix.push(mix);
+            d_type.push(td);
+        }
+        stats.drafted += gamma;
+
+        // ---------------------------------------------------- verification
+        let fwd_t = target.forward1(ctx.seq_input(&cand))?;
+        stats.target_forwards += 1;
+
+        // Row indices into fwd_t follow the layout at verification time
+        // (BOS + window + candidates); pin them before pushes mutate ctx.
+        let base_row = ctx.next_row(0);
+        let round_start_time = ctx.last_time();
+
+        let mut rejected_at: Option<usize> = None;
+        for l in 0..gamma {
+            let row = base_row + l;
+            let t_mix = fwd_t.mixture(row);
+            let t_td = fwd_t.type_dist(row, scfg.num_types);
+            let prev = if l == 0 { round_start_time } else { cand[l - 1].t };
+            let tau_hat = cand[l].t - prev;
+
+            // interval test: u < g_T(τ̂)/g_D(τ̂)
+            let log_ratio = t_mix.logpdf(tau_hat) - d_mix[l].logpdf(tau_hat);
+            let tau_ok = rng.uniform().ln() < log_ratio;
+            if !tau_ok {
+                // τ̂ rejected → τ′ ~ g′ (Theorem 1), k ~ f_T fresh.
+                let (tau2, tries) =
+                    sample_adjusted_interval(&t_mix, &d_mix[l], rng, cfg.max_adjust_tries);
+                stats.adjust_proposals += tries;
+                let k2 = t_td.sample(rng) as u32;
+                let e = Event::new(prev + tau2, k2);
+                stats.resampled += 1;
+                rejected_at = Some(l);
+                if !push_event(&mut out, &mut ctx, e, scfg.t_end) {
+                    break 'outer;
+                }
+                break;
+            }
+            // type test: u < f_T(k̂)/f_D(k̂)
+            let k_hat = cand[l].k as usize;
+            let type_ok =
+                rng.uniform() * d_type[l].pmf(k_hat) < t_td.pmf(k_hat);
+            if !type_ok {
+                // k̂ rejected → keep τ̂, k′ ~ f′ = norm(max(0, f_T − f_D)).
+                let adj = TypeDist::adjusted(&t_td, &d_type[l]);
+                let k2 = adj.sample(rng) as u32;
+                let e = Event::new(cand[l].t, k2);
+                stats.resampled += 1;
+                rejected_at = Some(l);
+                if !push_event(&mut out, &mut ctx, e, scfg.t_end) {
+                    break 'outer;
+                }
+                break;
+            }
+            // candidate fully accepted
+            stats.accepted += 1;
+            if !push_event(&mut out, &mut ctx, cand[l], scfg.t_end) {
+                break 'outer;
+            }
+        }
+
+        // -------------------------------------------------------- bonus
+        // All γ accepted → one extra event from the target's (γ+1)-th row
+        // (fwd_t is fixed, so the pinned row stays valid even if pushes
+        // truncated the context window).
+        if rejected_at.is_none() {
+            let row = base_row + gamma;
+            let mix = fwd_t.mixture(row);
+            let td = fwd_t.type_dist(row, scfg.num_types);
+            let tau = mix.sample(rng);
+            let k = td.sample(rng) as u32;
+            let e = Event::new(cand.last().map(|e| e.t).unwrap_or(round_start_time) + tau, k);
+            stats.bonus += 1;
+            if !push_event(&mut out, &mut ctx, e, scfg.t_end) {
+                break 'outer;
+            }
+        }
+
+        // --------------------------------------------------- adapt gamma
+        if let Gamma::Adaptive { min, max, .. } = cfg.gamma {
+            gamma = match rejected_at {
+                None => (gamma + 1).min(max),
+                Some(l) => (l.max(1)).max(min).min(max),
+            };
+        }
+    }
+
+    stats.events = out.len();
+    stats.wall = t_start.elapsed();
+    Ok((out, stats))
+}
+
+/// Append an accepted event unless it crosses the window end. Returns
+/// `false` when sampling must stop (event beyond T is discarded — same
+/// stopping rule as AR sampling).
+fn push_event(out: &mut Vec<Event>, ctx: &mut Context, e: Event, t_end: f64) -> bool {
+    if e.t > t_end {
+        return false;
+    }
+    out.push(e);
+    ctx.push(e);
+    true
+}

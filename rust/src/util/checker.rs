@@ -1,0 +1,71 @@
+//! Property-testing substrate (no `proptest` in the offline registry).
+//!
+//! `check(cases, gen, prop)` runs `prop` on `cases` random inputs drawn by
+//! `gen`; on failure it re-runs the generator deterministically to report
+//! the failing seed so the case can be replayed in a unit test.
+
+use super::rng::Rng;
+
+/// Run a property over randomly generated cases.
+///
+/// Panics with the failing case index + seed on the first violation.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let base_seed = 0xC0FFEE_u64;
+    for i in 0..cases {
+        let mut rng = Rng::new(base_seed.wrapping_add(i as u64));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed on case {i} (seed {}):\n  input: {input:?}\n  {msg}",
+                base_seed.wrapping_add(i as u64)
+            );
+        }
+    }
+}
+
+/// Assert two floats agree to a tolerance, returning a property error.
+pub fn close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        check(
+            "abs is non-negative",
+            100,
+            |r| r.normal(),
+            |x| {
+                if x.abs() >= 0.0 {
+                    Ok(())
+                } else {
+                    Err("negative abs".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn reports_failures() {
+        check("always fails", 1, |r| r.uniform(), |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6, "x").is_ok());
+        assert!(close(1.0, 1.1, 1e-6, "x").is_err());
+    }
+}

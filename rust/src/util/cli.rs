@@ -1,0 +1,133 @@
+//! CLI argument parsing substrate (no `clap` in the offline registry).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, typed
+//! accessors with defaults, and auto-generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    spec: Vec<(String, String, String)>, // (name, default, help)
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) or `std::env::args().skip(1)`.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Register an option for usage text; returns self for chaining.
+    pub fn describe(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.spec
+            .push((name.to_string(), default.to_string(), help.to_string()));
+        self
+    }
+
+    pub fn usage(&self, prog: &str) -> String {
+        let mut s = format!("usage: {prog} [options]\n");
+        for (n, d, h) in &self.spec {
+            s.push_str(&format!("  --{n:<24} {h} [default: {d}]\n"));
+        }
+        s
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag) || self.opts.contains_key(flag)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    /// Comma-separated list (`--encoders thp,sahp`).
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            Some(s) => s.split(',').map(|x| x.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn kinds() {
+        // NB: a bare `--flag` greedily consumes a following non-dash token
+        // as its value, so positionals come first (documented behaviour).
+        let a = parse("pos1 --gamma 10 --encoder=thp --verbose --seeds 1,2,3");
+        assert_eq!(a.usize_or("gamma", 5), 10);
+        assert_eq!(a.str_or("encoder", "x"), "thp");
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+        assert_eq!(a.list_or("seeds", &[]), vec!["1", "2", "3"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.f64_or("t-end", 100.0), 100.0);
+        assert_eq!(a.list_or("encoders", &["thp", "sahp"]), vec!["thp", "sahp"]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--fast --gamma 3");
+        assert!(a.has("fast"));
+        assert_eq!(a.usize_or("gamma", 0), 3);
+    }
+}

@@ -1,0 +1,9 @@
+//! Substrates written in-house because the container registry is offline
+//! (no `rand`, `serde`, `clap`, `proptest`): RNG, JSON, CLI, numerics and a
+//! property-test helper.
+
+pub mod checker;
+pub mod cli;
+pub mod json;
+pub mod math;
+pub mod rng;

@@ -1,0 +1,168 @@
+//! Coordinator tests: batcher invariants (no request lost / duplicated,
+//! results independent of batching), router reuse, and the TCP server
+//! round-trip. Skipped when artifacts are missing.
+
+use std::time::Duration;
+
+use tpp_sd::coordinator::{Client, ExecutorHandle, Request, Router, SampleRequest, Server};
+use tpp_sd::runtime::executor::Forward;
+use tpp_sd::runtime::{ArtifactDir, ModelExecutor, SeqInput};
+use tpp_sd::util::rng::Rng;
+
+fn artifacts() -> Option<ArtifactDir> {
+    match ArtifactDir::discover() {
+        Ok(a) => Some(a),
+        Err(_) => {
+            eprintln!("NOTE: artifacts/ missing — run `make artifacts`; skipping");
+            None
+        }
+    }
+}
+
+fn random_seq(rng: &mut Rng, max_n: usize) -> SeqInput {
+    let n = 1 + rng.below(max_n);
+    let mut t = 0.0;
+    let mut s = SeqInput::default();
+    for _ in 0..n {
+        t += rng.exponential(3.0);
+        s.times.push(t);
+        s.types.push(0);
+    }
+    s
+}
+
+/// Every concurrent request gets exactly one reply carrying ITS sequence's
+/// results (matched against the direct path), regardless of batching.
+#[test]
+fn batcher_preserves_per_request_results() {
+    let Some(art) = artifacts() else { return };
+    let handle = ExecutorHandle::spawn(
+        art.clone(),
+        "hawkes",
+        "thp",
+        "draft",
+        8,
+        Duration::from_millis(5),
+    )
+    .unwrap();
+    let client = tpp_sd::runtime::cpu_client().unwrap();
+    let direct = ModelExecutor::load(client, &art, "hawkes", "thp", "draft").unwrap();
+
+    let mut rng = Rng::new(42);
+    let seqs: Vec<SeqInput> = (0..24).map(|_| random_seq(&mut rng, 40)).collect();
+
+    // fire all requests concurrently so the batcher actually batches
+    let mut joins = Vec::new();
+    for seq in seqs.clone() {
+        let h = handle.clone();
+        joins.push(std::thread::spawn(move || {
+            let row = seq.times.len();
+            let out = h.forward1(seq).unwrap();
+            (row, out.mixture(row).mu)
+        }));
+    }
+    let results: Vec<(usize, Vec<f64>)> =
+        joins.into_iter().map(|j| j.join().unwrap()).collect();
+
+    assert!(
+        handle.stats.batches.load(std::sync::atomic::Ordering::Relaxed) > 0,
+        "no batches formed"
+    );
+    // compare each against the direct path
+    for (seq, (row, mu)) in seqs.iter().zip(&results) {
+        let want = direct
+            .forward(std::slice::from_ref(seq))
+            .unwrap()
+            .mixture(0, *row)
+            .mu;
+        for (a, b) in mu.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4, "batched {a} vs direct {b}");
+        }
+    }
+}
+
+#[test]
+fn batcher_batches_under_concurrency() {
+    let Some(art) = artifacts() else { return };
+    let handle = ExecutorHandle::spawn(
+        art,
+        "hawkes",
+        "thp",
+        "draft",
+        8,
+        Duration::from_millis(10),
+    )
+    .unwrap();
+    let mut joins = Vec::new();
+    for i in 0..16 {
+        let h = handle.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(i);
+            let seq = random_seq(&mut rng, 30);
+            h.forward1(seq).unwrap();
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let occ = handle.stats.occupancy();
+    assert!(occ > 1.0, "expected batching under concurrency, occupancy={occ}");
+}
+
+#[test]
+fn router_reuses_pairs_and_rejects_unknown() {
+    let Some(art) = artifacts() else { return };
+    let router = Router::new(art, 8, Duration::from_millis(1)).unwrap();
+    assert!(router.num_types("hawkes").unwrap() == 1);
+    assert!(router.num_types("nope").is_err());
+    let a = router.route("hawkes", "thp", "draft").unwrap();
+    let b = router.route("hawkes", "thp", "draft").unwrap();
+    // reuse: same underlying executor (stats Arc shared)
+    assert!(std::sync::Arc::ptr_eq(&a.target.stats, &b.target.stats));
+    assert!(router.datasets().contains(&"multihawkes".to_string()));
+}
+
+#[test]
+fn server_roundtrip_ar_and_sd() {
+    let Some(art) = artifacts() else { return };
+    let server = Server::bind(art, "127.0.0.1:0", 8, Duration::from_millis(1)).unwrap();
+    let addr = server.addr;
+    std::thread::spawn(move || server.serve());
+
+    let mut cli = Client::connect(addr).unwrap();
+    let pong = cli.call(&Request::Ping).unwrap();
+    assert!(pong.contains("pong"));
+
+    for method in ["ar", "sd", "sd-adaptive"] {
+        let resp = cli
+            .call(&Request::Sample(SampleRequest {
+                dataset: "hawkes".into(),
+                encoder: "thp".into(),
+                method: method.into(),
+                gamma: 5,
+                t_end: 2.0,
+                seed: 1,
+                draft_size: "draft".into(),
+            }))
+            .unwrap();
+        let (events, wall_ms) =
+            tpp_sd::coordinator::protocol::parse_response(&resp).unwrap();
+        assert!(wall_ms > 0.0, "{method}: {resp}");
+        assert!(tpp_sd::events::is_valid_sequence(&events, 2.0), "{method}");
+    }
+
+    // unknown dataset → clean error, connection stays usable
+    let resp = cli
+        .call(&Request::Sample(SampleRequest {
+            dataset: "bogus".into(),
+            encoder: "thp".into(),
+            method: "ar".into(),
+            gamma: 1,
+            t_end: 1.0,
+            seed: 0,
+            draft_size: "draft".into(),
+        }))
+        .unwrap();
+    assert!(resp.contains("\"ok\":false"));
+    assert!(cli.call(&Request::Ping).unwrap().contains("pong"));
+}

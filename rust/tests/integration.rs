@@ -1,0 +1,165 @@
+//! Integration tests over the real artifacts (`make artifacts` must have
+//! run). Skipped with a notice when the artifact directory is absent so
+//! `cargo test` stays green on a fresh checkout.
+
+use tpp_sd::metrics::model_loglik;
+use tpp_sd::runtime::{ArtifactDir, ModelExecutor, SeqInput};
+use tpp_sd::sampler::{sample_ar, sample_sd, Gamma, SampleCfg, SdCfg};
+use tpp_sd::util::rng::Rng;
+
+fn artifacts() -> Option<ArtifactDir> {
+    match ArtifactDir::discover() {
+        Ok(a) => Some(a),
+        Err(_) => {
+            eprintln!("NOTE: artifacts/ missing — run `make artifacts`; skipping");
+            None
+        }
+    }
+}
+
+#[test]
+fn load_all_dataset_encoder_pairs() {
+    let Some(art) = artifacts() else { return };
+    let ds = art.datasets_json().unwrap();
+    let client = tpp_sd::runtime::cpu_client().unwrap();
+    for dataset in ["poisson", "hawkes", "multihawkes", "taxi_sim"] {
+        for enc in ["thp", "sahp", "attnhp"] {
+            let ex = ModelExecutor::load(client.clone(), &art, dataset, enc, "draft")
+                .unwrap_or_else(|e| panic!("{dataset}/{enc}: {e:#}"));
+            assert_eq!(ex.encoder, enc);
+            assert!(ex.max_bucket() >= 256);
+        }
+    }
+    assert!(ds.usize_at("k_max").unwrap() >= 22);
+}
+
+#[test]
+fn forward_outputs_are_valid_distributions() {
+    let Some(art) = artifacts() else { return };
+    let client = tpp_sd::runtime::cpu_client().unwrap();
+    let ex = ModelExecutor::load(client, &art, "multihawkes", "thp", "draft").unwrap();
+    let seq = SeqInput {
+        t0: 0.0,
+        times: vec![0.5, 1.0, 2.5, 4.0],
+        types: vec![0, 1, 0, 1],
+    };
+    let out = ex.forward(&[seq]).unwrap();
+    for row in 0..5 {
+        let m = out.mixture(0, row);
+        // log-weights normalized
+        let s: f64 = m.log_w.iter().map(|w| w.exp()).sum();
+        assert!((s - 1.0).abs() < 1e-4, "row {row}: Σw = {s}");
+        // density integrates reasonably (spot value finite)
+        assert!(m.logpdf(1.0).is_finite());
+        assert!((0.0..=1.0).contains(&m.cdf(2.0)));
+        let td = out.type_dist(0, row, 2);
+        let s: f64 = td.probs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn batch_rows_match_single_rows() {
+    // batching must not change numerics: run 3 sequences individually and
+    // as one batch, compare mixture params.
+    let Some(art) = artifacts() else { return };
+    let client = tpp_sd::runtime::cpu_client().unwrap();
+    let ex = ModelExecutor::load(client, &art, "hawkes", "sahp", "draft").unwrap();
+    let mut rng = Rng::new(3);
+    let seqs: Vec<SeqInput> = (0..3)
+        .map(|_| {
+            let n = 5 + rng.below(20);
+            let mut t = 0.0;
+            let mut s = SeqInput::default();
+            for _ in 0..n {
+                t += rng.exponential(4.0);
+                s.times.push(t);
+                s.types.push(0);
+            }
+            s
+        })
+        .collect();
+    let batch = ex.forward(&seqs).unwrap();
+    for (b, seq) in seqs.iter().enumerate() {
+        let single = ex.forward(std::slice::from_ref(seq)).unwrap();
+        let row = seq.times.len(); // last row
+        let m1 = single.mixture(0, row);
+        let m2 = batch.mixture(b, row);
+        for (a, c) in m1.mu.iter().zip(&m2.mu) {
+            assert!((a - c).abs() < 1e-4, "batch vs single mu: {a} vs {c}");
+        }
+    }
+}
+
+#[test]
+fn ar_and_sd_run_and_stay_in_window() {
+    let Some(art) = artifacts() else { return };
+    let client = tpp_sd::runtime::cpu_client().unwrap();
+    let target = ModelExecutor::load(client.clone(), &art, "taxi_sim", "thp", "target").unwrap();
+    let draft = ModelExecutor::load(client, &art, "taxi_sim", "thp", "draft").unwrap();
+    let cfg = SampleCfg { num_types: 10, t_end: 5.0, max_events: 512 };
+    let mut rng = Rng::new(11);
+    let (ev, st) = sample_ar(&target, &cfg, &mut rng).unwrap();
+    assert!(tpp_sd::events::is_valid_sequence(&ev, cfg.t_end));
+    assert_eq!(st.target_forwards, ev.len() + 1); // one forward per event + final
+    assert!(ev.iter().all(|e| (e.k as usize) < 10));
+
+    let sd_cfg = SdCfg { sample: cfg.clone(), gamma: Gamma::Fixed(5), ..Default::default() };
+    let (ev, st) = sample_sd(&target, &draft, &sd_cfg, &mut rng).unwrap();
+    assert!(tpp_sd::events::is_valid_sequence(&ev, cfg.t_end));
+    assert!(st.target_forwards < ev.len().max(2), "SD must use fewer target forwards");
+    assert!(ev.iter().all(|e| (e.k as usize) < 10));
+    assert!(st.acceptance_rate() > 0.0 && st.acceptance_rate() <= 1.0);
+}
+
+#[test]
+fn adaptive_gamma_runs() {
+    let Some(art) = artifacts() else { return };
+    let client = tpp_sd::runtime::cpu_client().unwrap();
+    let target = ModelExecutor::load(client.clone(), &art, "hawkes", "thp", "target").unwrap();
+    let draft = ModelExecutor::load(client, &art, "hawkes", "thp", "draft").unwrap();
+    let sd_cfg = SdCfg {
+        sample: SampleCfg { num_types: 1, t_end: 5.0, max_events: 512 },
+        gamma: Gamma::Adaptive { init: 4, min: 2, max: 16 },
+        ..Default::default()
+    };
+    let mut rng = Rng::new(2);
+    let (ev, st) = sample_sd(&target, &draft, &sd_cfg, &mut rng).unwrap();
+    assert!(!ev.is_empty());
+    assert!(st.rounds > 0);
+}
+
+#[test]
+fn model_loglik_is_finite_and_sane() {
+    let Some(art) = artifacts() else { return };
+    let client = tpp_sd::runtime::cpu_client().unwrap();
+    let target = ModelExecutor::load(client.clone(), &art, "hawkes", "thp", "target").unwrap();
+    let cfg = SampleCfg { num_types: 1, t_end: 10.0, max_events: 512 };
+    let mut rng = Rng::new(1);
+    let (ev, _) = sample_ar(&target, &cfg, &mut rng).unwrap();
+    let ll = model_loglik(&target, &ev, 1, cfg.t_end).unwrap();
+    assert!(ll.is_finite());
+    // model's own samples should score better than a time-scrambled copy
+    let mut bad = ev.clone();
+    let span = bad.last().unwrap().t;
+    let n = bad.len();
+    for (i, e) in bad.iter_mut().enumerate() {
+        e.t = span * (i as f64 + 0.5) / n as f64; // uniformize
+    }
+    let ll_bad = model_loglik(&target, &bad, 1, cfg.t_end).unwrap();
+    assert!(
+        ll > ll_bad,
+        "model should prefer its own samples: {ll} vs uniformized {ll_bad}"
+    );
+}
+
+#[test]
+fn draft_size_ladder_loads() {
+    let Some(art) = artifacts() else { return };
+    let client = tpp_sd::runtime::cpu_client().unwrap();
+    for size in ["draft", "draft2", "draft3"] {
+        let ex = ModelExecutor::load(client.clone(), &art, "multihawkes", "attnhp", size)
+            .unwrap_or_else(|e| panic!("{size}: {e:#}"));
+        assert_eq!(ex.size_name, size);
+    }
+}

@@ -1,0 +1,128 @@
+//! The paper's central claim (App. A.2): TPP-SD's output distribution is
+//! IDENTICAL to AR sampling from the target model. These tests verify it
+//! statistically on the real trained models: two-sample KS on inter-event
+//! intervals, count means, and type marginals, plus γ-invariance.
+//! Skipped when artifacts are missing.
+
+use tpp_sd::events::intervals;
+use tpp_sd::metrics::ks::ks_statistic;
+use tpp_sd::metrics::wasserstein::type_histogram;
+use tpp_sd::runtime::{ArtifactDir, ModelExecutor};
+use tpp_sd::sampler::{sample_ar, sample_sd, Gamma, SampleCfg, SdCfg};
+use tpp_sd::util::rng::Rng;
+
+fn artifacts() -> Option<ArtifactDir> {
+    match ArtifactDir::discover() {
+        Ok(a) => Some(a),
+        Err(_) => {
+            eprintln!("NOTE: artifacts/ missing — run `make artifacts`; skipping");
+            None
+        }
+    }
+}
+
+fn two_sample_ks(a: &[f64], b: &[f64]) -> (f64, f64) {
+    let mut sa = a.to_vec();
+    sa.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let d = ks_statistic(b, |x| {
+        sa.partition_point(|&v| v <= x) as f64 / sa.len() as f64
+    });
+    let crit = 1.36
+        * ((sa.len() + b.len()) as f64 / (sa.len() as f64 * b.len() as f64)).sqrt();
+    (d, crit)
+}
+
+struct Samples {
+    taus: Vec<f64>,
+    counts: Vec<f64>,
+    types: Vec<u32>,
+}
+
+fn collect(
+    art: &ArtifactDir,
+    dataset: &str,
+    encoder: &str,
+    method: &str,
+    gamma: usize,
+    n_seq: usize,
+    t_end: f64,
+    num_types: usize,
+    seed0: u64,
+) -> Samples {
+    let client = tpp_sd::runtime::cpu_client().unwrap();
+    let target = ModelExecutor::load(client.clone(), art, dataset, encoder, "target").unwrap();
+    let draft = ModelExecutor::load(client, art, dataset, encoder, "draft").unwrap();
+    let cfg = SampleCfg { num_types, t_end, max_events: 8192 };
+    let mut out = Samples { taus: vec![], counts: vec![], types: vec![] };
+    for s in 0..n_seq as u64 {
+        let mut rng = Rng::new(seed0 + s);
+        let ev = match method {
+            "ar" => sample_ar(&target, &cfg, &mut rng).unwrap().0,
+            _ => {
+                let sd = SdCfg {
+                    sample: cfg.clone(),
+                    gamma: Gamma::Fixed(gamma),
+                    ..Default::default()
+                };
+                sample_sd(&target, &draft, &sd, &mut rng).unwrap().0
+            }
+        };
+        out.counts.push(ev.len() as f64);
+        out.taus.extend(intervals(&ev));
+        out.types.extend(ev.iter().map(|e| e.k));
+    }
+    out
+}
+
+/// Headline property: intervals from SD and AR come from the same
+/// distribution (two-sample KS below the 95% critical value, with margin).
+#[test]
+fn sd_matches_ar_interval_distribution() {
+    let Some(art) = artifacts() else { return };
+    let ar = collect(&art, "hawkes", "thp", "ar", 0, 24, 10.0, 1, 100);
+    let sd = collect(&art, "hawkes", "thp", "sd", 10, 24, 10.0, 1, 900);
+    let (d, crit) = two_sample_ks(&ar.taus, &sd.taus);
+    assert!(
+        d < 1.5 * crit,
+        "interval distributions differ: KS={d:.4} crit={crit:.4} \
+         (n={},{})",
+        ar.taus.len(),
+        sd.taus.len()
+    );
+    // count means within noise
+    let ma = tpp_sd::util::math::mean(&ar.counts);
+    let ms = tpp_sd::util::math::mean(&sd.counts);
+    let sa = tpp_sd::util::math::std_dev(&ar.counts) / (ar.counts.len() as f64).sqrt();
+    assert!(
+        (ma - ms).abs() < 4.0 * sa.max(1.0),
+        "count means differ: AR {ma:.1} vs SD {ms:.1} (se {sa:.2})"
+    );
+}
+
+/// Type marginals must also agree (multi-type dataset).
+#[test]
+fn sd_matches_ar_type_marginals() {
+    let Some(art) = artifacts() else { return };
+    let ar = collect(&art, "multihawkes", "thp", "ar", 0, 16, 10.0, 2, 300);
+    let sd = collect(&art, "multihawkes", "thp", "sd", 8, 16, 10.0, 2, 301);
+    let ha = type_histogram(&ar.types, 2);
+    let hs = type_histogram(&sd.types, 2);
+    let n = ar.types.len().min(sd.types.len()) as f64;
+    let se = (ha[0] * (1.0 - ha[0]) / n).sqrt();
+    assert!(
+        (ha[0] - hs[0]).abs() < 5.0 * se.max(0.01),
+        "type-0 share differs: AR {:.3} vs SD {:.3} (se {se:.4})",
+        ha[0],
+        hs[0]
+    );
+}
+
+/// γ must not change the distribution, only the speed (paper Fig. 3).
+#[test]
+fn gamma_invariance() {
+    let Some(art) = artifacts() else { return };
+    let g2 = collect(&art, "hawkes", "sahp", "sd", 2, 16, 8.0, 1, 500);
+    let g20 = collect(&art, "hawkes", "sahp", "sd", 20, 16, 8.0, 1, 700);
+    let (d, crit) = two_sample_ks(&g2.taus, &g20.taus);
+    assert!(d < 1.5 * crit, "γ changed the distribution: KS={d:.4} crit={crit:.4}");
+}
