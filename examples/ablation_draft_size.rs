@@ -5,11 +5,12 @@
 //!     cargo run --release --example ablation_draft_size -- \
 //!         [--datasets multihawkes,taobao_sim] [--encoders attnhp]
 //!         [--gamma 10] [--t-end 50] [--n-seq 2] [--seeds 0,1,2]
+//!         [--backend auto|native|xla]
 
 use anyhow::Result;
 use tpp_sd::bench::{synthetic_cell, EvalCfg};
 use tpp_sd::processes::from_dataset_json;
-use tpp_sd::runtime::{ArtifactDir, ModelExecutor};
+use tpp_sd::runtime::{Backend, ModelBackend};
 use tpp_sd::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -29,25 +30,27 @@ fn main() -> Result<()> {
         ..Default::default()
     };
 
-    let art = ArtifactDir::discover()?;
-    let ds_json = art.datasets_json()?;
-    let client = tpp_sd::runtime::cpu_client()?;
+    let backend = tpp_sd::runtime::backend_from_arg(args.get("backend"))?;
 
-    println!("=== Table 3/4: draft-model size ablation (γ={}) ===", cfg0.gamma);
+    println!(
+        "=== Table 3/4: draft-model size ablation (backend={}, γ={}) ===",
+        backend.name(),
+        cfg0.gamma
+    );
     println!(
         "{:<13} {:<7} {:<8} | {:>8} {:>7} | {:>6} | {:>8} {:>8} | {:>7}",
         "dataset", "enc", "draft", "ΔL_sd", "KS_sd", "α", "T_ar", "T_sd", "speedup"
     );
 
     for ds in &datasets {
-        let dcfg = ds_json.path(&format!("datasets.{ds}")).expect("dataset");
-        let process = from_dataset_json(dcfg)?;
-        let num_types = dcfg.usize_at("num_types").unwrap();
+        let spec = backend.dataset_spec(ds)?;
+        let process = from_dataset_json(&spec)?;
+        let num_types = backend.num_types(ds)?;
         for enc in &encoders {
-            let target = ModelExecutor::load(client.clone(), &art, ds, enc, "target")?;
+            let target = backend.load_model(ds, enc, "target")?;
             target.warmup_batch(1)?;
             for dsize in &drafts {
-                let draft = ModelExecutor::load(client.clone(), &art, ds, enc, dsize)?;
+                let draft = backend.load_model(ds, enc, dsize)?;
                 draft.warmup_batch(1)?;
                 let cell =
                     synthetic_cell(&target, &draft, process.as_ref(), num_types, &cfg0)?;

@@ -5,12 +5,12 @@
 //!     cargo run --release --example ablation_gamma -- \
 //!         [--dataset multihawkes] [--encoder attnhp] \
 //!         [--gammas 1,2,5,10,20,40,60] [--t-end 50] [--n-seq 2] [--seeds 0,1]
-//!         [--with-adaptive]
+//!         [--with-adaptive] [--backend auto|native|xla]
 
 use anyhow::Result;
 use tpp_sd::bench::{synthetic_cell, EvalCfg};
 use tpp_sd::processes::from_dataset_json;
-use tpp_sd::runtime::{ArtifactDir, ModelExecutor};
+use tpp_sd::runtime::{Backend, ModelBackend};
 use tpp_sd::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -28,19 +28,18 @@ fn main() -> Result<()> {
         .map(|s| s.parse().unwrap())
         .collect();
 
-    let art = ArtifactDir::discover()?;
-    let ds_json = art.datasets_json()?;
-    let dcfg = ds_json.path(&format!("datasets.{dataset}")).expect("dataset");
-    let process = from_dataset_json(dcfg)?;
-    let num_types = dcfg.usize_at("num_types").unwrap();
-    let client = tpp_sd::runtime::cpu_client()?;
-    let target = ModelExecutor::load(client.clone(), &art, &dataset, &encoder, "target")?;
+    let backend = tpp_sd::runtime::backend_from_arg(args.get("backend"))?;
+    let spec = backend.dataset_spec(&dataset)?;
+    let process = from_dataset_json(&spec)?;
+    let num_types = backend.num_types(&dataset)?;
+    let target = backend.load_model(&dataset, &encoder, "target")?;
     target.warmup_batch(1)?;
-    let draft = ModelExecutor::load(client.clone(), &art, &dataset, &encoder, "draft")?;
+    let draft = backend.load_model(&dataset, &encoder, "draft")?;
     draft.warmup_batch(1)?;
 
     println!(
-        "=== Fig 3/6: draft-length sweep ({dataset}, {encoder}, {} seeds) ===",
+        "=== Fig 3/6: draft-length sweep ({dataset}, {encoder}, backend={}, {} seeds) ===",
+        backend.name(),
         seeds.len()
     );
     println!(

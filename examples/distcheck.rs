@@ -1,12 +1,18 @@
-use tpp_sd::runtime::{ArtifactDir, ModelExecutor};
+//! Quick distributional sanity check: AR vs TPP-SD count means, interval
+//! means and a two-sample KS on intervals (any backend).
+//!
+//!     cargo run --release --example distcheck -- [--backend auto|native|xla]
+
+use tpp_sd::runtime::Backend;
 use tpp_sd::sampler::{sample_ar, sample_sd, Gamma, SampleCfg, SdCfg};
+use tpp_sd::util::cli::Args;
 use tpp_sd::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
-    let art = ArtifactDir::discover()?;
-    let client = tpp_sd::runtime::cpu_client()?;
-    let target = ModelExecutor::load(client.clone(), &art, "hawkes", "thp", "target")?;
-    let draft = ModelExecutor::load(client, &art, "hawkes", "thp", "draft")?;
+    let args = Args::from_env();
+    let backend = tpp_sd::runtime::backend_from_arg(args.get("backend"))?;
+    let target = backend.load_model("hawkes", "thp", "target")?;
+    let draft = backend.load_model("hawkes", "thp", "draft")?;
     let cfg = SampleCfg { num_types: 1, t_end: 10.0, max_events: 4096 };
     let n = 30;
     let mut ar_counts = vec![]; let mut sd_counts = vec![];

@@ -5,6 +5,7 @@
 //!     cargo run --release --example ks_plots -- \
 //!         [--datasets poisson,hawkes,multihawkes] [--encoders attnhp]
 //!         [--out /tmp/ks_plots] [--t-end 50] [--n-seq 2] [--seeds 0,1]
+//!         [--backend auto|native|xla]
 //!
 //! `--encoders thp,sahp,attnhp` regenerates the full Figure-4 grid.
 
@@ -14,7 +15,7 @@ use anyhow::Result;
 use tpp_sd::bench::{synthetic_cell, EvalCfg};
 use tpp_sd::metrics::ks_band;
 use tpp_sd::processes::from_dataset_json;
-use tpp_sd::runtime::{ArtifactDir, ModelExecutor};
+use tpp_sd::runtime::{Backend, ModelBackend};
 use tpp_sd::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -35,18 +36,16 @@ fn main() -> Result<()> {
         ..Default::default()
     };
 
-    let art = ArtifactDir::discover()?;
-    let ds_json = art.datasets_json()?;
-    let client = tpp_sd::runtime::cpu_client()?;
+    let backend = tpp_sd::runtime::backend_from_arg(args.get("backend"))?;
 
     for ds in &datasets {
-        let dcfg = ds_json.path(&format!("datasets.{ds}")).expect("dataset");
-        let process = from_dataset_json(dcfg)?;
-        let num_types = dcfg.usize_at("num_types").unwrap();
+        let spec = backend.dataset_spec(ds)?;
+        let process = from_dataset_json(&spec)?;
+        let num_types = backend.num_types(ds)?;
         for enc in &encoders {
-            let target = ModelExecutor::load(client.clone(), &art, ds, enc, "target")?;
+            let target = backend.load_model(ds, enc, "target")?;
             target.warmup_batch(1)?;
-            let draft = ModelExecutor::load(client.clone(), &art, ds, enc, "draft")?;
+            let draft = backend.load_model(ds, enc, "draft")?;
             draft.warmup_batch(1)?;
             let cell = synthetic_cell(&target, &draft, process.as_ref(), num_types, &cfg)?;
             let path = format!("{out_dir}/ks_{ds}_{enc}.csv");

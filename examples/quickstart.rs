@@ -1,11 +1,14 @@
-//! Quickstart: load a trained target+draft pair, sample with AR and TPP-SD,
-//! and report the speedup + acceptance rate.
+//! Quickstart: load a target+draft pair from the active backend, sample
+//! with AR and TPP-SD, and report the speedup + acceptance rate.
+//!
+//! Runs out of the box on the native CPU backend (no artifacts needed):
 //!
 //!     cargo run --release --example quickstart -- \
 //!         [--dataset hawkes] [--encoder attnhp] [--gamma 10] [--t-end 30]
+//!         [--backend auto|native|xla]
 
 use anyhow::Result;
-use tpp_sd::runtime::{ArtifactDir, ModelExecutor};
+use tpp_sd::runtime::Backend;
 use tpp_sd::sampler::{sample_ar, sample_sd, Gamma, SampleCfg, SdCfg};
 use tpp_sd::util::cli::Args;
 use tpp_sd::util::rng::Rng;
@@ -18,17 +21,16 @@ fn main() -> Result<()> {
     let t_end = args.f64_or("t-end", 30.0);
     let seed = args.u64_or("seed", 0);
 
-    let art = ArtifactDir::discover()?;
-    let ds = art.datasets_json()?;
-    let num_types = ds
-        .usize_at(&format!("datasets.{dataset}.num_types"))
-        .expect("unknown dataset");
+    let backend = tpp_sd::runtime::backend_from_arg(args.get("backend"))?;
+    let num_types = backend.num_types(&dataset)?;
 
-    println!("tpp-sd quickstart: dataset={dataset} encoder={encoder} K={num_types} γ={gamma} T={t_end}");
+    println!(
+        "tpp-sd quickstart: backend={} dataset={dataset} encoder={encoder} K={num_types} γ={gamma} T={t_end}",
+        backend.name()
+    );
 
-    let client = tpp_sd::runtime::cpu_client()?;
-    let target = ModelExecutor::load(client.clone(), &art, &dataset, &encoder, "target")?;
-    let draft = ModelExecutor::load(client, &art, &dataset, &encoder, "draft")?;
+    let target = backend.load_model(&dataset, &encoder, "target")?;
+    let draft = backend.load_model(&dataset, &encoder, "draft")?;
 
     let cfg = SampleCfg { num_types, t_end, max_events: 4096 };
 

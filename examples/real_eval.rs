@@ -5,11 +5,12 @@
 //!
 //!     cargo run --release --example real_eval -- \
 //!         [--t-end 50] [--n-seq 2] [--seeds 0,1,2] [--gamma 10]
+//!         [--backend auto|native|xla]
 
 use anyhow::Result;
 use tpp_sd::bench::{real_cell, EvalCfg};
 use tpp_sd::processes::from_dataset_json;
-use tpp_sd::runtime::{ArtifactDir, ModelExecutor};
+use tpp_sd::runtime::{Backend, ModelBackend};
 use tpp_sd::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -33,13 +34,15 @@ fn main() -> Result<()> {
     );
     let encoders = args.list_or("encoders", &["thp", "sahp", "attnhp"]);
 
-    let art = ArtifactDir::discover()?;
-    let ds_json = art.datasets_json()?;
-    let client = tpp_sd::runtime::cpu_client()?;
+    let backend = tpp_sd::runtime::backend_from_arg(args.get("backend"))?;
 
     println!(
-        "=== Table 2: real-data stand-ins (γ={}, T={}, M={}, N={}) ===",
-        cfg.gamma, cfg.t_end, cfg.history_m, cfg.reps_n
+        "=== Table 2: real-data stand-ins (backend={}, γ={}, T={}, M={}, N={}) ===",
+        backend.name(),
+        cfg.gamma,
+        cfg.t_end,
+        cfg.history_m,
+        cfg.reps_n
     );
     println!(
         "{:<18} {:<7} | {:>8} {:>8} | {:>7} {:>7} | {:>7} {:>7} | {:>8} {:>8} | {:>7} {:>5}",
@@ -47,13 +50,13 @@ fn main() -> Result<()> {
     );
 
     for ds in &datasets {
-        let dcfg = ds_json.path(&format!("datasets.{ds}")).expect("dataset");
-        let process = from_dataset_json(dcfg)?;
-        let num_types = dcfg.usize_at("num_types").unwrap();
+        let spec = backend.dataset_spec(ds)?;
+        let process = from_dataset_json(&spec)?;
+        let num_types = backend.num_types(ds)?;
         for enc in &encoders {
-            let target = ModelExecutor::load(client.clone(), &art, ds, enc, "target")?;
+            let target = backend.load_model(ds, enc, "target")?;
             target.warmup_batch(1)?;
-            let draft = ModelExecutor::load(client.clone(), &art, ds, enc, "draft")?;
+            let draft = backend.load_model(ds, enc, "draft")?;
             draft.warmup_batch(1)?;
             let cell = real_cell(&target, &draft, process.as_ref(), num_types, &cfg)?;
             println!(

@@ -11,7 +11,6 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 use tpp_sd::coordinator::{Client, Request, SampleRequest, Server};
-use tpp_sd::runtime::ArtifactDir;
 use tpp_sd::util::cli::Args;
 use tpp_sd::util::math::{mean, percentile};
 
@@ -25,8 +24,8 @@ fn main() -> Result<()> {
     let datasets = args.list_or("datasets", &["hawkes", "taxi_sim"]);
     let window_ms = args.u64_or("batch-window-ms", 2);
 
-    let art = ArtifactDir::discover()?;
-    let server = Server::bind(art, "127.0.0.1:0", 8, Duration::from_millis(window_ms))?;
+    let backend = tpp_sd::runtime::backend_from_arg(args.get("backend"))?;
+    let server = Server::bind(backend, "127.0.0.1:0", 8, Duration::from_millis(window_ms))?;
     let addr = server.addr;
     println!("coordinator listening on {addr} (batch window {window_ms}ms)");
     let router = server.router();

@@ -4,11 +4,12 @@
 //!     cargo run --release --example synthetic_eval -- \
 //!         [--t-end 100] [--n-seq 3] [--seeds 0,1,2] [--gamma 10]
 //!         [--datasets poisson,hawkes,multihawkes] [--encoders thp,sahp,attnhp]
+//!         [--backend auto|native|xla]
 
 use anyhow::Result;
 use tpp_sd::bench::{synthetic_cell, EvalCfg};
 use tpp_sd::processes::from_dataset_json;
-use tpp_sd::runtime::{ArtifactDir, ModelExecutor};
+use tpp_sd::runtime::{Backend, ModelBackend};
 use tpp_sd::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -28,27 +29,29 @@ fn main() -> Result<()> {
     let datasets = args.list_or("datasets", &["poisson", "hawkes", "multihawkes"]);
     let encoders = args.list_or("encoders", &["thp", "sahp", "attnhp"]);
 
-    let art = ArtifactDir::discover()?;
-    let ds_json = art.datasets_json()?;
-    let client = tpp_sd::runtime::cpu_client()?;
+    let backend = tpp_sd::runtime::backend_from_arg(args.get("backend"))?;
 
-    println!("=== Table 1: synthetic datasets (γ={}, T={}, {} seq × {} seeds) ===",
-             cfg.gamma, cfg.t_end, cfg.n_seq, cfg.seeds.len());
+    println!(
+        "=== Table 1: synthetic datasets (backend={}, γ={}, T={}, {} seq × {} seeds) ===",
+        backend.name(),
+        cfg.gamma,
+        cfg.t_end,
+        cfg.n_seq,
+        cfg.seeds.len()
+    );
     println!(
         "{:<13} {:<7} | {:>8} {:>8} | {:>7} {:>7} {:>7} | {:>8} {:>8} | {:>7} {:>5}",
         "dataset", "enc", "ΔL_ar", "ΔL_sd", "KS_ar", "KS_sd", "KS_gt", "T_ar", "T_sd", "speedup", "α"
     );
 
     for ds in &datasets {
-        let dcfg = ds_json
-            .path(&format!("datasets.{ds}"))
-            .expect("dataset in registry");
-        let process = from_dataset_json(dcfg)?;
-        let num_types = dcfg.usize_at("num_types").unwrap();
+        let spec = backend.dataset_spec(ds)?;
+        let process = from_dataset_json(&spec)?;
+        let num_types = backend.num_types(ds)?;
         for enc in &encoders {
-            let target = ModelExecutor::load(client.clone(), &art, ds, enc, "target")?;
+            let target = backend.load_model(ds, enc, "target")?;
             target.warmup_batch(1)?;
-            let draft = ModelExecutor::load(client.clone(), &art, ds, enc, "draft")?;
+            let draft = backend.load_model(ds, enc, "draft")?;
             draft.warmup_batch(1)?;
             let cell = synthetic_cell(&target, &draft, process.as_ref(), num_types, &cfg)?;
             println!(

@@ -1,6 +1,6 @@
-//! Bench: coordinator overhead + batching ablation (DESIGN.md §9).
+//! Bench: coordinator overhead + batching ablation (DESIGN.md §10).
 //!
-//! (a) ExecutorHandle (channel hop, batch window) vs direct ModelExecutor
+//! (a) ExecutorHandle (channel hop, batch window) vs direct model forward
 //!     at concurrency 1 — the coordinator's overhead budget (<10% target);
 //! (b) N concurrent AR sessions through one batching executor vs N
 //!     sequential direct sessions — what dynamic batching buys.
@@ -11,7 +11,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 use tpp_sd::coordinator::ExecutorHandle;
-use tpp_sd::runtime::{ArtifactDir, ModelExecutor};
+use tpp_sd::runtime::{Backend, ModelBackend};
 use tpp_sd::sampler::{sample_ar, SampleCfg};
 use tpp_sd::util::cli::Args;
 use tpp_sd::util::rng::Rng;
@@ -24,12 +24,11 @@ fn main() -> Result<()> {
     let t_end = args.f64_or("t-end", 5.0);
     let cfg = SampleCfg { num_types: 1, t_end, max_events: 16 * 1024 };
 
-    let art = ArtifactDir::discover()?;
+    let backend = tpp_sd::runtime::backend_from_arg(args.get("backend"))?;
 
     // (a) direct vs handle, concurrency 1
     {
-        let client = tpp_sd::runtime::cpu_client()?;
-        let direct = ModelExecutor::load(client, &art, &dataset, &encoder, "target")?;
+        let direct = backend.load_model(&dataset, &encoder, "target")?;
         direct.warmup()?;
         // one throwaway run: XLA's first execution of each graph carries
         // one-time autotuning cost even after compilation
@@ -42,7 +41,7 @@ fn main() -> Result<()> {
         println!("direct  AR: {:.3}s ({} events)", t_direct, ev.len());
 
         let handle = ExecutorHandle::spawn(
-            art.clone(),
+            backend.clone(),
             &dataset,
             &encoder,
             "target",
@@ -68,7 +67,7 @@ fn main() -> Result<()> {
     // (b) N concurrent sessions through one batching executor
     for window_ms in [0u64, 2] {
         let handle = ExecutorHandle::spawn(
-            art.clone(),
+            backend.clone(),
             &dataset,
             &encoder,
             "target",

@@ -1,13 +1,13 @@
 //! Bench: raw forward-pass latency per (size × bucket × batch) — the L2/L3
 //! hot path that every sampler cost model builds on, plus the
-//! length-bucketing ablation of DESIGN.md §9 (what a single max-length
+//! length-bucketing ablation of DESIGN.md §10 (what a single max-length
 //! graph would cost instead).
 //!
 //!     cargo bench --bench bench_forward [-- --encoder thp --dataset hawkes]
 
 use anyhow::Result;
 use tpp_sd::bench::bench_loop;
-use tpp_sd::runtime::{ArtifactDir, ModelExecutor, SeqInput};
+use tpp_sd::runtime::{Backend, ModelBackend, SeqInput};
 use tpp_sd::util::cli::Args;
 use tpp_sd::util::rng::Rng;
 
@@ -28,13 +28,12 @@ fn main() -> Result<()> {
     let encoder = args.str_or("encoder", "thp").to_string();
     let iters = args.usize_or("iters", 20);
 
-    let art = ArtifactDir::discover()?;
-    let client = tpp_sd::runtime::cpu_client()?;
-    println!("== forward latency ({dataset}/{encoder}) ==");
+    let backend = tpp_sd::runtime::backend_from_arg(args.get("backend"))?;
+    println!("== forward latency ({dataset}/{encoder}, backend={}) ==", backend.name());
     let mut rng = Rng::new(1);
 
     for size in ["draft", "target"] {
-        let exec = ModelExecutor::load(client.clone(), &art, &dataset, &encoder, size)?;
+        let exec = backend.load_model(&dataset, &encoder, size)?;
         exec.warmup()?;
         for &fill in &[40usize, 100, 220, 460] {
             let seq = seq_of_len(&mut rng, fill, 1);

@@ -5,7 +5,7 @@
 //!                                           --gamma 10 --t-end 20 --runs 3]
 
 use anyhow::Result;
-use tpp_sd::runtime::{ArtifactDir, ModelExecutor};
+use tpp_sd::runtime::{Backend, ModelBackend};
 use tpp_sd::sampler::{sample_ar, sample_sd, Gamma, SampleCfg, SdCfg};
 use tpp_sd::util::cli::Args;
 use tpp_sd::util::rng::Rng;
@@ -18,19 +18,18 @@ fn main() -> Result<()> {
     let t_end = args.f64_or("t-end", 20.0);
     let runs = args.usize_or("runs", 3);
 
-    let art = ArtifactDir::discover()?;
-    let ds = art.datasets_json()?;
-    let num_types = ds
-        .usize_at(&format!("datasets.{dataset}.num_types"))
-        .expect("dataset");
-    let client = tpp_sd::runtime::cpu_client()?;
-    let target = ModelExecutor::load(client.clone(), &art, &dataset, &encoder, "target")?;
-    let draft = ModelExecutor::load(client, &art, &dataset, &encoder, "draft")?;
+    let backend = tpp_sd::runtime::backend_from_arg(args.get("backend"))?;
+    let num_types = backend.num_types(&dataset)?;
+    let target = backend.load_model(&dataset, &encoder, "target")?;
+    let draft = backend.load_model(&dataset, &encoder, "draft")?;
     target.warmup()?;
     draft.warmup()?;
 
     let cfg = SampleCfg { num_types, t_end, max_events: 16 * 1024 };
-    println!("== sampling wall-time ({dataset}/{encoder}, γ={gamma}, T={t_end}) ==");
+    println!(
+        "== sampling wall-time ({dataset}/{encoder}, backend={}, γ={gamma}, T={t_end}) ==",
+        backend.name()
+    );
 
     let (mut t_ar, mut t_sd, mut ev_ar, mut ev_sd, mut alpha) = (0.0, 0.0, 0, 0, 0.0);
     for seed in 0..runs as u64 {

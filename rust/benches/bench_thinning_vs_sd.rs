@@ -10,7 +10,7 @@
 
 use anyhow::Result;
 use tpp_sd::processes::{GroundTruth, Hawkes, InhomPoisson};
-use tpp_sd::runtime::{ArtifactDir, ModelExecutor};
+use tpp_sd::runtime::{Backend, ModelBackend};
 use tpp_sd::sampler::{sample_ar, sample_sd, Gamma, SampleCfg, SdCfg};
 use tpp_sd::util::cli::Args;
 use tpp_sd::util::rng::Rng;
@@ -39,10 +39,9 @@ fn main() -> Result<()> {
     }
 
     // (b) model sampling: forwards per event, AR vs SD
-    let art = ArtifactDir::discover()?;
-    let client = tpp_sd::runtime::cpu_client()?;
-    let target = ModelExecutor::load(client.clone(), &art, "hawkes", "thp", "target")?;
-    let draft = ModelExecutor::load(client, &art, "hawkes", "thp", "draft")?;
+    let backend = tpp_sd::runtime::backend_from_arg(args.get("backend"))?;
+    let target = backend.load_model("hawkes", "thp", "target")?;
+    let draft = backend.load_model("hawkes", "thp", "draft")?;
     target.warmup()?;
     draft.warmup()?;
     let cfg = SampleCfg { num_types: 1, t_end, max_events: 16 * 1024 };

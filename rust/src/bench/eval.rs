@@ -10,7 +10,7 @@ use anyhow::Result;
 use crate::events::Event;
 use crate::metrics::{delta_l, emd_labels, ks_vs_exp1, model_loglik, wasserstein_1d};
 use crate::processes::GroundTruth;
-use crate::runtime::executor::Forward;
+use crate::runtime::Forward;
 use crate::sampler::{sample_ar, sample_sd, Gamma, SampleCfg, SampleStats, SdCfg};
 use crate::util::rng::Rng;
 
@@ -48,6 +48,7 @@ impl Default for EvalCfg {
 }
 
 impl EvalCfg {
+    /// The draft-length policy these knobs select.
     pub fn gamma_policy(&self) -> Gamma {
         if self.adaptive {
             Gamma::Adaptive { init: self.gamma, min: 2, max: 4 * self.gamma.max(1) }
@@ -61,19 +62,31 @@ impl EvalCfg {
 /// statistics of time-rescaled intervals, wall-times and the speedup ratio.
 #[derive(Debug, Clone, Default)]
 pub struct SyntheticCell {
+    /// per-event |ΔL| of AR samples vs ground truth
     pub dl_ar: f64,
+    /// per-event |ΔL| of SD samples vs ground truth
     pub dl_sd: f64,
+    /// KS of rescaled AR intervals vs Exp(1)
     pub ks_ar: f64,
+    /// KS of rescaled SD intervals vs Exp(1)
     pub ks_sd: f64,
+    /// KS of rescaled ground-truth (thinning) intervals vs Exp(1)
     pub ks_gt: f64,
+    /// mean AR wall time per seed (s)
     pub t_ar: f64,
+    /// mean SD wall time per seed (s)
     pub t_sd: f64,
+    /// t_ar / t_sd
     pub speedup: f64,
+    /// SD acceptance rate α
     pub alpha: f64,
-    /// KS-plot series (F(z), F_n(z)) for Figures 2/4: sd / ar / ground truth
+    /// KS-plot series (F(z), F_n(z)) for Figures 2/4: SD samples
     pub ks_points_sd: Vec<(f64, f64)>,
+    /// KS-plot series: AR samples
     pub ks_points_ar: Vec<(f64, f64)>,
+    /// KS-plot series: ground-truth thinning samples
     pub ks_points_gt: Vec<(f64, f64)>,
+    /// sample count behind the KS band
     pub n_rescaled: usize,
 }
 
@@ -156,19 +169,29 @@ where
 /// One Table-2 cell: AR-vs-SD consistency on a "real" dataset.
 #[derive(Debug, Clone, Default)]
 pub struct RealCell {
+    /// per-event |ΔL| between AR and SD samples under the target model
     pub dl: f64,
     /// self-consistency baseline: two independent AR runs
     pub dl_ar_baseline: f64,
+    /// 1-Wasserstein distance of next-event times, AR vs SD
     pub dws_t: f64,
+    /// next-event time distance, AR vs AR (stochasticity baseline)
     pub dws_t_baseline: f64,
+    /// EMD of next-event types, AR vs SD
     pub dws_k: f64,
+    /// next-event type distance, AR vs AR (stochasticity baseline)
     pub dws_k_baseline: f64,
+    /// mean AR wall time per seed (s)
     pub t_ar: f64,
+    /// mean SD wall time per seed (s)
     pub t_sd: f64,
+    /// t_ar / t_sd
     pub speedup: f64,
+    /// SD acceptance rate α
     pub alpha: f64,
-    /// type histograms for Figure 5
+    /// type histogram of AR samples (Figure 5)
     pub hist_ar: Vec<f64>,
+    /// type histogram of SD samples (Figure 5)
     pub hist_sd: Vec<f64>,
 }
 

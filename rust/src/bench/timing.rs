@@ -5,28 +5,36 @@ use std::time::{Duration, Instant};
 
 use crate::util::math::{mean, percentile, std_dev};
 
+/// Timing samples of one benchmarked closure.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// benchmark label
     pub name: String,
+    /// measured iterations
     pub iters: usize,
     /// per-iteration wall times in seconds
     pub samples: Vec<f64>,
 }
 
 impl BenchResult {
+    /// Mean wall time in seconds.
     pub fn mean_s(&self) -> f64 {
         mean(&self.samples)
     }
+    /// Standard deviation in seconds.
     pub fn std_s(&self) -> f64 {
         std_dev(&self.samples)
     }
+    /// Median wall time in seconds.
     pub fn p50_s(&self) -> f64 {
         percentile(&self.samples, 0.5)
     }
+    /// 95th-percentile wall time in seconds.
     pub fn p95_s(&self) -> f64 {
         percentile(&self.samples, 0.95)
     }
 
+    /// One formatted report line.
     pub fn report(&self) -> String {
         format!(
             "{:<40} {:>10.3}ms ±{:>8.3}ms  p50 {:>8.3}ms  p95 {:>8.3}ms  (n={})",

@@ -1,18 +1,21 @@
 //! Batching executor: the serving-path heart of the coordinator.
 //!
-//! XLA wrapper objects are not `Send`, so each trained model lives on a
-//! dedicated executor thread that owns its [`ModelExecutor`]. Concurrent
-//! sessions submit single-sequence forward requests over a channel; the
-//! thread coalesces up to `max_batch` requests that arrive within
-//! `batch_window` into ONE batched HLO call (the B=8 graphs), then fans the
-//! slots back out. This is the same dynamic-batching idea vLLM's router
-//! applies to token steps, transplanted to TPP forward passes.
+//! Model objects need not be `Send` (XLA wrappers hold raw pointers), so
+//! each loaded model lives on a dedicated executor thread that owns its
+//! [`ModelBackend`] — the thread loads the model through the shared
+//! [`Backend`] registry, so the same batcher serves the native CPU models
+//! and the PJRT executors. Concurrent sessions submit single-sequence
+//! forward requests over a channel; the thread coalesces up to `max_batch`
+//! requests that arrive within `batch_window` into ONE batched forward
+//! (the B=8 path), then fans the slots back out. This is the same
+//! dynamic-batching idea vLLM's router applies to token steps,
+//! transplanted to TPP forward passes.
 //!
 //! Invariants (property-tested in `rust/tests/coordinator.rs`):
 //!   * every request gets exactly one reply (no loss, no duplication);
 //!   * replies carry the requester's own sequence results regardless of
 //!     how requests were grouped into batches;
-//!   * numerical results are identical to the direct path (same HLO).
+//!   * numerical results are identical to the direct path (same forward).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
@@ -21,20 +24,23 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::runtime::executor::{Forward, SlotOut};
-use crate::runtime::{ArtifactDir, ModelExecutor, SeqInput};
+use crate::runtime::{Backend, Forward, ModelBackend, SeqInput, SlotOut};
 
 /// Aggregate counters exposed by an executor thread.
 #[derive(Debug, Default)]
 pub struct BatcherStats {
+    /// total forward requests received
     pub requests: AtomicUsize,
+    /// batched forward calls issued
     pub batches: AtomicUsize,
-    pub batched_requests: AtomicUsize,
     /// Σ batch-size — occupancy = batched_requests / batches
+    pub batched_requests: AtomicUsize,
+    /// largest batch coalesced so far
     pub max_batch_seen: AtomicUsize,
 }
 
 impl BatcherStats {
+    /// Mean requests per batched forward call.
     pub fn occupancy(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
         if b == 0 {
@@ -55,17 +61,21 @@ struct Request {
 pub struct ExecutorHandle {
     tx: SyncSender<Request>,
     max_bucket: usize,
+    /// shared batching counters
     pub stats: Arc<BatcherStats>,
+    /// `dataset/encoder/size` tag for logs
     pub name: String,
 }
 
 impl ExecutorHandle {
-    /// Spawn an executor thread for `(dataset, encoder, size)`.
+    /// Spawn an executor thread for `(dataset, encoder, size)`, loading the
+    /// model through `backend` **on the new thread** (model objects need
+    /// not be `Send`).
     ///
     /// `batch_window`: how long the thread waits for co-batchable requests
     /// after the first arrives (0 ⇒ opportunistic draining only).
     pub fn spawn(
-        art: ArtifactDir,
+        backend: Arc<dyn Backend>,
         dataset: &str,
         encoder: &str,
         size: &str,
@@ -81,10 +91,8 @@ impl ExecutorHandle {
         std::thread::Builder::new()
             .name(format!("exec-{name}"))
             .spawn(move || {
-                // XLA objects are created on this thread and never leave it.
-                let exec = match crate::runtime::cpu_client()
-                    .and_then(|c| ModelExecutor::load(c, &art, &ds, &enc, &sz))
-                {
+                // The model is created on this thread and never leaves it.
+                let exec = match backend.load_model(&ds, &enc, &sz) {
                     Ok(e) => {
                         let _ = ready_tx.send(Ok(e.max_bucket()));
                         e
@@ -105,7 +113,7 @@ impl ExecutorHandle {
 }
 
 fn run_loop(
-    exec: ModelExecutor,
+    exec: Box<dyn ModelBackend>,
     rx: Receiver<Request>,
     stats: Arc<BatcherStats>,
     max_batch: usize,

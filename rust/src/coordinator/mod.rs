@@ -8,9 +8,9 @@
 //! ```text
 //!   client conns ──> session threads ──┐
 //!                                      ├─> ExecutorHandle(target) ─┐
-//!        (sampler code, generic over   │      batching thread      ├─ PJRT
-//!         runtime::executor::Forward)  ├─> ExecutorHandle(draft)  ─┘
-//!                                      │      batching thread
+//!        (sampler code, generic over   │      batching thread      ├─ Backend
+//!         runtime::Forward)            ├─> ExecutorHandle(draft)  ─┘  (native
+//!                                      │      batching thread         or xla)
 //!   Router: (dataset, encoder) ────────┘
 //! ```
 

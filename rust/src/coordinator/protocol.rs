@@ -15,26 +15,38 @@ use crate::events::Event;
 use crate::sampler::SampleStats;
 use crate::util::json::{obj, Json};
 
+/// One client request (one JSON object per line).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
+    /// liveness check
     Ping,
+    /// server-side counters
     Stats,
+    /// sample one sequence
     Sample(SampleRequest),
 }
 
+/// Parameters of a `sample` request.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SampleRequest {
+    /// dataset name from the registry
     pub dataset: String,
+    /// encoder name (`thp` | `sahp` | `attnhp`)
     pub encoder: String,
     /// "ar" | "sd" | "sd-adaptive"
     pub method: String,
+    /// draft length γ (initial γ for `sd-adaptive`)
     pub gamma: usize,
+    /// sampling window end T
     pub t_end: f64,
+    /// RNG seed
     pub seed: u64,
+    /// draft model size (`draft` | `draft2` | `draft3`)
     pub draft_size: String,
 }
 
 impl Request {
+    /// Parse one request line.
     pub fn parse(line: &str) -> Result<Request> {
         let j = Json::parse(line.trim())?;
         match j.str_at("op") {
@@ -53,6 +65,7 @@ impl Request {
         }
     }
 
+    /// Serialize to one request line (without the trailing newline).
     pub fn to_line(&self) -> String {
         match self {
             Request::Ping => r#"{"op":"ping"}"#.to_string(),
@@ -72,6 +85,7 @@ impl Request {
     }
 }
 
+/// Serialize sampling counters for a response.
 pub fn stats_json(s: &SampleStats) -> Json {
     obj(vec![
         ("events", Json::Num(s.events as f64)),
@@ -86,6 +100,7 @@ pub fn stats_json(s: &SampleStats) -> Json {
     ])
 }
 
+/// Success response carrying the sampled events + counters.
 pub fn ok_response(events: &[Event], stats: &SampleStats) -> String {
     let evs = Json::Arr(
         events
@@ -101,6 +116,7 @@ pub fn ok_response(events: &[Event], stats: &SampleStats) -> String {
     .to_string()
 }
 
+/// Error response (`{"ok":false,...}`).
 pub fn err_response(msg: &str) -> String {
     obj(vec![
         ("ok", Json::Bool(false)),

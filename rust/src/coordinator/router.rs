@@ -1,38 +1,47 @@
 //! Model router: maps `(dataset, encoder)` to a target/draft executor pair,
-//! spawning executor threads lazily and reusing them across sessions.
+//! spawning executor threads lazily and reusing them across sessions. The
+//! router is backend-agnostic — it only talks to the
+//! [`crate::runtime::Backend`] registry.
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use anyhow::{Context as _, Result};
+use anyhow::Result;
 
 use super::batcher::ExecutorHandle;
-use crate::runtime::ArtifactDir;
-use crate::util::json::Json;
+use crate::runtime::Backend;
 
 /// A routed model pair ready for sampling.
 #[derive(Clone)]
 pub struct ModelPair {
+    /// the big verified model
     pub target: ExecutorHandle,
+    /// the small drafting model
     pub draft: ExecutorHandle,
+    /// number of real event types of the dataset
     pub num_types: usize,
 }
 
+/// Lazily spawning, reusing registry of executor pairs.
 pub struct Router {
-    art: ArtifactDir,
-    datasets: Json,
+    backend: Arc<dyn Backend>,
     pairs: Mutex<BTreeMap<(String, String, String), ModelPair>>,
+    /// largest batch an executor thread may coalesce
     pub max_batch: usize,
+    /// how long an executor thread waits for co-batchable requests
     pub batch_window: Duration,
 }
 
 impl Router {
-    pub fn new(art: ArtifactDir, max_batch: usize, batch_window: Duration) -> Result<Router> {
-        let datasets = art.datasets_json()?;
+    /// Build a router over a model registry.
+    pub fn new(
+        backend: Arc<dyn Backend>,
+        max_batch: usize,
+        batch_window: Duration,
+    ) -> Result<Router> {
         Ok(Router {
-            art,
-            datasets,
+            backend,
             pairs: Mutex::new(BTreeMap::new()),
             max_batch,
             batch_window,
@@ -41,18 +50,12 @@ impl Router {
 
     /// Number of real event types for a dataset.
     pub fn num_types(&self, dataset: &str) -> Result<usize> {
-        self.datasets
-            .usize_at(&format!("datasets.{dataset}.num_types"))
-            .with_context(|| format!("unknown dataset '{dataset}'"))
+        self.backend.num_types(dataset)
     }
 
-    /// Datasets known to the artifact registry.
+    /// Datasets known to the backend registry.
     pub fn datasets(&self) -> Vec<String> {
-        self.datasets
-            .get("datasets")
-            .and_then(Json::as_obj)
-            .map(|m| m.keys().cloned().collect())
-            .unwrap_or_default()
+        self.backend.datasets()
     }
 
     /// Get (spawning if needed) the executor pair for a model.
@@ -63,7 +66,7 @@ impl Router {
         }
         let num_types = self.num_types(dataset)?;
         let target = ExecutorHandle::spawn(
-            self.art.clone(),
+            self.backend.clone(),
             dataset,
             encoder,
             "target",
@@ -71,7 +74,7 @@ impl Router {
             self.batch_window,
         )?;
         let draft = ExecutorHandle::spawn(
-            self.art.clone(),
+            self.backend.clone(),
             dataset,
             encoder,
             draft_size,

@@ -16,7 +16,9 @@ use crate::sampler::{sample_ar, sample_sd, Gamma, SampleCfg, SdCfg};
 use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
 
+/// The TCP sampling server: accept loop + per-connection session threads.
 pub struct Server {
+    /// the bound address (useful with port 0)
     pub addr: std::net::SocketAddr,
     listener: TcpListener,
     router: Arc<Router>,
@@ -24,19 +26,21 @@ pub struct Server {
 }
 
 impl Server {
-    /// Bind (use port 0 for an ephemeral port) and build the router.
+    /// Bind (use port 0 for an ephemeral port) and build the router over
+    /// the given model registry.
     pub fn bind(
-        art: crate::runtime::ArtifactDir,
+        backend: Arc<dyn crate::runtime::Backend>,
         host_port: &str,
         max_batch: usize,
         batch_window: Duration,
     ) -> Result<Server> {
-        let router = Arc::new(Router::new(art, max_batch, batch_window)?);
+        let router = Arc::new(Router::new(backend, max_batch, batch_window)?);
         let listener = TcpListener::bind(host_port)?;
         let addr = listener.local_addr()?;
         Ok(Server { addr, listener, router, sessions: Arc::new(AtomicUsize::new(0)) })
     }
 
+    /// Shared handle to the router (pre-routing, stats).
     pub fn router(&self) -> Arc<Router> {
         self.router.clone()
     }
@@ -134,11 +138,13 @@ pub struct Client {
 }
 
 impl Client {
+    /// Connect to a running server.
     pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
         let stream = TcpStream::connect(addr)?;
         Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
     }
 
+    /// Send one request and read one response line.
     pub fn call(&mut self, req: &Request) -> Result<String> {
         self.writer.write_all(req.to_line().as_bytes())?;
         self.writer.write_all(b"\n")?;

@@ -3,11 +3,14 @@
 /// One marked event: absolute time `t` and type `k ∈ [0, K)`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Event {
+    /// absolute event time
     pub t: f64,
+    /// event type (mark)
     pub k: u32,
 }
 
 impl Event {
+    /// Construct an event at time `t` with type `k`.
     pub fn new(t: f64, k: u32) -> Event {
         Event { t, k }
     }

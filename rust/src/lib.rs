@@ -1,11 +1,18 @@
 //! TPP-SD: Accelerating Transformer Point Process Sampling with Speculative
 //! Decoding (NeurIPS 2025) — Rust coordinator (Layer 3).
 //!
-//! See `DESIGN.md` for the full architecture: Pallas kernels (L1) and the
-//! JAX CDF-Transformer TPP (L2) are AOT-compiled at build time to HLO text;
-//! this crate loads them via PJRT and owns everything on the request path —
-//! AR sampling, speculative decoding, ground-truth processes, metrics and
-//! the serving coordinator.
+//! See `rust/DESIGN.md` for the full architecture (the L1/L2/L3 layer
+//! diagram is in §2): Pallas kernels (L1) and the JAX CDF-Transformer TPP
+//! (L2) are AOT-compiled at build time to HLO text; this crate owns
+//! everything on the request path — AR sampling, speculative decoding,
+//! ground-truth processes, metrics and the serving coordinator.
+//!
+//! Inference is pluggable behind the [`runtime::Backend`] seam (DESIGN.md
+//! §5): the default build runs the pure-Rust [`runtime::NativeBackend`]
+//! (no artifacts, no system deps); `--features xla` adds the PJRT executor
+//! that loads the AOT artifacts.
+
+#![warn(missing_docs)]
 
 pub mod bench;
 pub mod coordinator;

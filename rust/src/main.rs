@@ -2,17 +2,16 @@
 //!
 //! Subcommands:
 //!   serve   — start the sampling coordinator (TCP line protocol)
-//!   sample  — sample sequences from a trained model (ar | sd | sd-adaptive)
-//!   info    — list artifacts, datasets and model configurations
+//!   sample  — sample sequences from a model (ar | sd | sd-adaptive)
+//!   info    — list backends, datasets and model configurations
 
 use std::time::Duration;
 
 use anyhow::{bail, Result};
 use tpp_sd::coordinator::Server;
-use tpp_sd::runtime::{ArtifactDir, ModelExecutor};
+use tpp_sd::runtime::{backend_from_arg, Backend};
 use tpp_sd::sampler::{sample_ar, sample_sd, Gamma, SampleCfg, SdCfg};
 use tpp_sd::util::cli::Args;
-use tpp_sd::util::json::Json;
 use tpp_sd::util::rng::Rng;
 
 const USAGE: &str = "\
@@ -21,14 +20,18 @@ tppsd — TPP-SD sampling coordinator
 usage: tppsd <command> [options]
 
 commands:
-  info                              list datasets / models in the artifact dir
+  info                              list datasets / models of the backend
   sample  --dataset D --encoder E   sample one sequence and print it
           [--method ar|sd|sd-adaptive] [--gamma 10] [--t-end 30]
           [--seed 0] [--draft-size draft] [--csv]
   serve   [--listen 127.0.0.1:7077] [--max-batch 8] [--batch-window-ms 2]
 
+options (all commands):
+  --backend auto|native|xla         inference backend [auto]
+
 environment:
-  TPP_SD_ARTIFACTS   artifact directory (default ./artifacts)
+  TPP_SD_BACKEND     backend when --backend is absent (default auto)
+  TPP_SD_ARTIFACTS   artifact directory for the xla backend (./artifacts)
 ";
 
 fn main() -> Result<()> {
@@ -36,7 +39,7 @@ fn main() -> Result<()> {
     let cmd = argv.first().cloned().unwrap_or_default();
     let args = Args::parse(argv.into_iter().skip(1));
     match cmd.as_str() {
-        "info" => info(),
+        "info" => info(&args),
         "sample" => sample(&args),
         "serve" => serve(&args),
         _ => {
@@ -46,36 +49,26 @@ fn main() -> Result<()> {
     }
 }
 
-fn info() -> Result<()> {
-    let art = ArtifactDir::discover()?;
-    let ds = art.datasets_json()?;
-    println!("artifact dir: {}", art.root.display());
-    println!("k_max={} buckets={:?}", ds.usize_at("k_max").unwrap_or(0),
-        ds.get("buckets").map(|b| b.to_string()).unwrap_or_default());
-    if let Some(sizes) = ds.get("sizes").and_then(Json::as_obj) {
-        println!("model sizes:");
-        for (name, s) in sizes {
-            println!(
-                "  {:<8} layers={} heads={} d_model={} M={}",
-                name,
-                s.usize_at("n_layers").unwrap_or(0),
-                s.usize_at("n_heads").unwrap_or(0),
-                s.usize_at("d_model").unwrap_or(0),
-                s.usize_at("n_mix").unwrap_or(0)
-            );
-        }
+/// Resolve the backend from `--backend`, falling back to the environment.
+fn pick_backend(args: &Args) -> Result<std::sync::Arc<dyn Backend>> {
+    backend_from_arg(args.get("backend"))
+}
+
+fn info(args: &Args) -> Result<()> {
+    let backend = pick_backend(args)?;
+    println!("backend: {}", backend.name());
+    println!("datasets:");
+    for name in backend.datasets() {
+        let spec = backend.dataset_spec(&name)?;
+        println!(
+            "  {:<18} kind={:<12} K={}",
+            name,
+            spec.str_at("kind").unwrap_or("?"),
+            backend.num_types(&name).unwrap_or(0)
+        );
     }
-    if let Some(dss) = ds.get("datasets").and_then(Json::as_obj) {
-        println!("datasets:");
-        for (name, d) in dss {
-            println!(
-                "  {:<18} kind={:<12} K={}",
-                name,
-                d.str_at("kind").unwrap_or("?"),
-                d.usize_at("num_types").unwrap_or(0)
-            );
-        }
-    }
+    println!("model sizes: target | draft | draft2 | draft3");
+    println!("encoders:    thp | sahp | attnhp");
     Ok(())
 }
 
@@ -83,30 +76,21 @@ fn sample(args: &Args) -> Result<()> {
     let dataset = args.str_or("dataset", "hawkes").to_string();
     let encoder = args.str_or("encoder", "attnhp").to_string();
     let method = args.str_or("method", "sd").to_string();
-    let art = ArtifactDir::discover()?;
-    let ds = art.datasets_json()?;
-    let Some(num_types) = ds.usize_at(&format!("datasets.{dataset}.num_types")) else {
-        bail!("unknown dataset '{dataset}' (see `tppsd info`)");
-    };
+    let backend = pick_backend(args)?;
+    let num_types = backend.num_types(&dataset)?;
     let cfg = SampleCfg {
         num_types,
         t_end: args.f64_or("t-end", 30.0),
         max_events: args.usize_or("max-events", 16 * 1024),
     };
-    let client = tpp_sd::runtime::cpu_client()?;
-    let target = ModelExecutor::load(client.clone(), &art, &dataset, &encoder, "target")?;
+    let target = backend.load_model(&dataset, &encoder, "target")?;
     let mut rng = Rng::new(args.u64_or("seed", 0));
     let gamma = args.usize_or("gamma", 10);
     let (events, stats) = match method.as_str() {
         "ar" => sample_ar(&target, &cfg, &mut rng)?,
         "sd" | "sd-adaptive" => {
-            let draft = ModelExecutor::load(
-                client,
-                &art,
-                &dataset,
-                &encoder,
-                args.str_or("draft-size", "draft"),
-            )?;
+            let draft =
+                backend.load_model(&dataset, &encoder, args.str_or("draft-size", "draft"))?;
             let g = if method == "sd" {
                 Gamma::Fixed(gamma)
             } else {
@@ -139,13 +123,14 @@ fn sample(args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
-    let art = ArtifactDir::discover()?;
+    let backend = pick_backend(args)?;
+    let name = backend.name();
     let server = Server::bind(
-        art,
+        backend,
         args.str_or("listen", "127.0.0.1:7077"),
         args.usize_or("max-batch", 8),
         Duration::from_millis(args.u64_or("batch-window-ms", 2)),
     )?;
-    println!("tppsd serving on {}", server.addr);
+    println!("tppsd serving on {} (backend: {name})", server.addr);
     server.serve()
 }

@@ -9,7 +9,7 @@
 use anyhow::Result;
 
 use crate::events::Event;
-use crate::runtime::{executor::Forward, SeqInput};
+use crate::runtime::{Forward, SeqInput};
 
 /// Events scored per forward chunk / context carried between chunks.
 const CHUNK: usize = 256;

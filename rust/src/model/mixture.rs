@@ -12,12 +12,16 @@ use crate::util::rng::Rng;
 /// `g(τ|h) = Σ_m w_m LogNormal(τ; μ_m, σ_m)`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Mixture {
+    /// normalized component log-weights
     pub log_w: Vec<f64>,
+    /// component log-means μ_m
     pub mu: Vec<f64>,
+    /// component log-scales ln σ_m
     pub log_sigma: Vec<f64>,
 }
 
 impl Mixture {
+    /// Number of mixture components M.
     pub fn n_components(&self) -> usize {
         self.log_w.len()
     }
@@ -78,6 +82,7 @@ pub struct TypeDist {
 }
 
 impl TypeDist {
+    /// Softmax over the first `k` logits of a `K_MAX`-padded head.
     pub fn from_logits(logits: &[f64], k: usize) -> TypeDist {
         assert!(k >= 1 && k <= logits.len(), "k={k} logits={}", logits.len());
         let m = logits[..k].iter().cloned().fold(f64::NEG_INFINITY, f64::max);
@@ -89,10 +94,12 @@ impl TypeDist {
         TypeDist { probs }
     }
 
+    /// Draw a type index.
     pub fn sample(&self, rng: &mut Rng) -> usize {
         rng.categorical(&self.probs)
     }
 
+    /// Probability of type `k`.
     pub fn pmf(&self, k: usize) -> f64 {
         self.probs[k]
     }

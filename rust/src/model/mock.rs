@@ -10,8 +10,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::runtime::executor::{Forward, ForwardOut, SlotOut};
-use crate::runtime::SeqInput;
+use crate::runtime::{Forward, ForwardOut, SeqInput, SlotOut};
 
 /// A deterministic "Transformer": at each position the next-interval
 /// distribution is a 2-component log-normal mixture whose parameters drift
@@ -20,8 +19,11 @@ use crate::runtime::SeqInput;
 /// prefers type `(n + type_shift) mod k`.
 #[derive(Debug, Clone)]
 pub struct MockModel {
+    /// mixture components per row
     pub n_mix: usize,
+    /// padded event-type dimension
     pub k_max: usize,
+    /// largest sequence length (incl. BOS) a forward accepts
     pub max_bucket: usize,
     /// shifts μ of the mixture — 0.0 for the "target", ≠0 for a "draft"
     pub bias: f64,

@@ -5,14 +5,19 @@ use super::GroundTruth;
 use crate::events::Event;
 use crate::util::rng::Rng;
 
+/// Univariate exponential Hawkes process.
 #[derive(Debug, Clone)]
 pub struct Hawkes {
+    /// base rate μ
     pub mu: f64,
+    /// excitation jump α
     pub alpha: f64,
+    /// excitation decay β
     pub beta: f64,
 }
 
 impl Hawkes {
+    /// Subcritical process (requires α < β).
     pub fn new(mu: f64, alpha: f64, beta: f64) -> Hawkes {
         assert!(alpha < beta, "subcritical Hawkes requires α < β");
         Hawkes { mu, alpha, beta }

@@ -21,6 +21,7 @@ use crate::util::rng::Rng;
 
 /// A ground-truth process: everything the evaluation harness needs.
 pub trait GroundTruth {
+    /// Number of event types the process emits.
     fn num_types(&self) -> usize;
 
     /// Total conditional intensity λ*(t) = Σ_k λ*(t, k) given the (strictly

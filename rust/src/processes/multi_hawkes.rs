@@ -8,15 +8,19 @@ use super::GroundTruth;
 use crate::events::Event;
 use crate::util::rng::Rng;
 
+/// K-dimensional exponential Hawkes process with shared decay.
 #[derive(Debug, Clone)]
 pub struct MultiHawkes {
+    /// per-type base rates μ_j
     pub mu: Vec<f64>,
     /// α[effect][cause]
     pub alpha: Vec<Vec<f64>>,
+    /// shared excitation decay β
     pub beta: f64,
 }
 
 impl MultiHawkes {
+    /// Subcritical process (column sums of α must stay below β).
     pub fn new(mu: Vec<f64>, alpha: Vec<Vec<f64>>, beta: f64) -> MultiHawkes {
         let k = mu.len();
         assert!(alpha.len() == k && alpha.iter().all(|r| r.len() == k));
@@ -28,6 +32,7 @@ impl MultiHawkes {
         MultiHawkes { mu, alpha, beta }
     }
 
+    /// Number of event types K.
     pub fn k(&self) -> usize {
         self.mu.len()
     }

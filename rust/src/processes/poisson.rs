@@ -4,14 +4,19 @@ use super::GroundTruth;
 use crate::events::Event;
 use crate::util::rng::Rng;
 
+/// Inhomogeneous (sinusoidal-rate) Poisson process.
 #[derive(Debug, Clone)]
 pub struct InhomPoisson {
+    /// amplitude A
     pub a: f64,
+    /// baseline b (≥ 1 keeps the intensity positive)
     pub b: f64,
+    /// frequency ω
     pub omega: f64,
 }
 
 impl InhomPoisson {
+    /// λ(t) = A·(b + sin(ωπt)).
     pub fn new(a: f64, b: f64, omega: f64) -> InhomPoisson {
         assert!(b >= 1.0, "intensity must stay positive (b ≥ 1)");
         InhomPoisson { a, b, omega }

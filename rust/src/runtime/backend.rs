@@ -1,0 +1,282 @@
+//! The backend seam (DESIGN.md §5): everything the samplers, metrics and
+//! coordinator know about "a model" lives here, independent of how the
+//! forward pass is computed.
+//!
+//! Three layers of contract, from narrow to wide:
+//!
+//! * [`Forward`] — "run the forward pass for ONE sequence". Samplers and
+//!   scorers are generic over this, so the same algorithm code runs on a
+//!   direct in-process model, on the coordinator's batched serving path
+//!   ([`crate::coordinator::ExecutorHandle`]), and on test mocks.
+//! * [`ModelBackend`] — one loaded model: batched forwards (up to
+//!   [`ModelBackend::max_batch`] sequences per call), length-bucket
+//!   selection, warmup and perf accounting. The coordinator's batcher
+//!   drives this interface.
+//! * [`Backend`] — a model *registry*: resolves `(dataset, encoder, size)`
+//!   to a loaded [`ModelBackend`] and answers dataset metadata queries.
+//!   Implementations: [`crate::runtime::NativeBackend`] (pure CPU, default)
+//!   and `XlaBackend` (PJRT artifacts, behind `--features xla`).
+//!
+//! Row layout contract (DESIGN.md §5): a forward over a sequence of `n`
+//! events returns `bucket ≥ n + 1` rows; row `r` parameterizes the
+//! distribution of the *next* event given the BOS row plus the first `r`
+//! events. Rows past `n` are padding and must still hold *valid*
+//! distributions (normalized weights, finite parameters).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::model::mixture::{Mixture, TypeDist};
+use crate::util::json::Json;
+
+/// One sequence's model input: absolute event times/types (BOS excluded —
+/// the backend prepends it).
+#[derive(Debug, Clone, Default)]
+pub struct SeqInput {
+    /// window-start time carried by the BOS row
+    pub t0: f64,
+    /// absolute event times, strictly increasing
+    pub times: Vec<f64>,
+    /// event types, parallel to `times`
+    pub types: Vec<u32>,
+}
+
+impl SeqInput {
+    /// Number of model positions this sequence occupies (events + BOS).
+    pub fn len_with_bos(&self) -> usize {
+        self.times.len() + 1
+    }
+}
+
+/// One batch slot of a [`ForwardOut`] — what a single-sequence consumer
+/// (sampler, likelihood scorer) sees. Cheap to clone (Arc-backed).
+#[derive(Debug, Clone)]
+pub struct SlotOut {
+    out: Arc<ForwardOut>,
+    b: usize,
+}
+
+impl SlotOut {
+    /// View batch row `b` of a shared forward output.
+    pub fn new(out: Arc<ForwardOut>, b: usize) -> SlotOut {
+        assert!(b < out.batch);
+        SlotOut { out, b }
+    }
+
+    /// Mixture parameters of `g(τ_{row+1} | history ≤ row)`.
+    pub fn mixture(&self, row: usize) -> Mixture {
+        self.out.mixture(self.b, row)
+    }
+
+    /// Event-type distribution at `row`, restricted to `k` real types.
+    pub fn type_dist(&self, row: usize, k: usize) -> TypeDist {
+        self.out.type_dist(self.b, row, k)
+    }
+
+    /// Bucket (row capacity) of the underlying forward output.
+    pub fn bucket(&self) -> usize {
+        self.out.bucket
+    }
+}
+
+/// Anything that can run the model forward pass for one sequence: a loaded
+/// [`ModelBackend`] (direct path), a
+/// [`crate::coordinator::ExecutorHandle`] (batched serving path), or a test
+/// mock. Samplers and scorers are generic over this, so the exact same
+/// algorithm code runs on every path.
+pub trait Forward {
+    /// Run the forward pass for one sequence.
+    fn forward1(&self, seq: SeqInput) -> Result<SlotOut>;
+
+    /// Largest sequence length (incl. BOS) a forward can take.
+    fn max_bucket(&self) -> usize;
+}
+
+/// One loaded model, whatever computes it: batched forwards with length
+/// bucketing. Object-safe so the coordinator can own `Box<dyn ModelBackend>`
+/// on its executor threads (implementations need not be `Send`; the
+/// coordinator confines each model to the thread that loaded it).
+pub trait ModelBackend {
+    /// Run the forward pass for `1..=max_batch()` sequences in one call.
+    ///
+    /// The output's `bucket` is the smallest compiled/supported bucket that
+    /// fits the longest input (incl. BOS); its `batch` is the smallest
+    /// supported batch capacity ≥ `seqs.len()`, with padding slots holding
+    /// valid (but meaningless) distributions.
+    fn forward(&self, seqs: &[SeqInput]) -> Result<ForwardOut>;
+
+    /// Largest sequence length (incl. BOS) any forward can take.
+    fn max_bucket(&self) -> usize;
+
+    /// Largest number of sequences one forward call accepts.
+    fn max_batch(&self) -> usize;
+
+    /// Smallest supported bucket with capacity ≥ `len` (incl. BOS).
+    fn pick_bucket(&self, len: usize) -> Result<usize>;
+
+    /// Pre-build every (bucket, batch) forward variant (no-op where
+    /// building is free, e.g. the native backend).
+    fn warmup(&self) -> Result<()> {
+        Ok(())
+    }
+
+    /// Pre-build only the variants of one batch capacity.
+    fn warmup_batch(&self, _batch: usize) -> Result<()> {
+        Ok(())
+    }
+
+    /// Number of forward calls so far (perf accounting).
+    fn call_count(&self) -> usize {
+        0
+    }
+
+    /// Human-readable `backend:dataset/encoder/size` tag for logs.
+    fn descriptor(&self) -> String;
+}
+
+impl Forward for Box<dyn ModelBackend> {
+    fn forward1(&self, seq: SeqInput) -> Result<SlotOut> {
+        let out = self.as_ref().forward(std::slice::from_ref(&seq))?;
+        Ok(SlotOut::new(Arc::new(out), 0))
+    }
+
+    fn max_bucket(&self) -> usize {
+        self.as_ref().max_bucket()
+    }
+}
+
+/// A model registry: resolves `(dataset, encoder, size)` triples to loaded
+/// models and answers dataset metadata queries. `Send + Sync` so the
+/// coordinator can hand one registry to every executor thread.
+pub trait Backend: Send + Sync {
+    /// Short backend name (`"native"`, `"xla"`).
+    fn name(&self) -> &'static str;
+
+    /// Datasets this backend can serve.
+    fn datasets(&self) -> Vec<String>;
+
+    /// Number of real event types of a dataset.
+    fn num_types(&self, dataset: &str) -> Result<usize>;
+
+    /// The dataset's registry entry (kind, `num_types`, ground-truth
+    /// process params) in the `datasets.json` schema — the input
+    /// [`crate::processes::from_dataset_json`] expects.
+    fn dataset_spec(&self, dataset: &str) -> Result<Json>;
+
+    /// Load (or build) the model for `(dataset, encoder, size)`.
+    fn load_model(&self, dataset: &str, encoder: &str, size: &str)
+        -> Result<Box<dyn ModelBackend>>;
+}
+
+/// Flattened forward outputs for a batch (row-major `[B, L, ·]`).
+#[derive(Debug)]
+pub struct ForwardOut {
+    /// batch capacity of this output (≥ the number of input sequences)
+    pub batch: usize,
+    /// row capacity (sequence-length bucket, incl. BOS)
+    pub bucket: usize,
+    /// mixture components per row
+    pub n_mix: usize,
+    /// padded event-type dimension of the logits
+    pub k_max: usize,
+    log_w: Vec<f32>,
+    mu: Vec<f32>,
+    log_sigma: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+impl ForwardOut {
+    /// Construct from raw flattened buffers (used by every backend and by
+    /// mock models in tests).
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_raw(
+        batch: usize,
+        bucket: usize,
+        n_mix: usize,
+        k_max: usize,
+        log_w: Vec<f32>,
+        mu: Vec<f32>,
+        log_sigma: Vec<f32>,
+        logits: Vec<f32>,
+    ) -> ForwardOut {
+        assert_eq!(log_w.len(), batch * bucket * n_mix);
+        assert_eq!(mu.len(), batch * bucket * n_mix);
+        assert_eq!(log_sigma.len(), batch * bucket * n_mix);
+        assert_eq!(logits.len(), batch * bucket * k_max);
+        ForwardOut { batch, bucket, n_mix, k_max, log_w, mu, log_sigma, logits }
+    }
+
+    /// Mixture parameters of `g(τ_{row+1} | history ≤ row)` for batch row b.
+    pub fn mixture(&self, b: usize, row: usize) -> Mixture {
+        debug_assert!(b < self.batch && row < self.bucket);
+        let m = self.n_mix;
+        let off = (b * self.bucket + row) * m;
+        Mixture {
+            log_w: self.log_w[off..off + m].iter().map(|&x| x as f64).collect(),
+            mu: self.mu[off..off + m].iter().map(|&x| x as f64).collect(),
+            log_sigma: self.log_sigma[off..off + m]
+                .iter()
+                .map(|&x| x as f64)
+                .collect(),
+        }
+    }
+
+    /// Event-type distribution at `row`, restricted to `k` real types.
+    pub fn type_dist(&self, b: usize, row: usize, k: usize) -> TypeDist {
+        debug_assert!(b < self.batch && row < self.bucket);
+        let off = (b * self.bucket + row) * self.k_max;
+        let logits: Vec<f64> = self.logits[off..off + self.k_max]
+            .iter()
+            .map(|&x| x as f64)
+            .collect();
+        TypeDist::from_logits(&logits, k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_out_row_layout() {
+        // 2 batch rows × 2 bucket rows × 2 mix / 3 types, distinct values
+        let out = ForwardOut::from_raw(
+            2,
+            2,
+            2,
+            3,
+            (0..8).map(|i| (i as f32) * 0.01 - 1.0).collect(),
+            (0..8).map(|i| i as f32).collect(),
+            vec![-0.5; 8],
+            (0..12).map(|i| i as f32 * 0.1).collect(),
+        );
+        // batch 1, row 1 → offset (1*2+1)*2 = 6
+        let m = out.mixture(1, 1);
+        assert_eq!(m.mu, vec![6.0, 7.0]);
+        // logits offset (1*2+1)*3 = 9
+        let td = out.type_dist(1, 1, 3);
+        assert_eq!(td.probs.len(), 3);
+        assert!(td.probs[2] > td.probs[0]);
+    }
+
+    #[test]
+    fn slot_out_views_one_batch_row() {
+        let out = ForwardOut::from_raw(
+            2,
+            1,
+            1,
+            2,
+            vec![0.0, 0.0],
+            vec![1.0, 2.0],
+            vec![-0.5, -0.5],
+            vec![0.0, 0.0, 0.0, 0.0],
+        );
+        let shared = Arc::new(out);
+        let s0 = SlotOut::new(shared.clone(), 0);
+        let s1 = SlotOut::new(shared, 1);
+        assert_eq!(s0.mixture(0).mu, vec![1.0]);
+        assert_eq!(s1.mixture(0).mu, vec![2.0]);
+        assert_eq!(s0.bucket(), 1);
+    }
+}

@@ -1,5 +1,6 @@
-//! The model executor: one trained TPP model, loaded onto the PJRT CPU
-//! client, with length-bucketed AOT executables and cached weights.
+//! The XLA/PJRT model executor (compiled only with `--features xla`): one
+//! trained TPP model, loaded onto the PJRT CPU client, with length-bucketed
+//! AOT executables and cached weights.
 //!
 //! Forward calls pick the smallest compiled bucket that fits the sequence
 //! (quadratic attention cost ⇒ small-context calls are much cheaper), and
@@ -8,7 +9,13 @@
 //!
 //! XLA wrapper objects hold raw pointers and are not `Send`; the
 //! coordinator therefore owns each executor on a dedicated thread and talks
-//! to it over channels (see `coordinator::batcher`).
+//! to it over channels (see `coordinator::batcher`). [`XlaBackend`] is the
+//! `Send + Sync` registry handed to those threads — it carries only the
+//! artifact directory and creates the client on the loading thread.
+//!
+//! In the offline workspace the `xla` dependency resolves to the vendored
+//! API stub (`vendor/xla-stub`), which type-checks this module but errors
+//! at runtime; see `docs/adr/001-backend-abstraction.md`.
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;
@@ -18,132 +25,88 @@ use std::rc::Rc;
 use anyhow::{bail, Context, Result};
 use xla::FromRawBytes;
 
+use super::backend::{Backend, Forward, ForwardOut, ModelBackend, SeqInput, SlotOut};
 use super::manifest::{ArtifactDir, Manifest};
-use crate::model::mixture::{Mixture, TypeDist};
+use crate::util::json::Json;
 
-/// One sequence's model input: absolute event times/types (BOS excluded —
-/// the executor prepends it).
-#[derive(Debug, Clone, Default)]
-pub struct SeqInput {
-    /// window-start time carried by the BOS row
-    pub t0: f64,
-    pub times: Vec<f64>,
-    pub types: Vec<u32>,
+/// Open a PJRT CPU client.
+pub fn cpu_client() -> Result<Rc<xla::PjRtClient>> {
+    Ok(Rc::new(xla::PjRtClient::cpu()?))
 }
 
-impl SeqInput {
-    pub fn len_with_bos(&self) -> usize {
-        self.times.len() + 1
-    }
-}
-
-/// One batch slot of a [`ForwardOut`] — what a single-sequence consumer
-/// (sampler, likelihood scorer) sees. Cheap to clone (Arc-backed).
+/// Registry over an AOT artifact directory: resolves `(dataset, encoder,
+/// size)` to a [`ModelExecutor`] created on the *calling* thread (PJRT
+/// objects are not `Send`). The parsed `datasets.json` registry is cached
+/// after the first metadata query.
 #[derive(Debug, Clone)]
-pub struct SlotOut {
-    out: std::sync::Arc<ForwardOut>,
-    b: usize,
+pub struct XlaBackend {
+    art: ArtifactDir,
+    registry: std::sync::OnceLock<Json>,
 }
 
-impl SlotOut {
-    pub fn new(out: std::sync::Arc<ForwardOut>, b: usize) -> SlotOut {
-        assert!(b < out.batch);
-        SlotOut { out, b }
+impl XlaBackend {
+    /// Wrap an artifact directory.
+    pub fn new(art: ArtifactDir) -> XlaBackend {
+        XlaBackend { art, registry: std::sync::OnceLock::new() }
     }
 
-    pub fn mixture(&self, row: usize) -> Mixture {
-        self.out.mixture(self.b, row)
+    /// Discover the artifact directory from `$TPP_SD_ARTIFACTS`.
+    pub fn discover() -> Result<XlaBackend> {
+        Ok(XlaBackend::new(ArtifactDir::discover()?))
     }
 
-    pub fn type_dist(&self, row: usize, k: usize) -> TypeDist {
-        self.out.type_dist(self.b, row, k)
+    /// The underlying artifact directory.
+    pub fn artifacts(&self) -> &ArtifactDir {
+        &self.art
     }
 
-    pub fn bucket(&self) -> usize {
-        self.out.bucket
-    }
-}
-
-/// Anything that can run the model forward pass for one sequence: the
-/// in-process [`ModelExecutor`] (direct path) or a
-/// [`crate::coordinator::ExecutorHandle`] (batched serving path). Samplers
-/// and scorers are generic over this, so the exact same algorithm code runs
-/// on both paths.
-pub trait Forward {
-    fn forward1(&self, seq: SeqInput) -> anyhow::Result<SlotOut>;
-    /// Largest sequence length (incl. BOS) a forward can take.
-    fn max_bucket(&self) -> usize;
-}
-
-impl Forward for ModelExecutor {
-    fn forward1(&self, seq: SeqInput) -> anyhow::Result<SlotOut> {
-        let out = self.forward(std::slice::from_ref(&seq))?;
-        Ok(SlotOut::new(std::sync::Arc::new(out), 0))
-    }
-
-    fn max_bucket(&self) -> usize {
-        ModelExecutor::max_bucket(self)
-    }
-}
-
-/// Flattened forward outputs for a batch (row-major `[B, L, ·]`).
-#[derive(Debug)]
-pub struct ForwardOut {
-    pub batch: usize,
-    pub bucket: usize,
-    pub n_mix: usize,
-    pub k_max: usize,
-    log_w: Vec<f32>,
-    mu: Vec<f32>,
-    log_sigma: Vec<f32>,
-    logits: Vec<f32>,
-}
-
-impl ForwardOut {
-    /// Construct from raw flattened buffers (used by mock models in tests
-    /// and by any alternative backend).
-    #[allow(clippy::too_many_arguments)]
-    pub fn from_raw(
-        batch: usize,
-        bucket: usize,
-        n_mix: usize,
-        k_max: usize,
-        log_w: Vec<f32>,
-        mu: Vec<f32>,
-        log_sigma: Vec<f32>,
-        logits: Vec<f32>,
-    ) -> ForwardOut {
-        assert_eq!(log_w.len(), batch * bucket * n_mix);
-        assert_eq!(mu.len(), batch * bucket * n_mix);
-        assert_eq!(log_sigma.len(), batch * bucket * n_mix);
-        assert_eq!(logits.len(), batch * bucket * k_max);
-        ForwardOut { batch, bucket, n_mix, k_max, log_w, mu, log_sigma, logits }
-    }
-
-    /// Mixture parameters of `g(τ_{row+1} | history ≤ row)` for batch row b.
-    pub fn mixture(&self, b: usize, row: usize) -> Mixture {
-        debug_assert!(b < self.batch && row < self.bucket);
-        let m = self.n_mix;
-        let off = (b * self.bucket + row) * m;
-        Mixture {
-            log_w: self.log_w[off..off + m].iter().map(|&x| x as f64).collect(),
-            mu: self.mu[off..off + m].iter().map(|&x| x as f64).collect(),
-            log_sigma: self.log_sigma[off..off + m]
-                .iter()
-                .map(|&x| x as f64)
-                .collect(),
+    /// The parsed `datasets.json`, read from disk at most once.
+    fn registry(&self) -> Result<&Json> {
+        if let Some(j) = self.registry.get() {
+            return Ok(j);
         }
+        let parsed = self.art.datasets_json()?;
+        Ok(self.registry.get_or_init(|| parsed))
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
     }
 
-    /// Event-type distribution at `row`, restricted to `k` real types.
-    pub fn type_dist(&self, b: usize, row: usize, k: usize) -> TypeDist {
-        debug_assert!(b < self.batch && row < self.bucket);
-        let off = (b * self.bucket + row) * self.k_max;
-        let logits: Vec<f64> = self.logits[off..off + self.k_max]
-            .iter()
-            .map(|&x| x as f64)
-            .collect();
-        TypeDist::from_logits(&logits, k)
+    fn datasets(&self) -> Vec<String> {
+        self.registry()
+            .ok()
+            .and_then(|j| {
+                j.get("datasets")
+                    .and_then(Json::as_obj)
+                    .map(|m| m.keys().cloned().collect())
+            })
+            .unwrap_or_default()
+    }
+
+    fn num_types(&self, dataset: &str) -> Result<usize> {
+        self.registry()?
+            .usize_at(&format!("datasets.{dataset}.num_types"))
+            .with_context(|| format!("unknown dataset '{dataset}'"))
+    }
+
+    fn dataset_spec(&self, dataset: &str) -> Result<Json> {
+        self.registry()?
+            .path(&format!("datasets.{dataset}"))
+            .cloned()
+            .with_context(|| format!("unknown dataset '{dataset}'"))
+    }
+
+    fn load_model(
+        &self,
+        dataset: &str,
+        encoder: &str,
+        size: &str,
+    ) -> Result<Box<dyn ModelBackend>> {
+        let client = cpu_client()?;
+        Ok(Box::new(ModelExecutor::load(client, &self.art, dataset, encoder, size)?))
     }
 }
 
@@ -151,10 +114,15 @@ impl ForwardOut {
 pub struct ModelExecutor {
     client: Rc<xla::PjRtClient>,
     art: ArtifactDir,
+    /// encoder name the weights were trained with
     pub encoder: String,
+    /// model-size name (`target`, `draft`, ...)
     pub size_name: String,
+    /// mixture components per output row
     pub n_mix: usize,
+    /// padded event-type dimension
     pub k_max: usize,
+    /// BOS token id of the type vocabulary
     pub bos_id: u32,
     manifests: BTreeMap<(usize, usize), Manifest>,
     exes: RefCell<BTreeMap<(usize, usize), xla::PjRtLoadedExecutable>>,
@@ -223,6 +191,7 @@ impl ModelExecutor {
         *self.calls.borrow()
     }
 
+    /// Reset the forward-call counter.
     pub fn reset_call_count(&self) {
         *self.calls.borrow_mut() = 0;
     }
@@ -234,6 +203,7 @@ impl ModelExecutor {
         b
     }
 
+    /// Largest compiled bucket.
     pub fn max_bucket(&self) -> usize {
         *self.buckets().last().unwrap()
     }
@@ -354,16 +324,61 @@ impl ModelExecutor {
         if outs.len() != 4 {
             bail!("expected 4 outputs, got {}", outs.len());
         }
-        Ok(ForwardOut {
+        Ok(ForwardOut::from_raw(
             batch,
             bucket,
-            n_mix: self.n_mix,
-            k_max: self.k_max,
-            log_w: outs[0].to_vec::<f32>()?,
-            mu: outs[1].to_vec::<f32>()?,
-            log_sigma: outs[2].to_vec::<f32>()?,
-            logits: outs[3].to_vec::<f32>()?,
-        })
+            self.n_mix,
+            self.k_max,
+            outs[0].to_vec::<f32>()?,
+            outs[1].to_vec::<f32>()?,
+            outs[2].to_vec::<f32>()?,
+            outs[3].to_vec::<f32>()?,
+        ))
+    }
+}
+
+impl Forward for ModelExecutor {
+    fn forward1(&self, seq: SeqInput) -> Result<SlotOut> {
+        let out = ModelExecutor::forward(self, std::slice::from_ref(&seq))?;
+        Ok(SlotOut::new(std::sync::Arc::new(out), 0))
+    }
+
+    fn max_bucket(&self) -> usize {
+        ModelExecutor::max_bucket(self)
+    }
+}
+
+impl ModelBackend for ModelExecutor {
+    fn forward(&self, seqs: &[SeqInput]) -> Result<ForwardOut> {
+        ModelExecutor::forward(self, seqs)
+    }
+
+    fn max_bucket(&self) -> usize {
+        ModelExecutor::max_bucket(self)
+    }
+
+    fn max_batch(&self) -> usize {
+        ModelExecutor::max_batch(self)
+    }
+
+    fn pick_bucket(&self, len: usize) -> Result<usize> {
+        ModelExecutor::pick_bucket(self, len)
+    }
+
+    fn warmup(&self) -> Result<()> {
+        ModelExecutor::warmup(self)
+    }
+
+    fn warmup_batch(&self, batch: usize) -> Result<()> {
+        ModelExecutor::warmup_batch(self, batch)
+    }
+
+    fn call_count(&self) -> usize {
+        ModelExecutor::call_count(self)
+    }
+
+    fn descriptor(&self) -> String {
+        format!("xla:{}/{}", self.encoder, self.size_name)
     }
 }
 

@@ -10,22 +10,34 @@ use crate::util::json::Json;
 /// Shape metadata of one exported HLO graph.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// encoder name (`thp` | `sahp` | `attnhp`)
     pub encoder: String,
+    /// model-size name (`target`, `draft`, ...)
     pub size_name: String,
+    /// Transformer depth
     pub n_layers: usize,
+    /// attention heads
     pub n_heads: usize,
+    /// model width
     pub d_model: usize,
+    /// mixture components of the output head
     pub n_mix: usize,
+    /// sequence-length bucket (incl. BOS)
     pub bucket: usize,
+    /// batch capacity of the graph
     pub batch: usize,
+    /// padded event-type dimension
     pub k_max: usize,
+    /// BOS token id
     pub bos_id: usize,
+    /// kernel implementation tag (`pallas` | `ref`)
     pub impl_name: String,
     /// parameter (name, shape) in positional order
     pub params: Vec<(String, Vec<usize>)>,
 }
 
 impl Manifest {
+    /// Parse one `*.manifest.json` sidecar.
     pub fn load(path: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
@@ -76,10 +88,12 @@ impl Manifest {
 /// The artifact directory layout produced by `make artifacts`.
 #[derive(Debug, Clone)]
 pub struct ArtifactDir {
+    /// directory containing `hlo/`, `weights/` and `datasets.json`
     pub root: PathBuf,
 }
 
 impl ArtifactDir {
+    /// Wrap a built artifact directory (errors when `hlo/` is absent).
     pub fn new<P: Into<PathBuf>>(root: P) -> Result<ArtifactDir> {
         let root = root.into();
         if !root.join("hlo").is_dir() {
@@ -97,20 +111,24 @@ impl ArtifactDir {
         ArtifactDir::new(root)
     }
 
+    /// Path of an HLO text dump.
     pub fn hlo_path(&self, stem: &str) -> PathBuf {
         self.root.join("hlo").join(format!("{stem}.hlo.txt"))
     }
 
+    /// Path of a manifest sidecar.
     pub fn manifest_path(&self, stem: &str) -> PathBuf {
         self.root.join("hlo").join(format!("{stem}.manifest.json"))
     }
 
+    /// Path of a trained-weights `.npz`.
     pub fn weights_path(&self, dataset: &str, encoder: &str, size: &str) -> PathBuf {
         self.root
             .join("weights")
             .join(format!("{dataset}_{encoder}_{size}.npz"))
     }
 
+    /// Parse the exported dataset registry (`datasets.json`).
     pub fn datasets_json(&self) -> Result<Json> {
         let p = self.root.join("datasets.json");
         let text = std::fs::read_to_string(&p)

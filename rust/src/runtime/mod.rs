@@ -1,17 +1,85 @@
-//! PJRT runtime (Layer 3 ↔ AOT artifacts): manifest registry, weight
-//! loading, and the bucketed forward executor.
+//! The inference runtime (Layer 3 ↔ model forwards): the backend seam, the
+//! pure-Rust [`NativeBackend`] (default), the artifact manifest registry,
+//! and — behind `--features xla` — the PJRT executor for AOT artifacts.
+//!
+//! Pick a backend with [`discover_backend`] (honours `$TPP_SD_BACKEND`) or
+//! [`backend_named`]; everything downstream only sees the [`Backend`] /
+//! [`ModelBackend`] / [`Forward`] traits (DESIGN.md §5).
 
+pub mod backend;
+#[cfg(feature = "xla")]
 pub mod executor;
 pub mod manifest;
+pub mod native;
 
-pub use executor::{ForwardOut, ModelExecutor, SeqInput};
+pub use backend::{Backend, Forward, ForwardOut, ModelBackend, SeqInput, SlotOut};
 pub use manifest::{ArtifactDir, Manifest};
+pub use native::{NativeBackend, NativeModel};
 
-use std::rc::Rc;
+#[cfg(feature = "xla")]
+pub use executor::{cpu_client, ModelExecutor, XlaBackend};
 
-use anyhow::Result;
+use std::sync::Arc;
 
-/// Open a PJRT CPU client.
-pub fn cpu_client() -> Result<Rc<xla::PjRtClient>> {
-    Ok(Rc::new(xla::PjRtClient::cpu()?))
+use anyhow::{bail, Result};
+
+/// Resolve the inference backend from `$TPP_SD_BACKEND` (default `auto`:
+/// the XLA artifact backend when compiled in *and* artifacts are present,
+/// the native CPU backend otherwise).
+pub fn discover_backend() -> Result<Arc<dyn Backend>> {
+    let spec = std::env::var("TPP_SD_BACKEND").unwrap_or_else(|_| "auto".to_string());
+    backend_named(&spec)
+}
+
+/// Resolve a backend from an optional `--backend` argument, falling back
+/// to [`discover_backend`] (which honours `$TPP_SD_BACKEND`). Binaries,
+/// examples and benches all route through this so the env var works
+/// everywhere.
+pub fn backend_from_arg(arg: Option<&str>) -> Result<Arc<dyn Backend>> {
+    match arg {
+        Some(name) => backend_named(name),
+        None => discover_backend(),
+    }
+}
+
+/// Construct a backend by name: `native`, `xla`, or `auto`.
+pub fn backend_named(name: &str) -> Result<Arc<dyn Backend>> {
+    match name {
+        "native" => Ok(Arc::new(NativeBackend::new())),
+        "xla" => xla_backend(),
+        "auto" | "" => {
+            #[cfg(feature = "xla")]
+            {
+                if ArtifactDir::discover().is_ok() {
+                    return xla_backend();
+                }
+            }
+            Ok(Arc::new(NativeBackend::new()))
+        }
+        other => bail!("unknown backend '{other}' (native|xla|auto)"),
+    }
+}
+
+#[cfg(feature = "xla")]
+fn xla_backend() -> Result<Arc<dyn Backend>> {
+    Ok(Arc::new(XlaBackend::discover()?))
+}
+
+#[cfg(not(feature = "xla"))]
+fn xla_backend() -> Result<Arc<dyn Backend>> {
+    bail!("backend 'xla' requires building with `cargo build --features xla`")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_named_resolves() {
+        assert_eq!(backend_named("native").unwrap().name(), "native");
+        assert!(backend_named("bogus").is_err());
+        // `auto` always resolves to *something* usable
+        let b = backend_named("auto").unwrap();
+        assert!(!b.datasets().is_empty());
+    }
 }

@@ -1,0 +1,519 @@
+//! Pure-Rust CPU inference backend (DESIGN.md §5): the default build's hot
+//! path, requiring **no trained artifacts and no PJRT**.
+//!
+//! [`NativeBackend`] serves the same dataset registry the Python pipeline
+//! exports to `artifacts/datasets.json` (`python/compile/config.py` is the
+//! source of truth; the tables here mirror it), and loads
+//! [`NativeModel`]s whose mixture-head outputs are *analytic* functions of
+//! the visible history — a Hawkes-style exponentially-decaying excitation
+//! feature drives the log-normal mixture and the type head, so:
+//!
+//! * every density is exactly known (no weights, no nondeterminism);
+//! * outputs are **prefix-causal**: row `r` depends only on the BOS row and
+//!   the first `r` events, which is precisely the property TPP-SD's
+//!   parallel verification relies on (draft-time and verify-time parameters
+//!   for the same prefix are bit-identical);
+//! * the draft/target divergence is a dial: the `draft*` sizes shift the
+//!   mixture means and flatten the type head, so acceptance rates are
+//!   realistic rather than degenerate.
+//!
+//! The model honours the same length-bucketing (64/128/256/512) and B∈{1,8}
+//! batched-call contract as the AOT artifacts, so the coordinator's batcher
+//! and every sampler run unchanged on top of it.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::{bail, Context as _, Result};
+
+use super::backend::{Backend, ForwardOut, ModelBackend, SeqInput};
+use crate::util::json::{obj, Json};
+
+/// Sequence-length buckets (incl. BOS), mirroring `config.BUCKETS`.
+const BUCKETS: [usize; 4] = [64, 128, 256, 512];
+/// Batch capacities, mirroring `config.BATCH_SIZES` (B=1 latency path,
+/// B=8 the coordinator's batched executor).
+const BATCHES: [usize; 2] = [1, 8];
+/// Padded event-type dimension, mirroring `config.K_MAX`.
+const K_MAX: usize = 24;
+/// Mixture components of the native head.
+const N_MIX: usize = 2;
+
+/// Transformer encoders the registry knows (`config.ENCODERS`).
+const ENCODERS: [&str; 3] = ["thp", "sahp", "attnhp"];
+
+/// Model-size ladder: `(name, mean shift vs target, type-head amplitude)`.
+/// `target` is the reference; the `draft*` sizes are increasingly close to
+/// it (mirroring the paper's draft-capacity ablation, Tables 3/4).
+const SIZES: [(&str, f64, f64); 4] = [
+    ("target", 0.00, 1.5),
+    ("draft", 0.25, 0.9),
+    ("draft2", 0.15, 1.1),
+    ("draft3", 0.08, 1.3),
+];
+
+/// One dataset registry row (kind + native-model dynamics).
+struct DatasetDef {
+    name: &'static str,
+    kind: &'static str,
+    num_types: usize,
+    /// excitation gain of the native model's history feature
+    excite: f64,
+    /// decay rate of the history feature
+    decay: f64,
+}
+
+/// The registry, mirroring `python/compile/config.DATASETS`: the three
+/// paper synthetics plus the four simulated real-data stand-ins.
+static DATASETS: [DatasetDef; 7] = [
+    DatasetDef { name: "poisson", kind: "poisson", num_types: 1, excite: 0.15, decay: 1.0 },
+    DatasetDef { name: "hawkes", kind: "hawkes", num_types: 1, excite: 0.8, decay: 2.0 },
+    DatasetDef { name: "multihawkes", kind: "multihawkes", num_types: 2, excite: 0.5, decay: 2.0 },
+    DatasetDef { name: "taobao_sim", kind: "kd_hawkes", num_types: 17, excite: 0.5, decay: 3.0 },
+    DatasetDef { name: "amazon_sim", kind: "kd_hawkes", num_types: 16, excite: 0.5, decay: 3.0 },
+    DatasetDef { name: "taxi_sim", kind: "kd_hawkes", num_types: 10, excite: 0.5, decay: 3.0 },
+    DatasetDef {
+        name: "stackoverflow_sim",
+        kind: "kd_hawkes",
+        num_types: 22,
+        excite: 0.5,
+        decay: 3.0,
+    },
+];
+
+fn dataset_def(name: &str) -> Result<&'static DatasetDef> {
+    DATASETS
+        .iter()
+        .find(|d| d.name == name)
+        .with_context(|| format!("unknown dataset '{name}' (native registry)"))
+}
+
+/// Pure-CPU model registry; see the module docs.
+#[derive(Debug, Default)]
+pub struct NativeBackend {}
+
+impl NativeBackend {
+    /// Create the default registry.
+    pub fn new() -> NativeBackend {
+        NativeBackend {}
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn datasets(&self) -> Vec<String> {
+        DATASETS.iter().map(|d| d.name.to_string()).collect()
+    }
+
+    fn num_types(&self, dataset: &str) -> Result<usize> {
+        Ok(dataset_def(dataset)?.num_types)
+    }
+
+    fn dataset_spec(&self, dataset: &str) -> Result<Json> {
+        let def = dataset_def(dataset)?;
+        let params = match def.kind {
+            "poisson" => obj(vec![
+                ("A", Json::Num(5.0)),
+                ("b", Json::Num(1.0)),
+                ("omega", Json::Num(1.0 / 50.0)),
+            ]),
+            "hawkes" => obj(vec![
+                ("mu", Json::Num(2.5)),
+                ("alpha", Json::Num(1.0)),
+                ("beta", Json::Num(2.0)),
+            ]),
+            "multihawkes" => obj(vec![
+                ("mu", Json::Arr(vec![Json::Num(0.4), Json::Num(0.4)])),
+                (
+                    "alpha",
+                    Json::Arr(vec![
+                        Json::Arr(vec![Json::Num(1.0), Json::Num(0.5)]),
+                        Json::Arr(vec![Json::Num(0.1), Json::Num(1.0)]),
+                    ]),
+                ),
+                ("beta", Json::Num(2.0)),
+            ]),
+            // K-dim Hawkes stand-ins: same construction as config._kd_hawkes
+            // (power-law base rates, self + ring excitation, branching 0.4).
+            "kd_hawkes" => {
+                let k = def.num_types;
+                let total_rate = match def.name {
+                    "taobao_sim" => 2.5,
+                    "stackoverflow_sim" => 1.5,
+                    _ => 2.0,
+                };
+                let masses: Vec<f64> = (0..k).map(|i| (i as f64 + 1.0).powf(-0.8)).collect();
+                let mass_sum: f64 = masses.iter().sum();
+                let mu: Vec<Json> = masses
+                    .iter()
+                    .map(|m| Json::Num(0.6 * total_rate * m / mass_sum))
+                    .collect();
+                let beta = 3.0;
+                let mut alpha = vec![vec![0.0; k]; k];
+                for i in 0..k {
+                    alpha[i][i] = 0.3 * beta;
+                    alpha[(i + 1) % k][i] = 0.1 * beta;
+                }
+                let alpha_json = Json::Arr(
+                    alpha
+                        .into_iter()
+                        .map(|row| Json::Arr(row.into_iter().map(Json::Num).collect()))
+                        .collect(),
+                );
+                obj(vec![
+                    ("mu", Json::Arr(mu)),
+                    ("alpha", alpha_json),
+                    ("beta", Json::Num(beta)),
+                ])
+            }
+            other => bail!("unknown dataset kind '{other}'"),
+        };
+        // The stand-ins are multihawkes processes for ground-truth purposes.
+        let kind = if def.kind == "kd_hawkes" { "multihawkes" } else { def.kind };
+        Ok(obj(vec![
+            ("name", Json::Str(def.name.to_string())),
+            ("kind", Json::Str(kind.to_string())),
+            ("num_types", Json::Num(def.num_types as f64)),
+            ("t_end", Json::Num(100.0)),
+            ("params", params),
+        ]))
+    }
+
+    fn load_model(
+        &self,
+        dataset: &str,
+        encoder: &str,
+        size: &str,
+    ) -> Result<Box<dyn ModelBackend>> {
+        let def = dataset_def(dataset)?;
+        if !ENCODERS.contains(&encoder) {
+            bail!("unknown encoder '{encoder}' (thp|sahp|attnhp)");
+        }
+        let (_, bias, type_amp) = SIZES
+            .iter()
+            .copied()
+            .find(|(n, _, _)| *n == size)
+            .with_context(|| format!("unknown model size '{size}' (target|draft|draft2|draft3)"))?;
+        // Encoders are distinct deterministic models; a small shared offset
+        // keeps target/draft of the same encoder mutually consistent.
+        let enc_shift = match encoder {
+            "thp" => 0.0,
+            "sahp" => 0.03,
+            _ => -0.03,
+        };
+        Ok(Box::new(NativeModel {
+            dataset: dataset.to_string(),
+            encoder: encoder.to_string(),
+            size: size.to_string(),
+            num_types: def.num_types,
+            bias,
+            type_amp,
+            enc_shift,
+            excite: def.excite,
+            decay: def.decay,
+            calls: AtomicUsize::new(0),
+        }))
+    }
+}
+
+/// One loaded native model: analytic mixture-head parameters over the
+/// visible history. See the module docs for the construction.
+#[derive(Debug)]
+pub struct NativeModel {
+    dataset: String,
+    encoder: String,
+    size: String,
+    num_types: usize,
+    /// mean shift vs the target model (0 for `target`)
+    bias: f64,
+    /// type-head peak amplitude (smaller ⇒ flatter draft head)
+    type_amp: f64,
+    /// per-encoder parameter offset (shared by target and draft)
+    enc_shift: f64,
+    /// excitation gain of the history feature
+    excite: f64,
+    /// decay rate of the history feature
+    decay: f64,
+    calls: AtomicUsize,
+}
+
+impl NativeModel {
+    /// Write the parameters of one output row.
+    ///
+    /// `s` is the excitation feature over the row's visible prefix,
+    /// anchored at the prefix's last time `t_anchor`; `last_k` is the most
+    /// recent visible event type (`K_MAX` for the BOS row).
+    #[allow(clippy::too_many_arguments)]
+    fn write_row(
+        &self,
+        s: f64,
+        t_anchor: f64,
+        last_k: usize,
+        log_w: &mut [f32],
+        mu: &mut [f32],
+        log_sigma: &mut [f32],
+        logits: &mut [f32],
+    ) {
+        // Saturating excitation feature: bounded, so intensities cannot run
+        // away however long the history grows.
+        let sat = s / (1.0 + 0.15 * s);
+        let load = (1.0 + self.excite * sat).ln();
+        // Slow inhomogeneity in absolute time (the Poisson flavour).
+        let season = 0.08 * (0.05 * t_anchor).sin();
+        let base = self.bias + self.enc_shift + season;
+
+        let w0 = 0.3 + 0.4 * (0.5 + 0.5 * (0.37 * sat + 0.21 * last_k as f64).sin());
+        log_w[0] = (w0.ln()) as f32;
+        log_w[1] = ((1.0 - w0).ln()) as f32;
+        mu[0] = (-1.2 + 0.1 * (0.53 * sat).sin() - 0.45 * load + base) as f32;
+        mu[1] = (0.3 + 0.05 * (0.29 * sat).cos() - 0.30 * load + base) as f32;
+        log_sigma[0] = -0.7;
+        log_sigma[1] = -0.3;
+
+        let pref = if last_k >= self.num_types { 0 } else { (last_k + 1) % self.num_types };
+        for (k, l) in logits.iter_mut().enumerate() {
+            *l = if k == pref {
+                self.type_amp as f32
+            } else if k < self.num_types {
+                0.3
+            } else {
+                0.0
+            };
+        }
+    }
+
+    /// Fill one batch slot's rows for `seq` (padding rows past the sequence
+    /// repeat the final state, so they stay valid distributions).
+    fn fill_slot(
+        &self,
+        seq: &SeqInput,
+        bucket: usize,
+        log_w: &mut [f32],
+        mu: &mut [f32],
+        log_sigma: &mut [f32],
+        logits: &mut [f32],
+    ) {
+        let n = seq.times.len();
+        // Hawkes-style recursion: s_r = Σ_{i<r} exp(-decay (t_anchor - t_i)),
+        // updated in O(1) as each event becomes visible.
+        let mut s = 0.0f64;
+        let mut t_anchor = seq.t0;
+        let mut last_k = K_MAX;
+        let real_rows = bucket.min(n + 1);
+        for row in 0..real_rows {
+            if row >= 1 {
+                let t = seq.times[row - 1];
+                let dt = (t - t_anchor).max(0.0);
+                s = s * (-self.decay * dt).exp() + 1.0;
+                t_anchor = t;
+                last_k = seq.types[row - 1] as usize;
+            }
+            let m0 = row * N_MIX;
+            let l0 = row * K_MAX;
+            self.write_row(
+                s,
+                t_anchor,
+                last_k,
+                &mut log_w[m0..m0 + N_MIX],
+                &mut mu[m0..m0 + N_MIX],
+                &mut log_sigma[m0..m0 + N_MIX],
+                &mut logits[l0..l0 + K_MAX],
+            );
+        }
+        // Padding rows are the final row frozen in place: copy, don't
+        // recompute the transcendental math per row.
+        let src_m = (real_rows - 1) * N_MIX;
+        let src_l = (real_rows - 1) * K_MAX;
+        for row in real_rows..bucket {
+            let m0 = row * N_MIX;
+            let l0 = row * K_MAX;
+            log_w.copy_within(src_m..src_m + N_MIX, m0);
+            mu.copy_within(src_m..src_m + N_MIX, m0);
+            log_sigma.copy_within(src_m..src_m + N_MIX, m0);
+            logits.copy_within(src_l..src_l + K_MAX, l0);
+        }
+    }
+}
+
+impl ModelBackend for NativeModel {
+    fn forward(&self, seqs: &[SeqInput]) -> Result<ForwardOut> {
+        assert!(!seqs.is_empty());
+        let max_len = seqs.iter().map(SeqInput::len_with_bos).max().unwrap();
+        let bucket = self.pick_bucket(max_len)?;
+        let batch = BATCHES
+            .iter()
+            .copied()
+            .find(|&b| b >= seqs.len())
+            .with_context(|| format!("no batch capacity ≥ {} (max {})", seqs.len(), 8))?;
+        self.calls.fetch_add(1, Ordering::Relaxed);
+
+        let mut log_w = vec![0f32; batch * bucket * N_MIX];
+        let mut mu = vec![0f32; batch * bucket * N_MIX];
+        let mut log_sigma = vec![0f32; batch * bucket * N_MIX];
+        let mut logits = vec![0f32; batch * bucket * K_MAX];
+        let empty = SeqInput::default();
+        // Real slots, plus ONE padding slot (the empty sequence); the
+        // remaining padding slots are copies of it (valid, never read).
+        let filled = batch.min(seqs.len() + 1);
+        for b in 0..filled {
+            let seq = seqs.get(b).unwrap_or(&empty);
+            let m0 = b * bucket * N_MIX;
+            let m1 = (b + 1) * bucket * N_MIX;
+            let l0 = b * bucket * K_MAX;
+            let l1 = (b + 1) * bucket * K_MAX;
+            self.fill_slot(
+                seq,
+                bucket,
+                &mut log_w[m0..m1],
+                &mut mu[m0..m1],
+                &mut log_sigma[m0..m1],
+                &mut logits[l0..l1],
+            );
+        }
+        let pad_m = seqs.len() * bucket * N_MIX..(seqs.len() + 1) * bucket * N_MIX;
+        let pad_l = seqs.len() * bucket * K_MAX..(seqs.len() + 1) * bucket * K_MAX;
+        for b in filled..batch {
+            log_w.copy_within(pad_m.clone(), b * bucket * N_MIX);
+            mu.copy_within(pad_m.clone(), b * bucket * N_MIX);
+            log_sigma.copy_within(pad_m.clone(), b * bucket * N_MIX);
+            logits.copy_within(pad_l.clone(), b * bucket * K_MAX);
+        }
+        Ok(ForwardOut::from_raw(batch, bucket, N_MIX, K_MAX, log_w, mu, log_sigma, logits))
+    }
+
+    fn max_bucket(&self) -> usize {
+        *BUCKETS.last().unwrap()
+    }
+
+    fn max_batch(&self) -> usize {
+        *BATCHES.last().unwrap()
+    }
+
+    fn pick_bucket(&self, len: usize) -> Result<usize> {
+        BUCKETS
+            .iter()
+            .copied()
+            .find(|&b| b >= len)
+            .with_context(|| format!("sequence length {len} exceeds max bucket"))
+    }
+
+    fn call_count(&self) -> usize {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    fn descriptor(&self) -> String {
+        format!("native:{}/{}/{}", self.dataset, self.encoder, self.size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(dataset: &str, size: &str) -> Box<dyn ModelBackend> {
+        NativeBackend::new().load_model(dataset, "thp", size).unwrap()
+    }
+
+    fn seq(times: &[f64], types: &[u32]) -> SeqInput {
+        SeqInput { t0: 0.0, times: times.to_vec(), types: types.to_vec() }
+    }
+
+    #[test]
+    fn registry_rejects_unknowns() {
+        let b = NativeBackend::new();
+        assert!(b.load_model("hawkes", "thp", "target").is_ok());
+        assert!(b.load_model("nope", "thp", "target").is_err());
+        assert!(b.load_model("hawkes", "rnn", "target").is_err());
+        assert!(b.load_model("hawkes", "thp", "huge").is_err());
+        assert!(b.num_types("nope").is_err());
+        assert_eq!(b.num_types("taxi_sim").unwrap(), 10);
+        assert_eq!(b.datasets().len(), 7);
+    }
+
+    #[test]
+    fn dataset_specs_parse_as_ground_truth() {
+        let b = NativeBackend::new();
+        for ds in b.datasets() {
+            let spec = b.dataset_spec(&ds).unwrap();
+            let gt = crate::processes::from_dataset_json(&spec)
+                .unwrap_or_else(|e| panic!("{ds}: {e:#}"));
+            assert_eq!(gt.num_types(), b.num_types(&ds).unwrap(), "{ds}");
+        }
+    }
+
+    #[test]
+    fn bucket_and_batch_selection() {
+        let m = model("hawkes", "target");
+        assert_eq!(m.pick_bucket(5).unwrap(), 64);
+        assert_eq!(m.pick_bucket(64).unwrap(), 64);
+        assert_eq!(m.pick_bucket(65).unwrap(), 128);
+        assert!(m.pick_bucket(513).is_err());
+        assert_eq!(m.max_bucket(), 512);
+        assert_eq!(m.max_batch(), 8);
+        let s = seq(&[0.5, 1.0], &[0, 0]);
+        assert_eq!(m.forward(&[s.clone()]).unwrap().batch, 1);
+        assert_eq!(m.forward(&[s.clone(), s.clone(), s]).unwrap().batch, 8);
+    }
+
+    #[test]
+    fn rows_are_valid_distributions() {
+        let m = model("multihawkes", "draft");
+        let out = m.forward(&[seq(&[0.5, 1.0, 2.5], &[0, 1, 0])]).unwrap();
+        for row in 0..out.bucket {
+            let mix = out.mixture(0, row);
+            let w_sum: f64 = mix.log_w.iter().map(|w| w.exp()).sum();
+            assert!((w_sum - 1.0).abs() < 1e-6, "row {row}: Σw={w_sum}");
+            assert!(mix.logpdf(1.0).is_finite());
+            let td = out.type_dist(0, row, 2);
+            assert!((td.probs.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn outputs_are_prefix_causal() {
+        // Row r of a longer sequence equals row r of its length-r prefix:
+        // the invariant TPP-SD's parallel verification relies on.
+        let m = model("taxi_sim", "target");
+        let full = seq(&[0.4, 0.9, 1.7, 2.0, 3.3], &[1, 4, 2, 0, 3]);
+        let out_full = m.forward(&[full.clone()]).unwrap();
+        for r in 0..=full.times.len() {
+            let prefix = seq(&full.times[..r], &full.types[..r]);
+            let out_pre = m.forward(&[prefix]).unwrap();
+            let a = out_full.mixture(0, r);
+            let b = out_pre.mixture(0, r);
+            assert_eq!(a, b, "row {r} diverges from its prefix");
+            let ta = out_full.type_dist(0, r, 10);
+            let tb = out_pre.type_dist(0, r, 10);
+            assert_eq!(ta.probs, tb.probs, "type row {r}");
+        }
+    }
+
+    #[test]
+    fn batched_rows_match_single_rows_exactly() {
+        let m = model("hawkes", "draft");
+        let seqs = vec![
+            seq(&[0.2], &[0]),
+            seq(&[0.3, 0.8, 1.1], &[0, 0, 0]),
+            seq(&[2.0, 2.2], &[0, 0]),
+        ];
+        let batch = m.forward(&seqs).unwrap();
+        for (b, s) in seqs.iter().enumerate() {
+            let single = m.forward(std::slice::from_ref(s)).unwrap();
+            let row = s.times.len();
+            assert_eq!(batch.mixture(b, row), single.mixture(0, row), "slot {b}");
+        }
+    }
+
+    #[test]
+    fn draft_diverges_from_target() {
+        let t = model("hawkes", "target");
+        let d = model("hawkes", "draft");
+        let s = seq(&[0.5, 1.0], &[0, 0]);
+        let mt = t.forward(std::slice::from_ref(&s)).unwrap().mixture(0, 2);
+        let md = d.forward(std::slice::from_ref(&s)).unwrap().mixture(0, 2);
+        assert!((mt.mu[0] - md.mu[0]).abs() > 0.05, "draft must diverge");
+        assert_eq!(t.call_count(), 1);
+    }
+}

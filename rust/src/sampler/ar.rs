@@ -5,7 +5,7 @@
 use anyhow::Result;
 
 use crate::events::Event;
-use crate::runtime::executor::Forward;
+use crate::runtime::Forward;
 use crate::util::rng::Rng;
 
 use super::context::Context;

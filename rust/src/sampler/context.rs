@@ -8,6 +8,7 @@
 use crate::events::Event;
 use crate::runtime::SeqInput;
 
+/// The rolling context window shared by AR and SD sampling.
 #[derive(Debug, Clone)]
 pub struct Context {
     /// time carried by the BOS row (start of the current window)
@@ -25,6 +26,8 @@ pub struct Context {
 }
 
 impl Context {
+    /// Empty window with `capacity` model positions, `margin` of which are
+    /// reserved for draft candidates.
     pub fn new(capacity: usize, margin: usize) -> Context {
         assert!(capacity >= 2 * (margin + 2), "capacity too small for margin");
         Context {
@@ -47,6 +50,7 @@ impl Context {
         self.window.len()
     }
 
+    /// True when no events are in the window.
     pub fn is_empty(&self) -> bool {
         self.window.is_empty()
     }

@@ -22,9 +22,13 @@ use std::time::Duration;
 /// forward-pass budgets — the quantities in Tables 1–4).
 #[derive(Debug, Clone, Default)]
 pub struct SampleStats {
+    /// events generated inside the window
     pub events: usize,
+    /// SD rounds (or AR iterations) executed
     pub rounds: usize,
+    /// forward passes of the target model
     pub target_forwards: usize,
+    /// forward passes of the draft model
     pub draft_forwards: usize,
     /// candidates proposed by the draft model
     pub drafted: usize,
@@ -36,6 +40,7 @@ pub struct SampleStats {
     pub bonus: usize,
     /// proposals consumed by Theorem-1 rejection loops
     pub adjust_proposals: usize,
+    /// wall-clock time of the run
     pub wall: Duration,
 }
 

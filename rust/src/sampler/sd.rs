@@ -16,12 +16,21 @@
 //! Rejection handling is the *strictly correct* variant (DESIGN.md §9):
 //! τ rejected ⇒ τ′ ~ g′ and k ~ f_T fresh; τ accepted but k rejected ⇒
 //! keep τ̂ and k′ ~ f′.
+//!
+//! RNG discipline (DESIGN.md §9.3): *proposal* draws (drafted candidates
+//! and the bonus event) consume the caller's `rng` in exactly the order AR
+//! sampling would, while accept/reject uniforms and adjusted-distribution
+//! redraws run on a stream derived via [`Rng::derive`]. Consequence:
+//! with `draft == target` every candidate is accepted (density ratios are
+//! exactly 1) and `sample_sd` reproduces `sample_ar`'s event stream
+//! bit-for-bit from the same seed — the degenerate-acceptance regression
+//! test in `rust/tests/native_backend.rs`.
 
 use anyhow::Result;
 
 use crate::events::Event;
 use crate::model::mixture::{sample_adjusted_interval, TypeDist};
-use crate::runtime::executor::Forward;
+use crate::runtime::Forward;
 use crate::util::rng::Rng;
 
 use super::ar::SampleCfg;
@@ -35,10 +44,18 @@ pub enum Gamma {
     Fixed(usize),
     /// extension (paper §6 future work): per-round adaptation from the
     /// rejection position — AIMD-style, clamped to [min, max]
-    Adaptive { init: usize, min: usize, max: usize },
+    Adaptive {
+        /// first round's draft length
+        init: usize,
+        /// lower clamp
+        min: usize,
+        /// upper clamp
+        max: usize,
+    },
 }
 
 impl Gamma {
+    /// The first round's draft length under this policy.
     pub fn initial(&self) -> usize {
         match *self {
             Gamma::Fixed(g) => g,
@@ -47,9 +64,12 @@ impl Gamma {
     }
 }
 
+/// Configuration of one TPP-SD run.
 #[derive(Debug, Clone)]
 pub struct SdCfg {
+    /// window/type/cap knobs shared with AR sampling
     pub sample: SampleCfg,
+    /// draft-length policy
     pub gamma: Gamma,
     /// cap for Theorem-1 rejection loops (g_T ≈ g_D degeneracy guard)
     pub max_adjust_tries: usize,
@@ -74,6 +94,9 @@ pub fn sample_sd<FT: Forward + ?Sized, FD: Forward + ?Sized>(
     rng: &mut Rng,
 ) -> Result<(Vec<Event>, SampleStats)> {
     let scfg = &cfg.sample;
+    // Decision stream: accept/reject uniforms and adjusted redraws, kept
+    // separate from the proposal stream (see the module docs).
+    let mut vrng = rng.derive(0xACCE_97);
     let mut gamma = cfg.gamma.initial().max(1);
     let cap = target.max_bucket().min(draft.max_bucket());
     let max_gamma = match cfg.gamma {
@@ -125,13 +148,13 @@ pub fn sample_sd<FT: Forward + ?Sized, FD: Forward + ?Sized>(
 
             // interval test: u < g_T(τ̂)/g_D(τ̂)
             let log_ratio = t_mix.logpdf(tau_hat) - d_mix[l].logpdf(tau_hat);
-            let tau_ok = rng.uniform().ln() < log_ratio;
+            let tau_ok = vrng.uniform().ln() < log_ratio;
             if !tau_ok {
                 // τ̂ rejected → τ′ ~ g′ (Theorem 1), k ~ f_T fresh.
                 let (tau2, tries) =
-                    sample_adjusted_interval(&t_mix, &d_mix[l], rng, cfg.max_adjust_tries);
+                    sample_adjusted_interval(&t_mix, &d_mix[l], &mut vrng, cfg.max_adjust_tries);
                 stats.adjust_proposals += tries;
-                let k2 = t_td.sample(rng) as u32;
+                let k2 = t_td.sample(&mut vrng) as u32;
                 let e = Event::new(prev + tau2, k2);
                 stats.resampled += 1;
                 rejected_at = Some(l);
@@ -143,11 +166,11 @@ pub fn sample_sd<FT: Forward + ?Sized, FD: Forward + ?Sized>(
             // type test: u < f_T(k̂)/f_D(k̂)
             let k_hat = cand[l].k as usize;
             let type_ok =
-                rng.uniform() * d_type[l].pmf(k_hat) < t_td.pmf(k_hat);
+                vrng.uniform() * d_type[l].pmf(k_hat) < t_td.pmf(k_hat);
             if !type_ok {
                 // k̂ rejected → keep τ̂, k′ ~ f′ = norm(max(0, f_T − f_D)).
                 let adj = TypeDist::adjusted(&t_td, &d_type[l]);
-                let k2 = adj.sample(rng) as u32;
+                let k2 = adj.sample(&mut vrng) as u32;
                 let e = Event::new(cand[l].t, k2);
                 stats.resampled += 1;
                 rejected_at = Some(l);

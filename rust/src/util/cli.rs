@@ -40,6 +40,7 @@ impl Args {
         out
     }
 
+    /// Parse the process arguments.
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
     }
@@ -51,6 +52,7 @@ impl Args {
         self
     }
 
+    /// Usage text from the registered option specs.
     pub fn usage(&self, prog: &str) -> String {
         let mut s = format!("usage: {prog} [options]\n");
         for (n, d, h) in &self.spec {
@@ -59,26 +61,32 @@ impl Args {
         s
     }
 
+    /// True when a bare flag (or valued option) was given.
     pub fn has(&self, flag: &str) -> bool {
         self.flags.iter().any(|f| f == flag) || self.opts.contains_key(flag)
     }
 
+    /// Raw option value, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.opts.get(key).map(|s| s.as_str())
     }
 
+    /// String option with a default.
     pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
+    /// Float option with a default.
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// `usize` option with a default.
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// `u64` option with a default.
     pub fn u64_or(&self, key: &str, default: u64) -> u64 {
         self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
@@ -91,6 +99,7 @@ impl Args {
         }
     }
 
+    /// Positional (non-`--`) arguments in order.
     pub fn positional(&self) -> &[String] {
         &self.positional
     }

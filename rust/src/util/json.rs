@@ -11,22 +11,39 @@ use std::fmt;
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// any JSON number (always stored as `f64`)
     Num(f64),
+    /// a string
     Str(String),
+    /// an array
     Arr(Vec<Json>),
+    /// an object (sorted keys — deterministic output)
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+/// Parse failure with the byte offset it occurred at.
+#[derive(Debug)]
 pub struct JsonError {
+    /// byte offset of the failure
     pub pos: usize,
+    /// what the parser expected
     pub msg: String,
 }
 
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
+
 impl Json {
+    /// Parse a complete JSON document.
     pub fn parse(s: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: s.as_bytes(), pos: 0 };
         p.ws();
@@ -39,33 +56,39 @@ impl Json {
     }
 
     // -- typed accessors ---------------------------------------------------
+    /// Object member lookup (`None` for non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
             _ => None,
         }
     }
+    /// The value as a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
             _ => None,
         }
     }
+    /// The value as a number, truncated to `usize`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
+    /// The value as a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The value as an array slice.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
             _ => None,
         }
     }
+    /// The value as an object map.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -80,12 +103,15 @@ impl Json {
         }
         Some(cur)
     }
+    /// Number at a dotted path.
     pub fn f64_at(&self, dotted: &str) -> Option<f64> {
         self.path(dotted).and_then(Json::as_f64)
     }
+    /// `usize` at a dotted path.
     pub fn usize_at(&self, dotted: &str) -> Option<usize> {
         self.path(dotted).and_then(Json::as_usize)
     }
+    /// String at a dotted path.
     pub fn str_at(&self, dotted: &str) -> Option<&str> {
         self.path(dotted).and_then(Json::as_str)
     }

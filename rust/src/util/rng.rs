@@ -39,6 +39,24 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
     }
 
+    /// Derive a decision stream from the current state **without advancing
+    /// this generator** (DESIGN.md §9): the speculative sampler routes its
+    /// accept/reject uniforms and adjusted-distribution redraws through a
+    /// derived stream so its *proposal* draws stay aligned with plain AR
+    /// sampling — with `draft == target` the two samplers then reproduce
+    /// identical event streams from the same seed. The derived seed is a
+    /// distinct avalanche of the state, so the streams are independent for
+    /// every statistical purpose of this crate.
+    pub fn derive(&self, tag: u64) -> Rng {
+        let mut sm = self.s[0]
+            ^ self.s[1].rotate_left(13)
+            ^ self.s[2].rotate_left(29)
+            ^ self.s[3].rotate_left(43)
+            ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        Rng::new(splitmix64(&mut sm))
+    }
+
+    /// Next raw 64-bit output of the generator.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
@@ -188,6 +206,25 @@ mod tests {
             seen[r.below(7)] = true;
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn derive_does_not_advance_and_differs_per_tag() {
+        let mut a = Rng::new(9);
+        let before: Vec<u64> = {
+            let mut c = a.clone();
+            (0..4).map(|_| c.next_u64()).collect()
+        };
+        let mut d1 = a.derive(1);
+        let mut d2 = a.derive(2);
+        // deriving consumed nothing from the parent stream
+        let after: Vec<u64> = (0..4).map(|_| a.next_u64()).collect();
+        assert_eq!(before, after);
+        // distinct tags give distinct streams, both different from parent
+        let x1: Vec<u64> = (0..4).map(|_| d1.next_u64()).collect();
+        let x2: Vec<u64> = (0..4).map(|_| d2.next_u64()).collect();
+        assert_ne!(x1, x2);
+        assert_ne!(x1, after);
     }
 
     #[test]

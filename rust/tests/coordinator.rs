@@ -1,28 +1,23 @@
 //! Coordinator tests: batcher invariants (no request lost / duplicated,
 //! results independent of batching), router reuse, and the TCP server
-//! round-trip. Skipped when artifacts are missing.
+//! round-trip — all running on the active backend (native by default, so
+//! no artifacts are required).
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use tpp_sd::coordinator::{Client, ExecutorHandle, Request, Router, SampleRequest, Server};
-use tpp_sd::runtime::executor::Forward;
-use tpp_sd::runtime::{ArtifactDir, ModelExecutor, SeqInput};
+use tpp_sd::runtime::{Backend, Forward, ModelBackend, SeqInput};
 use tpp_sd::util::rng::Rng;
 
-fn artifacts() -> Option<ArtifactDir> {
-    match ArtifactDir::discover() {
-        Ok(a) => Some(a),
-        Err(_) => {
-            eprintln!("NOTE: artifacts/ missing — run `make artifacts`; skipping");
-            None
-        }
-    }
+fn backend() -> Arc<dyn Backend> {
+    tpp_sd::runtime::discover_backend().expect("backend")
 }
 
 fn random_seq(rng: &mut Rng, max_n: usize) -> SeqInput {
     let n = 1 + rng.below(max_n);
-    let mut t = 0.0;
     let mut s = SeqInput::default();
+    let mut t = 0.0;
     for _ in 0..n {
         t += rng.exponential(3.0);
         s.times.push(t);
@@ -35,9 +30,9 @@ fn random_seq(rng: &mut Rng, max_n: usize) -> SeqInput {
 /// results (matched against the direct path), regardless of batching.
 #[test]
 fn batcher_preserves_per_request_results() {
-    let Some(art) = artifacts() else { return };
+    let b = backend();
     let handle = ExecutorHandle::spawn(
-        art.clone(),
+        b.clone(),
         "hawkes",
         "thp",
         "draft",
@@ -45,8 +40,7 @@ fn batcher_preserves_per_request_results() {
         Duration::from_millis(5),
     )
     .unwrap();
-    let client = tpp_sd::runtime::cpu_client().unwrap();
-    let direct = ModelExecutor::load(client, &art, "hawkes", "thp", "draft").unwrap();
+    let direct = b.load_model("hawkes", "thp", "draft").unwrap();
 
     let mut rng = Rng::new(42);
     let seqs: Vec<SeqInput> = (0..24).map(|_| random_seq(&mut rng, 40)).collect();
@@ -75,17 +69,16 @@ fn batcher_preserves_per_request_results() {
             .unwrap()
             .mixture(0, *row)
             .mu;
-        for (a, b) in mu.iter().zip(&want) {
-            assert!((a - b).abs() < 1e-4, "batched {a} vs direct {b}");
+        for (a, c) in mu.iter().zip(&want) {
+            assert!((a - c).abs() < 1e-4, "batched {a} vs direct {c}");
         }
     }
 }
 
 #[test]
 fn batcher_batches_under_concurrency() {
-    let Some(art) = artifacts() else { return };
     let handle = ExecutorHandle::spawn(
-        art,
+        backend(),
         "hawkes",
         "thp",
         "draft",
@@ -110,9 +103,21 @@ fn batcher_batches_under_concurrency() {
 }
 
 #[test]
+fn spawn_surfaces_load_errors() {
+    let err = ExecutorHandle::spawn(
+        backend(),
+        "no_such_dataset",
+        "thp",
+        "draft",
+        8,
+        Duration::from_millis(1),
+    );
+    assert!(err.is_err(), "unknown dataset must fail at spawn");
+}
+
+#[test]
 fn router_reuses_pairs_and_rejects_unknown() {
-    let Some(art) = artifacts() else { return };
-    let router = Router::new(art, 8, Duration::from_millis(1)).unwrap();
+    let router = Router::new(backend(), 8, Duration::from_millis(1)).unwrap();
     assert!(router.num_types("hawkes").unwrap() == 1);
     assert!(router.num_types("nope").is_err());
     let a = router.route("hawkes", "thp", "draft").unwrap();
@@ -124,8 +129,7 @@ fn router_reuses_pairs_and_rejects_unknown() {
 
 #[test]
 fn server_roundtrip_ar_and_sd() {
-    let Some(art) = artifacts() else { return };
-    let server = Server::bind(art, "127.0.0.1:0", 8, Duration::from_millis(1)).unwrap();
+    let server = Server::bind(backend(), "127.0.0.1:0", 8, Duration::from_millis(1)).unwrap();
     let addr = server.addr;
     std::thread::spawn(move || server.serve());
 

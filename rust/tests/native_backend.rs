@@ -1,0 +1,126 @@
+//! NativeBackend contract tests, including the degenerate-acceptance
+//! regression required by DESIGN.md §9.3: with `draft == target` every
+//! candidate passes the ratio tests exactly, so `sample_sd` must reproduce
+//! `sample_ar`'s event stream **bit-for-bit** from the same seed. The
+//! samplers are exercised through the `Forward` trait only — no concrete
+//! executor type appears below.
+
+use tpp_sd::runtime::{Backend, Forward, ModelBackend, NativeBackend, SeqInput};
+use tpp_sd::sampler::{sample_ar, sample_sd, Gamma, SampleCfg, SdCfg};
+use tpp_sd::util::rng::Rng;
+
+/// Generic over `Forward`: the degenerate-acceptance identity. `target`
+/// plays both roles, so all density ratios are exactly 1.
+fn assert_sd_reproduces_ar<F: Forward + ?Sized>(
+    target: &F,
+    num_types: usize,
+    gamma: usize,
+    t_end: f64,
+    seed: u64,
+) {
+    let cfg = SampleCfg { num_types, t_end, max_events: 4096 };
+    let mut rng_ar = Rng::new(seed);
+    let (ev_ar, st_ar) = sample_ar(target, &cfg, &mut rng_ar).unwrap();
+    // keep well inside the bucket so no window truncation desynchronizes
+    // the two samplers' model inputs
+    assert!(ev_ar.len() < 400, "sequence too long for the identity check");
+
+    let sd = SdCfg {
+        sample: cfg,
+        gamma: Gamma::Fixed(gamma),
+        ..Default::default()
+    };
+    let mut rng_sd = Rng::new(seed);
+    let (ev_sd, st_sd) = sample_sd(target, target, &sd, &mut rng_sd).unwrap();
+
+    assert_eq!(st_sd.resampled, 0, "identical models must never reject");
+    assert_eq!(
+        ev_ar, ev_sd,
+        "draft==target must reproduce AR exactly (γ={gamma}, seed={seed}: \
+         {} vs {} events)",
+        ev_ar.len(),
+        ev_sd.len()
+    );
+    assert_eq!(st_ar.events, st_sd.events);
+}
+
+#[test]
+fn degenerate_acceptance_reproduces_ar_exactly() {
+    let b = NativeBackend::new();
+    for (dataset, num_types) in [("hawkes", 1), ("multihawkes", 2), ("taxi_sim", 10)] {
+        let target = b.load_model(dataset, "thp", "target").unwrap();
+        for gamma in [1, 4, 10] {
+            for seed in [0, 7, 123] {
+                assert_sd_reproduces_ar(&target, num_types, gamma, 8.0, seed);
+            }
+        }
+    }
+}
+
+#[test]
+fn degenerate_acceptance_holds_for_adaptive_gamma() {
+    // Adaptive γ only grows on all-accept rounds; with draft == target the
+    // identity must survive the growing draft window too.
+    let b = NativeBackend::new();
+    let target = b.load_model("hawkes", "attnhp", "target").unwrap();
+    let cfg = SampleCfg { num_types: 1, t_end: 8.0, max_events: 4096 };
+    let mut rng_ar = Rng::new(42);
+    let (ev_ar, _) = sample_ar(&target, &cfg, &mut rng_ar).unwrap();
+    let sd = SdCfg {
+        sample: cfg,
+        gamma: Gamma::Adaptive { init: 2, min: 2, max: 12 },
+        ..Default::default()
+    };
+    let mut rng_sd = Rng::new(42);
+    let (ev_sd, st) = sample_sd(&target, &target, &sd, &mut rng_sd).unwrap();
+    assert_eq!(st.resampled, 0);
+    assert_eq!(ev_ar, ev_sd);
+}
+
+#[test]
+fn distinct_sizes_break_the_identity() {
+    // Sanity check that the test above is not vacuous: a real draft (bias
+    // ≠ 0) rejects sometimes, so the streams must differ.
+    let b = NativeBackend::new();
+    let target = b.load_model("hawkes", "thp", "target").unwrap();
+    let draft = b.load_model("hawkes", "thp", "draft").unwrap();
+    let cfg = SampleCfg { num_types: 1, t_end: 10.0, max_events: 4096 };
+    let mut rng_ar = Rng::new(5);
+    let (ev_ar, _) = sample_ar(&target, &cfg, &mut rng_ar).unwrap();
+    let sd = SdCfg { sample: cfg, gamma: Gamma::Fixed(6), ..Default::default() };
+    let mut rng_sd = Rng::new(5);
+    let (ev_sd, st) = sample_sd(&target, &draft, &sd, &mut rng_sd).unwrap();
+    assert!(st.resampled > 0, "divergent draft should reject at least once");
+    assert_ne!(ev_ar, ev_sd);
+}
+
+#[test]
+fn forward_is_deterministic_across_calls() {
+    let b = NativeBackend::new();
+    let m = b.load_model("taobao_sim", "sahp", "target").unwrap();
+    let seq = SeqInput { t0: 0.0, times: vec![0.3, 0.9, 1.4], types: vec![2, 0, 5] };
+    let a = m.forward(std::slice::from_ref(&seq)).unwrap();
+    let c = m.forward(std::slice::from_ref(&seq)).unwrap();
+    for row in 0..4 {
+        assert_eq!(a.mixture(0, row), c.mixture(0, row));
+    }
+    assert_eq!(m.call_count(), 2);
+}
+
+#[test]
+fn all_registry_models_sample_without_artifacts() {
+    // The whole (dataset × encoder) grid must be serviceable by the
+    // native backend out of the box.
+    let b = NativeBackend::new();
+    for ds in b.datasets() {
+        let k = b.num_types(&ds).unwrap();
+        let target = b.load_model(&ds, "thp", "target").unwrap();
+        let draft = b.load_model(&ds, "thp", "draft").unwrap();
+        let cfg = SampleCfg { num_types: k, t_end: 3.0, max_events: 512 };
+        let sd = SdCfg { sample: cfg, gamma: Gamma::Fixed(4), ..Default::default() };
+        let mut rng = Rng::new(1);
+        let (ev, _) = sample_sd(&target, &draft, &sd, &mut rng).unwrap();
+        assert!(tpp_sd::events::is_valid_sequence(&ev, 3.0), "{ds}");
+        assert!(ev.iter().all(|e| (e.k as usize) < k), "{ds}");
+    }
+}

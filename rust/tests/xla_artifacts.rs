@@ -1,0 +1,121 @@
+//! Artifact-backed tests of the PJRT executor — compiled only with
+//! `--features xla`, and skipped at runtime with a notice when the
+//! artifact directory is absent (fresh checkouts stay green). Requires the
+//! real `xla` crate to actually execute (the vendored stub type-checks but
+//! errors at load time).
+
+#![cfg(feature = "xla")]
+
+use std::sync::Arc;
+
+use tpp_sd::runtime::{ArtifactDir, Backend, ModelExecutor, SeqInput, XlaBackend};
+use tpp_sd::sampler::{sample_ar, sample_sd, Gamma, SampleCfg, SdCfg};
+use tpp_sd::util::rng::Rng;
+
+fn artifacts() -> Option<ArtifactDir> {
+    match ArtifactDir::discover() {
+        Ok(a) => Some(a),
+        Err(_) => {
+            eprintln!("NOTE: artifacts/ missing — run `make artifacts`; skipping");
+            None
+        }
+    }
+}
+
+#[test]
+fn load_all_dataset_encoder_pairs() {
+    let Some(art) = artifacts() else { return };
+    let ds = art.datasets_json().unwrap();
+    let client = tpp_sd::runtime::cpu_client().unwrap();
+    for dataset in ["poisson", "hawkes", "multihawkes", "taxi_sim"] {
+        for enc in ["thp", "sahp", "attnhp"] {
+            let ex = ModelExecutor::load(client.clone(), &art, dataset, enc, "draft")
+                .unwrap_or_else(|e| panic!("{dataset}/{enc}: {e:#}"));
+            assert_eq!(ex.encoder, enc);
+            assert!(ex.max_bucket() >= 256);
+        }
+    }
+    assert!(ds.usize_at("k_max").unwrap() >= 22);
+}
+
+#[test]
+fn forward_outputs_are_valid_distributions() {
+    let Some(art) = artifacts() else { return };
+    let client = tpp_sd::runtime::cpu_client().unwrap();
+    let ex = ModelExecutor::load(client, &art, "multihawkes", "thp", "draft").unwrap();
+    let seq = SeqInput {
+        t0: 0.0,
+        times: vec![0.5, 1.0, 2.5, 4.0],
+        types: vec![0, 1, 0, 1],
+    };
+    let out = ex.forward(&[seq]).unwrap();
+    for row in 0..5 {
+        let m = out.mixture(0, row);
+        let s: f64 = m.log_w.iter().map(|w| w.exp()).sum();
+        assert!((s - 1.0).abs() < 1e-4, "row {row}: Σw = {s}");
+        assert!(m.logpdf(1.0).is_finite());
+        assert!((0.0..=1.0).contains(&m.cdf(2.0)));
+        let td = out.type_dist(0, row, 2);
+        let s: f64 = td.probs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn xla_backend_serves_samplers_through_the_trait() {
+    let Some(art) = artifacts() else { return };
+    let backend: Arc<dyn Backend> = Arc::new(XlaBackend::new(art));
+    let target = backend.load_model("taxi_sim", "thp", "target").unwrap();
+    let draft = backend.load_model("taxi_sim", "thp", "draft").unwrap();
+    let cfg = SampleCfg { num_types: 10, t_end: 5.0, max_events: 512 };
+    let mut rng = Rng::new(11);
+    let (ev, st) = sample_ar(&target, &cfg, &mut rng).unwrap();
+    assert!(tpp_sd::events::is_valid_sequence(&ev, cfg.t_end));
+    assert_eq!(st.target_forwards, ev.len() + 1);
+
+    let sd_cfg = SdCfg { sample: cfg.clone(), gamma: Gamma::Fixed(5), ..Default::default() };
+    let (ev, st) = sample_sd(&target, &draft, &sd_cfg, &mut rng).unwrap();
+    assert!(tpp_sd::events::is_valid_sequence(&ev, cfg.t_end));
+    assert!(st.target_forwards < ev.len().max(2), "SD must use fewer target forwards");
+    assert!(st.acceptance_rate() > 0.0 && st.acceptance_rate() <= 1.0);
+}
+
+#[test]
+fn sd_matches_ar_interval_distribution_on_artifacts() {
+    let Some(art) = artifacts() else { return };
+    let backend: Arc<dyn Backend> = Arc::new(XlaBackend::new(art));
+    let target = backend.load_model("hawkes", "thp", "target").unwrap();
+    let draft = backend.load_model("hawkes", "thp", "draft").unwrap();
+
+    let collect = |method: &str, seed0: u64| -> Vec<f64> {
+        let cfg = SampleCfg { num_types: 1, t_end: 10.0, max_events: 8192 };
+        let mut taus = Vec::new();
+        for s in 0..24u64 {
+            let mut rng = Rng::new(seed0 + s);
+            let ev = match method {
+                "ar" => sample_ar(&target, &cfg, &mut rng).unwrap().0,
+                _ => {
+                    let sd = SdCfg {
+                        sample: cfg.clone(),
+                        gamma: Gamma::Fixed(10),
+                        ..Default::default()
+                    };
+                    sample_sd(&target, &draft, &sd, &mut rng).unwrap().0
+                }
+            };
+            taus.extend(tpp_sd::events::intervals(&ev));
+        }
+        taus
+    };
+
+    let ar = collect("ar", 100);
+    let sd = collect("sd", 900);
+    let mut sa = ar.clone();
+    sa.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let d = tpp_sd::metrics::ks::ks_statistic(&sd, |x| {
+        sa.partition_point(|&v| v <= x) as f64 / sa.len() as f64
+    });
+    let crit = 1.36
+        * ((sa.len() + sd.len()) as f64 / (sa.len() as f64 * sd.len() as f64)).sqrt();
+    assert!(d < 1.5 * crit, "KS {d:.4} crit {crit:.4}");
+}

@@ -1,0 +1,184 @@
+//! Offline shim of the [`anyhow`](https://docs.rs/anyhow) API surface this
+//! workspace uses: a dynamic [`Error`] carrying a human-readable context
+//! chain, the [`Context`] extension trait for `Result`/`Option`, the
+//! [`Result`] alias, and the [`anyhow!`]/[`bail!`] macros.
+//!
+//! The container registry is offline, so this crate is a path dependency
+//! (see the workspace `Cargo.toml`). It mirrors the upstream semantics the
+//! codebase relies on:
+//!
+//! * `{e}` displays the outermost context, `{e:#}` the full chain joined
+//!   with `": "` (upstream's alternate formatting);
+//! * any `std::error::Error + Send + Sync + 'static` converts via `?`,
+//!   capturing its `source()` chain;
+//! * `Error` itself deliberately does **not** implement `std::error::Error`
+//!   so the blanket `From` impl stays coherent (same trick as upstream).
+
+#![warn(missing_docs)]
+
+use std::fmt;
+
+/// A dynamic error: an ordered chain of context strings, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap the error with an outer context layer.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// Iterate the context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` with this crate's [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait attaching context to `Result` and `Option` values.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Wrap the error (or `None`) with a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{Context, Error, Result};
+
+    fn io_err() -> Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "disk on fire"))
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn run() -> Result<()> {
+            io_err()?;
+            Ok(())
+        }
+        let e = run().unwrap_err();
+        assert_eq!(format!("{e}"), "disk on fire");
+    }
+
+    #[test]
+    fn context_chains_and_alternate_format() {
+        let e = io_err()
+            .context("reading weights")
+            .unwrap_err()
+            .context("loading model");
+        assert_eq!(format!("{e}"), "loading model");
+        assert_eq!(format!("{e:#}"), "loading model: reading weights: disk on fire");
+        assert_eq!(e.chain().count(), 3);
+    }
+
+    #[test]
+    fn with_context_on_option() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn run(x: u32) -> Result<u32> {
+            if x == 0 {
+                bail!("zero not allowed (got {x})");
+            }
+            Err(anyhow!("always fails: {x}"))
+        }
+        assert_eq!(format!("{}", run(0).unwrap_err()), "zero not allowed (got 0)");
+        assert_eq!(format!("{}", run(3).unwrap_err()), "always fails: 3");
+    }
+
+    #[test]
+    fn debug_shows_cause_chain() {
+        let e = Error::msg("inner").context("outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("outer") && dbg.contains("Caused by") && dbg.contains("inner"));
+    }
+}

@@ -1,0 +1,215 @@
+//! API **stub** of the [`xla`](https://github.com/LaurentMazare/xla-rs)
+//! PJRT bindings — just enough surface for `tpp_sd::runtime::executor` to
+//! type-check under `--features xla` in an offline container without the
+//! system XLA/PJRT libraries.
+//!
+//! Every runtime entry point returns [`Error`] explaining that the stub is
+//! linked. To actually execute AOT artifacts, point the workspace `xla`
+//! dependency at the real crate (see `docs/adr/001-backend-abstraction.md`);
+//! the executor code compiles unchanged against either.
+
+#![warn(missing_docs)]
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the real crate's: all stub entry points return it.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// `Result` alias matching the real crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub<T>() -> Result<T> {
+    Err(Error(
+        "built against the vendored XLA API stub (vendor/xla-stub); \
+         point the workspace `xla` dependency at the real PJRT crate to \
+         execute AOT artifacts (docs/adr/001-backend-abstraction.md)"
+            .to_string(),
+    ))
+}
+
+/// Scalar types a [`Literal`] buffer can hold.
+pub trait ElementType: Copy {}
+impl ElementType for f32 {}
+impl ElementType for f64 {}
+impl ElementType for i32 {}
+impl ElementType for i64 {}
+impl ElementType for u32 {}
+
+/// Array shape of a literal (dimensions only in the stub).
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    /// Dimension extents.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Host-side tensor value.
+#[derive(Debug)]
+pub struct Literal(());
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: ElementType>(_data: &[T]) -> Literal {
+        Literal(())
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        stub()
+    }
+
+    /// Copy the buffer out as a typed host vector.
+    pub fn to_vec<T: ElementType>(&self) -> Result<Vec<T>> {
+        stub()
+    }
+
+    /// Destructure a tuple literal into its elements.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        stub()
+    }
+
+    /// The array shape, if the literal is an array.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        stub()
+    }
+}
+
+/// Deserialization support (`.npz` archives of named arrays).
+pub trait FromRawBytes: Sized {
+    /// Extra context threaded through deserialization (unit for literals).
+    type Context;
+
+    /// Read a `.npz` archive as `(name, value)` pairs.
+    fn read_npz<P: AsRef<Path>>(path: P, ctx: &Self::Context) -> Result<Vec<(String, Self)>>;
+}
+
+impl FromRawBytes for Literal {
+    type Context = ();
+
+    fn read_npz<P: AsRef<Path>>(_path: P, _ctx: &Self::Context) -> Result<Vec<(String, Literal)>> {
+        stub()
+    }
+}
+
+/// Device-resident buffer.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    /// Shape of the buffer on device.
+    pub fn on_device_shape(&self) -> Result<ArrayShape> {
+        stub()
+    }
+
+    /// Synchronously copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stub()
+    }
+}
+
+/// A compiled, loaded executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute with host literals as arguments.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub()
+    }
+
+    /// Execute with device buffers as arguments.
+    pub fn execute_b<B: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub()
+    }
+}
+
+/// A PJRT client owning one device.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// Open the CPU PJRT client.
+    pub fn cpu() -> Result<PjRtClient> {
+        stub()
+    }
+
+    /// Compile an [`XlaComputation`] to a loaded executable.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        stub()
+    }
+
+    /// Upload a host literal to the device.
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        stub()
+    }
+
+    /// Upload a typed host slice with the given dimensions to the device.
+    pub fn buffer_from_host_buffer<T: ElementType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        stub()
+    }
+}
+
+/// Parsed HLO module.
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    /// Parse an HLO module from its text dump.
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        stub()
+    }
+}
+
+/// An XLA computation ready for compilation.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_entry_points_error_with_pointer_to_adr() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("stub"));
+        let e = Literal::vec1(&[1.0f32]).to_vec::<f32>().unwrap_err();
+        assert!(e.to_string().contains("docs/adr/001"));
+    }
+}
