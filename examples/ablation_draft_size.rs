@@ -48,10 +48,10 @@ fn main() -> Result<()> {
         let num_types = backend.num_types(ds)?;
         for enc in &encoders {
             let target = backend.load_model(ds, enc, "target")?;
-            target.warmup_batch(1)?;
+            target.warmup()?;
             for dsize in &drafts {
                 let draft = backend.load_model(ds, enc, dsize)?;
-                draft.warmup_batch(1)?;
+                draft.warmup()?;
                 let cell =
                     synthetic_cell(&target, &draft, process.as_ref(), num_types, &cfg0)?;
                 println!(

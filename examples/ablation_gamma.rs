@@ -33,9 +33,9 @@ fn main() -> Result<()> {
     let process = from_dataset_json(&spec)?;
     let num_types = backend.num_types(&dataset)?;
     let target = backend.load_model(&dataset, &encoder, "target")?;
-    target.warmup_batch(1)?;
+    target.warmup()?;
     let draft = backend.load_model(&dataset, &encoder, "draft")?;
-    draft.warmup_batch(1)?;
+    draft.warmup()?;
 
     println!(
         "=== Fig 3/6: draft-length sweep ({dataset}, {encoder}, backend={}, {} seeds) ===",

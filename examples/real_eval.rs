@@ -1,7 +1,8 @@
 //! **Table 2** (+ Figure 5 histogram data): TPP-SD vs AR consistency on the
 //! four simulated real-world datasets (Taobao/Amazon/Taxi/StackOverflow
 //! stand-ins, DESIGN.md §3) across the three encoders, including the paper's
-//! AR-vs-AR stochasticity baseline.
+//! AR-vs-AR stochasticity baseline. Each seed's `--n-seq` sequences run in
+//! lockstep on the fleet engine (DESIGN.md §11).
 //!
 //!     cargo run --release --example real_eval -- \
 //!         [--t-end 50] [--n-seq 2] [--seeds 0,1,2] [--gamma 10]
@@ -55,9 +56,9 @@ fn main() -> Result<()> {
         let num_types = backend.num_types(ds)?;
         for enc in &encoders {
             let target = backend.load_model(ds, enc, "target")?;
-            target.warmup_batch(1)?;
+            target.warmup()?;
             let draft = backend.load_model(ds, enc, "draft")?;
-            draft.warmup_batch(1)?;
+            draft.warmup()?;
             let cell = real_cell(&target, &draft, process.as_ref(), num_types, &cfg)?;
             println!(
                 "{:<18} {:<7} | {:>8.3} {:>8.3} | {:>7.3} {:>7.3} | {:>7.3} {:>7.3} | {:>7.2}s {:>7.2}s | {:>6.2}x {:>5.2}",

@@ -1,5 +1,7 @@
 //! **Table 1** (+ the data behind Figures 2/4): TPP-SD vs AR sampling on
 //! the three synthetic datasets across the three Transformer encoders.
+//! Each seed's `--n-seq` sequences run in lockstep on the fleet engine
+//! (DESIGN.md §11), so the wall-time columns measure batched throughput.
 //!
 //!     cargo run --release --example synthetic_eval -- \
 //!         [--t-end 100] [--n-seq 3] [--seeds 0,1,2] [--gamma 10]
@@ -50,9 +52,9 @@ fn main() -> Result<()> {
         let num_types = backend.num_types(ds)?;
         for enc in &encoders {
             let target = backend.load_model(ds, enc, "target")?;
-            target.warmup_batch(1)?;
+            target.warmup()?;
             let draft = backend.load_model(ds, enc, "draft")?;
-            draft.warmup_batch(1)?;
+            draft.warmup()?;
             let cell = synthetic_cell(&target, &draft, process.as_ref(), num_types, &cfg)?;
             println!(
                 "{:<13} {:<7} | {:>8.3} {:>8.3} | {:>7.3} {:>7.3} {:>7.3} | {:>7.2}s {:>7.2}s | {:>6.2}x {:>5.2}",

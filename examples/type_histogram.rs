@@ -44,9 +44,9 @@ fn main() -> Result<()> {
         let num_types = backend.num_types(ds)?;
         for enc in &encoders {
             let target = backend.load_model(ds, enc, "target")?;
-            target.warmup_batch(1)?;
+            target.warmup()?;
             let draft = backend.load_model(ds, enc, "draft")?;
-            draft.warmup_batch(1)?;
+            draft.warmup()?;
             let cell = real_cell(&target, &draft, process.as_ref(), num_types, &cfg)?;
             let path = format!("{out_dir}/types_{ds}_{enc}.csv");
             let mut f = std::fs::File::create(&path)?;

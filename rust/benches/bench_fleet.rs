@@ -1,0 +1,130 @@
+//! Bench: fleet engine vs sequential sampling — does driving N sequences
+//! in lockstep through batched forwards (DESIGN.md §11) beat running the
+//! same N sequences one after another?
+//!
+//! Measures events/sec of fleet(N) vs N× sequential for both AR and
+//! TPP-SD (identical events by construction — the fleet is bit-for-bit
+//! the sequential runs, so the comparison is pure wall-clock), and writes
+//! a `BENCH_sampling.json` snapshot so the perf trajectory is recorded
+//! across PRs.
+//!
+//!     cargo bench --bench bench_fleet [-- --dataset hawkes --encoder attnhp
+//!                                        --gamma 10 --t-end 20 --n 8
+//!                                        --reps 3 --out BENCH_sampling.json]
+
+use anyhow::Result;
+use tpp_sd::runtime::{Backend, ModelBackend};
+use tpp_sd::sampler::{
+    fleet_seeds, sample_ar, sample_ar_fleet, sample_sd, sample_sd_fleet, Gamma, SampleCfg, SdCfg,
+};
+use tpp_sd::util::cli::Args;
+use tpp_sd::util::json::{obj, Json};
+use tpp_sd::util::rng::Rng;
+
+/// Default snapshot path: the workspace root, independent of the cwd
+/// cargo runs the bench with.
+const DEFAULT_OUT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sampling.json");
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let dataset = args.str_or("dataset", "hawkes").to_string();
+    let encoder = args.str_or("encoder", "attnhp").to_string();
+    let gamma = args.usize_or("gamma", 10);
+    let t_end = args.f64_or("t-end", 20.0);
+    let n = args.usize_or("n", 8).max(1);
+    let reps = args.usize_or("reps", 3).max(1);
+    let out_path = args.str_or("out", DEFAULT_OUT).to_string();
+
+    let backend = tpp_sd::runtime::backend_from_arg(args.get("backend"))?;
+    let num_types = backend.num_types(&dataset)?;
+    let target = backend.load_model(&dataset, &encoder, "target")?;
+    let draft = backend.load_model(&dataset, &encoder, "draft")?;
+    target.warmup()?;
+    draft.warmup()?;
+
+    let cfg = SampleCfg { num_types, t_end, max_events: 16 * 1024 };
+    let sd_cfg = SdCfg { sample: cfg.clone(), gamma: Gamma::Fixed(gamma), ..Default::default() };
+    println!(
+        "== fleet(N={n}) vs {n}× sequential ({dataset}/{encoder}, backend={}, γ={gamma}, T={t_end}, {reps} reps) ==",
+        backend.name()
+    );
+
+    // --- AR ---
+    let seeds = fleet_seeds(1, n);
+    let (mut t_seq, mut t_fleet, mut events) = (0.0f64, 0.0f64, 0usize);
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        let mut ev_seq = 0usize;
+        for &s in &seeds {
+            let mut rng = Rng::new(s);
+            ev_seq += sample_ar(&target, &cfg, &mut rng)?.0.len();
+        }
+        t_seq += t0.elapsed().as_secs_f64();
+        let t0 = std::time::Instant::now();
+        let (runs, _) = sample_ar_fleet(&target, &cfg, &seeds)?;
+        t_fleet += t0.elapsed().as_secs_f64();
+        let ev_fleet: usize = runs.iter().map(|(ev, _)| ev.len()).sum();
+        assert_eq!(ev_seq, ev_fleet, "fleet must be bit-for-bit the sequential runs");
+        events += ev_fleet;
+    }
+    let ar_seq_eps = events as f64 / t_seq.max(1e-12);
+    let ar_fleet_eps = events as f64 / t_fleet.max(1e-12);
+    println!(
+        "AR     : sequential {ar_seq_eps:10.0} ev/s | fleet {ar_fleet_eps:10.0} ev/s | {:.2}x",
+        ar_fleet_eps / ar_seq_eps
+    );
+
+    // --- TPP-SD ---
+    let (mut t_seq, mut t_fleet, mut events) = (0.0f64, 0.0f64, 0usize);
+    let mut fleet_stats = tpp_sd::sampler::FleetStats::default();
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        let mut ev_seq = 0usize;
+        for &s in &seeds {
+            let mut rng = Rng::new(s);
+            ev_seq += sample_sd(&target, &draft, &sd_cfg, &mut rng)?.0.len();
+        }
+        t_seq += t0.elapsed().as_secs_f64();
+        let t0 = std::time::Instant::now();
+        let (runs, fs) = sample_sd_fleet(&target, &draft, &sd_cfg, &seeds)?;
+        t_fleet += t0.elapsed().as_secs_f64();
+        let ev_fleet: usize = runs.iter().map(|(ev, _)| ev.len()).sum();
+        assert_eq!(ev_seq, ev_fleet, "fleet must be bit-for-bit the sequential runs");
+        events += ev_fleet;
+        fleet_stats = fs;
+    }
+    let sd_seq_eps = events as f64 / t_seq.max(1e-12);
+    let sd_fleet_eps = events as f64 / t_fleet.max(1e-12);
+    println!(
+        "TPP-SD : sequential {sd_seq_eps:10.0} ev/s | fleet {sd_fleet_eps:10.0} ev/s | {:.2}x",
+        sd_fleet_eps / sd_seq_eps
+    );
+    println!(
+        "fleet occupancy: draft {:.2}, target {:.2} (of {n})",
+        fleet_stats.draft_occupancy(),
+        fleet_stats.target_occupancy()
+    );
+
+    // --- snapshot ---
+    let snapshot = obj(vec![
+        ("bench", Json::Str("bench_fleet".into())),
+        ("backend", Json::Str(backend.name().into())),
+        ("dataset", Json::Str(dataset.clone())),
+        ("encoder", Json::Str(encoder.clone())),
+        ("gamma", Json::Num(gamma as f64)),
+        ("t_end", Json::Num(t_end)),
+        ("n", Json::Num(n as f64)),
+        ("reps", Json::Num(reps as f64)),
+        ("ar_seq_events_per_s", Json::Num(ar_seq_eps)),
+        ("ar_fleet_events_per_s", Json::Num(ar_fleet_eps)),
+        ("ar_fleet_speedup", Json::Num(ar_fleet_eps / ar_seq_eps)),
+        ("sd_seq_events_per_s", Json::Num(sd_seq_eps)),
+        ("sd_fleet_events_per_s", Json::Num(sd_fleet_eps)),
+        ("sd_fleet_speedup", Json::Num(sd_fleet_eps / sd_seq_eps)),
+        ("draft_occupancy", Json::Num(fleet_stats.draft_occupancy())),
+        ("target_occupancy", Json::Num(fleet_stats.target_occupancy())),
+    ]);
+    std::fs::write(&out_path, format!("{snapshot}\n"))?;
+    println!("snapshot written to {out_path}");
+    Ok(())
+}

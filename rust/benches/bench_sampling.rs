@@ -1,12 +1,17 @@
 //! Bench: end-to-end sampling wall-time, AR vs TPP-SD — the Table-1/2
-//! headline measurement, reduced to one (dataset × encoder) pair per run.
+//! headline measurement, reduced to one (dataset × encoder) pair per run —
+//! plus the fleet engine at the same event budget (`--parallel` sequences
+//! in lockstep, DESIGN.md §11).
 //!
 //!     cargo bench --bench bench_sampling [-- --dataset hawkes --encoder attnhp
-//!                                           --gamma 10 --t-end 20 --runs 3]
+//!                                           --gamma 10 --t-end 20 --runs 3
+//!                                           --parallel 8]
 
 use anyhow::Result;
 use tpp_sd::runtime::{Backend, ModelBackend};
-use tpp_sd::sampler::{sample_ar, sample_sd, Gamma, SampleCfg, SdCfg};
+use tpp_sd::sampler::{
+    fleet_seeds, sample_ar, sample_sd, sample_sd_fleet, Gamma, SampleCfg, SdCfg,
+};
 use tpp_sd::util::cli::Args;
 use tpp_sd::util::rng::Rng;
 
@@ -17,6 +22,7 @@ fn main() -> Result<()> {
     let gamma = args.usize_or("gamma", 10);
     let t_end = args.f64_or("t-end", 20.0);
     let runs = args.usize_or("runs", 3);
+    let parallel = args.usize_or("parallel", 8).max(1);
 
     let backend = tpp_sd::runtime::backend_from_arg(args.get("backend"))?;
     let num_types = backend.num_types(&dataset)?;
@@ -61,5 +67,24 @@ fn main() -> Result<()> {
         alpha / runs as f64
     );
     println!("speedup S_AR/SD = {:.2}x", per_ar / per_sd);
+
+    // --- fleet engine: the same SD workload, `parallel` sequences per call
+    let sd_cfg = SdCfg { sample: cfg, gamma: Gamma::Fixed(gamma), ..Default::default() };
+    let (mut t_fleet, mut ev_fleet) = (0.0, 0usize);
+    for seed in 0..runs as u64 {
+        let t0 = std::time::Instant::now();
+        let (fleet_runs, _) =
+            sample_sd_fleet(&target, &draft, &sd_cfg, &fleet_seeds(seed + 1000, parallel))?;
+        t_fleet += t0.elapsed().as_secs_f64();
+        ev_fleet += fleet_runs.iter().map(|(ev, _)| ev.len()).sum::<usize>();
+    }
+    let per_fleet = t_fleet / ev_fleet.max(1) as f64;
+    println!(
+        "TPP-SD fleet(N={parallel}): {:8.2}ms/event ({} events, {:.2}s total)",
+        per_fleet * 1e3,
+        ev_fleet,
+        t_fleet
+    );
+    println!("fleet speedup vs sequential SD = {:.2}x", per_sd / per_fleet);
     Ok(())
 }

@@ -4,14 +4,24 @@
 //! (and the KS series of Figures 2/4); `real_cell` one cell of **Table 2**
 //! (and the type histograms of Figure 5). The γ- and draft-size ablations
 //! (Figure 3/6, Table 3/4) reuse the same runners with different knobs.
+//!
+//! Since the fleet-engine refactor (DESIGN.md §11) each seed's `n_seq`
+//! sequences run in lockstep on [`crate::sampler::engine`] — per-sequence
+//! seeds are derived from the cell seed, so results stay deterministic —
+//! and the reported wall times are the *fleet* wall times, i.e. the
+//! batched-throughput comparison a serving host actually sees.
+
+use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::events::Event;
 use crate::metrics::{delta_l, emd_labels, ks_vs_exp1, model_loglik, wasserstein_1d};
 use crate::processes::GroundTruth;
-use crate::runtime::Forward;
-use crate::sampler::{sample_ar, sample_sd, Gamma, SampleCfg, SampleStats, SdCfg};
+use crate::runtime::{BatchForward, Forward};
+use crate::sampler::{
+    fleet_seeds, sample_ar_fleet, sample_sd_fleet, Gamma, SampleCfg, SampleStats, SdCfg,
+};
 use crate::util::rng::Rng;
 
 /// Knobs shared by the cell runners (paper defaults in brackets).
@@ -104,8 +114,8 @@ pub fn synthetic_cell<FT, FD>(
     cfg: &EvalCfg,
 ) -> Result<SyntheticCell>
 where
-    FT: Forward + ?Sized,
-    FD: Forward + ?Sized,
+    FT: BatchForward + ?Sized,
+    FD: BatchForward + ?Sized,
 {
     let scfg = SampleCfg { num_types, t_end: cfg.t_end, max_events: 16 * 1024 };
     let mut cell = SyntheticCell::default();
@@ -117,33 +127,40 @@ where
     let (mut t_ar, mut t_sd) = (0.0, 0.0);
 
     for &seed in &cfg.seeds {
-        let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9).wrapping_add(1));
-        for i in 0..cfg.n_seq {
-            // --- AR ---
-            let (ev, st) = sample_ar(target, &scfg, &mut rng)?;
-            t_ar += st.wall.as_secs_f64();
+        let base = seed.wrapping_mul(0x9E37_79B9).wrapping_add(1);
+        // --- AR: the seed's n_seq sequences in one fleet ---
+        let t0 = Instant::now();
+        let (ar_runs, _) = sample_ar_fleet(target, &scfg, &fleet_seeds(base, cfg.n_seq))?;
+        t_ar += t0.elapsed().as_secs_f64();
+        for (ev, _) in &ar_runs {
             if !ev.is_empty() {
-                let lgt = process.loglik(&ev, cfg.t_end);
-                let lm = model_loglik(target, &ev, num_types, cfg.t_end)?;
+                let lgt = process.loglik(ev, cfg.t_end);
+                let lm = model_loglik(target, ev, num_types, cfg.t_end)?;
                 dl_ar.push(delta_l(lgt, lm, ev.len()));
-                z_ar.extend(process.rescale(&ev));
+                z_ar.extend(process.rescale(ev));
             }
-            // --- SD ---
-            let sd_cfg = SdCfg {
-                sample: scfg.clone(),
-                gamma: cfg.gamma_policy(),
-                ..Default::default()
-            };
-            let (ev, st) = sample_sd(target, draft, &sd_cfg, &mut rng)?;
-            t_sd += st.wall.as_secs_f64();
-            sd_stats.merge(&st);
+        }
+        // --- SD: same, on an independent derived seed stream ---
+        let sd_cfg = SdCfg {
+            sample: scfg.clone(),
+            gamma: cfg.gamma_policy(),
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let (sd_runs, _) =
+            sample_sd_fleet(target, draft, &sd_cfg, &fleet_seeds(base ^ 0x5D5D_5D5D, cfg.n_seq))?;
+        t_sd += t0.elapsed().as_secs_f64();
+        for (ev, st) in &sd_runs {
+            sd_stats.merge(st);
             if !ev.is_empty() {
-                let lgt = process.loglik(&ev, cfg.t_end);
-                let lm = model_loglik(target, &ev, num_types, cfg.t_end)?;
+                let lgt = process.loglik(ev, cfg.t_end);
+                let lm = model_loglik(target, ev, num_types, cfg.t_end)?;
                 dl_sd.push(delta_l(lgt, lm, ev.len()));
-                z_sd.extend(process.rescale(&ev));
+                z_sd.extend(process.rescale(ev));
             }
-            // --- ground truth (thinning) for the KS reference series ---
+        }
+        // --- ground truth (thinning) for the KS reference series ---
+        for i in 0..cfg.n_seq {
             let mut gt_rng = Rng::new(seed * 1000 + i as u64 + 7);
             let gt = process.simulate(&mut gt_rng, cfg.t_end);
             z_gt.extend(process.rescale(&gt));
@@ -210,8 +227,8 @@ pub fn real_cell<FT, FD>(
     cfg: &EvalCfg,
 ) -> Result<RealCell>
 where
-    FT: Forward + ?Sized,
-    FD: Forward + ?Sized,
+    FT: BatchForward + ?Sized,
+    FD: BatchForward + ?Sized,
 {
     let scfg = SampleCfg { num_types, t_end: cfg.t_end, max_events: 16 * 1024 };
     let mut cell = RealCell::default();
@@ -222,25 +239,37 @@ where
     let mut types_sd: Vec<u32> = Vec::new();
 
     for &seed in &cfg.seeds {
-        let mut rng = Rng::new(seed.wrapping_mul(0xA5A5_5A5A).wrapping_add(3));
-        for _ in 0..cfg.n_seq {
-            let (ev_ar, st_ar) = sample_ar(target, &scfg, &mut rng)?;
-            let (ev_ar2, _) = sample_ar(target, &scfg, &mut rng)?;
-            let sd_cfg = SdCfg {
-                sample: scfg.clone(),
-                gamma: cfg.gamma_policy(),
-                ..Default::default()
-            };
-            let (ev_sd, st_sd) = sample_sd(target, draft, &sd_cfg, &mut rng)?;
-            t_ar += st_ar.wall.as_secs_f64();
-            t_sd += st_sd.wall.as_secs_f64();
-            sd_stats.merge(&st_sd);
+        let base = seed.wrapping_mul(0xA5A5_5A5A).wrapping_add(3);
+        // Three fleets per seed on independent derived seed streams: the
+        // AR column, the AR-vs-AR stochasticity baseline, and SD.
+        let t0 = Instant::now();
+        let (ar_runs, _) = sample_ar_fleet(target, &scfg, &fleet_seeds(base, cfg.n_seq))?;
+        t_ar += t0.elapsed().as_secs_f64();
+        let (ar2_runs, _) =
+            sample_ar_fleet(target, &scfg, &fleet_seeds(base ^ 0xA2A2_A2A2, cfg.n_seq))?;
+        let sd_cfg = SdCfg {
+            sample: scfg.clone(),
+            gamma: cfg.gamma_policy(),
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let (sd_runs, _) =
+            sample_sd_fleet(target, draft, &sd_cfg, &fleet_seeds(base ^ 0x5D5D_5D5D, cfg.n_seq))?;
+        t_sd += t0.elapsed().as_secs_f64();
+        for ((ev_ar, _), ((ev_ar2, _), (ev_sd, st_sd))) in
+            ar_runs.iter().zip(ar2_runs.iter().zip(sd_runs.iter()))
+        {
+            sd_stats.merge(st_sd);
             if !ev_ar.is_empty() && !ev_sd.is_empty() && !ev_ar2.is_empty() {
-                let l_ar = model_loglik(target, &ev_ar, num_types, cfg.t_end)?;
-                let l_ar2 = model_loglik(target, &ev_ar2, num_types, cfg.t_end)?;
-                let l_sd = model_loglik(target, &ev_sd, num_types, cfg.t_end)?;
+                let l_ar = model_loglik(target, ev_ar, num_types, cfg.t_end)?;
+                let l_ar2 = model_loglik(target, ev_ar2, num_types, cfg.t_end)?;
+                let l_sd = model_loglik(target, ev_sd, num_types, cfg.t_end)?;
                 let n = ev_ar.len().min(ev_sd.len());
-                dl.push(delta_l(l_ar / ev_ar.len() as f64 * n as f64, l_sd / ev_sd.len() as f64 * n as f64, n));
+                dl.push(delta_l(
+                    l_ar / ev_ar.len() as f64 * n as f64,
+                    l_sd / ev_sd.len() as f64 * n as f64,
+                    n,
+                ));
                 dl_base.push(delta_l(
                     l_ar / ev_ar.len() as f64 * n as f64,
                     l_ar2 / ev_ar2.len() as f64 * n as f64,

@@ -11,6 +11,11 @@
 //! dynamic-batching idea vLLM's router applies to token steps,
 //! transplanted to TPP forward passes.
 //!
+//! The handle is both a [`Forward`] (single-sequence path) and a
+//! [`BatchForward`]: the fleet engine enqueues a whole wave of sequences
+//! at once, which the executor thread coalesces into full batches without
+//! waiting out the batch window.
+//!
 //! Invariants (property-tested in `rust/tests/coordinator.rs`):
 //!   * every request gets exactly one reply (no loss, no duplication);
 //!   * replies carry the requester's own sequence results regardless of
@@ -18,22 +23,24 @@
 //!   * numerical results are identical to the direct path (same forward).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::runtime::{Backend, Forward, ModelBackend, SeqInput, SlotOut};
+use crate::runtime::{Backend, BatchForward, Forward, ModelBackend, SeqInput, SlotOut};
 
 /// Aggregate counters exposed by an executor thread.
 #[derive(Debug, Default)]
 pub struct BatcherStats {
-    /// total forward requests received
+    /// total forward requests enqueued (counted at submit time, so it is
+    /// exact even while requests are still waiting in the channel)
     pub requests: AtomicUsize,
     /// batched forward calls issued
     pub batches: AtomicUsize,
-    /// Σ batch-size — occupancy = batched_requests / batches
+    /// Σ batch-size over issued batches — occupancy = batched_requests /
+    /// batches; trails `requests` by whatever is still queued
     pub batched_requests: AtomicUsize,
     /// largest batch coalesced so far
     pub max_batch_seen: AtomicUsize,
@@ -56,11 +63,14 @@ struct Request {
 }
 
 /// Cloneable, `Send` handle to a model executor thread. Implements
-/// [`Forward`], so samplers run unchanged on the serving path.
+/// [`Forward`] and [`BatchForward`], so both the blocking samplers and the
+/// fleet engine run unchanged on the serving path.
 #[derive(Clone)]
 pub struct ExecutorHandle {
     tx: SyncSender<Request>,
     max_bucket: usize,
+    /// batch capacity the executor thread coalesces to
+    max_batch: usize,
     /// shared batching counters
     pub stats: Arc<BatcherStats>,
     /// `dataset/encoder/size` tag for logs
@@ -85,7 +95,7 @@ impl ExecutorHandle {
         let (tx, rx) = sync_channel::<Request>(1024);
         let stats = Arc::new(BatcherStats::default());
         let stats2 = stats.clone();
-        let (ready_tx, ready_rx) = sync_channel::<Result<usize>>(1);
+        let (ready_tx, ready_rx) = sync_channel::<Result<(usize, usize)>>(1);
         let (ds, enc, sz) = (dataset.to_string(), encoder.to_string(), size.to_string());
         let name = format!("{ds}/{enc}/{sz}");
         std::thread::Builder::new()
@@ -94,7 +104,8 @@ impl ExecutorHandle {
                 // The model is created on this thread and never leaves it.
                 let exec = match backend.load_model(&ds, &enc, &sz) {
                     Ok(e) => {
-                        let _ = ready_tx.send(Ok(e.max_bucket()));
+                        let cap = e.max_batch().min(max_batch).max(1);
+                        let _ = ready_tx.send(Ok((e.max_bucket(), cap)));
                         e
                     }
                     Err(e) => {
@@ -105,10 +116,20 @@ impl ExecutorHandle {
                 run_loop(exec, rx, stats2, max_batch, batch_window);
             })
             .expect("spawn executor thread");
-        let max_bucket = ready_rx
+        let (max_bucket, max_batch) = ready_rx
             .recv()
             .map_err(|_| anyhow!("executor thread died during load"))??;
-        Ok(ExecutorHandle { tx, max_bucket, stats, name })
+        Ok(ExecutorHandle { tx, max_bucket, max_batch, stats, name })
+    }
+
+    /// Enqueue one request, counting it, and hand back the reply channel.
+    fn submit(&self, seq: SeqInput) -> Result<Receiver<Result<SlotOut>>> {
+        let (reply, rx) = sync_channel(1);
+        self.tx
+            .send(Request { seq, reply })
+            .map_err(|_| anyhow!("executor '{}' stopped", self.name))?;
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        Ok(rx)
     }
 }
 
@@ -122,50 +143,88 @@ fn run_loop(
     let cap = exec.max_batch().min(max_batch).max(1);
     while let Ok(first) = rx.recv() {
         let mut pending = vec![first];
+        let mut disconnected = false;
         let deadline = Instant::now() + batch_window;
         while pending.len() < cap {
-            let now = Instant::now();
-            let wait = deadline.saturating_duration_since(now);
-            match if wait.is_zero() { rx.try_recv().map_err(|_| RecvTimeoutError::Timeout) } else { rx.recv_timeout(wait) } {
+            let wait = deadline.saturating_duration_since(Instant::now());
+            let next = if wait.is_zero() {
+                rx.try_recv().map_err(|e| match e {
+                    TryRecvError::Empty => RecvTimeoutError::Timeout,
+                    TryRecvError::Disconnected => RecvTimeoutError::Disconnected,
+                })
+            } else {
+                rx.recv_timeout(wait)
+            };
+            match next {
                 Ok(r) => pending.push(r),
-                Err(_) => break,
+                Err(RecvTimeoutError::Timeout) => break,
+                // All senders gone: serve what we already hold, then stop —
+                // conflating this with Timeout would silently drain the
+                // loop one empty iteration later.
+                Err(RecvTimeoutError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
             }
         }
-        stats.requests.fetch_add(pending.len(), Ordering::Relaxed);
         stats.batches.fetch_add(1, Ordering::Relaxed);
         stats.batched_requests.fetch_add(pending.len(), Ordering::Relaxed);
         stats.max_batch_seen.fetch_max(pending.len(), Ordering::Relaxed);
 
-        let seqs: Vec<SeqInput> = pending.iter().map(|r| r.seq.clone()).collect();
+        // Move the inputs out of the requests — no per-batch clones.
+        let (seqs, replies): (Vec<SeqInput>, Vec<SyncSender<Result<SlotOut>>>) =
+            pending.into_iter().map(|r| (r.seq, r.reply)).unzip();
         match exec.forward(&seqs) {
             Ok(out) => {
                 let out = Arc::new(out);
-                for (b, req) in pending.into_iter().enumerate() {
-                    let _ = req.reply.send(Ok(SlotOut::new(out.clone(), b)));
+                for (b, reply) in replies.into_iter().enumerate() {
+                    let _ = reply.send(Ok(SlotOut::new(out.clone(), b)));
                 }
             }
             Err(e) => {
                 // replicate the error per requester
                 let msg = format!("{e:#}");
-                for req in pending {
-                    let _ = req.reply.send(Err(anyhow!("{msg}")));
+                for reply in replies {
+                    let _ = reply.send(Err(anyhow!("{msg}")));
                 }
             }
+        }
+        if disconnected {
+            break;
         }
     }
 }
 
 impl Forward for ExecutorHandle {
     fn forward1(&self, seq: SeqInput) -> Result<SlotOut> {
-        let (reply, rx) = sync_channel(1);
-        self.tx
-            .send(Request { seq, reply })
-            .map_err(|_| anyhow!("executor '{}' stopped", self.name))?;
-        rx.recv()
+        self.submit(seq)?
+            .recv()
             .map_err(|_| anyhow!("executor '{}' dropped request", self.name))?
     }
 
     fn max_bucket(&self) -> usize {
         self.max_bucket
+    }
+}
+
+impl BatchForward for ExecutorHandle {
+    /// Enqueue the whole wave before reading any reply: the requests land
+    /// in the executor thread's channel together, so it coalesces them
+    /// into full batches without waiting out the batch window.
+    fn forward_batch(&self, seqs: Vec<SeqInput>) -> Result<Vec<SlotOut>> {
+        let rxs: Vec<_> = seqs
+            .into_iter()
+            .map(|seq| self.submit(seq))
+            .collect::<Result<_>>()?;
+        rxs.into_iter()
+            .map(|rx| {
+                rx.recv()
+                    .map_err(|_| anyhow!("executor '{}' dropped request", self.name))?
+            })
+            .collect()
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max_batch
     }
 }

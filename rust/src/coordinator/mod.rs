@@ -20,6 +20,6 @@ pub mod router;
 pub mod server;
 
 pub use batcher::{BatcherStats, ExecutorHandle};
-pub use protocol::{Request, SampleRequest};
+pub use protocol::{FleetRequest, Request, SampleRequest};
 pub use router::{ModelPair, Router};
 pub use server::{Client, Server};

@@ -3,16 +3,25 @@
 //! Request:
 //!   {"op":"sample","dataset":"hawkes","encoder":"attnhp","method":"sd",
 //!    "gamma":10,"t_end":30.0,"seed":1,"draft_size":"draft"}
+//!   {"op":"sample_fleet", ...same fields..., "n_seq":8}
 //!   {"op":"ping"} | {"op":"stats"}
 //!
 //! Response:
 //!   {"ok":true,"events":[[t,k],...],"stats":{...}}
+//!   {"ok":true,"sequences":[[[t,k],...],...],"stats":{...},"fleet":{...}}
 //!   {"ok":false,"error":"..."}
+//!
+//! `sample_fleet` runs `n_seq` sequences in lockstep on the fleet engine
+//! (DESIGN.md §11); sequence `i` is seeded `seed + i`, so its events are
+//! bit-for-bit what a `sample` request with `seed + i` would return. The
+//! server rejects `n_seq` beyond its per-request cap (64) with
+//! `{"ok":false,...}` rather than truncating. The response's `wall_ms` is
+//! the fleet's wall-clock (longest session), not the per-sequence sum.
 
 use anyhow::{bail, Result};
 
 use crate::events::Event;
-use crate::sampler::SampleStats;
+use crate::sampler::{FleetStats, SampleStats};
 use crate::util::json::{obj, Json};
 
 /// One client request (one JSON object per line).
@@ -24,6 +33,8 @@ pub enum Request {
     Stats,
     /// sample one sequence
     Sample(SampleRequest),
+    /// sample many sequences in lockstep on the fleet engine
+    SampleFleet(FleetRequest),
 }
 
 /// Parameters of a `sample` request.
@@ -45,6 +56,41 @@ pub struct SampleRequest {
     pub draft_size: String,
 }
 
+/// Parameters of a `sample_fleet` request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetRequest {
+    /// shared sampling parameters; `base.seed` seeds sequence 0
+    pub base: SampleRequest,
+    /// number of sequences driven in lockstep (sequence `i` is seeded
+    /// `base.seed + i`)
+    pub n_seq: usize,
+}
+
+fn parse_sample_fields(j: &Json) -> SampleRequest {
+    SampleRequest {
+        dataset: j.str_at("dataset").unwrap_or("hawkes").to_string(),
+        encoder: j.str_at("encoder").unwrap_or("attnhp").to_string(),
+        method: j.str_at("method").unwrap_or("sd").to_string(),
+        gamma: j.usize_at("gamma").unwrap_or(10),
+        t_end: j.f64_at("t_end").unwrap_or(30.0),
+        seed: j.f64_at("seed").unwrap_or(0.0) as u64,
+        draft_size: j.str_at("draft_size").unwrap_or("draft").to_string(),
+    }
+}
+
+fn sample_fields(op: &str, s: &SampleRequest) -> Vec<(&'static str, Json)> {
+    vec![
+        ("op", Json::Str(op.to_string())),
+        ("dataset", Json::Str(s.dataset.clone())),
+        ("encoder", Json::Str(s.encoder.clone())),
+        ("method", Json::Str(s.method.clone())),
+        ("gamma", Json::Num(s.gamma as f64)),
+        ("t_end", Json::Num(s.t_end)),
+        ("seed", Json::Num(s.seed as f64)),
+        ("draft_size", Json::Str(s.draft_size.clone())),
+    ]
+}
+
 impl Request {
     /// Parse one request line.
     pub fn parse(line: &str) -> Result<Request> {
@@ -52,14 +98,10 @@ impl Request {
         match j.str_at("op") {
             Some("ping") => Ok(Request::Ping),
             Some("stats") => Ok(Request::Stats),
-            Some("sample") => Ok(Request::Sample(SampleRequest {
-                dataset: j.str_at("dataset").unwrap_or("hawkes").to_string(),
-                encoder: j.str_at("encoder").unwrap_or("attnhp").to_string(),
-                method: j.str_at("method").unwrap_or("sd").to_string(),
-                gamma: j.usize_at("gamma").unwrap_or(10),
-                t_end: j.f64_at("t_end").unwrap_or(30.0),
-                seed: j.f64_at("seed").unwrap_or(0.0) as u64,
-                draft_size: j.str_at("draft_size").unwrap_or("draft").to_string(),
+            Some("sample") => Ok(Request::Sample(parse_sample_fields(&j))),
+            Some("sample_fleet") => Ok(Request::SampleFleet(FleetRequest {
+                base: parse_sample_fields(&j),
+                n_seq: j.usize_at("n_seq").unwrap_or(1).max(1),
             })),
             other => bail!("unknown op {other:?}"),
         }
@@ -70,17 +112,12 @@ impl Request {
         match self {
             Request::Ping => r#"{"op":"ping"}"#.to_string(),
             Request::Stats => r#"{"op":"stats"}"#.to_string(),
-            Request::Sample(s) => obj(vec![
-                ("op", Json::Str("sample".into())),
-                ("dataset", Json::Str(s.dataset.clone())),
-                ("encoder", Json::Str(s.encoder.clone())),
-                ("method", Json::Str(s.method.clone())),
-                ("gamma", Json::Num(s.gamma as f64)),
-                ("t_end", Json::Num(s.t_end)),
-                ("seed", Json::Num(s.seed as f64)),
-                ("draft_size", Json::Str(s.draft_size.clone())),
-            ])
-            .to_string(),
+            Request::Sample(s) => obj(sample_fields("sample", s)).to_string(),
+            Request::SampleFleet(f) => {
+                let mut fields = sample_fields("sample_fleet", &f.base);
+                fields.push(("n_seq", Json::Num(f.n_seq as f64)));
+                obj(fields).to_string()
+            }
         }
     }
 }
@@ -100,20 +137,82 @@ pub fn stats_json(s: &SampleStats) -> Json {
     ])
 }
 
-/// Success response carrying the sampled events + counters.
-pub fn ok_response(events: &[Event], stats: &SampleStats) -> String {
-    let evs = Json::Arr(
+/// Serialize events as the wire's `[[t,k],...]` array.
+fn events_json(events: &[Event]) -> Json {
+    Json::Arr(
         events
             .iter()
             .map(|e| Json::Arr(vec![Json::Num(e.t), Json::Num(e.k as f64)]))
             .collect(),
-    );
+    )
+}
+
+/// Parse a JSON `[[t,k],...]` array into events, skipping malformed pairs.
+fn events_from_json(j: &Json) -> Vec<Event> {
+    j.as_arr()
+        .map(|a| {
+            a.iter()
+                .filter_map(|e| {
+                    let p = e.as_arr()?;
+                    Some(Event::new(p.first()?.as_f64()?, p.get(1)?.as_f64()? as u32))
+                })
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+/// Success response carrying the sampled events + counters.
+pub fn ok_response(events: &[Event], stats: &SampleStats) -> String {
     obj(vec![
         ("ok", Json::Bool(true)),
-        ("events", evs),
+        ("events", events_json(events)),
         ("stats", stats_json(stats)),
     ])
     .to_string()
+}
+
+/// Success response of a `sample_fleet` request: every sequence's events,
+/// the aggregated sampling counters, and the engine's batching counters.
+///
+/// `wall_ms` is the *fleet's* wall-clock (the longest session — sessions
+/// run in lockstep, so each session's own wall spans the whole run;
+/// summing them would overcount ~n_seq-fold).
+pub fn fleet_ok_response(runs: &[(Vec<Event>, SampleStats)], fleet: &FleetStats) -> String {
+    let mut agg = SampleStats::default();
+    for (_, st) in runs {
+        agg.merge(st);
+    }
+    agg.wall = runs.iter().map(|(_, st)| st.wall).max().unwrap_or_default();
+    let sequences =
+        Json::Arr(runs.iter().map(|(events, _)| events_json(events)).collect());
+    let fleet_json = obj(vec![
+        ("steps", Json::Num(fleet.steps as f64)),
+        ("draft_batches", Json::Num(fleet.draft_batches as f64)),
+        ("target_batches", Json::Num(fleet.target_batches as f64)),
+        ("draft_occupancy", Json::Num(fleet.draft_occupancy())),
+        ("target_occupancy", Json::Num(fleet.target_occupancy())),
+    ]);
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("sequences", sequences),
+        ("stats", stats_json(&agg)),
+        ("fleet", fleet_json),
+    ])
+    .to_string()
+}
+
+/// Parse a `sample_fleet` response into per-sequence event streams.
+pub fn parse_fleet_response(line: &str) -> Result<Vec<Vec<Event>>> {
+    let j = Json::parse(line.trim())?;
+    if j.get("ok") != Some(&Json::Bool(true)) {
+        bail!("server error: {}", j.str_at("error").unwrap_or("?"));
+    }
+    let sequences = j
+        .get("sequences")
+        .and_then(Json::as_arr)
+        .map(|seqs| seqs.iter().map(events_from_json).collect())
+        .unwrap_or_default();
+    Ok(sequences)
 }
 
 /// Error response (`{"ok":false,...}`).
@@ -131,18 +230,7 @@ pub fn parse_response(line: &str) -> Result<(Vec<Event>, f64)> {
     if j.get("ok") != Some(&Json::Bool(true)) {
         bail!("server error: {}", j.str_at("error").unwrap_or("?"));
     }
-    let events = j
-        .get("events")
-        .and_then(Json::as_arr)
-        .map(|a| {
-            a.iter()
-                .filter_map(|e| {
-                    let p = e.as_arr()?;
-                    Some(Event::new(p[0].as_f64()?, p[1].as_f64()? as u32))
-                })
-                .collect()
-        })
-        .unwrap_or_default();
+    let events = j.get("events").map(events_from_json).unwrap_or_default();
     let wall = j.f64_at("stats.wall_ms").unwrap_or(f64::NAN);
     Ok((events, wall))
 }
@@ -176,5 +264,49 @@ mod tests {
         let (parsed, _) = parse_response(&line).unwrap();
         assert_eq!(parsed, evs);
         assert!(parse_response(&err_response("boom")).is_err());
+    }
+
+    #[test]
+    fn fleet_request_roundtrip() {
+        let r = Request::SampleFleet(FleetRequest {
+            base: SampleRequest {
+                dataset: "hawkes".into(),
+                encoder: "attnhp".into(),
+                method: "sd".into(),
+                gamma: 10,
+                t_end: 30.0,
+                seed: 5,
+                draft_size: "draft".into(),
+            },
+            n_seq: 8,
+        });
+        let line = r.to_line();
+        assert_eq!(Request::parse(&line).unwrap(), r);
+        // n_seq defaults to 1 and is clamped to ≥ 1
+        match Request::parse(r#"{"op":"sample_fleet"}"#).unwrap() {
+            Request::SampleFleet(f) => assert_eq!(f.n_seq, 1),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn fleet_response_roundtrip() {
+        let runs = vec![
+            (vec![Event::new(0.5, 1)], SampleStats { events: 1, ..Default::default() }),
+            (vec![], SampleStats::default()),
+            (
+                vec![Event::new(1.0, 0), Event::new(2.0, 3)],
+                SampleStats { events: 2, ..Default::default() },
+            ),
+        ];
+        let fleet =
+            FleetStats { steps: 4, target_batches: 4, target_seqs: 6, ..Default::default() };
+        let line = fleet_ok_response(&runs, &fleet);
+        let parsed = parse_fleet_response(&line).unwrap();
+        assert_eq!(parsed.len(), 3);
+        assert_eq!(parsed[0], runs[0].0);
+        assert_eq!(parsed[1], runs[1].0);
+        assert_eq!(parsed[2], runs[2].0);
+        assert!(parse_fleet_response(&err_response("boom")).is_err());
     }
 }

@@ -10,11 +10,14 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use super::protocol::{err_response, ok_response, Request, SampleRequest};
-use super::router::Router;
-use crate::sampler::{sample_ar, sample_sd, Gamma, SampleCfg, SdCfg};
+use super::protocol::{
+    err_response, fleet_ok_response, ok_response, FleetRequest, Request, SampleRequest,
+};
+use super::router::{ModelPair, Router};
+use crate::sampler::{
+    fleet_seeds, sample_ar_fleet, sample_sd_fleet, FleetRuns, FleetStats, Gamma, SampleCfg, SdCfg,
+};
 use crate::util::json::{obj, Json};
-use crate::util::rng::Rng;
 
 /// The TCP sampling server: accept loop + per-connection session threads.
 pub struct Server {
@@ -84,11 +87,44 @@ fn handle_conn(stream: TcpStream, router: &Router, sessions: &AtomicUsize) -> Re
                 Ok(resp) => resp,
                 Err(e) => err_response(&format!("{e:#}")),
             },
+            Ok(Request::SampleFleet(req)) => match run_sample_fleet(router, &req) {
+                Ok(resp) => resp,
+                Err(e) => err_response(&format!("{e:#}")),
+            },
             Err(e) => err_response(&format!("{e:#}")),
         };
         writer.write_all(resp.as_bytes())?;
         writer.write_all(b"\n")?;
         writer.flush()?;
+    }
+}
+
+/// Shared method dispatch of both sample ops: run the requested sampler
+/// for `seeds.len()` sequences on the fleet engine. The single-sample op
+/// is the 1-seed case — fleet(N=1) is bit-for-bit the blocking sampler
+/// (`rust/tests/fleet.rs`), so the server has exactly one dispatch.
+fn run_fleet(
+    pair: &ModelPair,
+    method: &str,
+    gamma: usize,
+    cfg: SampleCfg,
+    seeds: &[u64],
+) -> Result<(FleetRuns, FleetStats)> {
+    match method {
+        "ar" => sample_ar_fleet(&pair.target, &cfg, seeds),
+        "sd" => {
+            let sd = SdCfg { sample: cfg, gamma: Gamma::Fixed(gamma), ..Default::default() };
+            sample_sd_fleet(&pair.target, &pair.draft, &sd, seeds)
+        }
+        "sd-adaptive" => {
+            let sd = SdCfg {
+                sample: cfg,
+                gamma: Gamma::Adaptive { init: gamma, min: 2, max: 4 * gamma.max(1) },
+                ..Default::default()
+            };
+            sample_sd_fleet(&pair.target, &pair.draft, &sd, seeds)
+        }
+        other => anyhow::bail!("unknown method '{other}' (ar|sd|sd-adaptive)"),
     }
 }
 
@@ -99,24 +135,30 @@ fn run_sample(router: &Router, req: &SampleRequest) -> Result<String> {
         t_end: req.t_end,
         max_events: 16 * 1024,
     };
-    let mut rng = Rng::new(req.seed);
-    let (events, stats) = match req.method.as_str() {
-        "ar" => sample_ar(&pair.target, &cfg, &mut rng)?,
-        "sd" => {
-            let sd = SdCfg { sample: cfg, gamma: Gamma::Fixed(req.gamma), ..Default::default() };
-            sample_sd(&pair.target, &pair.draft, &sd, &mut rng)?
-        }
-        "sd-adaptive" => {
-            let sd = SdCfg {
-                sample: cfg,
-                gamma: Gamma::Adaptive { init: req.gamma, min: 2, max: 4 * req.gamma.max(1) },
-                ..Default::default()
-            };
-            sample_sd(&pair.target, &pair.draft, &sd, &mut rng)?
-        }
-        other => anyhow::bail!("unknown method '{other}' (ar|sd|sd-adaptive)"),
-    };
+    let (mut runs, _) = run_fleet(&pair, &req.method, req.gamma, cfg, &[req.seed])?;
+    let (events, stats) = runs.pop().expect("one run per seed");
     Ok(ok_response(&events, &stats))
+}
+
+/// Hard cap on sequences per fleet request (keeps one connection from
+/// monopolizing the executors). Requests beyond it are rejected, not
+/// silently truncated.
+const MAX_FLEET_SEQ: usize = 64;
+
+fn run_sample_fleet(router: &Router, req: &FleetRequest) -> Result<String> {
+    let base = &req.base;
+    if req.n_seq > MAX_FLEET_SEQ {
+        anyhow::bail!("n_seq {} exceeds the per-request cap {MAX_FLEET_SEQ}", req.n_seq);
+    }
+    let pair = router.route(&base.dataset, &base.encoder, &base.draft_size)?;
+    let cfg = SampleCfg {
+        num_types: pair.num_types,
+        t_end: base.t_end,
+        max_events: 16 * 1024,
+    };
+    let seeds = fleet_seeds(base.seed, req.n_seq.max(1));
+    let (runs, fleet) = run_fleet(&pair, &base.method, base.gamma, cfg, &seeds)?;
+    Ok(fleet_ok_response(&runs, &fleet))
 }
 
 fn stats_response(router: &Router, sessions: &AtomicUsize) -> String {

@@ -10,9 +10,11 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 use tpp_sd::coordinator::Server;
 use tpp_sd::runtime::{backend_from_arg, Backend};
-use tpp_sd::sampler::{sample_ar, sample_sd, Gamma, SampleCfg, SdCfg};
+use tpp_sd::sampler::{
+    fleet_seeds, sample_ar_fleet, sample_sd_fleet, FleetRuns, Gamma, SampleCfg, SampleStats, SdCfg,
+};
 use tpp_sd::util::cli::Args;
-use tpp_sd::util::rng::Rng;
+use tpp_sd::Event;
 
 const USAGE: &str = "\
 tppsd — TPP-SD sampling coordinator
@@ -21,9 +23,15 @@ usage: tppsd <command> [options]
 
 commands:
   info                              list datasets / models of the backend
-  sample  --dataset D --encoder E   sample one sequence and print it
+  sample  --dataset D --encoder E   sample sequences and print them
           [--method ar|sd|sd-adaptive] [--gamma 10] [--t-end 30]
           [--seed 0] [--draft-size draft] [--csv]
+          [--parallel 1]            sequences driven in lockstep on the
+                                    fleet engine; sequence i is seeded
+                                    seed+i, bit-for-bit what --parallel 1
+                                    with that seed would print
+          [--gamma-min 2] [--gamma-max 4γ]
+                                    clamps of the sd-adaptive draft length
   serve   [--listen 127.0.0.1:7077] [--max-batch 8] [--batch-window-ms 2]
 
 options (all commands):
@@ -84,42 +92,91 @@ fn sample(args: &Args) -> Result<()> {
         max_events: args.usize_or("max-events", 16 * 1024),
     };
     let target = backend.load_model(&dataset, &encoder, "target")?;
-    let mut rng = Rng::new(args.u64_or("seed", 0));
+    let seed = args.u64_or("seed", 0);
+    let parallel = args.usize_or("parallel", 1).max(1);
     let gamma = args.usize_or("gamma", 10);
-    let (events, stats) = match method.as_str() {
-        "ar" => sample_ar(&target, &cfg, &mut rng)?,
+    let gamma_policy = if method == "sd-adaptive" {
+        let min = args.usize_or("gamma-min", 2);
+        let max = args.usize_or("gamma-max", 4 * gamma.max(1));
+        if min > max {
+            bail!("--gamma-min {min} exceeds --gamma-max {max}");
+        }
+        Gamma::Adaptive { init: gamma.clamp(min, max), min, max }
+    } else {
+        Gamma::Fixed(gamma)
+    };
+    // Load everything before the timer: wall/events-per-second must
+    // measure sampling, not model loading (XLA loads compile artifacts).
+    let draft = match method.as_str() {
+        "ar" => None,
         "sd" | "sd-adaptive" => {
-            let draft =
-                backend.load_model(&dataset, &encoder, args.str_or("draft-size", "draft"))?;
-            let g = if method == "sd" {
-                Gamma::Fixed(gamma)
-            } else {
-                Gamma::Adaptive { init: gamma, min: 2, max: 4 * gamma.max(1) }
-            };
-            let sd = SdCfg { sample: cfg, gamma: g, ..Default::default() };
-            sample_sd(&target, &draft, &sd, &mut rng)?
+            Some(backend.load_model(&dataset, &encoder, args.str_or("draft-size", "draft"))?)
         }
         other => bail!("unknown method '{other}'"),
     };
+    // The fleet path covers --parallel 1 too: fleet(N=1) is bit-for-bit
+    // the blocking sampler (rust/tests/fleet.rs), so there is one code
+    // path whatever N is.
+    let seeds = fleet_seeds(seed, parallel);
+    let t0 = std::time::Instant::now();
+    let (runs, fleet): (FleetRuns, _) = match &draft {
+        None => sample_ar_fleet(&target, &cfg, &seeds)?,
+        Some(d) => {
+            let sd = SdCfg { sample: cfg, gamma: gamma_policy, ..Default::default() };
+            sample_sd_fleet(&target, d, &sd, &seeds)?
+        }
+    };
+    let fleet_wall = t0.elapsed();
+    if parallel > 1 {
+        report_fleet(&runs, fleet.target_occupancy(), fleet_wall);
+    }
+    let many = runs.len() > 1;
     if args.has("csv") {
-        println!("t,k");
-        for e in &events {
-            println!("{:.6},{}", e.t, e.k);
+        println!("{}", if many { "seq,t,k" } else { "t,k" });
+        for (i, (events, _)) in runs.iter().enumerate() {
+            for e in events {
+                if many {
+                    println!("{i},{:.6},{}", e.t, e.k);
+                } else {
+                    println!("{:.6},{}", e.t, e.k);
+                }
+            }
         }
     } else {
-        for e in &events {
-            println!("{:10.5}  {}", e.t, e.k);
+        for (i, (events, _)) in runs.iter().enumerate() {
+            if many {
+                println!("# sequence {i} (seed {})", seed.wrapping_add(i as u64));
+            }
+            for e in events {
+                println!("{:10.5}  {}", e.t, e.k);
+            }
         }
     }
+    let mut stats = SampleStats::default();
+    for (_, st) in &runs {
+        stats.merge(st);
+    }
+    // Sessions run in lockstep, so each session's own wall spans the whole
+    // run — report the fleet's wall-clock, not the ~N-fold sum.
     eprintln!(
         "# {} events in {:?} ({} target + {} draft forwards, α={:.2})",
         stats.events,
-        stats.wall,
+        fleet_wall,
         stats.target_forwards,
         stats.draft_forwards,
         stats.acceptance_rate()
     );
     Ok(())
+}
+
+/// One stderr line summarizing a fleet run's batching efficiency.
+fn report_fleet(runs: &[(Vec<Event>, SampleStats)], occupancy: f64, wall: std::time::Duration) {
+    let events: usize = runs.iter().map(|(ev, _)| ev.len()).sum();
+    eprintln!(
+        "# fleet: {} sequences, {events} events in {wall:?} ({:.0} events/s, target occupancy {occupancy:.2})",
+        runs.len(),
+        events as f64 / wall.as_secs_f64().max(1e-9),
+    );
 }
 
 fn serve(args: &Args) -> Result<()> {

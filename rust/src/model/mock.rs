@@ -10,7 +10,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::runtime::{Forward, ForwardOut, SeqInput, SlotOut};
+use crate::runtime::{BatchForward, Forward, ForwardOut, SeqInput, SlotOut};
 
 /// A deterministic "Transformer": at each position the next-interval
 /// distribution is a 2-component log-normal mixture whose parameters drift
@@ -78,6 +78,19 @@ impl Forward for MockModel {
 
     fn max_bucket(&self) -> usize {
         self.max_bucket
+    }
+}
+
+impl BatchForward for MockModel {
+    /// Mock "batched" forward: one [`Forward::forward1`] per sequence —
+    /// numerically the identity the real backends guarantee, which is all
+    /// the fleet-engine tests need.
+    fn forward_batch(&self, seqs: Vec<SeqInput>) -> Result<Vec<SlotOut>> {
+        seqs.into_iter().map(|s| self.forward1(s)).collect()
+    }
+
+    fn max_batch(&self) -> usize {
+        8
     }
 }
 

@@ -146,6 +146,41 @@ impl Forward for Box<dyn ModelBackend> {
     }
 }
 
+/// A [`Forward`] that can additionally run ONE batched forward pass for
+/// several *independent* sequences — the fleet engine's
+/// ([`crate::sampler::engine`]) view of a model. Slot `b` of the returned
+/// vector carries exactly the rows sequence `b` would have received from
+/// [`Forward::forward1`]; the backend contract (DESIGN.md §5) guarantees
+/// those rows are bit-identical regardless of batch capacity or bucket, so
+/// co-batching never moves a probability.
+///
+/// Implementations: `Box<dyn ModelBackend>` (one batched backend call) and
+/// [`crate::coordinator::ExecutorHandle`] (the requests are enqueued
+/// together and coalesce in the executor thread's batch window).
+pub trait BatchForward: Forward {
+    /// Run the forward pass for `seqs.len() ≤ max_batch()` sequences in one
+    /// batched call, returning one slot view per input sequence (in order).
+    fn forward_batch(&self, seqs: Vec<SeqInput>) -> Result<Vec<SlotOut>>;
+
+    /// Largest number of sequences one [`BatchForward::forward_batch`]
+    /// call accepts.
+    fn max_batch(&self) -> usize;
+}
+
+impl BatchForward for Box<dyn ModelBackend> {
+    fn forward_batch(&self, seqs: Vec<SeqInput>) -> Result<Vec<SlotOut>> {
+        if seqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let out = Arc::new(self.as_ref().forward(&seqs)?);
+        Ok((0..seqs.len()).map(|b| SlotOut::new(out.clone(), b)).collect())
+    }
+
+    fn max_batch(&self) -> usize {
+        self.as_ref().max_batch()
+    }
+}
+
 /// A model registry: resolves `(dataset, encoder, size)` triples to loaded
 /// models and answers dataset metadata queries. `Send + Sync` so the
 /// coordinator can hand one registry to every executor thread.

@@ -12,7 +12,7 @@ pub mod executor;
 pub mod manifest;
 pub mod native;
 
-pub use backend::{Backend, Forward, ForwardOut, ModelBackend, SeqInput, SlotOut};
+pub use backend::{Backend, BatchForward, Forward, ForwardOut, ModelBackend, SeqInput, SlotOut};
 pub use manifest::{ArtifactDir, Manifest};
 pub use native::{NativeBackend, NativeModel};
 

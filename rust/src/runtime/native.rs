@@ -41,6 +41,23 @@ const N_MIX: usize = 2;
 /// Transformer encoders the registry knows (`config.ENCODERS`).
 const ENCODERS: [&str; 3] = ["thp", "sahp", "attnhp"];
 
+/// One batch slot's mutable stripes of the flat forward-output buffers:
+/// `(slot index, log_w, mu, log_sigma, logits)`.
+type SlotStripe<'a> =
+    (usize, &'a mut [f32], &'a mut [f32], &'a mut [f32], &'a mut [f32]);
+
+/// Below this many total rows (slots × bucket) a batched fill runs on the
+/// calling thread: thread-spawn overhead (~tens of µs) would exceed the
+/// transcendental work being parallelized.
+const MIN_PARALLEL_ROWS: usize = 256;
+
+/// Worker count for batched fills, queried once — `available_parallelism`
+/// is a syscall and the fleet engine issues thousands of forwards per run.
+fn fill_workers() -> usize {
+    static WORKERS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *WORKERS.get_or_init(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
 /// Model-size ladder: `(name, mean shift vs target, type-head amplitude)`.
 /// `target` is the reference; the `draft*` sizes are increasingly close to
 /// it (mirroring the paper's draft-capacity ablation, Tables 3/4).
@@ -357,20 +374,57 @@ impl ModelBackend for NativeModel {
         // Real slots, plus ONE padding slot (the empty sequence); the
         // remaining padding slots are copies of it (valid, never read).
         let filled = batch.min(seqs.len() + 1);
-        for b in 0..filled {
-            let seq = seqs.get(b).unwrap_or(&empty);
-            let m0 = b * bucket * N_MIX;
-            let m1 = (b + 1) * bucket * N_MIX;
-            let l0 = b * bucket * K_MAX;
-            let l1 = (b + 1) * bucket * K_MAX;
-            self.fill_slot(
-                seq,
-                bucket,
-                &mut log_w[m0..m1],
-                &mut mu[m0..m1],
-                &mut log_sigma[m0..m1],
-                &mut logits[l0..l1],
-            );
+        {
+            // Per-slot stripes of the flat buffers; disjoint, so batched
+            // fills fan out across cores (single-sequence calls stay on the
+            // calling thread — the sequential samplers' latency path pays
+            // no spawn cost). Every stripe runs the identical per-row math,
+            // so batched rows stay bit-identical to single-sequence rows.
+            let stripes: Vec<SlotStripe> = log_w
+                .chunks_mut(bucket * N_MIX)
+                .zip(mu.chunks_mut(bucket * N_MIX))
+                .zip(log_sigma.chunks_mut(bucket * N_MIX))
+                .zip(logits.chunks_mut(bucket * K_MAX))
+                .take(filled)
+                .enumerate()
+                .map(|(b, (((lw, m), ls), lg))| (b, lw, m, ls, lg))
+                .collect();
+            let workers = if filled * bucket < MIN_PARALLEL_ROWS {
+                1
+            } else {
+                fill_workers().min(filled)
+            };
+            if workers <= 1 {
+                for (b, lw, m, ls, lg) in stripes {
+                    self.fill_slot(seqs.get(b).unwrap_or(&empty), bucket, lw, m, ls, lg);
+                }
+            } else {
+                let per = filled.div_ceil(workers);
+                let mut groups: Vec<Vec<SlotStripe>> = Vec::with_capacity(workers);
+                let mut it = stripes.into_iter();
+                loop {
+                    let g: Vec<SlotStripe> = it.by_ref().take(per).collect();
+                    if g.is_empty() {
+                        break;
+                    }
+                    groups.push(g);
+                }
+                std::thread::scope(|sc| {
+                    let mut rest = groups.split_off(1);
+                    for group in rest.drain(..) {
+                        let empty = &empty;
+                        sc.spawn(move || {
+                            for (b, lw, m, ls, lg) in group {
+                                self.fill_slot(seqs.get(b).unwrap_or(empty), bucket, lw, m, ls, lg);
+                            }
+                        });
+                    }
+                    // the calling thread works too (group 0)
+                    for (b, lw, m, ls, lg) in groups.remove(0) {
+                        self.fill_slot(seqs.get(b).unwrap_or(&empty), bucket, lw, m, ls, lg);
+                    }
+                });
+            }
         }
         let pad_m = seqs.len() * bucket * N_MIX..(seqs.len() + 1) * bucket * N_MIX;
         let pad_l = seqs.len() * bucket * K_MAX..(seqs.len() + 1) * bucket * K_MAX;

@@ -1,11 +1,21 @@
 //! Baseline autoregressive (AR) sampling from the target model (paper
 //! §4.2 "Naïve autoregressive sampling"): one target forward pass per
 //! generated event.
+//!
+//! Since the fleet-engine refactor (DESIGN.md §11) the sampling loop is a
+//! resumable state machine, [`ArSession`]: it *yields* the [`SeqInput`] its
+//! next step needs instead of calling the model, and [`ArSession::advance`]
+//! consumes the forward result. [`sample_ar`] is the blocking single-
+//! sequence driver over that state machine;
+//! [`super::engine::sample_ar_fleet`] drives many sessions in lockstep,
+//! co-batching their forwards.
+
+use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::events::Event;
-use crate::runtime::Forward;
+use crate::runtime::{Forward, SeqInput, SlotOut};
 use crate::util::rng::Rng;
 
 use super::context::Context;
@@ -28,32 +38,112 @@ impl Default for SampleCfg {
     }
 }
 
-/// Sample one sequence autoregressively from `target`.
+/// Resumable AR sampling state machine for ONE sequence: yields the model
+/// input it needs via [`ArSession::pending_input`], consumes the forward
+/// result via [`ArSession::advance`]. The session owns its RNG, so N
+/// sessions driven in any interleaving produce exactly the event streams N
+/// sequential [`sample_ar`] runs would.
+#[derive(Debug)]
+pub struct ArSession {
+    cfg: SampleCfg,
+    rng: Rng,
+    ctx: Context,
+    out: Vec<Event>,
+    stats: SampleStats,
+    done: bool,
+    started: Instant,
+}
+
+impl ArSession {
+    /// New session sampling one sequence; `cap` is the model's bucket
+    /// capacity ([`Forward::max_bucket`]).
+    pub fn new(cfg: SampleCfg, cap: usize, rng: Rng) -> ArSession {
+        let mut s = ArSession {
+            ctx: Context::new(cap, 0),
+            out: Vec::new(),
+            stats: SampleStats::default(),
+            done: false,
+            started: Instant::now(),
+            cfg,
+            rng,
+        };
+        if s.cfg.max_events == 0 {
+            s.finish();
+        }
+        s
+    }
+
+    /// The target-model input the next step needs, or `None` once done.
+    pub fn pending_input(&self) -> Option<SeqInput> {
+        if self.done {
+            None
+        } else {
+            Some(self.ctx.seq_input(&[]))
+        }
+    }
+
+    /// True once the sampling window closed or the event cap was hit.
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// Feed the forward result for the pending input and run one AR step.
+    /// No-op once done.
+    pub fn advance(&mut self, fwd: &SlotOut) {
+        if self.done {
+            return;
+        }
+        self.stats.target_forwards += 1;
+        let row = self.ctx.next_row(0);
+        let tau = fwd.mixture(row).sample(&mut self.rng);
+        let k = fwd.type_dist(row, self.cfg.num_types).sample(&mut self.rng) as u32;
+        let t = self.ctx.last_time() + tau;
+        if t > self.cfg.t_end {
+            self.finish();
+            return;
+        }
+        let e = Event::new(t, k);
+        self.out.push(e);
+        self.ctx.push(e);
+        if self.out.len() >= self.cfg.max_events {
+            self.finish();
+        }
+    }
+
+    /// The session's RNG (used by [`sample_ar`] to hand the advanced
+    /// stream back to its caller).
+    pub fn rng(&self) -> &Rng {
+        &self.rng
+    }
+
+    /// Consume the finished (or abandoned) session into its event stream
+    /// and counters.
+    pub fn into_output(mut self) -> (Vec<Event>, SampleStats) {
+        if !self.done {
+            self.finish();
+        }
+        (self.out, self.stats)
+    }
+
+    fn finish(&mut self) {
+        self.stats.events = self.out.len();
+        self.stats.wall = self.started.elapsed();
+        self.done = true;
+    }
+}
+
+/// Sample one sequence autoregressively from `target` (blocking driver
+/// over [`ArSession`]).
 pub fn sample_ar<F: Forward + ?Sized>(
     target: &F,
     cfg: &SampleCfg,
     rng: &mut Rng,
 ) -> Result<(Vec<Event>, SampleStats)> {
-    let mut ctx = Context::new(target.max_bucket(), 0);
-    let mut out = Vec::new();
-    let mut stats = SampleStats::default();
-    let t_start = std::time::Instant::now();
-
-    while out.len() < cfg.max_events {
-        let fwd = target.forward1(ctx.seq_input(&[]))?;
-        stats.target_forwards += 1;
-        let row = ctx.next_row(0);
-        let tau = fwd.mixture(row).sample(rng);
-        let k = fwd.type_dist(row, cfg.num_types).sample(rng) as u32;
-        let t = ctx.last_time() + tau;
-        if t > cfg.t_end {
-            break;
-        }
-        let e = Event::new(t, k);
-        out.push(e);
-        ctx.push(e);
+    let mut session = ArSession::new(cfg.clone(), target.max_bucket(), rng.clone());
+    while let Some(seq) = session.pending_input() {
+        let fwd = target.forward1(seq)?;
+        session.advance(&fwd);
     }
-    stats.events = out.len();
-    stats.wall = t_start.elapsed();
-    Ok((out, stats))
+    *rng = session.rng().clone();
+    Ok(session.into_output())
 }

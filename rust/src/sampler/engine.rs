@@ -1,0 +1,336 @@
+//! Fleet sampling engine (DESIGN.md §11): drive N per-sequence sampling
+//! state machines in lockstep, co-batching their model forwards.
+//!
+//! The blocking samplers ([`sample_ar`](super::sample_ar),
+//! [`sample_sd`](super::sample_sd)) issue one
+//! [`crate::runtime::Forward::forward1`] per step, so a host serving many
+//! sequences fills its B=8 batch capacity only
+//! by accidental collisions between independent clients. The engine makes
+//! the sampler itself batchable — the vLLM-style continuous-batching move,
+//! transplanted to TPP sampling: each sequence is a resumable session
+//! ([`SdSession`] / [`ArSession`]) that *yields* the [`SeqInput`] its next
+//! phase needs, and each engine step gathers all live sessions' pending
+//! inputs, groups them by the model that must run them (draft steps
+//! co-batched across sequences, verify passes co-batched across
+//! sequences), issues ONE [`BatchForward::forward_batch`] call per group
+//! (chunked at the model's batch capacity), and fans the slots back into
+//! the sessions.
+//!
+//! **RNG isolation** (the bit-for-bit argument): every session owns its
+//! proposal and decision streams, seeded per sequence, and the backend
+//! contract guarantees batched rows equal single-sequence rows exactly —
+//! so the fleet's per-sequence outputs and [`SampleStats`] are identical
+//! to running the blocking samplers sequentially with the same seeds, for
+//! every fleet size and interleaving. Property-tested in
+//! `rust/tests/fleet.rs`.
+
+use anyhow::{ensure, Result};
+
+use crate::events::Event;
+use crate::runtime::{BatchForward, SeqInput, SlotOut};
+use crate::util::rng::Rng;
+
+use super::ar::{ArSession, SampleCfg};
+use super::sd::{SdCfg, SdSession};
+use super::SampleStats;
+
+/// Which of the two models a session's pending forward must run on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelRole {
+    /// the small drafting model
+    Draft,
+    /// the big verified model
+    Target,
+}
+
+/// A resumable per-sequence sampling state machine the engine can drive:
+/// it yields inputs, names the model that must run them, and consumes the
+/// forward results. Implemented by [`SdSession`] and [`ArSession`].
+pub trait FleetSession {
+    /// Which model the pending input is for (only consulted while
+    /// [`FleetSession::pending_input`] is `Some`).
+    fn role(&self) -> ModelRole;
+
+    /// The model input the next step needs, or `None` once done.
+    fn pending_input(&self) -> Option<SeqInput>;
+
+    /// Feed the forward result for the pending input and advance.
+    fn advance(&mut self, fwd: &SlotOut);
+
+    /// Consume the session into its event stream and counters.
+    fn into_output(self) -> (Vec<Event>, SampleStats);
+}
+
+impl FleetSession for SdSession {
+    fn role(&self) -> ModelRole {
+        SdSession::role(self)
+    }
+
+    fn pending_input(&self) -> Option<SeqInput> {
+        SdSession::pending_input(self)
+    }
+
+    fn advance(&mut self, fwd: &SlotOut) {
+        SdSession::advance(self, fwd)
+    }
+
+    fn into_output(self) -> (Vec<Event>, SampleStats) {
+        SdSession::into_output(self)
+    }
+}
+
+impl FleetSession for ArSession {
+    fn role(&self) -> ModelRole {
+        ModelRole::Target
+    }
+
+    fn pending_input(&self) -> Option<SeqInput> {
+        ArSession::pending_input(self)
+    }
+
+    fn advance(&mut self, fwd: &SlotOut) {
+        ArSession::advance(self, fwd)
+    }
+
+    fn into_output(self) -> (Vec<Event>, SampleStats) {
+        ArSession::into_output(self)
+    }
+}
+
+/// Engine-level counters of one fleet run: how well the per-sequence
+/// forwards co-batched. (The per-sequence [`SampleStats`] still count
+/// *logical* forwards — what the sequence consumed — so they aggregate
+/// identically to sequential runs; the difference between the two views is
+/// exactly the batching win.)
+#[derive(Debug, Clone, Default)]
+pub struct FleetStats {
+    /// engine steps (gather → batch → fan-out cycles)
+    pub steps: usize,
+    /// batched draft-model calls issued
+    pub draft_batches: usize,
+    /// Σ sequences over draft batches
+    pub draft_seqs: usize,
+    /// batched target-model calls issued
+    pub target_batches: usize,
+    /// Σ sequences over target batches
+    pub target_seqs: usize,
+}
+
+impl FleetStats {
+    /// Mean sequences per batched draft call.
+    pub fn draft_occupancy(&self) -> f64 {
+        if self.draft_batches == 0 {
+            0.0
+        } else {
+            self.draft_seqs as f64 / self.draft_batches as f64
+        }
+    }
+
+    /// Mean sequences per batched target call.
+    pub fn target_occupancy(&self) -> f64 {
+        if self.target_batches == 0 {
+            0.0
+        } else {
+            self.target_seqs as f64 / self.target_batches as f64
+        }
+    }
+}
+
+/// Per-sequence seeds of a fleet run: sequence `i` gets `base + i`, so
+/// fleet sequence `i` is bit-for-bit the sequential run seeded `base + i`.
+pub fn fleet_seeds(base: u64, n: usize) -> Vec<u64> {
+    (0..n as u64).map(|i| base.wrapping_add(i)).collect()
+}
+
+/// One fleet run's per-sequence `(events, stats)` outputs, in seed order.
+pub type FleetRuns = Vec<(Vec<Event>, SampleStats)>;
+
+/// Sample `seeds.len()` sequences with TPP-SD on the fleet engine. Returns
+/// one `(events, stats)` per seed (in order) — each bit-for-bit identical
+/// to `sample_sd(target, draft, cfg, &mut Rng::new(seed))` — plus the
+/// engine's batching counters.
+pub fn sample_sd_fleet<FT, FD>(
+    target: &FT,
+    draft: &FD,
+    cfg: &SdCfg,
+    seeds: &[u64],
+) -> Result<(FleetRuns, FleetStats)>
+where
+    FT: BatchForward + ?Sized,
+    FD: BatchForward + ?Sized,
+{
+    let cap = target.max_bucket().min(draft.max_bucket());
+    let mut sessions: Vec<SdSession> = seeds
+        .iter()
+        .map(|&s| SdSession::new(cfg.clone(), cap, Rng::new(s)))
+        .collect();
+    let fleet = drive(target, Some(draft), &mut sessions)?;
+    Ok((sessions.into_iter().map(FleetSession::into_output).collect(), fleet))
+}
+
+/// Sample `seeds.len()` sequences autoregressively on the fleet engine.
+/// Returns one `(events, stats)` per seed (in order) — each bit-for-bit
+/// identical to `sample_ar(target, cfg, &mut Rng::new(seed))` — plus the
+/// engine's batching counters.
+pub fn sample_ar_fleet<FT>(
+    target: &FT,
+    cfg: &SampleCfg,
+    seeds: &[u64],
+) -> Result<(FleetRuns, FleetStats)>
+where
+    FT: BatchForward + ?Sized,
+{
+    let cap = target.max_bucket();
+    let mut sessions: Vec<ArSession> = seeds
+        .iter()
+        .map(|&s| ArSession::new(cfg.clone(), cap, Rng::new(s)))
+        .collect();
+    let fleet = drive(target, None::<&FT>, &mut sessions)?;
+    Ok((sessions.into_iter().map(FleetSession::into_output).collect(), fleet))
+}
+
+/// The engine loop: gather pending inputs from all live sessions, batch
+/// them per model role, fan the slots back, repeat until every session is
+/// done. `draft` may be `None` for fleets whose sessions only ever ask for
+/// target forwards (AR).
+pub fn drive<FT, FD, S>(
+    target: &FT,
+    draft: Option<&FD>,
+    sessions: &mut [S],
+) -> Result<FleetStats>
+where
+    FT: BatchForward + ?Sized,
+    FD: BatchForward + ?Sized,
+    S: FleetSession,
+{
+    let mut fleet = FleetStats::default();
+    loop {
+        let mut draft_ids: Vec<usize> = Vec::new();
+        let mut draft_in: Vec<SeqInput> = Vec::new();
+        let mut target_ids: Vec<usize> = Vec::new();
+        let mut target_in: Vec<SeqInput> = Vec::new();
+        for (i, s) in sessions.iter().enumerate() {
+            if let Some(seq) = s.pending_input() {
+                match s.role() {
+                    ModelRole::Draft => {
+                        draft_ids.push(i);
+                        draft_in.push(seq);
+                    }
+                    ModelRole::Target => {
+                        target_ids.push(i);
+                        target_in.push(seq);
+                    }
+                }
+            }
+        }
+        if draft_ids.is_empty() && target_ids.is_empty() {
+            return Ok(fleet);
+        }
+        fleet.steps += 1;
+        if !draft_ids.is_empty() {
+            let d = match draft {
+                Some(d) => d,
+                None => anyhow::bail!("sessions need a draft model, but the fleet has none"),
+            };
+            let (b, n) = fan_out(d, &draft_ids, draft_in, sessions)?;
+            fleet.draft_batches += b;
+            fleet.draft_seqs += n;
+        }
+        if !target_ids.is_empty() {
+            let (b, n) = fan_out(target, &target_ids, target_in, sessions)?;
+            fleet.target_batches += b;
+            fleet.target_seqs += n;
+        }
+    }
+}
+
+/// Run one role's gathered inputs through the model in `max_batch`-sized
+/// chunks and advance the owning sessions. Returns (batches issued,
+/// sequences forwarded).
+fn fan_out<B, S>(
+    model: &B,
+    ids: &[usize],
+    mut inputs: Vec<SeqInput>,
+    sessions: &mut [S],
+) -> Result<(usize, usize)>
+where
+    B: BatchForward + ?Sized,
+    S: FleetSession,
+{
+    let cap = model.max_batch().max(1);
+    let mut batches = 0;
+    let mut start = 0;
+    while start < ids.len() {
+        let take = cap.min(ids.len() - start);
+        let chunk: Vec<SeqInput> = inputs.drain(..take).collect();
+        let outs = model.forward_batch(chunk)?;
+        ensure!(
+            outs.len() == take,
+            "forward_batch returned {} slots for {} sequences",
+            outs.len(),
+            take
+        );
+        for (j, out) in outs.iter().enumerate() {
+            sessions[ids[start + j]].advance(out);
+        }
+        batches += 1;
+        start += take;
+    }
+    Ok((batches, ids.len()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::mock::MockModel;
+    use crate::sampler::{sample_ar, sample_sd, Gamma};
+
+    fn cfg() -> SdCfg {
+        SdCfg {
+            sample: SampleCfg { num_types: 4, t_end: 20.0, max_events: 2048 },
+            gamma: Gamma::Fixed(5),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fleet_sd_equals_sequential_on_mocks() {
+        let target = MockModel::default();
+        let draft = MockModel { bias: 0.3, type_shift: 1, ..Default::default() };
+        let seeds = fleet_seeds(11, 5);
+        let (runs, fleet) = sample_sd_fleet(&target, &draft, &cfg(), &seeds).unwrap();
+        assert_eq!(runs.len(), 5);
+        assert!(fleet.steps > 0 && fleet.target_batches > 0);
+        for (i, (ev, st)) in runs.iter().enumerate() {
+            let mut rng = Rng::new(seeds[i]);
+            let (ev_seq, st_seq) = sample_sd(&target, &draft, &cfg(), &mut rng).unwrap();
+            assert_eq!(ev, &ev_seq, "sequence {i}");
+            assert_eq!(st.rounds, st_seq.rounds);
+            assert_eq!(st.drafted, st_seq.drafted);
+            assert_eq!(st.accepted, st_seq.accepted);
+        }
+    }
+
+    #[test]
+    fn fleet_ar_equals_sequential_on_mocks() {
+        let target = MockModel::default();
+        let scfg = SampleCfg { num_types: 4, t_end: 20.0, max_events: 2048 };
+        let seeds = fleet_seeds(3, 4);
+        let (runs, _) = sample_ar_fleet(&target, &scfg, &seeds).unwrap();
+        for (i, (ev, st)) in runs.iter().enumerate() {
+            let mut rng = Rng::new(seeds[i]);
+            let (ev_seq, st_seq) = sample_ar(&target, &scfg, &mut rng).unwrap();
+            assert_eq!(ev, &ev_seq, "sequence {i}");
+            assert_eq!(st.target_forwards, st_seq.target_forwards);
+        }
+    }
+
+    #[test]
+    fn empty_fleet_is_a_noop() {
+        let target = MockModel::default();
+        let (runs, fleet) =
+            sample_ar_fleet(&target, &SampleCfg::default(), &[]).unwrap();
+        assert!(runs.is_empty());
+        assert_eq!(fleet.steps, 0);
+    }
+}

@@ -1,6 +1,7 @@
 //! Sampling engines: baseline autoregressive sampling (`ar`), speculative
-//! decoding (`sd`, the paper's contribution), and the rolling context
-//! window shared by both.
+//! decoding (`sd`, the paper's contribution), the rolling context window
+//! shared by both, and the fleet engine (`engine`) that drives many
+//! resumable sampling sessions in lockstep over batched forwards.
 //!
 //! The classical thinning sampler — the third algorithm the paper discusses
 //! (§2.2, App. D.1) — lives with the ground-truth processes as
@@ -10,11 +11,15 @@
 
 pub mod ar;
 pub mod context;
+pub mod engine;
 pub mod sd;
 
-pub use ar::{sample_ar, SampleCfg};
+pub use ar::{sample_ar, ArSession, SampleCfg};
 pub use context::Context;
-pub use sd::{sample_sd, Gamma, SdCfg};
+pub use engine::{
+    fleet_seeds, sample_ar_fleet, sample_sd_fleet, FleetRuns, FleetSession, FleetStats, ModelRole,
+};
+pub use sd::{sample_sd, Gamma, SdCfg, SdPhase, SdSession};
 
 use std::time::Duration;
 

@@ -18,23 +18,36 @@
 //! keep τ̂ and k′ ~ f′.
 //!
 //! RNG discipline (DESIGN.md §9.3): *proposal* draws (drafted candidates
-//! and the bonus event) consume the caller's `rng` in exactly the order AR
-//! sampling would, while accept/reject uniforms and adjusted-distribution
-//! redraws run on a stream derived via [`Rng::derive`]. Consequence:
-//! with `draft == target` every candidate is accepted (density ratios are
-//! exactly 1) and `sample_sd` reproduces `sample_ar`'s event stream
-//! bit-for-bit from the same seed — the degenerate-acceptance regression
-//! test in `rust/tests/native_backend.rs`.
+//! and the bonus event) consume the session's proposal `rng` in exactly the
+//! order AR sampling would, while accept/reject uniforms and adjusted-
+//! distribution redraws run on a stream derived via [`Rng::derive`].
+//! Consequence: with `draft == target` every candidate is accepted (density
+//! ratios are exactly 1) and `sample_sd` reproduces `sample_ar`'s event
+//! stream bit-for-bit from the same seed — the degenerate-acceptance
+//! regression test in `rust/tests/native_backend.rs`.
+//!
+//! Since the fleet-engine refactor (DESIGN.md §11) the round loop is a
+//! resumable state machine, [`SdSession`], with explicit phases
+//! ([`SdPhase`]: `Drafting(l)` → `Verifying` → next round / `Done`): the
+//! session *yields* the [`SeqInput`] its next forward needs instead of
+//! calling the model. [`sample_sd`] is the blocking single-sequence driver
+//! over that state machine; [`super::engine::sample_sd_fleet`] drives many
+//! sessions in lockstep, co-batching draft steps and verify passes across
+//! sequences. Both paths execute the identical per-session code and RNG
+//! streams, so they are bit-for-bit interchangeable.
+
+use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::events::Event;
-use crate::model::mixture::{sample_adjusted_interval, TypeDist};
-use crate::runtime::Forward;
+use crate::model::mixture::{sample_adjusted_interval, Mixture, TypeDist};
+use crate::runtime::{Forward, SeqInput, SlotOut};
 use crate::util::rng::Rng;
 
 use super::ar::SampleCfg;
 use super::context::Context;
+use super::engine::ModelRole;
 use super::SampleStats;
 
 /// Draft-length policy.
@@ -85,136 +98,289 @@ impl Default for SdCfg {
     }
 }
 
-/// Sample one sequence with TPP-SD; distributionally identical to
-/// [`super::ar::sample_ar`] on the target model.
+/// Where an [`SdSession`] is inside its current speculative round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SdPhase {
+    /// waiting for the draft forward of candidate `l` (0-based)
+    Drafting(usize),
+    /// waiting for the target's parallel verification forward
+    Verifying,
+    /// sampling finished (window closed or event cap hit)
+    Done,
+}
+
+/// Resumable TPP-SD state machine for ONE sequence. The session yields the
+/// model input its next phase needs ([`SdSession::pending_input`] +
+/// [`SdSession::role`] say *which* model must run it) and consumes the
+/// forward result via [`SdSession::advance`]. It owns both RNG streams
+/// (proposal + derived decision stream), so N sessions driven in any
+/// interleaving produce exactly the event streams N sequential
+/// [`sample_sd`] runs would — the fleet-equivalence property test in
+/// `rust/tests/fleet.rs`.
+#[derive(Debug)]
+pub struct SdSession {
+    cfg: SdCfg,
+    /// proposal stream (drafted candidates + bonus events)
+    rng: Rng,
+    /// decision stream (accept/reject uniforms, adjusted redraws)
+    vrng: Rng,
+    gamma: usize,
+    ctx: Context,
+    cand: Vec<Event>,
+    d_mix: Vec<Mixture>,
+    d_type: Vec<TypeDist>,
+    out: Vec<Event>,
+    stats: SampleStats,
+    phase: SdPhase,
+    started: Instant,
+}
+
+impl SdSession {
+    /// New session sampling one sequence; `cap` is the smaller of the two
+    /// models' bucket capacities
+    /// (`target.max_bucket().min(draft.max_bucket())`).
+    pub fn new(cfg: SdCfg, cap: usize, rng: Rng) -> SdSession {
+        // Decision stream: accept/reject uniforms and adjusted redraws,
+        // kept separate from the proposal stream (see the module docs).
+        let vrng = rng.derive(0xACCE_97);
+        let gamma = cfg.gamma.initial().max(1);
+        // The context margin must cover the largest draft the session can
+        // ever run — including a first-round `init` above the adaptive
+        // clamp, which only takes effect from the second round.
+        let max_gamma = match cfg.gamma {
+            Gamma::Fixed(g) => g,
+            Gamma::Adaptive { max, .. } => max.max(gamma),
+        };
+        let mut s = SdSession {
+            rng,
+            vrng,
+            gamma,
+            ctx: Context::new(cap, max_gamma.max(1)),
+            cand: Vec::new(),
+            d_mix: Vec::new(),
+            d_type: Vec::new(),
+            out: Vec::new(),
+            stats: SampleStats::default(),
+            phase: SdPhase::Done,
+            started: Instant::now(),
+            cfg,
+        };
+        s.begin_round();
+        s
+    }
+
+    /// Current phase of the round state machine.
+    pub fn phase(&self) -> SdPhase {
+        self.phase
+    }
+
+    /// Which model must run the pending input (draft while drafting, target
+    /// while verifying). Meaningless once done.
+    pub fn role(&self) -> ModelRole {
+        match self.phase {
+            SdPhase::Drafting(_) => ModelRole::Draft,
+            _ => ModelRole::Target,
+        }
+    }
+
+    /// The model input the next phase needs (history window + candidates so
+    /// far), or `None` once done.
+    pub fn pending_input(&self) -> Option<SeqInput> {
+        match self.phase {
+            SdPhase::Done => None,
+            _ => Some(self.ctx.seq_input(&self.cand)),
+        }
+    }
+
+    /// True once the sampling window closed or the event cap was hit.
+    pub fn is_done(&self) -> bool {
+        self.phase == SdPhase::Done
+    }
+
+    /// Feed the forward result for the pending input and advance one phase.
+    /// No-op once done.
+    pub fn advance(&mut self, fwd: &SlotOut) {
+        match self.phase {
+            SdPhase::Drafting(l) => self.advance_draft(l, fwd),
+            SdPhase::Verifying => self.advance_verify(fwd),
+            SdPhase::Done => {}
+        }
+    }
+
+    /// The session's proposal RNG (used by [`sample_sd`] to hand the
+    /// advanced stream back to its caller).
+    pub fn rng(&self) -> &Rng {
+        &self.rng
+    }
+
+    /// Consume the finished (or abandoned) session into its event stream
+    /// and counters.
+    pub fn into_output(mut self) -> (Vec<Event>, SampleStats) {
+        if self.phase != SdPhase::Done {
+            self.finish();
+        }
+        (self.out, self.stats)
+    }
+
+    /// Start the next round, or finish when the event cap is reached —
+    /// the state-machine form of the blocking loop's `while out.len() <
+    /// max_events` header.
+    fn begin_round(&mut self) {
+        if self.out.len() >= self.cfg.sample.max_events {
+            self.finish();
+            return;
+        }
+        self.stats.rounds += 1;
+        self.cand.clear();
+        self.d_mix.clear();
+        self.d_type.clear();
+        self.phase = SdPhase::Drafting(0);
+    }
+
+    /// Drafting phase step: sample candidate `l` from the draft forward.
+    fn advance_draft(&mut self, l: usize, fwd: &SlotOut) {
+        self.stats.draft_forwards += 1;
+        let row = self.ctx.next_row(l);
+        let mix = fwd.mixture(row);
+        let td = fwd.type_dist(row, self.cfg.sample.num_types);
+        let tau = mix.sample(&mut self.rng);
+        let k = td.sample(&mut self.rng) as u32;
+        let prev = self.cand.last().map(|e| e.t).unwrap_or(self.ctx.last_time());
+        self.cand.push(Event::new(prev + tau, k));
+        self.d_mix.push(mix);
+        self.d_type.push(td);
+        if l + 1 < self.gamma {
+            self.phase = SdPhase::Drafting(l + 1);
+        } else {
+            self.stats.drafted += self.gamma;
+            self.phase = SdPhase::Verifying;
+        }
+    }
+
+    /// Verification phase: judge all γ candidates against the target's
+    /// parallel forward, resample on first rejection, bonus event on
+    /// all-accept, then adapt γ and begin the next round.
+    fn advance_verify(&mut self, fwd_t: &SlotOut) {
+        self.stats.target_forwards += 1;
+        let num_types = self.cfg.sample.num_types;
+        let t_end = self.cfg.sample.t_end;
+        let gamma = self.gamma;
+
+        // Row indices into fwd_t follow the layout at verification time
+        // (BOS + window + candidates); pin them before pushes mutate ctx.
+        let base_row = self.ctx.next_row(0);
+        let round_start_time = self.ctx.last_time();
+
+        let mut rejected_at: Option<usize> = None;
+        let mut stopped = false;
+        for l in 0..gamma {
+            let row = base_row + l;
+            let t_mix = fwd_t.mixture(row);
+            let t_td = fwd_t.type_dist(row, num_types);
+            let prev = if l == 0 { round_start_time } else { self.cand[l - 1].t };
+            let tau_hat = self.cand[l].t - prev;
+
+            // interval test: u < g_T(τ̂)/g_D(τ̂)
+            let log_ratio = t_mix.logpdf(tau_hat) - self.d_mix[l].logpdf(tau_hat);
+            let tau_ok = self.vrng.uniform().ln() < log_ratio;
+            if !tau_ok {
+                // τ̂ rejected → τ′ ~ g′ (Theorem 1), k ~ f_T fresh.
+                let (tau2, tries) = sample_adjusted_interval(
+                    &t_mix,
+                    &self.d_mix[l],
+                    &mut self.vrng,
+                    self.cfg.max_adjust_tries,
+                );
+                self.stats.adjust_proposals += tries;
+                let k2 = t_td.sample(&mut self.vrng) as u32;
+                let e = Event::new(prev + tau2, k2);
+                self.stats.resampled += 1;
+                rejected_at = Some(l);
+                if !push_event(&mut self.out, &mut self.ctx, e, t_end) {
+                    stopped = true;
+                }
+                break;
+            }
+            // type test: u < f_T(k̂)/f_D(k̂)
+            let k_hat = self.cand[l].k as usize;
+            let type_ok = self.vrng.uniform() * self.d_type[l].pmf(k_hat) < t_td.pmf(k_hat);
+            if !type_ok {
+                // k̂ rejected → keep τ̂, k′ ~ f′ = norm(max(0, f_T − f_D)).
+                let adj = TypeDist::adjusted(&t_td, &self.d_type[l]);
+                let k2 = adj.sample(&mut self.vrng) as u32;
+                let e = Event::new(self.cand[l].t, k2);
+                self.stats.resampled += 1;
+                rejected_at = Some(l);
+                if !push_event(&mut self.out, &mut self.ctx, e, t_end) {
+                    stopped = true;
+                }
+                break;
+            }
+            // candidate fully accepted
+            self.stats.accepted += 1;
+            if !push_event(&mut self.out, &mut self.ctx, self.cand[l], t_end) {
+                stopped = true;
+                break;
+            }
+        }
+
+        // All γ accepted → one bonus event from the target's (γ+1)-th row
+        // (fwd_t is fixed, so the pinned row stays valid even if pushes
+        // truncated the context window).
+        if !stopped && rejected_at.is_none() {
+            let row = base_row + gamma;
+            let mix = fwd_t.mixture(row);
+            let td = fwd_t.type_dist(row, num_types);
+            let tau = mix.sample(&mut self.rng);
+            let k = td.sample(&mut self.rng) as u32;
+            let e =
+                Event::new(self.cand.last().map(|e| e.t).unwrap_or(round_start_time) + tau, k);
+            self.stats.bonus += 1;
+            if !push_event(&mut self.out, &mut self.ctx, e, t_end) {
+                stopped = true;
+            }
+        }
+
+        if stopped {
+            self.finish();
+            return;
+        }
+        if let Gamma::Adaptive { min, max, .. } = self.cfg.gamma {
+            self.gamma = match rejected_at {
+                None => (self.gamma + 1).min(max),
+                Some(l) => (l.max(1)).max(min).min(max),
+            };
+        }
+        self.begin_round();
+    }
+
+    fn finish(&mut self) {
+        self.stats.events = self.out.len();
+        self.stats.wall = self.started.elapsed();
+        self.phase = SdPhase::Done;
+    }
+}
+
+/// Sample one sequence with TPP-SD (blocking driver over [`SdSession`]);
+/// distributionally identical to [`super::ar::sample_ar`] on the target
+/// model.
 pub fn sample_sd<FT: Forward + ?Sized, FD: Forward + ?Sized>(
     target: &FT,
     draft: &FD,
     cfg: &SdCfg,
     rng: &mut Rng,
 ) -> Result<(Vec<Event>, SampleStats)> {
-    let scfg = &cfg.sample;
-    // Decision stream: accept/reject uniforms and adjusted redraws, kept
-    // separate from the proposal stream (see the module docs).
-    let mut vrng = rng.derive(0xACCE_97);
-    let mut gamma = cfg.gamma.initial().max(1);
     let cap = target.max_bucket().min(draft.max_bucket());
-    let max_gamma = match cfg.gamma {
-        Gamma::Fixed(g) => g,
-        Gamma::Adaptive { max, .. } => max,
-    };
-    let mut ctx = Context::new(cap, max_gamma.max(1));
-    let mut out: Vec<Event> = Vec::new();
-    let mut stats = SampleStats::default();
-    let t_start = std::time::Instant::now();
-
-    'outer: while out.len() < scfg.max_events {
-        stats.rounds += 1;
-        // ------------------------------------------------------- drafting
-        let mut cand: Vec<Event> = Vec::with_capacity(gamma);
-        let mut d_mix = Vec::with_capacity(gamma);
-        let mut d_type = Vec::with_capacity(gamma);
-        for l in 0..gamma {
-            let fwd = draft.forward1(ctx.seq_input(&cand))?;
-            stats.draft_forwards += 1;
-            let row = ctx.next_row(l);
-            let mix = fwd.mixture(row);
-            let td = fwd.type_dist(row, scfg.num_types);
-            let tau = mix.sample(rng);
-            let k = td.sample(rng) as u32;
-            let prev = cand.last().map(|e| e.t).unwrap_or(ctx.last_time());
-            cand.push(Event::new(prev + tau, k));
-            d_mix.push(mix);
-            d_type.push(td);
-        }
-        stats.drafted += gamma;
-
-        // ---------------------------------------------------- verification
-        let fwd_t = target.forward1(ctx.seq_input(&cand))?;
-        stats.target_forwards += 1;
-
-        // Row indices into fwd_t follow the layout at verification time
-        // (BOS + window + candidates); pin them before pushes mutate ctx.
-        let base_row = ctx.next_row(0);
-        let round_start_time = ctx.last_time();
-
-        let mut rejected_at: Option<usize> = None;
-        for l in 0..gamma {
-            let row = base_row + l;
-            let t_mix = fwd_t.mixture(row);
-            let t_td = fwd_t.type_dist(row, scfg.num_types);
-            let prev = if l == 0 { round_start_time } else { cand[l - 1].t };
-            let tau_hat = cand[l].t - prev;
-
-            // interval test: u < g_T(τ̂)/g_D(τ̂)
-            let log_ratio = t_mix.logpdf(tau_hat) - d_mix[l].logpdf(tau_hat);
-            let tau_ok = vrng.uniform().ln() < log_ratio;
-            if !tau_ok {
-                // τ̂ rejected → τ′ ~ g′ (Theorem 1), k ~ f_T fresh.
-                let (tau2, tries) =
-                    sample_adjusted_interval(&t_mix, &d_mix[l], &mut vrng, cfg.max_adjust_tries);
-                stats.adjust_proposals += tries;
-                let k2 = t_td.sample(&mut vrng) as u32;
-                let e = Event::new(prev + tau2, k2);
-                stats.resampled += 1;
-                rejected_at = Some(l);
-                if !push_event(&mut out, &mut ctx, e, scfg.t_end) {
-                    break 'outer;
-                }
-                break;
-            }
-            // type test: u < f_T(k̂)/f_D(k̂)
-            let k_hat = cand[l].k as usize;
-            let type_ok =
-                vrng.uniform() * d_type[l].pmf(k_hat) < t_td.pmf(k_hat);
-            if !type_ok {
-                // k̂ rejected → keep τ̂, k′ ~ f′ = norm(max(0, f_T − f_D)).
-                let adj = TypeDist::adjusted(&t_td, &d_type[l]);
-                let k2 = adj.sample(&mut vrng) as u32;
-                let e = Event::new(cand[l].t, k2);
-                stats.resampled += 1;
-                rejected_at = Some(l);
-                if !push_event(&mut out, &mut ctx, e, scfg.t_end) {
-                    break 'outer;
-                }
-                break;
-            }
-            // candidate fully accepted
-            stats.accepted += 1;
-            if !push_event(&mut out, &mut ctx, cand[l], scfg.t_end) {
-                break 'outer;
-            }
-        }
-
-        // -------------------------------------------------------- bonus
-        // All γ accepted → one extra event from the target's (γ+1)-th row
-        // (fwd_t is fixed, so the pinned row stays valid even if pushes
-        // truncated the context window).
-        if rejected_at.is_none() {
-            let row = base_row + gamma;
-            let mix = fwd_t.mixture(row);
-            let td = fwd_t.type_dist(row, scfg.num_types);
-            let tau = mix.sample(rng);
-            let k = td.sample(rng) as u32;
-            let e = Event::new(cand.last().map(|e| e.t).unwrap_or(round_start_time) + tau, k);
-            stats.bonus += 1;
-            if !push_event(&mut out, &mut ctx, e, scfg.t_end) {
-                break 'outer;
-            }
-        }
-
-        // --------------------------------------------------- adapt gamma
-        if let Gamma::Adaptive { min, max, .. } = cfg.gamma {
-            gamma = match rejected_at {
-                None => (gamma + 1).min(max),
-                Some(l) => (l.max(1)).max(min).min(max),
-            };
-        }
+    let mut session = SdSession::new(cfg.clone(), cap, rng.clone());
+    while let Some(seq) = session.pending_input() {
+        let fwd = match session.role() {
+            ModelRole::Draft => draft.forward1(seq)?,
+            ModelRole::Target => target.forward1(seq)?,
+        };
+        session.advance(&fwd);
     }
-
-    stats.events = out.len();
-    stats.wall = t_start.elapsed();
-    Ok((out, stats))
+    *rng = session.rng().clone();
+    Ok(session.into_output())
 }
 
 /// Append an accepted event unless it crosses the window end. Returns

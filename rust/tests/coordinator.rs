@@ -6,8 +6,10 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use tpp_sd::coordinator::{Client, ExecutorHandle, Request, Router, SampleRequest, Server};
-use tpp_sd::runtime::{Backend, Forward, ModelBackend, SeqInput};
+use tpp_sd::coordinator::{
+    Client, ExecutorHandle, FleetRequest, Request, Router, SampleRequest, Server,
+};
+use tpp_sd::runtime::{Backend, BatchForward, Forward, ModelBackend, SeqInput};
 use tpp_sd::util::rng::Rng;
 
 fn backend() -> Arc<dyn Backend> {
@@ -102,6 +104,53 @@ fn batcher_batches_under_concurrency() {
     assert!(occ > 1.0, "expected batching under concurrency, occupancy={occ}");
 }
 
+/// Regression (ISSUE 2 satellite): `requests` counts every enqueued
+/// request exactly once — at submit time, not per drained batch — so it
+/// always equals the number of `forward1`/`forward_batch` submissions,
+/// while `batched_requests`/`batches` describe how they coalesced.
+#[test]
+fn stats_count_requests_at_enqueue() {
+    let handle = ExecutorHandle::spawn(
+        backend(),
+        "hawkes",
+        "thp",
+        "draft",
+        8,
+        Duration::from_millis(20),
+    )
+    .unwrap();
+    let mut rng = Rng::new(7);
+    // 5 sequential single requests: no concurrency, so 5 batches of 1
+    for _ in 0..5 {
+        handle.forward1(random_seq(&mut rng, 20)).unwrap();
+    }
+    let load = |c: &std::sync::atomic::AtomicUsize| c.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(load(&handle.stats.requests), 5);
+    assert_eq!(load(&handle.stats.batched_requests), 5);
+    assert_eq!(load(&handle.stats.batches), 5);
+
+    // 8-wide waves: 8 more requests each, coalescing into few batches.
+    // Retried a few times because a sender preempted for longer than the
+    // batch window can defeat coalescing on a loaded CI runner — the
+    // enqueue-time counters stay exact throughout, which is what this
+    // test pins.
+    let mut sent = 5usize;
+    for _ in 0..3 {
+        let seqs: Vec<SeqInput> = (0..8).map(|_| random_seq(&mut rng, 20)).collect();
+        let outs = handle.forward_batch(seqs).unwrap();
+        assert_eq!(outs.len(), 8);
+        sent += 8;
+        assert_eq!(load(&handle.stats.requests), sent, "requests counted at enqueue");
+        assert_eq!(load(&handle.stats.batched_requests), sent, "all requests eventually batched");
+        if load(&handle.stats.max_batch_seen) >= 2 {
+            break;
+        }
+    }
+    assert!(load(&handle.stats.max_batch_seen) >= 2, "no wave coalesced in 3 attempts");
+    assert!(load(&handle.stats.batches) < sent, "the waves must coalesce");
+    assert!(handle.stats.occupancy() > 1.0);
+}
+
 #[test]
 fn spawn_surfaces_load_errors() {
     let err = ExecutorHandle::spawn(
@@ -169,4 +218,38 @@ fn server_roundtrip_ar_and_sd() {
         .unwrap();
     assert!(resp.contains("\"ok\":false"));
     assert!(cli.call(&Request::Ping).unwrap().contains("pong"));
+}
+
+/// `sample_fleet` over the wire: sequence `i` must be byte-identical to a
+/// plain `sample` request with `seed + i` — the fleet path re-routes the
+/// sampler through the engine without moving a single probability.
+#[test]
+fn server_fleet_matches_single_samples() {
+    let server = Server::bind(backend(), "127.0.0.1:0", 8, Duration::from_millis(1)).unwrap();
+    let addr = server.addr;
+    std::thread::spawn(move || server.serve());
+    let mut cli = Client::connect(addr).unwrap();
+
+    let base = SampleRequest {
+        dataset: "hawkes".into(),
+        encoder: "thp".into(),
+        method: "sd".into(),
+        gamma: 5,
+        t_end: 3.0,
+        seed: 10,
+        draft_size: "draft".into(),
+    };
+    let resp = cli
+        .call(&Request::SampleFleet(FleetRequest { base: base.clone(), n_seq: 3 }))
+        .unwrap();
+    let sequences = tpp_sd::coordinator::protocol::parse_fleet_response(&resp).unwrap();
+    assert_eq!(sequences.len(), 3);
+    for (i, seq) in sequences.iter().enumerate() {
+        let mut single = base.clone();
+        single.seed = base.seed + i as u64;
+        let resp = cli.call(&Request::Sample(single)).unwrap();
+        let (events, _) = tpp_sd::coordinator::protocol::parse_response(&resp).unwrap();
+        assert_eq!(seq, &events, "fleet sequence {i} vs single sample");
+        assert!(tpp_sd::events::is_valid_sequence(seq, 3.0));
+    }
 }

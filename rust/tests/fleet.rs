@@ -1,0 +1,170 @@
+//! Fleet-engine equivalence suite (ISSUE 2 acceptance): driving N
+//! sessions in lockstep through batched forwards must reproduce the
+//! blocking samplers **bit-for-bit** from the same per-sequence seeds —
+//! events AND `SampleStats` — for every fleet size, for AR and SD, for
+//! fixed and adaptive γ, on the direct backend path and through the
+//! coordinator's batching executors.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tpp_sd::coordinator::ExecutorHandle;
+use tpp_sd::runtime::{Backend, NativeBackend};
+use tpp_sd::sampler::{
+    fleet_seeds, sample_ar, sample_ar_fleet, sample_sd, sample_sd_fleet, Gamma, SampleCfg,
+    SampleStats, SdCfg,
+};
+use tpp_sd::util::rng::Rng;
+
+/// All counters except `wall` (wall-clock necessarily differs between a
+/// fleet run and a sequential run).
+fn assert_stats_eq(a: &SampleStats, b: &SampleStats, what: &str) {
+    assert_eq!(a.events, b.events, "{what}: events");
+    assert_eq!(a.rounds, b.rounds, "{what}: rounds");
+    assert_eq!(a.target_forwards, b.target_forwards, "{what}: target_forwards");
+    assert_eq!(a.draft_forwards, b.draft_forwards, "{what}: draft_forwards");
+    assert_eq!(a.drafted, b.drafted, "{what}: drafted");
+    assert_eq!(a.accepted, b.accepted, "{what}: accepted");
+    assert_eq!(a.resampled, b.resampled, "{what}: resampled");
+    assert_eq!(a.bonus, b.bonus, "{what}: bonus");
+    assert_eq!(a.adjust_proposals, b.adjust_proposals, "{what}: adjust_proposals");
+}
+
+fn sd_cfg(num_types: usize, gamma: Gamma) -> SdCfg {
+    SdCfg {
+        sample: SampleCfg { num_types, t_end: 10.0, max_events: 4096 },
+        gamma,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn fleet_sd_is_bit_for_bit_sequential() {
+    let b = NativeBackend::new();
+    for (dataset, num_types) in [("hawkes", 1), ("taxi_sim", 10)] {
+        let target = b.load_model(dataset, "thp", "target").unwrap();
+        let draft = b.load_model(dataset, "thp", "draft").unwrap();
+        let cfg = sd_cfg(num_types, Gamma::Fixed(6));
+        for n in [1usize, 2, 8] {
+            let seeds = fleet_seeds(42, n);
+            let (runs, fleet) = sample_sd_fleet(&target, &draft, &cfg, &seeds).unwrap();
+            assert_eq!(runs.len(), n, "{dataset}: one run per seed");
+            let mut agg_fleet = SampleStats::default();
+            let mut agg_seq = SampleStats::default();
+            for (i, (ev, st)) in runs.iter().enumerate() {
+                let mut rng = Rng::new(seeds[i]);
+                let (ev_seq, st_seq) = sample_sd(&target, &draft, &cfg, &mut rng).unwrap();
+                assert!(!ev_seq.is_empty(), "{dataset}: degenerate test sequence");
+                assert_eq!(ev, &ev_seq, "{dataset} fleet(N={n}) seq {i}: events diverge");
+                assert_stats_eq(st, &st_seq, &format!("{dataset} fleet(N={n}) seq {i}"));
+                agg_fleet.merge(st);
+                agg_seq.merge(&st_seq);
+            }
+            // aggregates (rounds, accepted, drafted, bonus, ...) identical
+            assert_stats_eq(&agg_fleet, &agg_seq, &format!("{dataset} fleet(N={n}) aggregate"));
+            if n > 1 {
+                assert!(
+                    fleet.target_occupancy() > 1.0,
+                    "{dataset} fleet(N={n}): verify passes must co-batch, occupancy={}",
+                    fleet.target_occupancy()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fleet_sd_adaptive_gamma_is_bit_for_bit_sequential() {
+    let b = NativeBackend::new();
+    let target = b.load_model("multihawkes", "attnhp", "target").unwrap();
+    let draft = b.load_model("multihawkes", "attnhp", "draft").unwrap();
+    let cfg = sd_cfg(2, Gamma::Adaptive { init: 3, min: 2, max: 12 });
+    let seeds = fleet_seeds(7, 8);
+    let (runs, _) = sample_sd_fleet(&target, &draft, &cfg, &seeds).unwrap();
+    for (i, (ev, st)) in runs.iter().enumerate() {
+        let mut rng = Rng::new(seeds[i]);
+        let (ev_seq, st_seq) = sample_sd(&target, &draft, &cfg, &mut rng).unwrap();
+        assert_eq!(ev, &ev_seq, "adaptive fleet seq {i}");
+        assert_stats_eq(st, &st_seq, &format!("adaptive fleet seq {i}"));
+    }
+}
+
+#[test]
+fn fleet_ar_is_bit_for_bit_sequential() {
+    let b = NativeBackend::new();
+    let target = b.load_model("hawkes", "sahp", "target").unwrap();
+    let cfg = SampleCfg { num_types: 1, t_end: 10.0, max_events: 4096 };
+    for n in [1usize, 2, 8] {
+        let seeds = fleet_seeds(5, n);
+        let (runs, _) = sample_ar_fleet(&target, &cfg, &seeds).unwrap();
+        for (i, (ev, st)) in runs.iter().enumerate() {
+            let mut rng = Rng::new(seeds[i]);
+            let (ev_seq, st_seq) = sample_ar(&target, &cfg, &mut rng).unwrap();
+            assert!(!ev_seq.is_empty());
+            assert_eq!(ev, &ev_seq, "AR fleet(N={n}) seq {i}");
+            assert_stats_eq(st, &st_seq, &format!("AR fleet(N={n}) seq {i}"));
+        }
+    }
+}
+
+#[test]
+fn fleet_chunks_beyond_max_batch() {
+    // 13 sessions > B=8: the engine must chunk each wave and still fan the
+    // right slots back to the right sessions.
+    let b = NativeBackend::new();
+    let target = b.load_model("hawkes", "thp", "target").unwrap();
+    let draft = b.load_model("hawkes", "thp", "draft").unwrap();
+    let cfg = sd_cfg(1, Gamma::Fixed(4));
+    let seeds = fleet_seeds(100, 13);
+    let (runs, fleet) = sample_sd_fleet(&target, &draft, &cfg, &seeds).unwrap();
+    assert_eq!(runs.len(), 13);
+    assert!(fleet.target_occupancy() > 1.0);
+    for (i, (ev, _)) in runs.iter().enumerate() {
+        let mut rng = Rng::new(seeds[i]);
+        let (ev_seq, _) = sample_sd(&target, &draft, &cfg, &mut rng).unwrap();
+        assert_eq!(ev, &ev_seq, "chunked fleet seq {i}");
+    }
+}
+
+#[test]
+fn fleet_runs_through_batching_executors() {
+    // The serving path: ExecutorHandle implements BatchForward, and the
+    // batcher must coalesce the engine's waves without changing a single
+    // probability vs the direct path.
+    let backend: Arc<dyn Backend> = Arc::new(NativeBackend::new());
+    let target_h = ExecutorHandle::spawn(
+        backend.clone(),
+        "hawkes",
+        "thp",
+        "target",
+        8,
+        Duration::from_millis(5),
+    )
+    .unwrap();
+    let draft_h = ExecutorHandle::spawn(
+        backend.clone(),
+        "hawkes",
+        "thp",
+        "draft",
+        8,
+        Duration::from_millis(5),
+    )
+    .unwrap();
+    let target = backend.load_model("hawkes", "thp", "target").unwrap();
+    let draft = backend.load_model("hawkes", "thp", "draft").unwrap();
+
+    let cfg = sd_cfg(1, Gamma::Fixed(5));
+    let seeds = fleet_seeds(21, 8);
+    let (via_exec, _) = sample_sd_fleet(&target_h, &draft_h, &cfg, &seeds).unwrap();
+    let (direct, _) = sample_sd_fleet(&target, &draft, &cfg, &seeds).unwrap();
+    for (i, ((ev_a, st_a), (ev_b, st_b))) in via_exec.iter().zip(&direct).enumerate() {
+        assert_eq!(ev_a, ev_b, "executor vs direct, seq {i}");
+        assert_stats_eq(st_a, st_b, &format!("executor vs direct, seq {i}"));
+    }
+    // the engine's waves actually co-batched inside the executor
+    assert!(
+        target_h.stats.occupancy() > 1.0,
+        "executor occupancy {}",
+        target_h.stats.occupancy()
+    );
+}

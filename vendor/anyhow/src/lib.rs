@@ -1,7 +1,7 @@
 //! Offline shim of the [`anyhow`](https://docs.rs/anyhow) API surface this
 //! workspace uses: a dynamic [`Error`] carrying a human-readable context
 //! chain, the [`Context`] extension trait for `Result`/`Option`, the
-//! [`Result`] alias, and the [`anyhow!`]/[`bail!`] macros.
+//! [`Result`] alias, and the [`anyhow!`]/[`bail!`]/[`ensure!`] macros.
 //!
 //! The container registry is offline, so this crate is a path dependency
 //! (see the workspace `Cargo.toml`). It mirrors the upstream semantics the
@@ -124,6 +124,22 @@ macro_rules! anyhow {
 macro_rules! bail {
     ($($arg:tt)*) => {
         return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds (upstream
+/// anyhow's `ensure!`, with the same default message form).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
     };
 }
 
