@@ -55,6 +55,7 @@ fn main() -> Result<()> {
                         t_end,
                         seed: (c * 1000 + r) as u64,
                         draft_size: "draft".into(),
+                        cached: true,
                     });
                     let t = Instant::now();
                     let resp = cli.call(&req)?;
@@ -92,22 +93,24 @@ fn main() -> Result<()> {
     for ds in &datasets {
         let pair = router.route(ds, &encoder, "draft")?;
         println!(
-            "executor {:<28} batches={:<5} occupancy={:.2}",
+            "executor {:<28} batches={:<5} occupancy={:.2} delta_occupancy={:.2}",
             pair.target.name,
             pair.target
                 .stats
                 .batches
                 .load(std::sync::atomic::Ordering::Relaxed),
-            pair.target.stats.occupancy()
+            pair.target.stats.occupancy(),
+            pair.target.stats.delta_occupancy()
         );
         println!(
-            "executor {:<28} batches={:<5} occupancy={:.2}",
+            "executor {:<28} batches={:<5} occupancy={:.2} delta_occupancy={:.2}",
             pair.draft.name,
             pair.draft
                 .stats
                 .batches
                 .load(std::sync::atomic::Ordering::Relaxed),
-            pair.draft.stats.occupancy()
+            pair.draft.stats.occupancy(),
+            pair.draft.stats.delta_occupancy()
         );
     }
     Ok(())

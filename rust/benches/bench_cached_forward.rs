@@ -1,0 +1,216 @@
+//! Bench: incremental forward cache vs full-window forwards (ISSUE 3,
+//! DESIGN.md §12) — does O(1)-per-event inference state actually buy the
+//! integer-factor speedup the O(L) → O(γ) arithmetic promises?
+//!
+//! Two levels, both on the native backend by default:
+//!
+//! * **forward-level** (the gated number): with an L-event history
+//!   committed, time draft-step forwards (1 new event) and verify-pass
+//!   forwards (γ new events) through `forward_delta`, against full
+//!   `forward` calls over the same final sequence. This isolates the
+//!   cache from sampler overhead.
+//! * **sampling-level**: `sample_sd` / `sample_ar` with the streams on
+//!   vs forced off (`Uncached`), identical seeds — identical events by
+//!   construction, so the comparison is pure wall-clock.
+//!
+//! The process exits non-zero if cached draft-step throughput falls below
+//! `--min-speedup` × uncached (default 1.0) at `--len` (default 256) —
+//! the CI `bench-smoke` gate. The measured numbers are merged into
+//! `BENCH_sampling.json` under the `bench_cached_forward` key.
+//!
+//!     cargo bench --bench bench_cached_forward [-- --dataset hawkes
+//!         --encoder thp --len 256 --gamma 10 --iters 2000 --seqs 4
+//!         --t-end 150 --min-speedup 1.0 --out BENCH_sampling.json]
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+use tpp_sd::bench::merge_snapshot;
+use tpp_sd::runtime::{Backend, CachedForward, ModelBackend, SeqDelta, SeqInput, Uncached};
+use tpp_sd::sampler::{sample_ar, sample_sd, Gamma, SampleCfg, SdCfg};
+use tpp_sd::util::cli::Args;
+use tpp_sd::util::json::{obj, Json};
+use tpp_sd::util::rng::Rng;
+
+/// Default snapshot path: the workspace root, independent of the cwd
+/// cargo runs the bench with.
+const DEFAULT_OUT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sampling.json");
+
+/// A deterministic L-event history (0.1-spaced, round-robin types).
+fn history(len: usize, k: usize) -> SeqInput {
+    SeqInput {
+        t0: 0.0,
+        times: (0..len).map(|i| (i + 1) as f64 * 0.1).collect(),
+        types: (0..len).map(|i| (i % k) as u32).collect(),
+    }
+}
+
+/// Forward-level comparison at sequence length `len` (model positions,
+/// incl. BOS — so the probed sequence has `len - 1` events and the cold
+/// reference runs in the `len` bucket): returns (cached fps, uncached
+/// fps) for `m`-event extensions.
+fn forward_level(
+    model: &dyn ModelBackend,
+    len: usize,
+    m: usize,
+    k: usize,
+    iters: usize,
+) -> Result<(f64, f64)> {
+    let base = history(len - 1 - m, k);
+    let ext = history(len - 1, k);
+    let c = model.cached().expect("cached-forward bench needs a CachedForward backend");
+    let sid = c.open_stream()?;
+    // commit the shared history once
+    let warm = SeqDelta {
+        base_len: 0,
+        t0: 0.0,
+        times: base.times.clone(),
+        types: base.types.clone(),
+    };
+    c.forward_delta(sid, &warm)?;
+    let delta = SeqDelta {
+        base_len: base.times.len(),
+        t0: 0.0,
+        times: ext.times[base.times.len()..].to_vec(),
+        types: ext.types[base.times.len()..].to_vec(),
+    };
+    // sanity: the delta rows equal the cold rows before timing anything
+    let row = ext.times.len();
+    let cold = model.forward(std::slice::from_ref(&ext))?;
+    let hot = c.forward_delta(sid, &delta)?;
+    ensure!(
+        hot.mixture(row) == cold.mixture(0, row),
+        "cached row diverged from cold row — refusing to time a broken cache"
+    );
+
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        // same base each iteration: an implicit rewind + m-event extension,
+        // exactly the draft/verify access pattern
+        let out = c.forward_delta(sid, &delta)?;
+        std::hint::black_box(out.mixture(row).mu[0]);
+    }
+    let cached_fps = iters as f64 / t0.elapsed().as_secs_f64().max(1e-12);
+
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let out = model.forward(std::slice::from_ref(&ext))?;
+        std::hint::black_box(out.mixture(0, row).mu[0]);
+    }
+    let uncached_fps = iters as f64 / t0.elapsed().as_secs_f64().max(1e-12);
+    c.close_stream(sid);
+    Ok((cached_fps, uncached_fps))
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let dataset = args.str_or("dataset", "hawkes").to_string();
+    let encoder = args.str_or("encoder", "thp").to_string();
+    let len = args.usize_or("len", 256).max(16);
+    let gamma = args.usize_or("gamma", 10).clamp(1, len / 2);
+    let iters = args.usize_or("iters", 2000).max(1);
+    let seqs = args.usize_or("seqs", 4).max(1);
+    let t_end = args.f64_or("t-end", 150.0);
+    let min_speedup = args.f64_or("min-speedup", 1.0);
+    let out_path = args.str_or("out", DEFAULT_OUT).to_string();
+
+    let backend = tpp_sd::runtime::backend_from_arg(args.get("backend"))?;
+    let k = backend.num_types(&dataset)?;
+    let target = backend.load_model(&dataset, &encoder, "target")?;
+    let draft = backend.load_model(&dataset, &encoder, "draft")?;
+    target.warmup()?;
+    draft.warmup()?;
+    println!(
+        "== cached vs uncached forwards ({dataset}/{encoder}, backend={}, L={len}, γ={gamma}) ==",
+        backend.name()
+    );
+
+    // --- forward level ---
+    let (draft_c, draft_u) = forward_level(draft.as_ref(), len, 1, k, iters)?;
+    let draft_speedup = draft_c / draft_u;
+    println!(
+        "draft step (1 event) : cached {draft_c:10.0} fwd/s | uncached {draft_u:10.0} fwd/s | {draft_speedup:.1}x"
+    );
+    let (verify_c, verify_u) = forward_level(target.as_ref(), len, gamma, k, iters)?;
+    let verify_speedup = verify_c / verify_u;
+    println!(
+        "verify pass (γ={gamma:2})  : cached {verify_c:10.0} fwd/s | uncached {verify_u:10.0} fwd/s | {verify_speedup:.1}x"
+    );
+
+    // --- sampling level ---
+    let cfg = SampleCfg { num_types: k, t_end, max_events: 16 * 1024 };
+    let sd_cfg = SdCfg { sample: cfg.clone(), gamma: Gamma::Fixed(gamma), ..Default::default() };
+    let (mut sd_ev, mut ar_ev) = (0usize, 0usize);
+    let (mut t_sd_c, mut t_sd_u, mut t_ar_c, mut t_ar_u) = (0f64, 0f64, 0f64, 0f64);
+    for s in 0..seqs as u64 {
+        let t0 = Instant::now();
+        let mut rng = Rng::new(s);
+        let (ev_c, _) = sample_sd(&target, &draft, &sd_cfg, &mut rng)?;
+        t_sd_c += t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let mut rng = Rng::new(s);
+        let (ev_u, _) = sample_sd(&Uncached(&target), &Uncached(&draft), &sd_cfg, &mut rng)?;
+        t_sd_u += t0.elapsed().as_secs_f64();
+        ensure!(ev_c == ev_u, "cached and uncached SD diverged at seed {s}");
+        sd_ev += ev_c.len();
+
+        let t0 = Instant::now();
+        let mut rng = Rng::new(s);
+        let (ev_c, _) = sample_ar(&target, &cfg, &mut rng)?;
+        t_ar_c += t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let mut rng = Rng::new(s);
+        let (ev_u, _) = sample_ar(&Uncached(&target), &cfg, &mut rng)?;
+        t_ar_u += t0.elapsed().as_secs_f64();
+        ensure!(ev_c == ev_u, "cached and uncached AR diverged at seed {s}");
+        ar_ev += ev_c.len();
+    }
+    let sd_c_eps = sd_ev as f64 / t_sd_c.max(1e-12);
+    let sd_u_eps = sd_ev as f64 / t_sd_u.max(1e-12);
+    let ar_c_eps = ar_ev as f64 / t_ar_c.max(1e-12);
+    let ar_u_eps = ar_ev as f64 / t_ar_u.max(1e-12);
+    println!(
+        "TPP-SD sampling      : cached {sd_c_eps:10.0} ev/s | uncached {sd_u_eps:10.0} ev/s | {:.1}x ({sd_ev} events)",
+        sd_c_eps / sd_u_eps
+    );
+    println!(
+        "AR sampling          : cached {ar_c_eps:10.0} ev/s | uncached {ar_u_eps:10.0} ev/s | {:.1}x ({ar_ev} events)",
+        ar_c_eps / ar_u_eps
+    );
+
+    // --- snapshot ---
+    let snapshot = obj(vec![
+        ("backend", Json::Str(backend.name().into())),
+        ("dataset", Json::Str(dataset.clone())),
+        ("encoder", Json::Str(encoder.clone())),
+        ("len", Json::Num(len as f64)),
+        ("gamma", Json::Num(gamma as f64)),
+        ("iters", Json::Num(iters as f64)),
+        ("t_end", Json::Num(t_end)),
+        ("cached_draft_fwd_per_s", Json::Num(draft_c)),
+        ("uncached_draft_fwd_per_s", Json::Num(draft_u)),
+        ("draft_speedup", Json::Num(draft_speedup)),
+        ("cached_verify_fwd_per_s", Json::Num(verify_c)),
+        ("uncached_verify_fwd_per_s", Json::Num(verify_u)),
+        ("verify_speedup", Json::Num(verify_speedup)),
+        ("sd_cached_events_per_s", Json::Num(sd_c_eps)),
+        ("sd_uncached_events_per_s", Json::Num(sd_u_eps)),
+        ("sd_speedup", Json::Num(sd_c_eps / sd_u_eps)),
+        ("ar_cached_events_per_s", Json::Num(ar_c_eps)),
+        ("ar_uncached_events_per_s", Json::Num(ar_u_eps)),
+        ("ar_speedup", Json::Num(ar_c_eps / ar_u_eps)),
+    ]);
+    merge_snapshot(&out_path, "bench_cached_forward", snapshot)?;
+    println!("snapshot merged into {out_path}");
+
+    // --- gate (CI bench-smoke): cached must not be slower than uncached ---
+    ensure!(
+        draft_speedup >= min_speedup && verify_speedup >= min_speedup,
+        "cached path too slow at L={len}: draft {draft_speedup:.2}x, verify {verify_speedup:.2}x \
+         (gate {min_speedup:.2}x)"
+    );
+    if draft_speedup < 2.0 {
+        println!("WARNING: draft speedup {draft_speedup:.2}x below the 2x acceptance bar");
+    }
+    Ok(())
+}

@@ -95,12 +95,14 @@ fn main() -> Result<()> {
         }
         let wall = t.elapsed().as_secs_f64();
         println!(
-            "batched {} sessions (window {}ms): {:.3}s  {:.1} events/s  occupancy {:.2}",
+            "batched {} sessions (window {}ms): {:.3}s  {:.1} events/s  \
+             occupancy {:.2} (delta {:.2})",
             sessions,
             window_ms,
             wall,
             events as f64 / wall,
-            handle.stats.occupancy()
+            handle.stats.occupancy(),
+            handle.stats.delta_occupancy()
         );
     }
     Ok(())

@@ -4,8 +4,9 @@
 //!
 //! Measures events/sec of fleet(N) vs N× sequential for both AR and
 //! TPP-SD (identical events by construction — the fleet is bit-for-bit
-//! the sequential runs, so the comparison is pure wall-clock), and writes
-//! a `BENCH_sampling.json` snapshot so the perf trajectory is recorded
+//! the sequential runs, so the comparison is pure wall-clock), and merges
+//! a snapshot into `BENCH_sampling.json` (under the `bench_fleet` key,
+//! alongside `bench_cached_forward`'s) so the perf trajectory is recorded
 //! across PRs.
 //!
 //!     cargo bench --bench bench_fleet [-- --dataset hawkes --encoder attnhp
@@ -107,7 +108,6 @@ fn main() -> Result<()> {
 
     // --- snapshot ---
     let snapshot = obj(vec![
-        ("bench", Json::Str("bench_fleet".into())),
         ("backend", Json::Str(backend.name().into())),
         ("dataset", Json::Str(dataset.clone())),
         ("encoder", Json::Str(encoder.clone())),
@@ -123,8 +123,9 @@ fn main() -> Result<()> {
         ("sd_fleet_speedup", Json::Num(sd_fleet_eps / sd_seq_eps)),
         ("draft_occupancy", Json::Num(fleet_stats.draft_occupancy())),
         ("target_occupancy", Json::Num(fleet_stats.target_occupancy())),
+        ("delta_batches", Json::Num(fleet_stats.delta_batches as f64)),
     ]);
-    std::fs::write(&out_path, format!("{snapshot}\n"))?;
-    println!("snapshot written to {out_path}");
+    tpp_sd::bench::merge_snapshot(&out_path, "bench_fleet", snapshot)?;
+    println!("snapshot merged into {out_path}");
     Ok(())
 }

@@ -8,3 +8,25 @@ pub mod timing;
 
 pub use eval::{real_cell, synthetic_cell, EvalCfg, RealCell, SyntheticCell};
 pub use timing::{bench_loop, BenchResult};
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// Merge one bench's snapshot into the shared `BENCH_sampling.json`: the
+/// file is an object keyed by bench name (`{"bench_fleet":{...},
+/// "bench_cached_forward":{...}}`), so the benches record their numbers
+/// without clobbering each other's. A legacy single-bench file (top-level
+/// `"bench"` key) or an unparseable file is replaced outright.
+pub fn merge_snapshot(path: &str, bench: &str, value: Json) -> Result<()> {
+    let mut root = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .filter(|j| matches!(j, Json::Obj(m) if !m.contains_key("bench")))
+        .unwrap_or_else(|| Json::Obj(Default::default()));
+    if let Json::Obj(m) = &mut root {
+        m.insert(bench.to_string(), value);
+    }
+    std::fs::write(path, format!("{root}\n"))?;
+    Ok(())
+}

@@ -11,16 +11,23 @@
 //! dynamic-batching idea vLLM's router applies to token steps,
 //! transplanted to TPP forward passes.
 //!
-//! The handle is both a [`Forward`] (single-sequence path) and a
-//! [`BatchForward`]: the fleet engine enqueues a whole wave of sequences
-//! at once, which the executor thread coalesces into full batches without
-//! waiting out the batch window.
+//! The handle is a [`Forward`] (single-sequence path), a [`BatchForward`]
+//! (the fleet engine enqueues a whole wave of sequences at once, which
+//! the executor thread coalesces into full batches without waiting out
+//! the batch window), and — when the executor's model keeps incremental
+//! state — a [`CachedForward`]: stream ids are allocated by the model on
+//! the executor thread and travel opaquely through the request channel,
+//! so `sample_fleet` co-batches delta forwards across connections exactly
+//! like full forwards (DESIGN.md §12).
 //!
-//! Invariants (property-tested in `rust/tests/coordinator.rs`):
+//! Invariants (property-tested in `rust/tests/coordinator.rs` and
+//! `rust/tests/fleet.rs`):
 //!   * every request gets exactly one reply (no loss, no duplication);
 //!   * replies carry the requester's own sequence results regardless of
 //!     how requests were grouped into batches;
-//!   * numerical results are identical to the direct path (same forward).
+//!   * numerical results are identical to the direct path (same forward),
+//!     and delta replies never leak another stream's state (the
+//!     crosstalk regression in `rust/tests/fleet.rs`).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
@@ -29,7 +36,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::runtime::{Backend, BatchForward, Forward, ModelBackend, SeqInput, SlotOut};
+use crate::runtime::{
+    Backend, BatchForward, CachedForward, Forward, ModelBackend, SeqDelta, SeqInput, SlotOut,
+    StreamId,
+};
 
 /// Aggregate counters exposed by an executor thread.
 #[derive(Debug, Default)]
@@ -40,14 +50,30 @@ pub struct BatcherStats {
     /// batched forward calls issued
     pub batches: AtomicUsize,
     /// Σ batch-size over issued batches — occupancy = batched_requests /
-    /// batches; trails `requests` by whatever is still queued
+    /// batches; trails `requests` by whatever is still queued.
+    ///
+    /// `batches`/`batched_requests`/`max_batch_seen` describe FULL-forward
+    /// coalescing only (one batched model call each); delta forwards on
+    /// incremental streams are tracked by the `delta_*` counters, so
+    /// [`BatcherStats::occupancy`] never conflates the two.
     pub batched_requests: AtomicUsize,
-    /// largest batch coalesced so far
+    /// largest full-forward batch coalesced so far
     pub max_batch_seen: AtomicUsize,
+    /// of `requests`, how many were delta forwards on incremental streams
+    /// (counted at submit time, like `requests`)
+    pub delta_requests: AtomicUsize,
+    /// drained waves that contained ≥ 1 delta forward (each served by one
+    /// [`CachedForward::forward_delta_batch`] call)
+    pub delta_waves: AtomicUsize,
+    /// Σ delta count over those waves — delta occupancy =
+    /// batched_deltas / delta_waves
+    pub batched_deltas: AtomicUsize,
+    /// largest delta wave coalesced so far
+    pub max_delta_wave: AtomicUsize,
 }
 
 impl BatcherStats {
-    /// Mean requests per batched forward call.
+    /// Mean requests per batched FULL forward call.
     pub fn occupancy(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
         if b == 0 {
@@ -55,11 +81,59 @@ impl BatcherStats {
         }
         self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
     }
+
+    /// Mean delta forwards per drained delta wave (the cached-path
+    /// analogue of [`BatcherStats::occupancy`]).
+    pub fn delta_occupancy(&self) -> f64 {
+        let w = self.delta_waves.load(Ordering::Relaxed);
+        if w == 0 {
+            return 0.0;
+        }
+        self.batched_deltas.load(Ordering::Relaxed) as f64 / w as f64
+    }
 }
 
-struct Request {
-    seq: SeqInput,
-    reply: SyncSender<Result<SlotOut>>,
+/// One queued unit of executor work. Forward-type requests (`Full`,
+/// `Delta`) coalesce into batches; stream-control requests are cheap and
+/// are served in arrival order within the drained wave. Per-stream
+/// ordering is guaranteed by construction: a stream has one owner, and
+/// the owner blocks on each reply before sending the next request.
+enum Request {
+    /// full-window forward of one sequence
+    Full {
+        /// the sequence to run
+        seq: SeqInput,
+        /// where the slot view goes
+        reply: SyncSender<Result<SlotOut>>,
+    },
+    /// delta forward against an open incremental stream
+    Delta {
+        /// stream id (allocated by the executor's model)
+        stream: StreamId,
+        /// the events past the stream's checkpoint
+        delta: SeqDelta,
+        /// where the slot view goes
+        reply: SyncSender<Result<SlotOut>>,
+    },
+    /// open a stream on the executor's model
+    Open {
+        /// where the new stream id goes
+        reply: SyncSender<Result<StreamId>>,
+    },
+    /// rewind a stream to `len` committed events
+    Rewind {
+        /// stream id
+        stream: StreamId,
+        /// committed length to rewind to
+        len: usize,
+        /// completion signal
+        reply: SyncSender<Result<()>>,
+    },
+    /// release a stream (fire-and-forget, idempotent)
+    Close {
+        /// stream id
+        stream: StreamId,
+    },
 }
 
 /// Cloneable, `Send` handle to a model executor thread. Implements
@@ -71,6 +145,9 @@ pub struct ExecutorHandle {
     max_bucket: usize,
     /// batch capacity the executor thread coalesces to
     max_batch: usize,
+    /// whether the executor's model supports incremental streams (probed
+    /// at load time; gates the handle's [`Forward::cached`])
+    supports_streams: bool,
     /// shared batching counters
     pub stats: Arc<BatcherStats>,
     /// `dataset/encoder/size` tag for logs
@@ -95,7 +172,7 @@ impl ExecutorHandle {
         let (tx, rx) = sync_channel::<Request>(1024);
         let stats = Arc::new(BatcherStats::default());
         let stats2 = stats.clone();
-        let (ready_tx, ready_rx) = sync_channel::<Result<(usize, usize)>>(1);
+        let (ready_tx, ready_rx) = sync_channel::<Result<(usize, usize, bool)>>(1);
         let (ds, enc, sz) = (dataset.to_string(), encoder.to_string(), size.to_string());
         let name = format!("{ds}/{enc}/{sz}");
         std::thread::Builder::new()
@@ -105,7 +182,8 @@ impl ExecutorHandle {
                 let exec = match backend.load_model(&ds, &enc, &sz) {
                     Ok(e) => {
                         let cap = e.max_batch().min(max_batch).max(1);
-                        let _ = ready_tx.send(Ok((e.max_bucket(), cap)));
+                        let streams = e.as_ref().cached().is_some();
+                        let _ = ready_tx.send(Ok((e.max_bucket(), cap, streams)));
                         e
                     }
                     Err(e) => {
@@ -116,19 +194,36 @@ impl ExecutorHandle {
                 run_loop(exec, rx, stats2, max_batch, batch_window);
             })
             .expect("spawn executor thread");
-        let (max_bucket, max_batch) = ready_rx
+        let (max_bucket, max_batch, supports_streams) = ready_rx
             .recv()
             .map_err(|_| anyhow!("executor thread died during load"))??;
-        Ok(ExecutorHandle { tx, max_bucket, max_batch, stats, name })
+        Ok(ExecutorHandle { tx, max_bucket, max_batch, supports_streams, stats, name })
     }
 
-    /// Enqueue one request, counting it, and hand back the reply channel.
+    /// Enqueue one full forward, counting it, and hand back the reply
+    /// channel.
     fn submit(&self, seq: SeqInput) -> Result<Receiver<Result<SlotOut>>> {
         let (reply, rx) = sync_channel(1);
         self.tx
-            .send(Request { seq, reply })
+            .send(Request::Full { seq, reply })
             .map_err(|_| anyhow!("executor '{}' stopped", self.name))?;
         self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        Ok(rx)
+    }
+
+    /// Enqueue one delta forward, counting it, and hand back the reply
+    /// channel.
+    fn submit_delta(
+        &self,
+        stream: StreamId,
+        delta: SeqDelta,
+    ) -> Result<Receiver<Result<SlotOut>>> {
+        let (reply, rx) = sync_channel(1);
+        self.tx
+            .send(Request::Delta { stream, delta, reply })
+            .map_err(|_| anyhow!("executor '{}' stopped", self.name))?;
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        self.stats.delta_requests.fetch_add(1, Ordering::Relaxed);
         Ok(rx)
     }
 }
@@ -142,6 +237,15 @@ fn run_loop(
 ) {
     let cap = exec.max_batch().min(max_batch).max(1);
     while let Ok(first) = rx.recv() {
+        // Control ops are served the moment they arrive — they never
+        // coalesce with anything, and their callers block on the reply,
+        // so parking them behind the batch window would add pure dead
+        // time (notably ~2·N Open round trips while the fleet engine
+        // opens its per-session streams).
+        let first = match serve_control(exec.as_ref(), first) {
+            Some(fwd) => fwd,
+            None => continue,
+        };
         let mut pending = vec![first];
         let mut disconnected = false;
         let deadline = Instant::now() + batch_window;
@@ -156,7 +260,11 @@ fn run_loop(
                 rx.recv_timeout(wait)
             };
             match next {
-                Ok(r) => pending.push(r),
+                Ok(r) => {
+                    if let Some(fwd) = serve_control(exec.as_ref(), r) {
+                        pending.push(fwd);
+                    }
+                }
                 Err(RecvTimeoutError::Timeout) => break,
                 // All senders gone: serve what we already hold, then stop —
                 // conflating this with Timeout would silently drain the
@@ -167,31 +275,126 @@ fn run_loop(
                 }
             }
         }
-        stats.batches.fetch_add(1, Ordering::Relaxed);
-        stats.batched_requests.fetch_add(pending.len(), Ordering::Relaxed);
-        stats.max_batch_seen.fetch_max(pending.len(), Ordering::Relaxed);
-
-        // Move the inputs out of the requests — no per-batch clones.
-        let (seqs, replies): (Vec<SeqInput>, Vec<SyncSender<Result<SlotOut>>>) =
-            pending.into_iter().map(|r| (r.seq, r.reply)).unzip();
-        match exec.forward(&seqs) {
-            Ok(out) => {
-                let out = Arc::new(out);
-                for (b, reply) in replies.into_iter().enumerate() {
-                    let _ = reply.send(Ok(SlotOut::new(out.clone(), b)));
+        // Partition the drained wave (control ops were already served on
+        // receipt). Full forwards batch into ONE model call; deltas batch
+        // into ONE forward_delta_batch call (the backend decides whether
+        // the wave is worth fanning across cores). Relative order within
+        // one stream is safe by construction — a stream's owner blocks on
+        // each reply.
+        let mut seqs: Vec<SeqInput> = Vec::new();
+        let mut replies: Vec<SyncSender<Result<SlotOut>>> = Vec::new();
+        let mut deltas: Vec<(StreamId, SeqDelta, SyncSender<Result<SlotOut>>)> = Vec::new();
+        for r in pending {
+            match r {
+                Request::Full { seq, reply } => {
+                    seqs.push(seq);
+                    replies.push(reply);
+                }
+                Request::Delta { stream, delta, reply } => deltas.push((stream, delta, reply)),
+                Request::Open { .. } | Request::Rewind { .. } | Request::Close { .. } => {
+                    unreachable!("control ops are served on receipt")
                 }
             }
-            Err(e) => {
-                // replicate the error per requester
-                let msg = format!("{e:#}");
-                for reply in replies {
-                    let _ = reply.send(Err(anyhow!("{msg}")));
+        }
+        if !seqs.is_empty() {
+            stats.batches.fetch_add(1, Ordering::Relaxed);
+            stats.batched_requests.fetch_add(seqs.len(), Ordering::Relaxed);
+            stats.max_batch_seen.fetch_max(seqs.len(), Ordering::Relaxed);
+            match exec.forward(&seqs) {
+                Ok(out) => {
+                    let out = Arc::new(out);
+                    for (b, reply) in replies.into_iter().enumerate() {
+                        let _ = reply.send(Ok(SlotOut::new(out.clone(), b)));
+                    }
+                }
+                Err(e) => {
+                    // replicate the error per requester
+                    let msg = format!("{e:#}");
+                    for reply in replies {
+                        let _ = reply.send(Err(anyhow!("{msg}")));
+                    }
+                }
+            }
+        }
+        if !deltas.is_empty() {
+            stats.delta_waves.fetch_add(1, Ordering::Relaxed);
+            stats.batched_deltas.fetch_add(deltas.len(), Ordering::Relaxed);
+            stats.max_delta_wave.fetch_max(deltas.len(), Ordering::Relaxed);
+            // One forward_delta_batch call serves the whole wave, so the
+            // backend can fan heavy waves (e.g. post-slide rebases) across
+            // cores; like full batches, a wave-level error replicates to
+            // every requester in the wave.
+            let (wave, dreplies): (Vec<(StreamId, SeqDelta)>, Vec<SyncSender<Result<SlotOut>>>) =
+                deltas.into_iter().map(|(s, d, r)| ((s, d), r)).unzip();
+            let served = match exec.as_ref().cached() {
+                Some(c) => c.forward_delta_batch(wave),
+                None => Err(no_streams(exec.as_ref())),
+            };
+            match served {
+                Ok(outs) if outs.len() == dreplies.len() => {
+                    for (out, reply) in outs.into_iter().zip(dreplies) {
+                        let _ = reply.send(Ok(out));
+                    }
+                }
+                Ok(outs) => {
+                    let msg = format!(
+                        "forward_delta_batch returned {} slots for {} deltas",
+                        outs.len(),
+                        dreplies.len()
+                    );
+                    for reply in dreplies {
+                        let _ = reply.send(Err(anyhow!("{msg}")));
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for reply in dreplies {
+                        let _ = reply.send(Err(anyhow!("{msg}")));
+                    }
                 }
             }
         }
         if disconnected {
             break;
         }
+    }
+}
+
+/// Error for stream ops reaching a model without [`CachedForward`]
+/// support (only possible by calling the handle's stream methods
+/// directly, bypassing [`Forward::cached`] discovery).
+fn no_streams(exec: &dyn ModelBackend) -> anyhow::Error {
+    anyhow!("backend '{}' has no incremental streams", exec.descriptor())
+}
+
+/// Serve a stream-control op immediately; forward-type requests pass
+/// through (`Some`) to be coalesced into the wave. Safe to run ahead of
+/// anything queued behind it: a stream has one owner who blocks on every
+/// reply, so a control op can never overtake that stream's own pending
+/// forward.
+fn serve_control(exec: &dyn ModelBackend, r: Request) -> Option<Request> {
+    match r {
+        Request::Open { reply } => {
+            let _ = reply.send(match exec.cached() {
+                Some(c) => c.open_stream(),
+                None => Err(no_streams(exec)),
+            });
+            None
+        }
+        Request::Rewind { stream, len, reply } => {
+            let _ = reply.send(match exec.cached() {
+                Some(c) => c.rewind(stream, len),
+                None => Err(no_streams(exec)),
+            });
+            None
+        }
+        Request::Close { stream } => {
+            if let Some(c) = exec.cached() {
+                c.close_stream(stream);
+            }
+            None
+        }
+        fwd => Some(fwd),
     }
 }
 
@@ -204,6 +407,59 @@ impl Forward for ExecutorHandle {
 
     fn max_bucket(&self) -> usize {
         self.max_bucket
+    }
+
+    fn cached(&self) -> Option<&dyn CachedForward> {
+        if self.supports_streams {
+            Some(self)
+        } else {
+            None
+        }
+    }
+}
+
+impl CachedForward for ExecutorHandle {
+    fn open_stream(&self) -> Result<StreamId> {
+        let (reply, rx) = sync_channel(1);
+        self.tx
+            .send(Request::Open { reply })
+            .map_err(|_| anyhow!("executor '{}' stopped", self.name))?;
+        rx.recv().map_err(|_| anyhow!("executor '{}' dropped request", self.name))?
+    }
+
+    fn forward_delta(&self, stream: StreamId, delta: &SeqDelta) -> Result<SlotOut> {
+        self.submit_delta(stream, delta.clone())?
+            .recv()
+            .map_err(|_| anyhow!("executor '{}' dropped request", self.name))?
+    }
+
+    fn rewind(&self, stream: StreamId, len: usize) -> Result<()> {
+        let (reply, rx) = sync_channel(1);
+        self.tx
+            .send(Request::Rewind { stream, len, reply })
+            .map_err(|_| anyhow!("executor '{}' stopped", self.name))?;
+        rx.recv().map_err(|_| anyhow!("executor '{}' dropped request", self.name))?
+    }
+
+    fn close_stream(&self, stream: StreamId) {
+        // fire-and-forget: a stopped executor has no state left to free
+        let _ = self.tx.send(Request::Close { stream });
+    }
+
+    /// Wave-enqueue, like [`BatchForward::forward_batch`]: all deltas land
+    /// in the executor thread's channel together and coalesce into one
+    /// drained wave instead of paying the batch window per request.
+    fn forward_delta_batch(&self, reqs: Vec<(StreamId, SeqDelta)>) -> Result<Vec<SlotOut>> {
+        let rxs: Vec<_> = reqs
+            .into_iter()
+            .map(|(s, d)| self.submit_delta(s, d))
+            .collect::<Result<_>>()?;
+        rxs.into_iter()
+            .map(|rx| {
+                rx.recv()
+                    .map_err(|_| anyhow!("executor '{}' dropped request", self.name))?
+            })
+            .collect()
     }
 }
 

@@ -2,9 +2,16 @@
 //!
 //! Request:
 //!   {"op":"sample","dataset":"hawkes","encoder":"attnhp","method":"sd",
-//!    "gamma":10,"t_end":30.0,"seed":1,"draft_size":"draft"}
+//!    "gamma":10,"t_end":30.0,"seed":1,"draft_size":"draft","cached":true}
 //!   {"op":"sample_fleet", ...same fields..., "n_seq":8}
 //!   {"op":"ping"} | {"op":"stats"}
+//!
+//! `"cached"` (default `true`) lets the sampler use the backend's
+//! incremental-forward streams (DESIGN.md §12) when it has them;
+//! `false` forces full-window forwards — the A/B knob behind
+//! `bench_cached_forward`. Both paths return bit-identical events for the
+//! same seed (`rust/tests/cached_forward.rs`), so the flag only moves
+//! wall-clock, never a probability.
 //!
 //! Response:
 //!   {"ok":true,"events":[[t,k],...],"stats":{...}}
@@ -54,6 +61,9 @@ pub struct SampleRequest {
     pub seed: u64,
     /// draft model size (`draft` | `draft2` | `draft3`)
     pub draft_size: String,
+    /// use the backend's incremental-forward streams when available
+    /// (default `true`; `false` forces full-window forwards)
+    pub cached: bool,
 }
 
 /// Parameters of a `sample_fleet` request.
@@ -75,6 +85,7 @@ fn parse_sample_fields(j: &Json) -> SampleRequest {
         t_end: j.f64_at("t_end").unwrap_or(30.0),
         seed: j.f64_at("seed").unwrap_or(0.0) as u64,
         draft_size: j.str_at("draft_size").unwrap_or("draft").to_string(),
+        cached: j.bool_at("cached").unwrap_or(true),
     }
 }
 
@@ -88,6 +99,7 @@ fn sample_fields(op: &str, s: &SampleRequest) -> Vec<(&'static str, Json)> {
         ("t_end", Json::Num(s.t_end)),
         ("seed", Json::Num(s.seed as f64)),
         ("draft_size", Json::Str(s.draft_size.clone())),
+        ("cached", Json::Bool(s.cached)),
     ]
 }
 
@@ -191,6 +203,8 @@ pub fn fleet_ok_response(runs: &[(Vec<Event>, SampleStats)], fleet: &FleetStats)
         ("target_batches", Json::Num(fleet.target_batches as f64)),
         ("draft_occupancy", Json::Num(fleet.draft_occupancy())),
         ("target_occupancy", Json::Num(fleet.target_occupancy())),
+        ("delta_batches", Json::Num(fleet.delta_batches as f64)),
+        ("delta_seqs", Json::Num(fleet.delta_seqs as f64)),
     ]);
     obj(vec![
         ("ok", Json::Bool(true)),
@@ -249,11 +263,17 @@ mod tests {
             t_end: 42.5,
             seed: 3,
             draft_size: "draft".into(),
+            cached: false,
         });
         let line = r.to_line();
         assert_eq!(Request::parse(&line).unwrap(), r);
         assert_eq!(Request::parse(r#"{"op":"ping"}"#).unwrap(), Request::Ping);
         assert!(Request::parse(r#"{"op":"bogus"}"#).is_err());
+        // `cached` defaults to true when the field is absent
+        match Request::parse(r#"{"op":"sample"}"#).unwrap() {
+            Request::Sample(s) => assert!(s.cached),
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]
@@ -277,6 +297,7 @@ mod tests {
                 t_end: 30.0,
                 seed: 5,
                 draft_size: "draft".into(),
+                cached: true,
             },
             n_seq: 8,
         });

@@ -14,6 +14,7 @@ use super::protocol::{
     err_response, fleet_ok_response, ok_response, FleetRequest, Request, SampleRequest,
 };
 use super::router::{ModelPair, Router};
+use crate::runtime::{BatchForward, Uncached};
 use crate::sampler::{
     fleet_seeds, sample_ar_fleet, sample_sd_fleet, FleetRuns, FleetStats, Gamma, SampleCfg, SdCfg,
 };
@@ -103,18 +104,42 @@ fn handle_conn(stream: TcpStream, router: &Router, sessions: &AtomicUsize) -> Re
 /// for `seeds.len()` sequences on the fleet engine. The single-sample op
 /// is the 1-seed case — fleet(N=1) is bit-for-bit the blocking sampler
 /// (`rust/tests/fleet.rs`), so the server has exactly one dispatch.
+///
+/// `cached: false` wraps both executor handles in
+/// [`crate::runtime::Uncached`], forcing full-window forwards — the
+/// wire-level A/B knob; the events are bit-identical either way.
 fn run_fleet(
     pair: &ModelPair,
     method: &str,
     gamma: usize,
     cfg: SampleCfg,
     seeds: &[u64],
+    cached: bool,
 ) -> Result<(FleetRuns, FleetStats)> {
+    if cached {
+        dispatch_fleet(&pair.target, &pair.draft, method, gamma, cfg, seeds)
+    } else {
+        dispatch_fleet(&Uncached(&pair.target), &Uncached(&pair.draft), method, gamma, cfg, seeds)
+    }
+}
+
+fn dispatch_fleet<FT, FD>(
+    target: &FT,
+    draft: &FD,
+    method: &str,
+    gamma: usize,
+    cfg: SampleCfg,
+    seeds: &[u64],
+) -> Result<(FleetRuns, FleetStats)>
+where
+    FT: BatchForward,
+    FD: BatchForward,
+{
     match method {
-        "ar" => sample_ar_fleet(&pair.target, &cfg, seeds),
+        "ar" => sample_ar_fleet(target, &cfg, seeds),
         "sd" => {
             let sd = SdCfg { sample: cfg, gamma: Gamma::Fixed(gamma), ..Default::default() };
-            sample_sd_fleet(&pair.target, &pair.draft, &sd, seeds)
+            sample_sd_fleet(target, draft, &sd, seeds)
         }
         "sd-adaptive" => {
             let sd = SdCfg {
@@ -122,7 +147,7 @@ fn run_fleet(
                 gamma: Gamma::Adaptive { init: gamma, min: 2, max: 4 * gamma.max(1) },
                 ..Default::default()
             };
-            sample_sd_fleet(&pair.target, &pair.draft, &sd, seeds)
+            sample_sd_fleet(target, draft, &sd, seeds)
         }
         other => anyhow::bail!("unknown method '{other}' (ar|sd|sd-adaptive)"),
     }
@@ -135,7 +160,7 @@ fn run_sample(router: &Router, req: &SampleRequest) -> Result<String> {
         t_end: req.t_end,
         max_events: 16 * 1024,
     };
-    let (mut runs, _) = run_fleet(&pair, &req.method, req.gamma, cfg, &[req.seed])?;
+    let (mut runs, _) = run_fleet(&pair, &req.method, req.gamma, cfg, &[req.seed], req.cached)?;
     let (events, stats) = runs.pop().expect("one run per seed");
     Ok(ok_response(&events, &stats))
 }
@@ -157,7 +182,8 @@ fn run_sample_fleet(router: &Router, req: &FleetRequest) -> Result<String> {
         max_events: 16 * 1024,
     };
     let seeds = fleet_seeds(base.seed, req.n_seq.max(1));
-    let (runs, fleet) = run_fleet(&pair, &base.method, base.gamma, cfg, &seeds)?;
+    let (runs, fleet) =
+        run_fleet(&pair, &base.method, base.gamma, cfg, &seeds, base.cached)?;
     Ok(fleet_ok_response(&runs, &fleet))
 }
 

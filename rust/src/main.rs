@@ -9,7 +9,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 use tpp_sd::coordinator::Server;
-use tpp_sd::runtime::{backend_from_arg, Backend};
+use tpp_sd::runtime::{backend_from_arg, Backend, Uncached};
 use tpp_sd::sampler::{
     fleet_seeds, sample_ar_fleet, sample_sd_fleet, FleetRuns, Gamma, SampleCfg, SampleStats, SdCfg,
 };
@@ -32,6 +32,9 @@ commands:
                                     with that seed would print
           [--gamma-min 2] [--gamma-max 4γ]
                                     clamps of the sd-adaptive draft length
+          [--uncached]              force full-window forwards even when
+                                    the backend has incremental streams
+                                    (A/B knob; events are bit-identical)
   serve   [--listen 127.0.0.1:7077] [--max-batch 8] [--batch-window-ms 2]
 
 options (all commands):
@@ -118,12 +121,18 @@ fn sample(args: &Args) -> Result<()> {
     // the blocking sampler (rust/tests/fleet.rs), so there is one code
     // path whatever N is.
     let seeds = fleet_seeds(seed, parallel);
+    let uncached = args.has("uncached");
     let t0 = std::time::Instant::now();
     let (runs, fleet): (FleetRuns, _) = match &draft {
+        None if uncached => sample_ar_fleet(&Uncached(&target), &cfg, &seeds)?,
         None => sample_ar_fleet(&target, &cfg, &seeds)?,
         Some(d) => {
             let sd = SdCfg { sample: cfg, gamma: gamma_policy, ..Default::default() };
-            sample_sd_fleet(&target, d, &sd, &seeds)?
+            if uncached {
+                sample_sd_fleet(&Uncached(&target), &Uncached(d), &sd, &seeds)?
+            } else {
+                sample_sd_fleet(&target, d, &sd, &seeds)?
+            }
         }
     };
     let fleet_wall = t0.elapsed();

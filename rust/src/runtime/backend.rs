@@ -51,32 +51,127 @@ impl SeqInput {
 
 /// One batch slot of a [`ForwardOut`] — what a single-sequence consumer
 /// (sampler, likelihood scorer) sees. Cheap to clone (Arc-backed).
+///
+/// Rows are addressed in *absolute* sequence coordinates: a full forward
+/// serves rows `0..bucket` directly, while a delta forward
+/// ([`CachedForward::forward_delta`]) serves only rows
+/// `base_len..=base_len+m` and records `base_len` as a row offset — so
+/// samplers index rows the same way on both paths.
 #[derive(Debug, Clone)]
 pub struct SlotOut {
     out: Arc<ForwardOut>,
     b: usize,
+    /// absolute row index of the underlying output's row 0
+    row_off: usize,
 }
 
 impl SlotOut {
     /// View batch row `b` of a shared forward output.
     pub fn new(out: Arc<ForwardOut>, b: usize) -> SlotOut {
         assert!(b < out.batch);
-        SlotOut { out, b }
+        SlotOut { out, b, row_off: 0 }
+    }
+
+    /// View batch row `b` of a shared forward output whose row 0 sits at
+    /// absolute sequence row `row_off` (delta forwards).
+    pub fn with_row_offset(out: Arc<ForwardOut>, b: usize, row_off: usize) -> SlotOut {
+        assert!(b < out.batch);
+        SlotOut { out, b, row_off }
     }
 
     /// Mixture parameters of `g(τ_{row+1} | history ≤ row)`.
     pub fn mixture(&self, row: usize) -> Mixture {
-        self.out.mixture(self.b, row)
+        debug_assert!(row >= self.row_off, "row {row} below delta offset {}", self.row_off);
+        self.out.mixture(self.b, row - self.row_off)
     }
 
     /// Event-type distribution at `row`, restricted to `k` real types.
     pub fn type_dist(&self, row: usize, k: usize) -> TypeDist {
-        self.out.type_dist(self.b, row, k)
+        debug_assert!(row >= self.row_off, "row {row} below delta offset {}", self.row_off);
+        self.out.type_dist(self.b, row - self.row_off, k)
     }
 
     /// Bucket (row capacity) of the underlying forward output.
     pub fn bucket(&self) -> usize {
         self.out.bucket
+    }
+
+    /// Absolute row index this view starts at (0 for full forwards).
+    pub fn row_offset(&self) -> usize {
+        self.row_off
+    }
+}
+
+/// Identifier of an open incremental-inference stream
+/// ([`CachedForward`]). Allocated by the backend; unique per model object
+/// for that model's lifetime.
+pub type StreamId = u64;
+
+/// The *delta* form of a [`SeqInput`] against an open stream: only the
+/// events past the stream's committed prefix (DESIGN.md §12).
+///
+/// Semantics of `forward_delta(stream, delta)`: the stream is first
+/// rewound to its checkpoint after `base_len` events (so a shorter
+/// `base_len` than the stream's current length expresses a draft
+/// rejection), then the `times`/`types` events are appended and
+/// committed. If `t0` differs from the stream's window start the cache is
+/// *rebased*: allowed only with `base_len == 0`, the stream restarts from
+/// the new `t0` (the sliding-window invalidation rule).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SeqDelta {
+    /// committed events of the stream this delta extends (its checkpoint)
+    pub base_len: usize,
+    /// window-start time carried by the BOS row; must equal the stream's
+    /// unless `base_len == 0` (rebase)
+    pub t0: f64,
+    /// absolute times of the new events past `base_len`
+    pub times: Vec<f64>,
+    /// event types, parallel to `times`
+    pub types: Vec<u32>,
+}
+
+impl SeqDelta {
+    /// Total sequence length (events, BOS excluded) once applied.
+    pub fn full_len(&self) -> usize {
+        self.base_len + self.times.len()
+    }
+}
+
+/// Incremental forward passes over per-sequence streams — the O(1)-per-
+/// event alternative to re-encoding the whole history each call
+/// (DESIGN.md §12, ADR-003). Backends that can keep per-stream inference
+/// state implement this ([`crate::runtime::NativeModel`], and
+/// [`crate::coordinator::ExecutorHandle`] when its executor's model
+/// does); discovery goes through [`Forward::cached`], so samplers fall
+/// back to full [`SeqInput`] forwards on backends without it (the XLA
+/// executor's AOT graphs are fixed-shape and stateless).
+///
+/// Contract: the rows returned by [`CachedForward::forward_delta`] are
+/// **bit-identical** to the same rows of a cold full forward over the
+/// stream's committed events plus the delta (property-tested in
+/// `rust/tests/cached_forward.rs`).
+pub trait CachedForward {
+    /// Open a new empty stream (window start `t0 = 0`, no events).
+    fn open_stream(&self) -> Result<StreamId>;
+
+    /// Rewind the stream to `len` committed events, then append and
+    /// commit the delta's events; returns the rows `base_len..=base_len+m`
+    /// (absolute row coordinates via [`SlotOut::row_offset`]).
+    fn forward_delta(&self, stream: StreamId, delta: &SeqDelta) -> Result<SlotOut>;
+
+    /// Rewind the stream to `len` committed events without running any
+    /// forward math (`len` must not exceed the committed length).
+    fn rewind(&self, stream: StreamId, len: usize) -> Result<()>;
+
+    /// Release the stream's state. Unknown ids are ignored (idempotent).
+    fn close_stream(&self, stream: StreamId);
+
+    /// Run several independent stream deltas "in one call". The default
+    /// loops [`CachedForward::forward_delta`]; the serving-path handle
+    /// overrides it to enqueue the whole wave so the executor thread
+    /// coalesces the deltas like a batch.
+    fn forward_delta_batch(&self, reqs: Vec<(StreamId, SeqDelta)>) -> Result<Vec<SlotOut>> {
+        reqs.iter().map(|(s, d)| self.forward_delta(*s, d)).collect()
     }
 }
 
@@ -91,6 +186,72 @@ pub trait Forward {
 
     /// Largest sequence length (incl. BOS) a forward can take.
     fn max_bucket(&self) -> usize;
+
+    /// The incremental-stream interface, when this forward supports it
+    /// (`None` ⇒ callers use full [`SeqInput`] forwards).
+    fn cached(&self) -> Option<&dyn CachedForward> {
+        None
+    }
+}
+
+/// Adapter that hides a model's [`CachedForward`] support: forwards pass
+/// through, `cached()` reports `None`. Used to force the uncached path —
+/// the A/B arm of `bench_cached_forward`, the `"cached":false` server
+/// knob, and the equivalence suites' reference runs.
+#[derive(Debug, Clone, Copy)]
+pub struct Uncached<'a, F: ?Sized>(pub &'a F);
+
+impl<F: Forward + ?Sized> Forward for Uncached<'_, F> {
+    fn forward1(&self, seq: SeqInput) -> Result<SlotOut> {
+        self.0.forward1(seq)
+    }
+
+    fn max_bucket(&self) -> usize {
+        self.0.max_bucket()
+    }
+}
+
+impl<F: BatchForward + ?Sized> BatchForward for Uncached<'_, F> {
+    fn forward_batch(&self, seqs: Vec<SeqInput>) -> Result<Vec<SlotOut>> {
+        self.0.forward_batch(seqs)
+    }
+
+    fn max_batch(&self) -> usize {
+        BatchForward::max_batch(self.0)
+    }
+}
+
+/// RAII handle to one open stream on a [`CachedForward`] model: closes the
+/// stream on drop, so abandoned sampling runs cannot leak backend state.
+pub struct StreamGuard<'a> {
+    model: &'a dyn CachedForward,
+    id: StreamId,
+}
+
+impl<'a> StreamGuard<'a> {
+    /// Open a stream on `model` if it supports incremental forwards.
+    pub fn open<F: Forward + ?Sized>(model: &'a F) -> Result<Option<StreamGuard<'a>>> {
+        match model.cached() {
+            Some(c) => Ok(Some(StreamGuard { model: c, id: c.open_stream()? })),
+            None => Ok(None),
+        }
+    }
+
+    /// Run one delta forward on the guarded stream.
+    pub fn forward_delta(&self, delta: &SeqDelta) -> Result<SlotOut> {
+        self.model.forward_delta(self.id, delta)
+    }
+
+    /// The guarded stream's id.
+    pub fn id(&self) -> StreamId {
+        self.id
+    }
+}
+
+impl Drop for StreamGuard<'_> {
+    fn drop(&mut self) {
+        self.model.close_stream(self.id);
+    }
 }
 
 /// One loaded model, whatever computes it: batched forwards with length
@@ -131,6 +292,12 @@ pub trait ModelBackend {
         0
     }
 
+    /// The incremental-stream interface, when this model supports it
+    /// (`None` ⇒ callers use full [`ModelBackend::forward`] passes).
+    fn cached(&self) -> Option<&dyn CachedForward> {
+        None
+    }
+
     /// Human-readable `backend:dataset/encoder/size` tag for logs.
     fn descriptor(&self) -> String;
 }
@@ -143,6 +310,10 @@ impl Forward for Box<dyn ModelBackend> {
 
     fn max_bucket(&self) -> usize {
         self.as_ref().max_bucket()
+    }
+
+    fn cached(&self) -> Option<&dyn CachedForward> {
+        self.as_ref().cached()
     }
 }
 
@@ -313,5 +484,34 @@ mod tests {
         assert_eq!(s0.mixture(0).mu, vec![1.0]);
         assert_eq!(s1.mixture(0).mu, vec![2.0]);
         assert_eq!(s0.bucket(), 1);
+        assert_eq!(s0.row_offset(), 0);
+    }
+
+    #[test]
+    fn slot_out_row_offset_maps_absolute_rows() {
+        // 1 batch row × 3 rows of a delta output whose row 0 sits at
+        // absolute row 40: reads at rows 40..=42 map to local 0..=2.
+        let out = ForwardOut::from_raw(
+            1,
+            3,
+            1,
+            2,
+            vec![0.0; 3],
+            vec![10.0, 11.0, 12.0],
+            vec![-0.5; 3],
+            vec![0.0; 6],
+        );
+        let s = SlotOut::with_row_offset(Arc::new(out), 0, 40);
+        assert_eq!(s.row_offset(), 40);
+        assert_eq!(s.mixture(40).mu, vec![10.0]);
+        assert_eq!(s.mixture(42).mu, vec![12.0]);
+        assert_eq!(s.type_dist(41, 2).probs.len(), 2);
+    }
+
+    #[test]
+    fn seq_delta_full_len() {
+        let d = SeqDelta { base_len: 3, t0: 0.0, times: vec![1.0, 2.0], types: vec![0, 1] };
+        assert_eq!(d.full_len(), 5);
+        assert_eq!(SeqDelta::default().full_len(), 0);
     }
 }

@@ -25,7 +25,9 @@ use std::rc::Rc;
 use anyhow::{bail, Context, Result};
 use xla::FromRawBytes;
 
-use super::backend::{Backend, Forward, ForwardOut, ModelBackend, SeqInput, SlotOut};
+use super::backend::{
+    Backend, CachedForward, Forward, ForwardOut, ModelBackend, SeqInput, SlotOut,
+};
 use super::manifest::{ArtifactDir, Manifest};
 use crate::util::json::Json;
 
@@ -375,6 +377,16 @@ impl ModelBackend for ModelExecutor {
 
     fn call_count(&self) -> usize {
         ModelExecutor::call_count(self)
+    }
+
+    /// Explicitly uncached: the AOT PJRT graphs are fixed-shape and keep
+    /// no state between calls, so there is no incremental-inference seam
+    /// to expose — samplers detect the `None` and fall back to full
+    /// [`SeqInput`] forwards (DESIGN.md §12). A KV-cache variant would
+    /// need per-bucket decode graphs compiled with explicit cache
+    /// input/output buffers (future work, ADR-003).
+    fn cached(&self) -> Option<&dyn CachedForward> {
+        None
     }
 
     fn descriptor(&self) -> String {

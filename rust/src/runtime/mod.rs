@@ -12,7 +12,10 @@ pub mod executor;
 pub mod manifest;
 pub mod native;
 
-pub use backend::{Backend, BatchForward, Forward, ForwardOut, ModelBackend, SeqInput, SlotOut};
+pub use backend::{
+    Backend, BatchForward, CachedForward, Forward, ForwardOut, ModelBackend, SeqDelta, SeqInput,
+    SlotOut, StreamGuard, StreamId, Uncached,
+};
 pub use manifest::{ArtifactDir, Manifest};
 pub use native::{NativeBackend, NativeModel};
 

@@ -21,11 +21,15 @@
 //! batched-call contract as the AOT artifacts, so the coordinator's batcher
 //! and every sampler run unchanged on top of it.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
-use anyhow::{bail, Context as _, Result};
+use anyhow::{bail, ensure, Context as _, Result};
 
-use super::backend::{Backend, ForwardOut, ModelBackend, SeqInput};
+use super::backend::{
+    Backend, CachedForward, ForwardOut, ModelBackend, SeqDelta, SeqInput, SlotOut, StreamId,
+};
 use crate::util::json::{obj, Json};
 
 /// Sequence-length buckets (incl. BOS), mirroring `config.BUCKETS`.
@@ -56,6 +60,46 @@ const MIN_PARALLEL_ROWS: usize = 256;
 fn fill_workers() -> usize {
     static WORKERS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
     *WORKERS.get_or_init(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+/// Partition `jobs` into ≤ `workers` contiguous groups and run `f` over
+/// every job, fanning the groups across scoped threads (the calling
+/// thread works group 0). The shared fan-out scaffold of batched full
+/// forwards and delta waves — one copy, so both paths always carry the
+/// same parallelism policy. `workers <= 1` runs everything on the caller
+/// (the latency path pays no spawn cost).
+fn fan_groups<T: Send>(jobs: Vec<T>, workers: usize, f: impl Fn(T) + Sync) {
+    if workers <= 1 || jobs.len() <= 1 {
+        for j in jobs {
+            f(j);
+        }
+        return;
+    }
+    let per = jobs.len().div_ceil(workers.min(jobs.len()));
+    let mut groups: Vec<Vec<T>> = Vec::with_capacity(workers);
+    let mut it = jobs.into_iter();
+    loop {
+        let g: Vec<T> = it.by_ref().take(per).collect();
+        if g.is_empty() {
+            break;
+        }
+        groups.push(g);
+    }
+    std::thread::scope(|sc| {
+        let f = &f;
+        let mut rest = groups.split_off(1);
+        for group in rest.drain(..) {
+            sc.spawn(move || {
+                for j in group {
+                    f(j);
+                }
+            });
+        }
+        // the calling thread works too (group 0)
+        for j in groups.remove(0) {
+            f(j);
+        }
+    });
 }
 
 /// Model-size ladder: `(name, mean shift vs target, type-head amplitude)`.
@@ -231,7 +275,67 @@ impl Backend for NativeBackend {
             excite: def.excite,
             decay: def.decay,
             calls: AtomicUsize::new(0),
+            streams: Mutex::new(BTreeMap::new()),
+            next_stream: AtomicU64::new(1),
         }))
+    }
+}
+
+/// The full recurrent state of the native model after some event prefix:
+/// everything [`NativeModel::write_row`] conditions on. Because the
+/// excitation recursion is a pure fold over events, checkpointing this
+/// struct per position makes rewind *exact* — restoring a checkpoint
+/// reproduces the forward recursion bit-for-bit (DESIGN.md §12).
+#[derive(Debug, Clone, Copy)]
+struct StreamState {
+    /// decayed-excitation feature Σ_i exp(-decay (t_anchor - t_i))
+    s: f64,
+    /// time of the last visible event (window start for the BOS row)
+    t_anchor: f64,
+    /// most recent visible event type (`K_MAX` for the BOS row)
+    last_k: usize,
+}
+
+impl StreamState {
+    /// State of an empty window starting at `t0` (the BOS row).
+    fn bos(t0: f64) -> StreamState {
+        StreamState { s: 0.0, t_anchor: t0, last_k: K_MAX }
+    }
+
+    /// Fold one event into the state. This is THE recursion — both the
+    /// cold [`NativeModel::fill_slot`] path and the incremental
+    /// [`CachedForward::forward_delta`] path call it, so their float-op
+    /// sequences (and therefore their outputs) are identical by
+    /// construction.
+    #[inline]
+    fn advance(&mut self, t: f64, k: u32, decay: f64) {
+        let dt = (t - self.t_anchor).max(0.0);
+        self.s = self.s * (-decay * dt).exp() + 1.0;
+        self.t_anchor = t;
+        self.last_k = k as usize;
+    }
+}
+
+/// Per-stream incremental-inference state: the window start plus one
+/// [`StreamState`] checkpoint per committed prefix length
+/// (`states[i]` = state after `i` events), so `rewind(len)` is a
+/// truncation and a draft forward re-derives nothing.
+#[derive(Debug)]
+struct NativeStream {
+    /// window-start time the stream was (re)based on
+    t0: f64,
+    /// `states[i]` = recurrent state after the first `i` committed events
+    states: Vec<StreamState>,
+}
+
+impl NativeStream {
+    fn new() -> NativeStream {
+        NativeStream { t0: 0.0, states: vec![StreamState::bos(0.0)] }
+    }
+
+    /// Committed events.
+    fn len(&self) -> usize {
+        self.states.len() - 1
     }
 }
 
@@ -254,6 +358,10 @@ pub struct NativeModel {
     /// decay rate of the history feature
     decay: f64,
     calls: AtomicUsize,
+    /// open incremental streams ([`CachedForward`])
+    streams: Mutex<BTreeMap<StreamId, NativeStream>>,
+    /// next stream id to hand out
+    next_stream: AtomicU64,
 }
 
 impl NativeModel {
@@ -314,25 +422,21 @@ impl NativeModel {
     ) {
         let n = seq.times.len();
         // Hawkes-style recursion: s_r = Σ_{i<r} exp(-decay (t_anchor - t_i)),
-        // updated in O(1) as each event becomes visible.
-        let mut s = 0.0f64;
-        let mut t_anchor = seq.t0;
-        let mut last_k = K_MAX;
+        // updated in O(1) as each event becomes visible. The per-event fold
+        // is StreamState::advance — the same code the CachedForward streams
+        // run, so cached rows are bit-identical to cold rows.
+        let mut st = StreamState::bos(seq.t0);
         let real_rows = bucket.min(n + 1);
         for row in 0..real_rows {
             if row >= 1 {
-                let t = seq.times[row - 1];
-                let dt = (t - t_anchor).max(0.0);
-                s = s * (-self.decay * dt).exp() + 1.0;
-                t_anchor = t;
-                last_k = seq.types[row - 1] as usize;
+                st.advance(seq.times[row - 1], seq.types[row - 1], self.decay);
             }
             let m0 = row * N_MIX;
             let l0 = row * K_MAX;
             self.write_row(
-                s,
-                t_anchor,
-                last_k,
+                st.s,
+                st.t_anchor,
+                st.last_k,
                 &mut log_w[m0..m0 + N_MIX],
                 &mut mu[m0..m0 + N_MIX],
                 &mut log_sigma[m0..m0 + N_MIX],
@@ -351,6 +455,173 @@ impl NativeModel {
             log_sigma.copy_within(src_m..src_m + N_MIX, m0);
             logits.copy_within(src_l..src_l + K_MAX, l0);
         }
+    }
+}
+
+impl NativeModel {
+    /// The whole delta-forward computation against one (already
+    /// extracted) stream: validate, rewind/rebase, fold the new events,
+    /// emit rows `base_len..=base_len+m`. Shared by the locked
+    /// single-delta path and the parallel wave path, so both produce
+    /// identical checkpoints and rows.
+    fn delta_on(
+        &self,
+        stream: StreamId,
+        st: &mut NativeStream,
+        delta: &SeqDelta,
+    ) -> Result<SlotOut> {
+        // Delta rows must still fit the model's positional capacity
+        // (BOS + events), exactly like a full forward of the same length.
+        self.pick_bucket(delta.full_len() + 1)?;
+        if delta.t0 != st.t0 {
+            // Window slide: the committed prefix was computed against a
+            // different BOS time, so no checkpoint is reusable — rebase.
+            ensure!(
+                delta.base_len == 0,
+                "stream {stream}: t0 changed ({} -> {}) with base_len {} != 0 \
+                 (slides must rebase from an empty prefix)",
+                st.t0,
+                delta.t0,
+                delta.base_len
+            );
+            st.t0 = delta.t0;
+            st.states.clear();
+            st.states.push(StreamState::bos(delta.t0));
+        }
+        ensure!(
+            delta.base_len <= st.len(),
+            "stream {stream}: rewind to {} past the committed length {}",
+            delta.base_len,
+            st.len()
+        );
+        st.states.truncate(delta.base_len + 1);
+
+        let m = delta.times.len();
+        let rows = m + 1;
+        let mut log_w = vec![0f32; rows * N_MIX];
+        let mut mu = vec![0f32; rows * N_MIX];
+        let mut log_sigma = vec![0f32; rows * N_MIX];
+        let mut logits = vec![0f32; rows * K_MAX];
+        let mut cur = *st.states.last().unwrap();
+        for row in 0..rows {
+            if row >= 1 {
+                cur.advance(delta.times[row - 1], delta.types[row - 1], self.decay);
+                st.states.push(cur);
+            }
+            let m0 = row * N_MIX;
+            let l0 = row * K_MAX;
+            self.write_row(
+                cur.s,
+                cur.t_anchor,
+                cur.last_k,
+                &mut log_w[m0..m0 + N_MIX],
+                &mut mu[m0..m0 + N_MIX],
+                &mut log_sigma[m0..m0 + N_MIX],
+                &mut logits[l0..l0 + K_MAX],
+            );
+        }
+        let out = ForwardOut::from_raw(1, rows, N_MIX, K_MAX, log_w, mu, log_sigma, logits);
+        Ok(SlotOut::with_row_offset(Arc::new(out), 0, delta.base_len))
+    }
+}
+
+impl CachedForward for NativeModel {
+    fn open_stream(&self) -> Result<StreamId> {
+        let id = self.next_stream.fetch_add(1, Ordering::Relaxed);
+        self.streams.lock().unwrap().insert(id, NativeStream::new());
+        Ok(id)
+    }
+
+    /// O(base-rewind + new events) — independent of the committed history
+    /// length. Rows `base_len..=base_len+m` come out bit-identical to a
+    /// cold full forward of the same prefix because both paths run
+    /// [`StreamState::advance`] over the same event sequence.
+    fn forward_delta(&self, stream: StreamId, delta: &SeqDelta) -> Result<SlotOut> {
+        let mut streams = self.streams.lock().unwrap();
+        let st = streams
+            .get_mut(&stream)
+            .with_context(|| format!("unknown stream {stream} (closed or never opened)"))?;
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.delta_on(stream, st, delta)
+    }
+
+    /// Wave of independent deltas with the same fan-out policy as batched
+    /// full forwards: tiny waves (the common draft-step case — a handful
+    /// of 1-event deltas, far below thread-spawn cost) run serially on
+    /// the calling thread; heavy waves (e.g. every stream rebasing after
+    /// a window slide, O(W) replay each) fan across cores. Each stream is
+    /// temporarily extracted from the registry so the workers touch
+    /// disjoint state. `call_count` counts one call per DELTA on both
+    /// paths (a delta is one logical single-sequence forward), unlike
+    /// batched full forwards, which count one call per batch.
+    fn forward_delta_batch(&self, reqs: Vec<(StreamId, SeqDelta)>) -> Result<Vec<SlotOut>> {
+        let total_rows: usize = reqs.iter().map(|(_, d)| d.times.len() + 1).sum();
+        let mut ids: Vec<StreamId> = reqs.iter().map(|(s, _)| *s).collect();
+        ids.sort_unstable();
+        let has_dup = ids.windows(2).any(|w| w[0] == w[1]);
+        if reqs.len() <= 1 || total_rows < MIN_PARALLEL_ROWS || has_dup {
+            return reqs.iter().map(|(s, d)| self.forward_delta(*s, d)).collect();
+        }
+        // Extract every stream up front (all-or-nothing, so an unknown id
+        // cannot leave the registry half-drained).
+        let mut taken: Vec<NativeStream> = Vec::with_capacity(reqs.len());
+        {
+            let mut streams = self.streams.lock().unwrap();
+            for (s, _) in &reqs {
+                ensure!(
+                    streams.contains_key(s),
+                    "unknown stream {s} (closed or never opened)"
+                );
+            }
+            for (s, _) in &reqs {
+                taken.push(streams.remove(s).expect("presence checked above"));
+            }
+        }
+        self.calls.fetch_add(reqs.len(), Ordering::Relaxed);
+        let mut results: Vec<Option<Result<SlotOut>>> =
+            reqs.iter().map(|_| None).collect();
+        {
+            type DeltaJob<'a> =
+                (StreamId, &'a SeqDelta, &'a mut NativeStream, &'a mut Option<Result<SlotOut>>);
+            let jobs: Vec<DeltaJob> = reqs
+                .iter()
+                .zip(taken.iter_mut())
+                .zip(results.iter_mut())
+                .map(|(((s, d), st), r)| (*s, d, st, r))
+                .collect();
+            let workers = fill_workers().min(jobs.len());
+            fan_groups(jobs, workers, |(s, d, st, r)| *r = Some(self.delta_on(s, st, d)));
+        }
+        // Re-register every stream, even those whose delta failed — the
+        // owner decides whether to retry, rebase or close.
+        {
+            let mut streams = self.streams.lock().unwrap();
+            for ((s, _), st) in reqs.iter().zip(taken) {
+                streams.insert(*s, st);
+            }
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("every wave job ran"))
+            .collect()
+    }
+
+    fn rewind(&self, stream: StreamId, len: usize) -> Result<()> {
+        let mut streams = self.streams.lock().unwrap();
+        let st = streams
+            .get_mut(&stream)
+            .with_context(|| format!("unknown stream {stream} (closed or never opened)"))?;
+        ensure!(
+            len <= st.len(),
+            "stream {stream}: rewind to {len} past the committed length {}",
+            st.len()
+        );
+        st.states.truncate(len + 1);
+        Ok(())
+    }
+
+    fn close_stream(&self, stream: StreamId) {
+        self.streams.lock().unwrap().remove(&stream);
     }
 }
 
@@ -394,37 +665,9 @@ impl ModelBackend for NativeModel {
             } else {
                 fill_workers().min(filled)
             };
-            if workers <= 1 {
-                for (b, lw, m, ls, lg) in stripes {
-                    self.fill_slot(seqs.get(b).unwrap_or(&empty), bucket, lw, m, ls, lg);
-                }
-            } else {
-                let per = filled.div_ceil(workers);
-                let mut groups: Vec<Vec<SlotStripe>> = Vec::with_capacity(workers);
-                let mut it = stripes.into_iter();
-                loop {
-                    let g: Vec<SlotStripe> = it.by_ref().take(per).collect();
-                    if g.is_empty() {
-                        break;
-                    }
-                    groups.push(g);
-                }
-                std::thread::scope(|sc| {
-                    let mut rest = groups.split_off(1);
-                    for group in rest.drain(..) {
-                        let empty = &empty;
-                        sc.spawn(move || {
-                            for (b, lw, m, ls, lg) in group {
-                                self.fill_slot(seqs.get(b).unwrap_or(empty), bucket, lw, m, ls, lg);
-                            }
-                        });
-                    }
-                    // the calling thread works too (group 0)
-                    for (b, lw, m, ls, lg) in groups.remove(0) {
-                        self.fill_slot(seqs.get(b).unwrap_or(&empty), bucket, lw, m, ls, lg);
-                    }
-                });
-            }
+            fan_groups(stripes, workers, |(b, lw, m, ls, lg)| {
+                self.fill_slot(seqs.get(b).unwrap_or(&empty), bucket, lw, m, ls, lg)
+            });
         }
         let pad_m = seqs.len() * bucket * N_MIX..(seqs.len() + 1) * bucket * N_MIX;
         let pad_l = seqs.len() * bucket * K_MAX..(seqs.len() + 1) * bucket * K_MAX;
@@ -455,6 +698,10 @@ impl ModelBackend for NativeModel {
 
     fn call_count(&self) -> usize {
         self.calls.load(Ordering::Relaxed)
+    }
+
+    fn cached(&self) -> Option<&dyn CachedForward> {
+        Some(self)
     }
 
     fn descriptor(&self) -> String {
@@ -558,6 +805,100 @@ mod tests {
             let row = s.times.len();
             assert_eq!(batch.mixture(b, row), single.mixture(0, row), "slot {b}");
         }
+    }
+
+    #[test]
+    fn stream_delta_matches_cold_forward() {
+        let m = model("multihawkes", "target");
+        let c = m.cached().expect("native models support cached forwards");
+        let full = seq(&[0.4, 0.9, 1.7, 2.0], &[1, 0, 1, 0]);
+        let sid = c.open_stream().unwrap();
+        // feed in two chunks: [e0, e1] then [e2, e3]
+        let d1 = SeqDelta { base_len: 0, t0: 0.0, times: vec![0.4, 0.9], types: vec![1, 0] };
+        let out1 = c.forward_delta(sid, &d1).unwrap();
+        let d2 = SeqDelta { base_len: 2, t0: 0.0, times: vec![1.7, 2.0], types: vec![1, 0] };
+        let out2 = c.forward_delta(sid, &d2).unwrap();
+        let cold = m.forward(std::slice::from_ref(&full)).unwrap();
+        for row in 0..=2 {
+            assert_eq!(out1.mixture(row), cold.mixture(0, row), "chunk 1 row {row}");
+        }
+        for row in 2..=4 {
+            assert_eq!(out2.mixture(row), cold.mixture(0, row), "chunk 2 row {row}");
+            assert_eq!(
+                out2.type_dist(row, 2).probs,
+                cold.type_dist(0, row, 2).probs,
+                "chunk 2 type row {row}"
+            );
+        }
+        c.close_stream(sid);
+        assert!(c.forward_delta(sid, &d1).is_err(), "closed stream must reject");
+    }
+
+    #[test]
+    fn stream_rewind_restores_checkpoints_exactly() {
+        let m = model("hawkes", "draft");
+        let c = m.cached().unwrap();
+        let sid = c.open_stream().unwrap();
+        let d = SeqDelta {
+            base_len: 0,
+            t0: 0.0,
+            times: vec![0.3, 0.8, 1.1, 1.9],
+            types: vec![0, 0, 0, 0],
+        };
+        let first = c.forward_delta(sid, &d).unwrap();
+        // rewind to 2 events and extend with a DIFFERENT continuation
+        let alt = SeqDelta { base_len: 2, t0: 0.0, times: vec![2.5], types: vec![0] };
+        let redone = c.forward_delta(sid, &alt).unwrap();
+        // row 2 (state after the shared prefix) must be bit-identical
+        assert_eq!(first.mixture(2), redone.mixture(2));
+        // row 3 now reflects the alternative event, matching a cold run
+        let cold = m
+            .forward(std::slice::from_ref(&seq(&[0.3, 0.8, 2.5], &[0, 0, 0])))
+            .unwrap();
+        assert_eq!(redone.mixture(3), cold.mixture(0, 3));
+        // explicit rewind past the committed length is an error
+        assert!(c.rewind(sid, 10).is_err());
+        assert!(c.rewind(sid, 3).is_ok());
+        c.close_stream(sid);
+        c.close_stream(sid); // idempotent
+    }
+
+    #[test]
+    fn stream_rebase_on_t0_change() {
+        let m = model("hawkes", "target");
+        let c = m.cached().unwrap();
+        let sid = c.open_stream().unwrap();
+        let d = SeqDelta { base_len: 0, t0: 0.0, times: vec![0.5], types: vec![0] };
+        c.forward_delta(sid, &d).unwrap();
+        // t0 change with a non-zero base is the slide bug this guards
+        let bad = SeqDelta { base_len: 1, t0: 2.0, times: vec![2.5], types: vec![0] };
+        assert!(c.forward_delta(sid, &bad).is_err(), "slide without rebase must fail");
+        // rebase: base_len 0, new t0 — equals a cold forward with that t0
+        let rb = SeqDelta { base_len: 0, t0: 2.0, times: vec![2.5, 3.0], types: vec![0, 0] };
+        let out = c.forward_delta(sid, &rb).unwrap();
+        let cold = m
+            .forward(&[SeqInput { t0: 2.0, times: vec![2.5, 3.0], types: vec![0, 0] }])
+            .unwrap();
+        for row in 0..=2 {
+            assert_eq!(out.mixture(row), cold.mixture(0, row), "rebased row {row}");
+        }
+        c.close_stream(sid);
+    }
+
+    #[test]
+    fn stream_delta_respects_bucket_capacity() {
+        let m = model("hawkes", "target");
+        let c = m.cached().unwrap();
+        let sid = c.open_stream().unwrap();
+        // 512 events + BOS = 513 positions > max bucket 512
+        let d = SeqDelta {
+            base_len: 0,
+            t0: 0.0,
+            times: (0..512).map(|i| i as f64 * 0.1).collect(),
+            types: vec![0; 512],
+        };
+        assert!(c.forward_delta(sid, &d).is_err(), "oversized delta must fail like a full forward");
+        c.close_stream(sid);
     }
 
     #[test]

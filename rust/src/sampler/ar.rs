@@ -15,7 +15,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::events::Event;
-use crate::runtime::{Forward, SeqInput, SlotOut};
+use crate::runtime::{Forward, SeqDelta, SeqInput, SlotOut, StreamGuard};
 use crate::util::rng::Rng;
 
 use super::context::Context;
@@ -52,6 +52,12 @@ pub struct ArSession {
     stats: SampleStats,
     done: bool,
     started: Instant,
+    /// events of the current window a cached-forward stream has committed
+    /// (DESIGN.md §12); 0 until the first forward and after every slide
+    cursor: usize,
+    /// [`Context::epoch`] snapshot — a mismatch means the window slid and
+    /// the stream must rebase
+    seen_epoch: usize,
 }
 
 impl ArSession {
@@ -64,6 +70,8 @@ impl ArSession {
             stats: SampleStats::default(),
             done: false,
             started: Instant::now(),
+            cursor: 0,
+            seen_epoch: 0,
             cfg,
             rng,
         };
@@ -82,6 +90,17 @@ impl ArSession {
         }
     }
 
+    /// Delta form of [`ArSession::pending_input`] against the session's
+    /// target stream: only the events the stream has not committed yet —
+    /// O(1) per step on the cached path. `None` once done.
+    pub fn pending_delta(&self) -> Option<SeqDelta> {
+        if self.done {
+            None
+        } else {
+            Some(self.ctx.seq_delta(&[], self.cursor))
+        }
+    }
+
     /// True once the sampling window closed or the event cap was hit.
     pub fn is_done(&self) -> bool {
         self.done
@@ -94,6 +113,9 @@ impl ArSession {
             return;
         }
         self.stats.target_forwards += 1;
+        // The forward consumed the whole pending input: on the cached
+        // path, the stream is now committed through the current window.
+        self.cursor = self.ctx.len();
         let row = self.ctx.next_row(0);
         let tau = fwd.mixture(row).sample(&mut self.rng);
         let k = fwd.type_dist(row, self.cfg.num_types).sample(&mut self.rng) as u32;
@@ -105,6 +127,11 @@ impl ArSession {
         let e = Event::new(t, k);
         self.out.push(e);
         self.ctx.push(e);
+        if self.ctx.epoch() != self.seen_epoch {
+            // Window slid: stream checkpoints are stale — rebase from 0.
+            self.seen_epoch = self.ctx.epoch();
+            self.cursor = 0;
+        }
         if self.out.len() >= self.cfg.max_events {
             self.finish();
         }
@@ -133,15 +160,21 @@ impl ArSession {
 }
 
 /// Sample one sequence autoregressively from `target` (blocking driver
-/// over [`ArSession`]).
+/// over [`ArSession`]). Uses the backend's incremental stream when it has
+/// one ([`Forward::cached`]), making each AR step O(1) instead of O(L);
+/// the outputs are bit-identical either way (`rust/tests/cached_forward.rs`).
 pub fn sample_ar<F: Forward + ?Sized>(
     target: &F,
     cfg: &SampleCfg,
     rng: &mut Rng,
 ) -> Result<(Vec<Event>, SampleStats)> {
     let mut session = ArSession::new(cfg.clone(), target.max_bucket(), rng.clone());
-    while let Some(seq) = session.pending_input() {
-        let fwd = target.forward1(seq)?;
+    let stream = StreamGuard::open(target)?;
+    while !session.is_done() {
+        let fwd = match &stream {
+            Some(g) => g.forward_delta(&session.pending_delta().expect("pending delta"))?,
+            None => target.forward1(session.pending_input().expect("pending input"))?,
+        };
         session.advance(&fwd);
     }
     *rng = session.rng().clone();

@@ -6,7 +6,7 @@
 //! so their comparison stays apples-to-apples.
 
 use crate::events::Event;
-use crate::runtime::SeqInput;
+use crate::runtime::{SeqDelta, SeqInput};
 
 /// The rolling context window shared by AR and SD sampling.
 #[derive(Debug, Clone)]
@@ -55,18 +55,33 @@ impl Context {
         self.window.is_empty()
     }
 
-    /// Append one accepted event, truncating the window if the *next* round
+    /// Append one accepted event, sliding the window if the *next* round
     /// (current events + BOS + margin + 1) would overflow the capacity.
     pub fn push(&mut self, e: Event) {
         debug_assert!(e.t >= self.last_time());
         self.window.push(e);
         self.total_events += 1;
         if self.window.len() + 1 + self.margin + 1 > self.capacity {
-            let keep_from = self.window.len() / 2;
-            self.t0 = self.window[keep_from - 1].t;
-            self.window.drain(..keep_from);
-            self.truncations += 1;
+            self.slide();
         }
+    }
+
+    /// The explicit window-slide story (DESIGN.md §12): drop the oldest
+    /// half of the window and hand the BOS row the last dropped event's
+    /// timestamp. Every slide bumps [`Context::epoch`] — cached-forward
+    /// cursors watch it, because a slide renumbers window positions and
+    /// moves `t0`, invalidating every stream checkpoint at once.
+    fn slide(&mut self) {
+        let keep_from = self.window.len() / 2;
+        self.t0 = self.window[keep_from - 1].t;
+        self.window.drain(..keep_from);
+        self.truncations += 1;
+    }
+
+    /// Number of window slides so far. Monotone; sessions snapshot it to
+    /// detect that their incremental-forward cursors went stale.
+    pub fn epoch(&self) -> usize {
+        self.truncations
     }
 
     /// Model input for the current window plus `extra` candidate events.
@@ -78,6 +93,28 @@ impl Context {
             types.push(e.k);
         }
         SeqInput { t0: self.t0, times, types }
+    }
+
+    /// Delta form of [`Context::seq_input`] against a stream that has
+    /// already committed the first `base_len` events of (window ++ extra):
+    /// carries only the events past `base_len`. O(new events), which is
+    /// what makes cached sampling O(1) per event.
+    pub fn seq_delta(&self, extra: &[Event], base_len: usize) -> SeqDelta {
+        let w = self.window.len();
+        debug_assert!(base_len <= w + extra.len(), "cursor {base_len} beyond input");
+        let m = (w + extra.len()).saturating_sub(base_len);
+        let mut times = Vec::with_capacity(m);
+        let mut types = Vec::with_capacity(m);
+        let it = self
+            .window
+            .iter()
+            .skip(base_len.min(w))
+            .chain(extra.iter().skip(base_len.saturating_sub(w)));
+        for e in it {
+            times.push(e.t);
+            types.push(e.k);
+        }
+        SeqDelta { base_len, t0: self.t0, times, types }
     }
 
     /// Output row that parameterizes the next event's distribution when
@@ -116,6 +153,43 @@ mod tests {
         assert_eq!(s.t0, 0.0);
         assert_eq!(c.next_row(1), 3);
         assert_eq!(s.len_with_bos(), 4);
+    }
+
+    #[test]
+    fn seq_delta_carries_only_new_events() {
+        let mut c = Context::new(64, 4);
+        c.push(Event::new(1.0, 3));
+        c.push(Event::new(2.0, 1));
+        let extra = [Event::new(2.5, 0), Event::new(3.0, 2)];
+        // cursor inside the window
+        let d = c.seq_delta(&extra, 1);
+        assert_eq!(d.base_len, 1);
+        assert_eq!(d.times, vec![2.0, 2.5, 3.0]);
+        assert_eq!(d.types, vec![1, 0, 2]);
+        // cursor inside the extras
+        let d = c.seq_delta(&extra, 3);
+        assert_eq!(d.times, vec![3.0]);
+        assert_eq!(d.types, vec![2]);
+        // cursor at the full length: empty delta
+        let d = c.seq_delta(&extra, 4);
+        assert!(d.times.is_empty());
+        assert_eq!(d.full_len(), 4);
+        // consistency with the full input
+        let full = c.seq_input(&extra);
+        let d0 = c.seq_delta(&extra, 0);
+        assert_eq!(d0.times, full.times);
+        assert_eq!(d0.t0, full.t0);
+    }
+
+    #[test]
+    fn epoch_counts_slides() {
+        let mut c = Context::new(16, 2);
+        assert_eq!(c.epoch(), 0);
+        for i in 0..14 {
+            c.push(Event::new(i as f64 + 1.0, 0));
+        }
+        assert!(c.epoch() >= 1);
+        assert_eq!(c.epoch(), c.truncations);
     }
 
     #[test]

@@ -23,11 +23,21 @@
 //! to running the blocking samplers sequentially with the same seeds, for
 //! every fleet size and interleaving. Property-tested in
 //! `rust/tests/fleet.rs`.
+//!
+//! **Incremental streams** (DESIGN.md §12): when a role's model exposes
+//! [`CachedForward`], the engine opens one stream per session and ships
+//! [`SeqDelta`]s instead of full windows — each draft step then carries
+//! one event rather than the whole history, and the deltas of a wave
+//! co-batch just like full inputs. Rows are bit-identical on both paths
+//! (`rust/tests/cached_forward.rs`), so caching never moves a
+//! probability either.
 
 use anyhow::{ensure, Result};
 
 use crate::events::Event;
-use crate::runtime::{BatchForward, SeqInput, SlotOut};
+use crate::runtime::{
+    BatchForward, CachedForward, Forward as _, SeqDelta, SeqInput, SlotOut, StreamId,
+};
 use crate::util::rng::Rng;
 
 use super::ar::{ArSession, SampleCfg};
@@ -44,15 +54,24 @@ pub enum ModelRole {
 }
 
 /// A resumable per-sequence sampling state machine the engine can drive:
-/// it yields inputs, names the model that must run them, and consumes the
-/// forward results. Implemented by [`SdSession`] and [`ArSession`].
+/// it yields inputs (full or delta form), names the model that must run
+/// them, and consumes the forward results. Implemented by [`SdSession`]
+/// and [`ArSession`].
 pub trait FleetSession {
-    /// Which model the pending input is for (only consulted while
-    /// [`FleetSession::pending_input`] is `Some`).
+    /// Which model the pending input is for (only consulted while the
+    /// session is not done).
     fn role(&self) -> ModelRole;
+
+    /// True once the session needs no more forwards.
+    fn is_done(&self) -> bool;
 
     /// The model input the next step needs, or `None` once done.
     fn pending_input(&self) -> Option<SeqInput>;
+
+    /// The pending input as a delta against the [`FleetSession::role`]
+    /// model's incremental stream (only consulted when that model has
+    /// one), or `None` once done.
+    fn pending_delta(&self) -> Option<SeqDelta>;
 
     /// Feed the forward result for the pending input and advance.
     fn advance(&mut self, fwd: &SlotOut);
@@ -66,8 +85,16 @@ impl FleetSession for SdSession {
         SdSession::role(self)
     }
 
+    fn is_done(&self) -> bool {
+        SdSession::is_done(self)
+    }
+
     fn pending_input(&self) -> Option<SeqInput> {
         SdSession::pending_input(self)
+    }
+
+    fn pending_delta(&self) -> Option<SeqDelta> {
+        SdSession::pending_delta(self)
     }
 
     fn advance(&mut self, fwd: &SlotOut) {
@@ -84,8 +111,16 @@ impl FleetSession for ArSession {
         ModelRole::Target
     }
 
+    fn is_done(&self) -> bool {
+        ArSession::is_done(self)
+    }
+
     fn pending_input(&self) -> Option<SeqInput> {
         ArSession::pending_input(self)
+    }
+
+    fn pending_delta(&self) -> Option<SeqDelta> {
+        ArSession::pending_delta(self)
     }
 
     fn advance(&mut self, fwd: &SlotOut) {
@@ -106,14 +141,19 @@ impl FleetSession for ArSession {
 pub struct FleetStats {
     /// engine steps (gather → batch → fan-out cycles)
     pub steps: usize,
-    /// batched draft-model calls issued
+    /// batched draft-model calls issued (full-input and delta waves)
     pub draft_batches: usize,
     /// Σ sequences over draft batches
     pub draft_seqs: usize,
-    /// batched target-model calls issued
+    /// batched target-model calls issued (full-input and delta waves)
     pub target_batches: usize,
     /// Σ sequences over target batches
     pub target_seqs: usize,
+    /// of the batches above, how many were delta waves on incremental
+    /// streams (the cached path; 0 on backends without [`CachedForward`])
+    pub delta_batches: usize,
+    /// Σ sequences over delta waves
+    pub delta_seqs: usize,
 }
 
 impl FleetStats {
@@ -189,10 +229,63 @@ where
     Ok((sessions.into_iter().map(FleetSession::into_output).collect(), fleet))
 }
 
+/// Per-session stream ids of one model role in a fleet run, opened lazily
+/// on a [`CachedForward`] model. Streams of finished sessions are closed
+/// eagerly; the `Drop` impl closes whatever is left, so an aborted drive
+/// (forward error) cannot leak backend state.
+struct RoleStreams<'a> {
+    cached: Option<&'a dyn CachedForward>,
+    ids: Vec<Option<StreamId>>,
+}
+
+impl<'a> RoleStreams<'a> {
+    fn new(cached: Option<&'a dyn CachedForward>, n: usize) -> RoleStreams<'a> {
+        RoleStreams { cached, ids: vec![None; n] }
+    }
+
+    /// Session `i`'s stream id, opening one on first use; `None` when the
+    /// role's model has no incremental-stream support.
+    fn stream_for(&mut self, i: usize) -> Result<Option<StreamId>> {
+        match self.cached {
+            None => Ok(None),
+            Some(c) => {
+                if self.ids[i].is_none() {
+                    self.ids[i] = Some(c.open_stream()?);
+                }
+                Ok(self.ids[i])
+            }
+        }
+    }
+
+    /// Release session `i`'s stream (idempotent).
+    fn close(&mut self, i: usize) {
+        if let (Some(c), Some(id)) = (self.cached, self.ids[i].take()) {
+            c.close_stream(id);
+        }
+    }
+}
+
+impl Drop for RoleStreams<'_> {
+    fn drop(&mut self) {
+        if let Some(c) = self.cached {
+            for id in self.ids.iter_mut().filter_map(Option::take) {
+                c.close_stream(id);
+            }
+        }
+    }
+}
+
 /// The engine loop: gather pending inputs from all live sessions, batch
 /// them per model role, fan the slots back, repeat until every session is
 /// done. `draft` may be `None` for fleets whose sessions only ever ask for
 /// target forwards (AR).
+///
+/// Models exposing [`CachedForward`] are driven through per-session
+/// incremental streams: each live session contributes a [`SeqDelta`]
+/// instead of its full window, and the deltas of a role co-batch into
+/// waves exactly like full inputs do (`delta_batches`/`delta_seqs` in
+/// [`FleetStats`]). Backends without the trait — including the XLA
+/// executor — fall back to full [`SeqInput`] forwards per session.
 pub fn drive<FT, FD, S>(
     target: &FT,
     draft: Option<&FD>,
@@ -204,44 +297,132 @@ where
     S: FleetSession,
 {
     let mut fleet = FleetStats::default();
+    let mut t_streams = RoleStreams::new(target.cached(), sessions.len());
+    let mut d_streams = RoleStreams::new(draft.and_then(|d| d.cached()), sessions.len());
     loop {
         let mut draft_ids: Vec<usize> = Vec::new();
         let mut draft_in: Vec<SeqInput> = Vec::new();
+        let mut draft_delta_ids: Vec<usize> = Vec::new();
+        let mut draft_delta_in: Vec<(StreamId, SeqDelta)> = Vec::new();
         let mut target_ids: Vec<usize> = Vec::new();
         let mut target_in: Vec<SeqInput> = Vec::new();
+        let mut target_delta_ids: Vec<usize> = Vec::new();
+        let mut target_delta_in: Vec<(StreamId, SeqDelta)> = Vec::new();
         for (i, s) in sessions.iter().enumerate() {
-            if let Some(seq) = s.pending_input() {
-                match s.role() {
-                    ModelRole::Draft => {
+            if s.is_done() {
+                t_streams.close(i);
+                d_streams.close(i);
+                continue;
+            }
+            match s.role() {
+                ModelRole::Draft => match d_streams.stream_for(i)? {
+                    Some(sid) => {
+                        draft_delta_ids.push(i);
+                        draft_delta_in.push((sid, s.pending_delta().expect("pending delta")));
+                    }
+                    None => {
                         draft_ids.push(i);
-                        draft_in.push(seq);
+                        draft_in.push(s.pending_input().expect("pending input"));
                     }
-                    ModelRole::Target => {
+                },
+                ModelRole::Target => match t_streams.stream_for(i)? {
+                    Some(sid) => {
+                        target_delta_ids.push(i);
+                        target_delta_in.push((sid, s.pending_delta().expect("pending delta")));
+                    }
+                    None => {
                         target_ids.push(i);
-                        target_in.push(seq);
+                        target_in.push(s.pending_input().expect("pending input"));
                     }
-                }
+                },
             }
         }
-        if draft_ids.is_empty() && target_ids.is_empty() {
+        if draft_ids.is_empty()
+            && draft_delta_ids.is_empty()
+            && target_ids.is_empty()
+            && target_delta_ids.is_empty()
+        {
             return Ok(fleet);
         }
         fleet.steps += 1;
-        if !draft_ids.is_empty() {
+        if !draft_ids.is_empty() || !draft_delta_ids.is_empty() {
             let d = match draft {
                 Some(d) => d,
                 None => anyhow::bail!("sessions need a draft model, but the fleet has none"),
             };
-            let (b, n) = fan_out(d, &draft_ids, draft_in, sessions)?;
-            fleet.draft_batches += b;
-            fleet.draft_seqs += n;
+            let role = run_role(
+                d,
+                d_streams.cached,
+                &draft_ids,
+                draft_in,
+                &draft_delta_ids,
+                draft_delta_in,
+                sessions,
+            )?;
+            fleet.draft_batches += role.batches;
+            fleet.draft_seqs += role.seqs;
+            fleet.delta_batches += role.delta_batches;
+            fleet.delta_seqs += role.delta_seqs;
         }
-        if !target_ids.is_empty() {
-            let (b, n) = fan_out(target, &target_ids, target_in, sessions)?;
-            fleet.target_batches += b;
-            fleet.target_seqs += n;
+        if !target_ids.is_empty() || !target_delta_ids.is_empty() {
+            let role = run_role(
+                target,
+                t_streams.cached,
+                &target_ids,
+                target_in,
+                &target_delta_ids,
+                target_delta_in,
+                sessions,
+            )?;
+            fleet.target_batches += role.batches;
+            fleet.target_seqs += role.seqs;
+            fleet.delta_batches += role.delta_batches;
+            fleet.delta_seqs += role.delta_seqs;
         }
     }
+}
+
+/// One engine step's batch counters for a single model role.
+#[derive(Default)]
+struct RoleCounters {
+    batches: usize,
+    seqs: usize,
+    delta_batches: usize,
+    delta_seqs: usize,
+}
+
+/// Run one role's gathered work — full inputs as batched forwards, deltas
+/// as stream waves — and advance the owning sessions. One copy for both
+/// roles, so their fan-out and accounting can never drift apart.
+fn run_role<B, S>(
+    model: &B,
+    cached: Option<&dyn CachedForward>,
+    full_ids: &[usize],
+    full_in: Vec<SeqInput>,
+    delta_ids: &[usize],
+    delta_in: Vec<(StreamId, SeqDelta)>,
+    sessions: &mut [S],
+) -> Result<RoleCounters>
+where
+    B: BatchForward + ?Sized,
+    S: FleetSession,
+{
+    let mut out = RoleCounters::default();
+    if !full_ids.is_empty() {
+        let (b, n) = fan_out(model, full_ids, full_in, sessions)?;
+        out.batches += b;
+        out.seqs += n;
+    }
+    if !delta_ids.is_empty() {
+        let c = cached.expect("delta gathered without a cached model");
+        let cap = BatchForward::max_batch(model);
+        let (b, n) = fan_out_delta(c, cap, delta_ids, delta_in, sessions)?;
+        out.batches += b;
+        out.seqs += n;
+        out.delta_batches += b;
+        out.delta_seqs += n;
+    }
+    Ok(out)
 }
 
 /// Run one role's gathered inputs through the model in `max_batch`-sized
@@ -267,6 +448,43 @@ where
         ensure!(
             outs.len() == take,
             "forward_batch returned {} slots for {} sequences",
+            outs.len(),
+            take
+        );
+        for (j, out) in outs.iter().enumerate() {
+            sessions[ids[start + j]].advance(out);
+        }
+        batches += 1;
+        start += take;
+    }
+    Ok((batches, ids.len()))
+}
+
+/// Run one role's gathered stream deltas in `cap`-sized waves and advance
+/// the owning sessions. A wave goes through
+/// [`CachedForward::forward_delta_batch`], so the serving-path handle
+/// enqueues it whole and the executor thread coalesces the deltas like a
+/// batch. Returns (waves issued, sequences forwarded).
+fn fan_out_delta<S>(
+    model: &dyn CachedForward,
+    cap: usize,
+    ids: &[usize],
+    mut inputs: Vec<(StreamId, SeqDelta)>,
+    sessions: &mut [S],
+) -> Result<(usize, usize)>
+where
+    S: FleetSession,
+{
+    let cap = cap.max(1);
+    let mut batches = 0;
+    let mut start = 0;
+    while start < ids.len() {
+        let take = cap.min(ids.len() - start);
+        let chunk: Vec<(StreamId, SeqDelta)> = inputs.drain(..take).collect();
+        let outs = model.forward_delta_batch(chunk)?;
+        ensure!(
+            outs.len() == take,
+            "forward_delta_batch returned {} slots for {} sequences",
             outs.len(),
             take
         );

@@ -42,7 +42,7 @@ use anyhow::Result;
 
 use crate::events::Event;
 use crate::model::mixture::{sample_adjusted_interval, Mixture, TypeDist};
-use crate::runtime::{Forward, SeqInput, SlotOut};
+use crate::runtime::{Forward, SeqDelta, SeqInput, SlotOut, StreamGuard};
 use crate::util::rng::Rng;
 
 use super::ar::SampleCfg;
@@ -133,6 +133,15 @@ pub struct SdSession {
     stats: SampleStats,
     phase: SdPhase,
     started: Instant,
+    /// events of (window ++ candidates) the DRAFT model's cached-forward
+    /// stream has committed (DESIGN.md §12); rewound on rejection, zeroed
+    /// on window slide
+    d_cursor: usize,
+    /// same cursor for the TARGET model's stream
+    t_cursor: usize,
+    /// [`Context::epoch`] snapshot — a mismatch means the window slid and
+    /// both streams must rebase
+    seen_epoch: usize,
 }
 
 impl SdSession {
@@ -163,6 +172,9 @@ impl SdSession {
             stats: SampleStats::default(),
             phase: SdPhase::Done,
             started: Instant::now(),
+            d_cursor: 0,
+            t_cursor: 0,
+            seen_epoch: 0,
             cfg,
         };
         s.begin_round();
@@ -189,6 +201,19 @@ impl SdSession {
         match self.phase {
             SdPhase::Done => None,
             _ => Some(self.ctx.seq_input(&self.cand)),
+        }
+    }
+
+    /// Delta form of [`SdSession::pending_input`] against the stream of
+    /// the model [`SdSession::role`] names: only the events that stream
+    /// has not committed yet. A draft step ships one event, a verify pass
+    /// ships the candidates plus whatever the last round's rejection
+    /// rewound — O(γ) instead of O(L). `None` once done.
+    pub fn pending_delta(&self) -> Option<SeqDelta> {
+        match self.phase {
+            SdPhase::Done => None,
+            SdPhase::Drafting(_) => Some(self.ctx.seq_delta(&self.cand, self.d_cursor)),
+            SdPhase::Verifying => Some(self.ctx.seq_delta(&self.cand, self.t_cursor)),
         }
     }
 
@@ -240,6 +265,10 @@ impl SdSession {
     /// Drafting phase step: sample candidate `l` from the draft forward.
     fn advance_draft(&mut self, l: usize, fwd: &SlotOut) {
         self.stats.draft_forwards += 1;
+        // The draft forward consumed window + l candidates: the draft
+        // stream (cached path) is now committed through that prefix. The
+        // candidate sampled BELOW is not committed until the next step.
+        self.d_cursor = self.ctx.len() + l;
         let row = self.ctx.next_row(l);
         let mix = fwd.mixture(row);
         let td = fwd.type_dist(row, self.cfg.sample.num_types);
@@ -270,6 +299,9 @@ impl SdSession {
         // (BOS + window + candidates); pin them before pushes mutate ctx.
         let base_row = self.ctx.next_row(0);
         let round_start_time = self.ctx.last_time();
+        // The verify forward consumed window + all γ candidates: the
+        // target stream (cached path) is committed through that prefix.
+        self.t_cursor = base_row + gamma;
 
         let mut rejected_at: Option<usize> = None;
         let mut stopped = false;
@@ -341,6 +373,23 @@ impl SdSession {
             }
         }
 
+        // Cached-forward cursor discipline (DESIGN.md §12): on a rejection
+        // at candidate j the streams' committed content diverges from the
+        // new history at position (round start + j) — the resampled event
+        // replaced candidate j — so both cursors rewind to the agreed
+        // prefix; on all-accept every committed position still matches
+        // (the bonus event was never committed). A window slide trumps
+        // either case: positions renumbered, both streams must rebase.
+        if let Some(j) = rejected_at {
+            self.d_cursor = self.d_cursor.min(base_row + j);
+            self.t_cursor = self.t_cursor.min(base_row + j);
+        }
+        if self.ctx.epoch() != self.seen_epoch {
+            self.seen_epoch = self.ctx.epoch();
+            self.d_cursor = 0;
+            self.t_cursor = 0;
+        }
+
         if stopped {
             self.finish();
             return;
@@ -363,7 +412,10 @@ impl SdSession {
 
 /// Sample one sequence with TPP-SD (blocking driver over [`SdSession`]);
 /// distributionally identical to [`super::ar::sample_ar`] on the target
-/// model.
+/// model. Each model that exposes an incremental stream
+/// ([`Forward::cached`]) is driven through per-event deltas — a draft
+/// step then costs O(1) and a verify pass O(γ) instead of O(L) — with
+/// bit-identical outputs either way (`rust/tests/cached_forward.rs`).
 pub fn sample_sd<FT: Forward + ?Sized, FD: Forward + ?Sized>(
     target: &FT,
     draft: &FD,
@@ -372,10 +424,18 @@ pub fn sample_sd<FT: Forward + ?Sized, FD: Forward + ?Sized>(
 ) -> Result<(Vec<Event>, SampleStats)> {
     let cap = target.max_bucket().min(draft.max_bucket());
     let mut session = SdSession::new(cfg.clone(), cap, rng.clone());
-    while let Some(seq) = session.pending_input() {
+    let t_stream = StreamGuard::open(target)?;
+    let d_stream = StreamGuard::open(draft)?;
+    while !session.is_done() {
         let fwd = match session.role() {
-            ModelRole::Draft => draft.forward1(seq)?,
-            ModelRole::Target => target.forward1(seq)?,
+            ModelRole::Draft => match &d_stream {
+                Some(g) => g.forward_delta(&session.pending_delta().expect("pending delta"))?,
+                None => draft.forward1(session.pending_input().expect("pending input"))?,
+            },
+            ModelRole::Target => match &t_stream {
+                Some(g) => g.forward_delta(&session.pending_delta().expect("pending delta"))?,
+                None => target.forward1(session.pending_input().expect("pending input"))?,
+            },
         };
         session.advance(&fwd);
     }

@@ -74,6 +74,13 @@ impl Json {
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
+    /// The value as a bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
     /// The value as a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
@@ -114,6 +121,10 @@ impl Json {
     /// String at a dotted path.
     pub fn str_at(&self, dotted: &str) -> Option<&str> {
         self.path(dotted).and_then(Json::as_str)
+    }
+    /// Bool at a dotted path.
+    pub fn bool_at(&self, dotted: &str) -> Option<bool> {
+        self.path(dotted).and_then(Json::as_bool)
     }
 }
 

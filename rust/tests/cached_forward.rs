@@ -1,0 +1,278 @@
+//! Incremental-forward-cache equivalence suite (ISSUE 3 acceptance): the
+//! `CachedForward` streams must change NOTHING but wall-clock.
+//!
+//! * **Bit-equivalence**: for random event sequences, random chunkings and
+//!   random rewind points, every row a `forward_delta` returns is
+//!   bit-identical to a cold full `forward` over the same prefix — across
+//!   all three encoders, both model roles (target and draft), and the
+//!   64→128 and 128→256 bucket crossings.
+//! * **Long horizon**: sequences that outgrow the largest bucket slide
+//!   their window (`Context::epoch`); the cache must rebase and stay
+//!   bit-identical to the uncached path for both AR and SD.
+
+use tpp_sd::runtime::{
+    Backend, CachedForward, ForwardOut, ModelBackend, NativeBackend, SeqDelta, SeqInput, SlotOut,
+    StreamId, Uncached,
+};
+use tpp_sd::sampler::{sample_ar, sample_sd, Gamma, SampleCfg, SdCfg};
+use tpp_sd::util::rng::Rng;
+
+mod common;
+use common::assert_stats_eq;
+
+const ENCODERS: [&str; 3] = ["thp", "sahp", "attnhp"];
+/// Both model roles of a TPP-SD pair.
+const ROLES: [&str; 2] = ["target", "draft"];
+
+/// Random strictly-increasing event sequence with `n` events over `k`
+/// types, starting after `t_start`.
+fn random_events(rng: &mut Rng, n: usize, k: usize, t_start: f64) -> (Vec<f64>, Vec<u32>) {
+    let mut t = t_start;
+    let mut times = Vec::with_capacity(n);
+    let mut types = Vec::with_capacity(n);
+    for _ in 0..n {
+        t += rng.exponential(2.0);
+        times.push(t);
+        types.push(rng.below(k) as u32);
+    }
+    (times, types)
+}
+
+/// Assert rows `lo..=hi` of a delta output are bit-identical to the same
+/// rows of a cold full forward (slot 0 of `cold`).
+fn assert_rows_bit_equal(
+    slot: &SlotOut,
+    cold: &ForwardOut,
+    lo: usize,
+    hi: usize,
+    k: usize,
+    what: &str,
+) {
+    for row in lo..=hi {
+        assert_eq!(slot.mixture(row), cold.mixture(0, row), "{what}: mixture row {row}");
+        assert_eq!(
+            slot.type_dist(row, k).probs,
+            cold.type_dist(0, row, k).probs,
+            "{what}: type row {row}"
+        );
+    }
+}
+
+fn cold(model: &dyn ModelBackend, t0: f64, times: &[f64], types: &[u32]) -> ForwardOut {
+    model
+        .forward(&[SeqInput { t0, times: times.to_vec(), types: types.to_vec() }])
+        .expect("cold forward")
+}
+
+/// Random chunk sizes: every encoder × role must produce delta rows
+/// bit-identical to a cold forward of the full prefix.
+#[test]
+fn delta_rows_bit_equal_cold_forward_every_encoder_and_role() {
+    let b = NativeBackend::new();
+    let k = b.num_types("taxi_sim").unwrap();
+    let mut rng = Rng::new(0xCAFE);
+    for encoder in ENCODERS {
+        for role in ROLES {
+            let model = b.load_model("taxi_sim", encoder, role).unwrap();
+            let c = model.cached().expect("native models expose CachedForward");
+            let (times, types) = random_events(&mut rng, 48, k, 0.0);
+            let full = cold(model.as_ref(), 0.0, &times, &types);
+            let sid = c.open_stream().unwrap();
+            let mut fed = 0usize;
+            while fed < times.len() {
+                let m = (1 + rng.below(7)).min(times.len() - fed);
+                let d = SeqDelta {
+                    base_len: fed,
+                    t0: 0.0,
+                    times: times[fed..fed + m].to_vec(),
+                    types: types[fed..fed + m].to_vec(),
+                };
+                let out = c.forward_delta(sid, &d).unwrap();
+                // prefix-causality of the backend makes the full-sequence
+                // cold rows valid references for every prefix row
+                assert_rows_bit_equal(&out, &full, fed, fed + m, k, &format!("{encoder}/{role}"));
+                // spot-check against the *exact prefix* cold forward too
+                let pre = cold(model.as_ref(), 0.0, &times[..fed + m], &types[..fed + m]);
+                assert_eq!(
+                    out.mixture(fed + m),
+                    pre.mixture(0, fed + m),
+                    "{encoder}/{role}: prefix cold forward row {}",
+                    fed + m
+                );
+                fed += m;
+            }
+            c.close_stream(sid);
+        }
+    }
+}
+
+/// One-event deltas across the 64→128 and 128→256 bucket crossings: the
+/// cold reference switches buckets at 63→64 and 127→128 events (+BOS),
+/// the stream must not notice.
+#[test]
+fn bucket_boundary_crossings_are_bit_exact() {
+    let b = NativeBackend::new();
+    let k = b.num_types("multihawkes").unwrap();
+    let model = b.load_model("multihawkes", "thp", "target").unwrap();
+    let c = model.cached().unwrap();
+    let mut rng = Rng::new(7);
+    let (times, types) = random_events(&mut rng, 140, k, 0.0);
+    let sid = c.open_stream().unwrap();
+    for i in 0..times.len() {
+        let d = SeqDelta {
+            base_len: i,
+            t0: 0.0,
+            times: vec![times[i]],
+            types: vec![types[i]],
+        };
+        let out = c.forward_delta(sid, &d).unwrap();
+        // around the crossings, check against per-prefix cold forwards so
+        // the reference really runs in its own (changing) bucket
+        let n = i + 1;
+        if (62..=65).contains(&n) || (126..=129).contains(&n) || n == times.len() {
+            let pre = cold(model.as_ref(), 0.0, &times[..n], &types[..n]);
+            let expect_bucket = if n + 1 <= 64 {
+                64
+            } else if n + 1 <= 128 {
+                128
+            } else {
+                256
+            };
+            assert_eq!(pre.bucket, expect_bucket, "cold bucket at n={n}");
+            assert_rows_bit_equal(&out, &pre, i, i + 1, k, &format!("crossing n={n}"));
+        }
+    }
+    c.close_stream(sid);
+}
+
+/// Random rewind points with divergent re-extensions (the draft-rejection
+/// pattern): after every rewind+extend, the stream's rows equal a cold
+/// forward of the surviving history.
+#[test]
+fn random_rewinds_are_bit_exact() {
+    let b = NativeBackend::new();
+    let k = b.num_types("hawkes").unwrap();
+    for (seed, role) in [(11u64, "target"), (12, "draft"), (13, "draft2")] {
+        let model = b.load_model("hawkes", "thp", role).unwrap();
+        let c = model.cached().unwrap();
+        let mut rng = Rng::new(seed);
+        let sid = c.open_stream().unwrap();
+        let mut times: Vec<f64> = Vec::new();
+        let mut types: Vec<u32> = Vec::new();
+        for step in 0..60 {
+            // rewind to a random surviving prefix (often the full length)
+            let keep = rng.below(times.len() + 1);
+            times.truncate(keep);
+            types.truncate(keep);
+            // extend with 0..=4 fresh events from the surviving last time
+            let m = rng.below(5).min(200 - keep);
+            let t_last = times.last().copied().unwrap_or(0.0);
+            let (new_t, new_k) = random_events(&mut rng, m, k, t_last);
+            times.extend(&new_t);
+            types.extend(&new_k);
+            let d = SeqDelta { base_len: keep, t0: 0.0, times: new_t, types: new_k };
+            let out = c.forward_delta(sid, &d).unwrap();
+            let pre = cold(model.as_ref(), 0.0, &times, &types);
+            assert_rows_bit_equal(
+                &out,
+                &pre,
+                keep,
+                keep + m,
+                k,
+                &format!("{role} seed {seed} step {step}"),
+            );
+        }
+        c.close_stream(sid);
+    }
+}
+
+/// Stream ids are isolated: interleaved deltas on two streams of the same
+/// model never observe each other's state.
+#[test]
+fn interleaved_streams_do_not_crosstalk() {
+    let b = NativeBackend::new();
+    let model = b.load_model("hawkes", "attnhp", "target").unwrap();
+    let c = model.cached().unwrap();
+    let mut rng = Rng::new(99);
+    let (ta, ka) = random_events(&mut rng, 30, 1, 0.0);
+    let (tb, kb) = random_events(&mut rng, 30, 1, 5.0);
+    let sa: StreamId = c.open_stream().unwrap();
+    let sb: StreamId = c.open_stream().unwrap();
+    let cold_a = cold(model.as_ref(), 0.0, &ta, &ka);
+    let cold_b = cold(model.as_ref(), 0.0, &tb, &kb);
+    for i in 0..30 {
+        let da = SeqDelta { base_len: i, t0: 0.0, times: vec![ta[i]], types: vec![ka[i]] };
+        let db = SeqDelta { base_len: i, t0: 0.0, times: vec![tb[i]], types: vec![kb[i]] };
+        let oa = c.forward_delta(sa, &da).unwrap();
+        let ob = c.forward_delta(sb, &db).unwrap();
+        assert_rows_bit_equal(&oa, &cold_a, i, i + 1, 1, "stream a");
+        assert_rows_bit_equal(&ob, &cold_b, i, i + 1, 1, "stream b");
+    }
+    c.close_stream(sa);
+    c.close_stream(sb);
+}
+
+/// Blocking samplers: the cached path must be bit-for-bit the uncached
+/// path, events AND counters, at ordinary horizons.
+#[test]
+fn cached_sampling_is_bit_for_bit_uncached() {
+    let b = NativeBackend::new();
+    let target = b.load_model("multihawkes", "sahp", "target").unwrap();
+    let draft = b.load_model("multihawkes", "sahp", "draft").unwrap();
+    let cfg = SampleCfg { num_types: 2, t_end: 12.0, max_events: 4096 };
+    for seed in [1u64, 2, 3] {
+        let mut r1 = Rng::new(seed);
+        let (ev_c, st_c) = sample_ar(&target, &cfg, &mut r1).unwrap();
+        let mut r2 = Rng::new(seed);
+        let (ev_u, st_u) = sample_ar(&Uncached(&target), &cfg, &mut r2).unwrap();
+        assert!(!ev_c.is_empty(), "degenerate AR sequence");
+        assert_eq!(ev_c, ev_u, "AR seed {seed}");
+        assert_stats_eq(&st_c, &st_u, &format!("AR seed {seed}"));
+
+        let sd = SdCfg { sample: cfg.clone(), gamma: Gamma::Fixed(5), ..Default::default() };
+        let mut r1 = Rng::new(seed);
+        let (ev_c, st_c) = sample_sd(&target, &draft, &sd, &mut r1).unwrap();
+        let mut r2 = Rng::new(seed);
+        let (ev_u, st_u) =
+            sample_sd(&Uncached(&target), &Uncached(&draft), &sd, &mut r2).unwrap();
+        assert_eq!(ev_c, ev_u, "SD seed {seed}");
+        assert_stats_eq(&st_c, &st_u, &format!("SD seed {seed}"));
+
+        // mixed roles: only one of the two models cached
+        let mut r3 = Rng::new(seed);
+        let (ev_m, st_m) = sample_sd(&target, &Uncached(&draft), &sd, &mut r3).unwrap();
+        assert_eq!(ev_c, ev_m, "SD mixed-role seed {seed}");
+        assert_stats_eq(&st_c, &st_m, &format!("SD mixed-role seed {seed}"));
+    }
+}
+
+/// ISSUE 3 satellite bugfix: horizons long enough to outgrow the largest
+/// bucket (512 incl. BOS) slide the window; the cache must rebase on every
+/// slide and stay bit-identical to the uncached path — AR and SD.
+#[test]
+fn long_horizon_window_slide_stays_bit_exact_ar_and_sd() {
+    let b = NativeBackend::new();
+    let target = b.load_model("hawkes", "thp", "target").unwrap();
+    let draft = b.load_model("hawkes", "thp", "draft").unwrap();
+    let cfg = SampleCfg { num_types: 1, t_end: 1200.0, max_events: 4096 };
+
+    let mut r1 = Rng::new(41);
+    let (ar_c, _) = sample_ar(&target, &cfg, &mut r1).unwrap();
+    let mut r2 = Rng::new(41);
+    let (ar_u, _) = sample_ar(&Uncached(&target), &cfg, &mut r2).unwrap();
+    assert!(
+        ar_c.len() > 512,
+        "horizon too short to outgrow the largest bucket: {} events",
+        ar_c.len()
+    );
+    assert_eq!(ar_c, ar_u, "AR long-horizon cached vs uncached");
+
+    let sd = SdCfg { sample: cfg, gamma: Gamma::Fixed(6), ..Default::default() };
+    let mut r1 = Rng::new(41);
+    let (sd_c, st_c) = sample_sd(&target, &draft, &sd, &mut r1).unwrap();
+    let mut r2 = Rng::new(41);
+    let (sd_u, st_u) = sample_sd(&Uncached(&target), &Uncached(&draft), &sd, &mut r2).unwrap();
+    assert!(sd_c.len() > 512, "SD horizon too short: {} events", sd_c.len());
+    assert_eq!(sd_c, sd_u, "SD long-horizon cached vs uncached");
+    assert_stats_eq(&st_c, &st_u, "SD long-horizon");
+}

@@ -1,0 +1,20 @@
+//! Helpers shared by the integration-test binaries (not itself a test
+//! binary — Cargo only builds files directly under `tests/`).
+
+use tpp_sd::sampler::SampleStats;
+
+/// Field-by-field equality of every deterministic counter — everything
+/// except `wall`, which necessarily differs between runs. Kept in ONE
+/// place so a new `SampleStats` field only needs adding here for every
+/// equivalence suite to start checking it.
+pub fn assert_stats_eq(a: &SampleStats, b: &SampleStats, what: &str) {
+    assert_eq!(a.events, b.events, "{what}: events");
+    assert_eq!(a.rounds, b.rounds, "{what}: rounds");
+    assert_eq!(a.target_forwards, b.target_forwards, "{what}: target_forwards");
+    assert_eq!(a.draft_forwards, b.draft_forwards, "{what}: draft_forwards");
+    assert_eq!(a.drafted, b.drafted, "{what}: drafted");
+    assert_eq!(a.accepted, b.accepted, "{what}: accepted");
+    assert_eq!(a.resampled, b.resampled, "{what}: resampled");
+    assert_eq!(a.bonus, b.bonus, "{what}: bonus");
+    assert_eq!(a.adjust_proposals, b.adjust_proposals, "{what}: adjust_proposals");
+}

@@ -196,6 +196,7 @@ fn server_roundtrip_ar_and_sd() {
                 t_end: 2.0,
                 seed: 1,
                 draft_size: "draft".into(),
+                cached: true,
             }))
             .unwrap();
         let (events, wall_ms) =
@@ -214,10 +215,42 @@ fn server_roundtrip_ar_and_sd() {
             t_end: 1.0,
             seed: 0,
             draft_size: "draft".into(),
+            cached: true,
         }))
         .unwrap();
     assert!(resp.contains("\"ok\":false"));
     assert!(cli.call(&Request::Ping).unwrap().contains("pong"));
+}
+
+/// The `"cached":false` knob forces full-window forwards through the same
+/// executors; the sampled events must be bit-identical to the default
+/// cached path (ISSUE 3 — the flag moves wall-clock, never probability).
+#[test]
+fn server_cached_flag_does_not_change_events() {
+    let server = Server::bind(backend(), "127.0.0.1:0", 8, Duration::from_millis(1)).unwrap();
+    let addr = server.addr;
+    std::thread::spawn(move || server.serve());
+    let mut cli = Client::connect(addr).unwrap();
+    for method in ["ar", "sd"] {
+        let mk = |cached: bool| {
+            Request::Sample(SampleRequest {
+                dataset: "hawkes".into(),
+                encoder: "thp".into(),
+                method: method.into(),
+                gamma: 6,
+                t_end: 4.0,
+                seed: 9,
+                draft_size: "draft".into(),
+                cached,
+            })
+        };
+        let (on, _) =
+            tpp_sd::coordinator::protocol::parse_response(&cli.call(&mk(true)).unwrap()).unwrap();
+        let (off, _) =
+            tpp_sd::coordinator::protocol::parse_response(&cli.call(&mk(false)).unwrap()).unwrap();
+        assert!(!on.is_empty(), "{method}: degenerate sample");
+        assert_eq!(on, off, "{method}: cached vs uncached events diverge");
+    }
 }
 
 /// `sample_fleet` over the wire: sequence `i` must be byte-identical to a
@@ -238,6 +271,7 @@ fn server_fleet_matches_single_samples() {
         t_end: 3.0,
         seed: 10,
         draft_size: "draft".into(),
+        cached: true,
     };
     let resp = cli
         .call(&Request::SampleFleet(FleetRequest { base: base.clone(), n_seq: 3 }))

@@ -9,26 +9,15 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use tpp_sd::coordinator::ExecutorHandle;
-use tpp_sd::runtime::{Backend, NativeBackend};
+use tpp_sd::runtime::{Backend, NativeBackend, Uncached};
 use tpp_sd::sampler::{
     fleet_seeds, sample_ar, sample_ar_fleet, sample_sd, sample_sd_fleet, Gamma, SampleCfg,
     SampleStats, SdCfg,
 };
 use tpp_sd::util::rng::Rng;
 
-/// All counters except `wall` (wall-clock necessarily differs between a
-/// fleet run and a sequential run).
-fn assert_stats_eq(a: &SampleStats, b: &SampleStats, what: &str) {
-    assert_eq!(a.events, b.events, "{what}: events");
-    assert_eq!(a.rounds, b.rounds, "{what}: rounds");
-    assert_eq!(a.target_forwards, b.target_forwards, "{what}: target_forwards");
-    assert_eq!(a.draft_forwards, b.draft_forwards, "{what}: draft_forwards");
-    assert_eq!(a.drafted, b.drafted, "{what}: drafted");
-    assert_eq!(a.accepted, b.accepted, "{what}: accepted");
-    assert_eq!(a.resampled, b.resampled, "{what}: resampled");
-    assert_eq!(a.bonus, b.bonus, "{what}: bonus");
-    assert_eq!(a.adjust_proposals, b.adjust_proposals, "{what}: adjust_proposals");
-}
+mod common;
+use common::assert_stats_eq;
 
 fn sd_cfg(num_types: usize, gamma: Gamma) -> SdCfg {
     SdCfg {
@@ -161,10 +150,95 @@ fn fleet_runs_through_batching_executors() {
         assert_eq!(ev_a, ev_b, "executor vs direct, seq {i}");
         assert_stats_eq(st_a, st_b, &format!("executor vs direct, seq {i}"));
     }
-    // the engine's waves actually co-batched inside the executor
+    // the engine's waves actually co-batched inside the executor — on the
+    // cached path the waves are delta waves, so the delta occupancy is
+    // the metric (full-forward occupancy counts only uncached batches)
     assert!(
-        target_h.stats.occupancy() > 1.0,
-        "executor occupancy {}",
-        target_h.stats.occupancy()
+        target_h.stats.delta_occupancy() > 1.0,
+        "executor delta occupancy {}",
+        target_h.stats.delta_occupancy()
     );
+}
+
+/// ISSUE 3 regression: fleet(N) on the CACHED executor path — per-session
+/// incremental streams whose ids travel through the batcher channel —
+/// must stay bit-for-bit equal to N sequential UNCACHED runs with the
+/// same seeds. A stream-id mix-up in the batcher (crosstalk between
+/// sessions' deltas) breaks this immediately, because every session would
+/// then draw from another session's excitation state.
+#[test]
+fn cached_executor_fleet_is_bit_for_bit_sequential_uncached() {
+    let backend: Arc<dyn Backend> = Arc::new(NativeBackend::new());
+    let target_h = ExecutorHandle::spawn(
+        backend.clone(),
+        "taxi_sim",
+        "thp",
+        "target",
+        8,
+        Duration::from_millis(5),
+    )
+    .unwrap();
+    let draft_h = ExecutorHandle::spawn(
+        backend.clone(),
+        "taxi_sim",
+        "thp",
+        "draft",
+        8,
+        Duration::from_millis(5),
+    )
+    .unwrap();
+    let target = backend.load_model("taxi_sim", "thp", "target").unwrap();
+    let draft = backend.load_model("taxi_sim", "thp", "draft").unwrap();
+
+    // SD: executor+streams fleet vs sequential uncached
+    let cfg = sd_cfg(10, Gamma::Fixed(5));
+    let seeds = fleet_seeds(77, 8);
+    let (via_exec, fleet) = sample_sd_fleet(&target_h, &draft_h, &cfg, &seeds).unwrap();
+    assert!(
+        fleet.delta_batches > 0,
+        "the executor path must actually use delta waves, fleet={fleet:?}"
+    );
+    for (i, (ev, st)) in via_exec.iter().enumerate() {
+        let mut rng = Rng::new(seeds[i]);
+        let (ev_ref, st_ref) =
+            sample_sd(&Uncached(&target), &Uncached(&draft), &cfg, &mut rng).unwrap();
+        assert!(!ev_ref.is_empty(), "degenerate sequence {i}");
+        assert_eq!(ev, &ev_ref, "cached executor fleet seq {i} vs sequential uncached");
+        assert_stats_eq(st, &st_ref, &format!("cached executor fleet seq {i}"));
+    }
+    // delta traffic went through the batcher channel
+    let deltas = target_h
+        .stats
+        .delta_requests
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert!(deltas > 0, "no delta requests reached the target executor");
+
+    // AR: same regression on the single-model path
+    let scfg = SampleCfg { num_types: 10, t_end: 10.0, max_events: 4096 };
+    let (ar_exec, _) = sample_ar_fleet(&target_h, &scfg, &seeds).unwrap();
+    for (i, (ev, st)) in ar_exec.iter().enumerate() {
+        let mut rng = Rng::new(seeds[i]);
+        let (ev_ref, st_ref) = sample_ar(&Uncached(&target), &scfg, &mut rng).unwrap();
+        assert_eq!(ev, &ev_ref, "cached executor AR fleet seq {i}");
+        assert_stats_eq(st, &st_ref, &format!("cached executor AR fleet seq {i}"));
+    }
+}
+
+/// The engine's direct path with mixed support: cached target, uncached
+/// draft (the XLA-draft scenario) — still bit-for-bit sequential.
+#[test]
+fn mixed_cached_roles_fleet_is_bit_for_bit_sequential() {
+    let b = NativeBackend::new();
+    let target = b.load_model("hawkes", "sahp", "target").unwrap();
+    let draft = b.load_model("hawkes", "sahp", "draft").unwrap();
+    let cfg = sd_cfg(1, Gamma::Fixed(4));
+    let seeds = fleet_seeds(9, 5);
+    let (runs, fleet) =
+        sample_sd_fleet(&target, &Uncached(&draft), &cfg, &seeds).unwrap();
+    assert!(fleet.delta_batches > 0, "target role should run deltas");
+    for (i, (ev, _)) in runs.iter().enumerate() {
+        let mut rng = Rng::new(seeds[i]);
+        let (ev_ref, _) = sample_sd(&target, &draft, &cfg, &mut rng).unwrap();
+        assert_eq!(ev, &ev_ref, "mixed-role fleet seq {i}");
+    }
 }

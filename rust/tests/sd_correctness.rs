@@ -8,8 +8,8 @@ use std::sync::Arc;
 
 use tpp_sd::events::intervals;
 use tpp_sd::metrics::ks::ks_statistic;
-use tpp_sd::metrics::wasserstein::type_histogram;
-use tpp_sd::runtime::Backend;
+use tpp_sd::metrics::wasserstein::{emd_labels, type_histogram, wasserstein_1d};
+use tpp_sd::runtime::{Backend, NativeBackend, Uncached};
 use tpp_sd::sampler::{sample_ar, sample_sd, Gamma, SampleCfg, SdCfg};
 use tpp_sd::util::rng::Rng;
 
@@ -115,6 +115,96 @@ fn sd_matches_ar_type_marginals() {
         "type-0 share differs: AR {:.3} vs SD {:.3} (se {se:.4})",
         ha[0],
         hs[0]
+    );
+}
+
+/// ISSUE 3 distribution-identity gate: cached-path SD, uncached SD and AR
+/// must be statistically indistinguishable on inter-event times — KS
+/// below the 95% band (with margin) AND 1-Wasserstein within a
+/// self-calibrated noise bound — at N ≥ 2000 pooled events. The cached
+/// and uncached SD runs are additionally compared *bit-for-bit* per seed,
+/// which is the exact (non-statistical) form of the same claim.
+#[test]
+fn cached_sd_uncached_sd_and_ar_share_interval_distribution() {
+    let b = NativeBackend::new();
+    let target = b.load_model("hawkes", "thp", "target").unwrap();
+    let draft = b.load_model("hawkes", "thp", "draft").unwrap();
+    let cfg = SampleCfg { num_types: 1, t_end: 25.0, max_events: 8192 };
+    let sd = SdCfg { sample: cfg.clone(), gamma: Gamma::Fixed(8), ..Default::default() };
+
+    let n_seq = 64u64;
+    let (mut taus_ar, mut taus_sd) = (Vec::new(), Vec::new());
+    let mut stats = tpp_sd::sampler::SampleStats::default();
+    for s in 0..n_seq {
+        let mut rng = Rng::new(4000 + s);
+        let (ev_ar, _) = sample_ar(&target, &cfg, &mut rng).unwrap();
+        taus_ar.extend(intervals(&ev_ar));
+
+        let mut rng = Rng::new(8000 + s);
+        let (ev_sd, st) = sample_sd(&target, &draft, &sd, &mut rng).unwrap();
+        stats.merge(&st);
+        let mut rng = Rng::new(8000 + s);
+        let (ev_un, _) =
+            sample_sd(&Uncached(&target), &Uncached(&draft), &sd, &mut rng).unwrap();
+        assert_eq!(ev_sd, ev_un, "seed {s}: cached SD must be bit-for-bit uncached SD");
+        taus_sd.extend(intervals(&ev_sd));
+    }
+    assert!(stats.acceptance_rate() < 0.999, "draft identical to target? vacuous test");
+    assert!(
+        taus_ar.len() >= 2000 && taus_sd.len() >= 2000,
+        "need ≥2000 events per arm, got AR {} / SD {}",
+        taus_ar.len(),
+        taus_sd.len()
+    );
+
+    // KS gate
+    let (d, crit) = two_sample_ks(&taus_ar, &taus_sd);
+    assert!(d < 1.5 * crit, "cached SD vs AR intervals: KS={d:.4} crit={crit:.4}");
+
+    // Wasserstein gate, self-calibrated: the AR sample split in half sets
+    // the same-distribution noise floor for W1 at this sample size.
+    let even: Vec<f64> = taus_ar.iter().copied().step_by(2).collect();
+    let odd: Vec<f64> = taus_ar.iter().copied().skip(1).step_by(2).collect();
+    let floor = wasserstein_1d(&even, &odd);
+    let w1 = wasserstein_1d(&taus_ar, &taus_sd);
+    let mean_tau = tpp_sd::util::math::mean(&taus_ar);
+    assert!(
+        w1 < 3.0 * floor + 0.05 * mean_tau,
+        "cached SD vs AR: W1={w1:.4} exceeds noise floor {floor:.4} (mean τ {mean_tau:.3})"
+    );
+}
+
+/// Same gate for the type marginal (`D_WS^k`) on a multi-type dataset:
+/// EMD between cached-SD and AR type distributions within a
+/// self-calibrated bound, and cached == uncached bit-for-bit.
+#[test]
+fn cached_sd_matches_ar_type_marginal_under_emd() {
+    let b = NativeBackend::new();
+    let target = b.load_model("multihawkes", "attnhp", "target").unwrap();
+    let draft = b.load_model("multihawkes", "attnhp", "draft").unwrap();
+    let cfg = SampleCfg { num_types: 2, t_end: 15.0, max_events: 8192 };
+    let sd = SdCfg { sample: cfg.clone(), gamma: Gamma::Fixed(6), ..Default::default() };
+
+    let (mut types_ar, mut types_sd) = (Vec::new(), Vec::new());
+    for s in 0..24u64 {
+        let mut rng = Rng::new(600 + s);
+        let (ev_ar, _) = sample_ar(&target, &cfg, &mut rng).unwrap();
+        types_ar.extend(ev_ar.iter().map(|e| e.k));
+        let mut rng = Rng::new(990 + s);
+        let (ev_sd, _) = sample_sd(&target, &draft, &sd, &mut rng).unwrap();
+        let mut rng = Rng::new(990 + s);
+        let (ev_un, _) =
+            sample_sd(&Uncached(&target), &Uncached(&draft), &sd, &mut rng).unwrap();
+        assert_eq!(ev_sd, ev_un, "seed {s}: cached vs uncached SD");
+        types_sd.extend(ev_sd.iter().map(|e| e.k));
+    }
+    let even: Vec<u32> = types_ar.iter().copied().step_by(2).collect();
+    let odd: Vec<u32> = types_ar.iter().copied().skip(1).step_by(2).collect();
+    let floor = emd_labels(&even, &odd, 2);
+    let d = emd_labels(&types_ar, &types_sd, 2);
+    assert!(
+        d < 3.0 * floor + 0.03,
+        "type marginal EMD {d:.4} exceeds noise floor {floor:.4}"
     );
 }
 
