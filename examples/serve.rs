@@ -6,6 +6,11 @@
 //!     cargo run --release --example serve -- \
 //!         [--clients 4] [--requests 3] [--t-end 10] [--gamma 10]
 //!         [--datasets hawkes,taxi_sim] [--encoder thp]
+//!         [--chaos 'seed=7,err=0.1,loss=0.05']
+//!
+//! `--chaos` attaches a fault-injection spec to every request (DESIGN.md
+//! §13): a recoverable plan changes only the retry/timeout counters
+//! reported at the end — never an event.
 
 use std::time::{Duration, Instant};
 
@@ -23,6 +28,7 @@ fn main() -> Result<()> {
     let encoder = args.str_or("encoder", "thp").to_string();
     let datasets = args.list_or("datasets", &["hawkes", "taxi_sim"]);
     let window_ms = args.u64_or("batch-window-ms", 2);
+    let chaos = args.str_or("chaos", "").to_string();
 
     let backend = tpp_sd::runtime::backend_from_arg(args.get("backend"))?;
     let server = Server::bind(backend, "127.0.0.1:0", 8, Duration::from_millis(window_ms))?;
@@ -42,6 +48,7 @@ fn main() -> Result<()> {
         for c in 0..clients {
             let datasets = datasets.clone();
             let encoder = encoder.clone();
+            let chaos = chaos.clone();
             handles.push(std::thread::spawn(move || -> Result<(Vec<f64>, usize)> {
                 let mut cli = Client::connect(addr)?;
                 let mut lat = Vec::new();
@@ -56,6 +63,7 @@ fn main() -> Result<()> {
                         seed: (c * 1000 + r) as u64,
                         draft_size: "draft".into(),
                         cached: true,
+                        chaos: chaos.clone(),
                     });
                     let t = Instant::now();
                     let resp = cli.call(&req)?;
@@ -89,29 +97,36 @@ fn main() -> Result<()> {
         );
     }
 
-    // batcher occupancy report
+    // batcher occupancy + reliability report
     for ds in &datasets {
         let pair = router.route(ds, &encoder, "draft")?;
-        println!(
-            "executor {:<28} batches={:<5} occupancy={:.2} delta_occupancy={:.2}",
-            pair.target.name,
-            pair.target
-                .stats
-                .batches
-                .load(std::sync::atomic::Ordering::Relaxed),
-            pair.target.stats.occupancy(),
-            pair.target.stats.delta_occupancy()
-        );
-        println!(
-            "executor {:<28} batches={:<5} occupancy={:.2} delta_occupancy={:.2}",
-            pair.draft.name,
-            pair.draft
-                .stats
-                .batches
-                .load(std::sync::atomic::Ordering::Relaxed),
-            pair.draft.stats.occupancy(),
-            pair.draft.stats.delta_occupancy()
-        );
+        report_executor(&pair.target);
+        report_executor(&pair.draft);
+    }
+    if !chaos.is_empty() {
+        // Chaos traffic runs on dedicated per-spec routers (their retry
+        // counters absorb the injected faults); the fault-free executors
+        // above must stay clean.
+        let mut cli = Client::connect(addr)?;
+        let stats = cli.call(&Request::Stats)?;
+        println!("chaos spec '{chaos}' active; server stats: {}", stats.trim());
     }
     Ok(())
+}
+
+/// One line per executor: batching efficiency plus the fault-tolerance
+/// counters (retries/timeouts/gave_up are all zero on a healthy backend).
+fn report_executor(h: &tpp_sd::coordinator::ExecutorHandle) {
+    let load = |c: &std::sync::atomic::AtomicUsize| c.load(std::sync::atomic::Ordering::Relaxed);
+    println!(
+        "executor {:<28} batches={:<5} occupancy={:.2} delta_occupancy={:.2} \
+         retries={} timeouts={} gave_up={}",
+        h.name,
+        load(&h.stats.batches),
+        h.stats.occupancy(),
+        h.stats.delta_occupancy(),
+        load(&h.stats.retries),
+        load(&h.stats.timeouts),
+        load(&h.stats.gave_up),
+    );
 }

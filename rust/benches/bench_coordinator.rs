@@ -94,15 +94,21 @@ fn main() -> Result<()> {
             events += j.join().expect("session")?;
         }
         let wall = t.elapsed().as_secs_f64();
+        let load = |c: &std::sync::atomic::AtomicUsize| {
+            c.load(std::sync::atomic::Ordering::Relaxed)
+        };
         println!(
             "batched {} sessions (window {}ms): {:.3}s  {:.1} events/s  \
-             occupancy {:.2} (delta {:.2})",
+             occupancy {:.2} (delta {:.2})  retries={} timeouts={} gave_up={}",
             sessions,
             window_ms,
             wall,
             events as f64 / wall,
             handle.stats.occupancy(),
-            handle.stats.delta_occupancy()
+            handle.stats.delta_occupancy(),
+            load(&handle.stats.retries),
+            load(&handle.stats.timeouts),
+            load(&handle.stats.gave_up),
         );
     }
     Ok(())

@@ -27,7 +27,11 @@
 //!     how requests were grouped into batches;
 //!   * numerical results are identical to the direct path (same forward),
 //!     and delta replies never leak another stream's state (the
-//!     crosstalk regression in `rust/tests/fleet.rs`).
+//!     crosstalk regression in `rust/tests/fleet.rs`);
+//!   * transient failures are invisible to callers up to the
+//!     [`RetryPolicy`] bounds: the handle resubmits with exponential
+//!     backoff under a per-request deadline, and a retried forward
+//!     returns bit-identical rows (`rust/tests/chaos.rs`).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
@@ -70,6 +74,15 @@ pub struct BatcherStats {
     pub batched_deltas: AtomicUsize,
     /// largest delta wave coalesced so far
     pub max_delta_wave: AtomicUsize,
+    /// transient-error resubmissions (each retried attempt counts once;
+    /// the initial submission of a request is not a retry)
+    pub retries: AtomicUsize,
+    /// requests aborted by the per-request deadline — waiting for a
+    /// reply or mid-backoff (DESIGN.md §13)
+    pub timeouts: AtomicUsize,
+    /// requests that exhausted [`RetryPolicy::max_attempts`] and returned
+    /// the last transient error to the caller
+    pub gave_up: AtomicUsize,
 }
 
 impl BatcherStats {
@@ -92,6 +105,38 @@ impl BatcherStats {
         self.batched_deltas.load(Ordering::Relaxed) as f64 / w as f64
     }
 }
+
+/// Bounded-retry policy of an [`ExecutorHandle`] (DESIGN.md §13).
+///
+/// Only errors marked transient
+/// ([`crate::runtime::chaos::is_transient`]) are retried: forwards are
+/// pure functions of their inputs and injected faults are fail-stop, so
+/// a resubmitted request returns bit-identical rows — retrying can never
+/// perturb a sampler's RNG decision streams. Non-transient errors (e.g.
+/// "unknown stream" after a stream loss) propagate immediately so the
+/// fleet engine's rebase/degradation ladder can handle them.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// total attempts per request (1 ⇒ no retries)
+    pub max_attempts: usize,
+    /// first retry's backoff; doubles per retry up to 100ms
+    pub backoff: Duration,
+    /// per-request deadline covering all attempts and backoffs
+    pub deadline: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 4,
+            backoff: Duration::from_micros(500),
+            deadline: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Backoff growth cap (exponential backoff stops doubling here).
+const MAX_BACKOFF: Duration = Duration::from_millis(100);
 
 /// One queued unit of executor work. Forward-type requests (`Full`,
 /// `Delta`) coalesce into batches; stream-control requests are cheap and
@@ -148,6 +193,8 @@ pub struct ExecutorHandle {
     /// whether the executor's model supports incremental streams (probed
     /// at load time; gates the handle's [`Forward::cached`])
     supports_streams: bool,
+    /// bounded-retry / deadline policy applied to every forward request
+    policy: RetryPolicy,
     /// shared batching counters
     pub stats: Arc<BatcherStats>,
     /// `dataset/encoder/size` tag for logs
@@ -168,6 +215,28 @@ impl ExecutorHandle {
         size: &str,
         max_batch: usize,
         batch_window: Duration,
+    ) -> Result<ExecutorHandle> {
+        Self::spawn_with_policy(
+            backend,
+            dataset,
+            encoder,
+            size,
+            max_batch,
+            batch_window,
+            RetryPolicy::default(),
+        )
+    }
+
+    /// [`ExecutorHandle::spawn`] with an explicit [`RetryPolicy`] (tests
+    /// use tight deadlines; the default is serving-friendly).
+    pub fn spawn_with_policy(
+        backend: Arc<dyn Backend>,
+        dataset: &str,
+        encoder: &str,
+        size: &str,
+        max_batch: usize,
+        batch_window: Duration,
+        policy: RetryPolicy,
     ) -> Result<ExecutorHandle> {
         let (tx, rx) = sync_channel::<Request>(1024);
         let stats = Arc::new(BatcherStats::default());
@@ -197,7 +266,7 @@ impl ExecutorHandle {
         let (max_bucket, max_batch, supports_streams) = ready_rx
             .recv()
             .map_err(|_| anyhow!("executor thread died during load"))??;
-        Ok(ExecutorHandle { tx, max_bucket, max_batch, supports_streams, stats, name })
+        Ok(ExecutorHandle { tx, max_bucket, max_batch, supports_streams, policy, stats, name })
     }
 
     /// Enqueue one full forward, counting it, and hand back the reply
@@ -225,6 +294,83 @@ impl ExecutorHandle {
         self.stats.requests.fetch_add(1, Ordering::Relaxed);
         self.stats.delta_requests.fetch_add(1, Ordering::Relaxed);
         Ok(rx)
+    }
+
+    /// Wait out one reply under the request deadline, separating the
+    /// three infrastructure outcomes the satellite tests pin down:
+    /// deadline exceeded (`Timeout` — counted in
+    /// [`BatcherStats::timeouts`], never retried), executor death
+    /// (`Disconnected` — never retried), and an op-level `Err` carried in
+    /// the reply (retried below iff transient).
+    fn recv_reply<T>(&self, rx: &Receiver<Result<T>>, deadline: Instant) -> Result<T> {
+        let wait = deadline.saturating_duration_since(Instant::now());
+        match rx.recv_timeout(wait) {
+            Ok(res) => res,
+            Err(RecvTimeoutError::Timeout) => {
+                self.stats.timeouts.fetch_add(1, Ordering::Relaxed);
+                Err(anyhow!(
+                    "executor '{}': request deadline ({:?}) exceeded",
+                    self.name,
+                    self.policy.deadline
+                ))
+            }
+            Err(RecvTimeoutError::Disconnected) => Err(anyhow!(
+                "executor '{}' died: reply channel disconnected",
+                self.name
+            )),
+        }
+    }
+
+    /// Bounded-retry driver shared by every forward path: submit, wait,
+    /// and resubmit transient failures with exponential backoff until
+    /// success, a non-transient error, [`RetryPolicy::max_attempts`], or
+    /// the per-request deadline. `first_err` lets the batch paths hand
+    /// over a request that already failed its wave attempt (that wave
+    /// attempt counts as attempt 1).
+    ///
+    /// Retrying is sound because a forward is a pure function of its
+    /// request and injected faults are fail-stop: the retried attempt
+    /// returns bit-identical rows, and no sampler RNG is consumed
+    /// between attempts (DESIGN.md §13).
+    fn with_retry<T>(
+        &self,
+        submit: impl Fn() -> Result<Receiver<Result<T>>>,
+        first_err: Option<anyhow::Error>,
+    ) -> Result<T> {
+        let deadline = Instant::now() + self.policy.deadline;
+        let mut backoff = self.policy.backoff;
+        let mut attempt = 1usize;
+        let mut last_err = first_err;
+        loop {
+            if let Some(e) = last_err.take() {
+                // The previous attempt failed transiently: give up,
+                // time out, or back off and resubmit.
+                if attempt >= self.policy.max_attempts {
+                    self.stats.gave_up.fetch_add(1, Ordering::Relaxed);
+                    return Err(anyhow!(
+                        "executor '{}': gave up after {attempt} attempts: {e:#}",
+                        self.name
+                    ));
+                }
+                if Instant::now() + backoff >= deadline {
+                    self.stats.timeouts.fetch_add(1, Ordering::Relaxed);
+                    return Err(anyhow!(
+                        "executor '{}': request deadline ({:?}) exceeded during retry backoff: {e:#}",
+                        self.name,
+                        self.policy.deadline
+                    ));
+                }
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(MAX_BACKOFF);
+                attempt += 1;
+                self.stats.retries.fetch_add(1, Ordering::Relaxed);
+            }
+            match self.recv_reply(&submit()?, deadline) {
+                Ok(v) => return Ok(v),
+                Err(e) if crate::runtime::chaos::is_transient(&e) => last_err = Some(e),
+                Err(e) => return Err(e),
+            }
+        }
     }
 }
 
@@ -400,9 +546,7 @@ fn serve_control(exec: &dyn ModelBackend, r: Request) -> Option<Request> {
 
 impl Forward for ExecutorHandle {
     fn forward1(&self, seq: SeqInput) -> Result<SlotOut> {
-        self.submit(seq)?
-            .recv()
-            .map_err(|_| anyhow!("executor '{}' dropped request", self.name))?
+        self.with_retry(|| self.submit(seq.clone()), None)
     }
 
     fn max_bucket(&self) -> usize {
@@ -420,25 +564,32 @@ impl Forward for ExecutorHandle {
 
 impl CachedForward for ExecutorHandle {
     fn open_stream(&self) -> Result<StreamId> {
-        let (reply, rx) = sync_channel(1);
-        self.tx
-            .send(Request::Open { reply })
-            .map_err(|_| anyhow!("executor '{}' stopped", self.name))?;
-        rx.recv().map_err(|_| anyhow!("executor '{}' dropped request", self.name))?
+        self.with_retry(
+            || {
+                let (reply, rx) = sync_channel(1);
+                self.tx
+                    .send(Request::Open { reply })
+                    .map_err(|_| anyhow!("executor '{}' stopped", self.name))?;
+                Ok(rx)
+            },
+            None,
+        )
     }
 
     fn forward_delta(&self, stream: StreamId, delta: &SeqDelta) -> Result<SlotOut> {
-        self.submit_delta(stream, delta.clone())?
-            .recv()
-            .map_err(|_| anyhow!("executor '{}' dropped request", self.name))?
+        self.with_retry(|| self.submit_delta(stream, delta.clone()), None)
     }
 
     fn rewind(&self, stream: StreamId, len: usize) -> Result<()> {
+        // No retry: a rewind that reached the model already moved stream
+        // state, so blind resubmission is not provably idempotent under
+        // every failure. Deadline/disconnect classification still applies.
+        let deadline = Instant::now() + self.policy.deadline;
         let (reply, rx) = sync_channel(1);
         self.tx
             .send(Request::Rewind { stream, len, reply })
             .map_err(|_| anyhow!("executor '{}' stopped", self.name))?;
-        rx.recv().map_err(|_| anyhow!("executor '{}' dropped request", self.name))?
+        self.recv_reply(&rx, deadline)
     }
 
     fn close_stream(&self, stream: StreamId) {
@@ -449,15 +600,23 @@ impl CachedForward for ExecutorHandle {
     /// Wave-enqueue, like [`BatchForward::forward_batch`]: all deltas land
     /// in the executor thread's channel together and coalesce into one
     /// drained wave instead of paying the batch window per request.
+    /// Per-delta transient failures are retried individually (the wave
+    /// attempt counts as attempt 1), so one injected fault never fails
+    /// its wave-mates.
     fn forward_delta_batch(&self, reqs: Vec<(StreamId, SeqDelta)>) -> Result<Vec<SlotOut>> {
+        let deadline = Instant::now() + self.policy.deadline;
         let rxs: Vec<_> = reqs
-            .into_iter()
-            .map(|(s, d)| self.submit_delta(s, d))
+            .iter()
+            .map(|(s, d)| self.submit_delta(*s, d.clone()))
             .collect::<Result<_>>()?;
         rxs.into_iter()
-            .map(|rx| {
-                rx.recv()
-                    .map_err(|_| anyhow!("executor '{}' dropped request", self.name))?
+            .zip(reqs)
+            .map(|(rx, (s, d))| match self.recv_reply(&rx, deadline) {
+                Ok(out) => Ok(out),
+                Err(e) if crate::runtime::chaos::is_transient(&e) => {
+                    self.with_retry(|| self.submit_delta(s, d.clone()), Some(e))
+                }
+                Err(e) => Err(e),
             })
             .collect()
     }
@@ -466,16 +625,24 @@ impl CachedForward for ExecutorHandle {
 impl BatchForward for ExecutorHandle {
     /// Enqueue the whole wave before reading any reply: the requests land
     /// in the executor thread's channel together, so it coalesces them
-    /// into full batches without waiting out the batch window.
+    /// into full batches without waiting out the batch window. Per-request
+    /// transient failures are retried individually (the wave attempt
+    /// counts as attempt 1), so one injected fault never fails its
+    /// wave-mates.
     fn forward_batch(&self, seqs: Vec<SeqInput>) -> Result<Vec<SlotOut>> {
+        let deadline = Instant::now() + self.policy.deadline;
         let rxs: Vec<_> = seqs
-            .into_iter()
-            .map(|seq| self.submit(seq))
+            .iter()
+            .map(|seq| self.submit(seq.clone()))
             .collect::<Result<_>>()?;
         rxs.into_iter()
-            .map(|rx| {
-                rx.recv()
-                    .map_err(|_| anyhow!("executor '{}' dropped request", self.name))?
+            .zip(seqs)
+            .map(|(rx, seq)| match self.recv_reply(&rx, deadline) {
+                Ok(out) => Ok(out),
+                Err(e) if crate::runtime::chaos::is_transient(&e) => {
+                    self.with_retry(|| self.submit(seq.clone()), Some(e))
+                }
+                Err(e) => Err(e),
             })
             .collect()
     }

@@ -19,7 +19,7 @@ pub mod protocol;
 pub mod router;
 pub mod server;
 
-pub use batcher::{BatcherStats, ExecutorHandle};
+pub use batcher::{BatcherStats, ExecutorHandle, RetryPolicy};
 pub use protocol::{FleetRequest, Request, SampleRequest};
 pub use router::{ModelPair, Router};
 pub use server::{Client, Server};

@@ -13,6 +13,13 @@
 //! same seed (`rust/tests/cached_forward.rs`), so the flag only moves
 //! wall-clock, never a probability.
 //!
+//! `"chaos"` (default `""` = off) injects deterministic faults into the
+//! request's backend from a [`crate::runtime::chaos::FaultPlan`] spec such
+//! as `"seed=7,err=0.2,loss=0.1"` (DESIGN.md §13). Recoverable plans
+//! return bit-identical events to the fault-free run — that is the point
+//! — while unrecoverable ones surface as `{"ok":false,...}` instead of a
+//! hang.
+//!
 //! Response:
 //!   {"ok":true,"events":[[t,k],...],"stats":{...}}
 //!   {"ok":true,"sequences":[[[t,k],...],...],"stats":{...},"fleet":{...}}
@@ -64,6 +71,9 @@ pub struct SampleRequest {
     /// use the backend's incremental-forward streams when available
     /// (default `true`; `false` forces full-window forwards)
     pub cached: bool,
+    /// fault-injection spec (`""` = off), e.g. `"seed=7,err=0.2"` —
+    /// parsed by [`crate::runtime::chaos::FaultPlan::parse`]
+    pub chaos: String,
 }
 
 /// Parameters of a `sample_fleet` request.
@@ -86,6 +96,7 @@ fn parse_sample_fields(j: &Json) -> SampleRequest {
         seed: j.f64_at("seed").unwrap_or(0.0) as u64,
         draft_size: j.str_at("draft_size").unwrap_or("draft").to_string(),
         cached: j.bool_at("cached").unwrap_or(true),
+        chaos: j.str_at("chaos").unwrap_or("").to_string(),
     }
 }
 
@@ -100,6 +111,7 @@ fn sample_fields(op: &str, s: &SampleRequest) -> Vec<(&'static str, Json)> {
         ("seed", Json::Num(s.seed as f64)),
         ("draft_size", Json::Str(s.draft_size.clone())),
         ("cached", Json::Bool(s.cached)),
+        ("chaos", Json::Str(s.chaos.clone())),
     ]
 }
 
@@ -205,6 +217,8 @@ pub fn fleet_ok_response(runs: &[(Vec<Event>, SampleStats)], fleet: &FleetStats)
         ("target_occupancy", Json::Num(fleet.target_occupancy())),
         ("delta_batches", Json::Num(fleet.delta_batches as f64)),
         ("delta_seqs", Json::Num(fleet.delta_seqs as f64)),
+        ("stream_recoveries", Json::Num(fleet.stream_recoveries as f64)),
+        ("degraded_uncached", Json::Num(fleet.degraded_uncached as f64)),
     ]);
     obj(vec![
         ("ok", Json::Bool(true)),
@@ -264,14 +278,18 @@ mod tests {
             seed: 3,
             draft_size: "draft".into(),
             cached: false,
+            chaos: "seed=7,err=0.25,loss=0.1".into(),
         });
         let line = r.to_line();
         assert_eq!(Request::parse(&line).unwrap(), r);
         assert_eq!(Request::parse(r#"{"op":"ping"}"#).unwrap(), Request::Ping);
         assert!(Request::parse(r#"{"op":"bogus"}"#).is_err());
-        // `cached` defaults to true when the field is absent
+        // `cached` defaults to true and `chaos` to off when absent
         match Request::parse(r#"{"op":"sample"}"#).unwrap() {
-            Request::Sample(s) => assert!(s.cached),
+            Request::Sample(s) => {
+                assert!(s.cached);
+                assert!(s.chaos.is_empty());
+            }
             other => panic!("{other:?}"),
         }
     }
@@ -298,6 +316,7 @@ mod tests {
                 seed: 5,
                 draft_size: "draft".into(),
                 cached: true,
+                chaos: String::new(),
             },
             n_seq: 8,
         });

@@ -1,11 +1,22 @@
 //! TCP sampling server: line-protocol front-end over the router + batching
 //! executors. One lightweight thread per connection (sessions); the heavy
 //! lifting batches on the per-model executor threads.
+//!
+//! Fault injection (DESIGN.md §13): a request carrying a non-empty
+//! `"chaos"` spec is served by a dedicated router whose backend is wrapped
+//! in [`ChaosBackend`], built lazily per distinct spec (bounded by
+//! [`MAX_CHAOS_ROUTERS`]). The fault-free router — and every other
+//! client's traffic — is untouched. Recoverable plans ride the executor
+//! handles' retry/backoff and the fleet engine's stream recovery, so their
+//! responses are bit-identical to fault-free ones; unrecoverable plans
+//! surface as `{"ok":false,...}` structured errors, never a hang
+//! (`rust/tests/chaos.rs`).
 
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::Result;
@@ -14,19 +25,58 @@ use super::protocol::{
     err_response, fleet_ok_response, ok_response, FleetRequest, Request, SampleRequest,
 };
 use super::router::{ModelPair, Router};
-use crate::runtime::{BatchForward, Uncached};
+use crate::runtime::{Backend, BatchForward, ChaosBackend, FaultPlan, Uncached};
 use crate::sampler::{
     fleet_seeds, sample_ar_fleet, sample_sd_fleet, FleetRuns, FleetStats, Gamma, SampleCfg, SdCfg,
 };
 use crate::util::json::{obj, Json};
+
+/// Cap on distinct chaos specs a server builds routers for — each one
+/// spawns its own executor threads, and chaos is a testing facility, not a
+/// production path. Further specs are rejected with `{"ok":false,...}`.
+const MAX_CHAOS_ROUTERS: usize = 8;
+
+/// Everything a connection thread needs: the fault-free router plus the
+/// makings of per-spec chaos routers.
+struct Ctx {
+    backend: Arc<dyn Backend>,
+    router: Arc<Router>,
+    max_batch: usize,
+    batch_window: Duration,
+    chaos: Mutex<BTreeMap<String, Arc<Router>>>,
+    sessions: AtomicUsize,
+}
+
+impl Ctx {
+    /// The router serving a request with fault spec `spec`: the shared
+    /// fault-free router for `""`/no-op specs, else a lazily-built (and
+    /// cached) router over a [`ChaosBackend`] for the spec.
+    fn router_for(&self, spec: &str) -> Result<Arc<Router>> {
+        let plan = FaultPlan::parse(spec)?;
+        if plan.is_noop() {
+            return Ok(self.router.clone());
+        }
+        let mut map = self.chaos.lock().unwrap();
+        if let Some(r) = map.get(spec) {
+            return Ok(r.clone());
+        }
+        anyhow::ensure!(
+            map.len() < MAX_CHAOS_ROUTERS,
+            "too many distinct chaos specs (cap {MAX_CHAOS_ROUTERS})"
+        );
+        let wrapped: Arc<dyn Backend> = Arc::new(ChaosBackend::new(self.backend.clone(), plan));
+        let r = Arc::new(Router::new(wrapped, self.max_batch, self.batch_window)?);
+        map.insert(spec.to_string(), r.clone());
+        Ok(r)
+    }
+}
 
 /// The TCP sampling server: accept loop + per-connection session threads.
 pub struct Server {
     /// the bound address (useful with port 0)
     pub addr: std::net::SocketAddr,
     listener: TcpListener,
-    router: Arc<Router>,
-    sessions: Arc<AtomicUsize>,
+    ctx: Arc<Ctx>,
 }
 
 impl Server {
@@ -38,15 +88,23 @@ impl Server {
         max_batch: usize,
         batch_window: Duration,
     ) -> Result<Server> {
-        let router = Arc::new(Router::new(backend, max_batch, batch_window)?);
+        let router = Arc::new(Router::new(backend.clone(), max_batch, batch_window)?);
         let listener = TcpListener::bind(host_port)?;
         let addr = listener.local_addr()?;
-        Ok(Server { addr, listener, router, sessions: Arc::new(AtomicUsize::new(0)) })
+        let ctx = Arc::new(Ctx {
+            backend,
+            router,
+            max_batch,
+            batch_window,
+            chaos: Mutex::new(BTreeMap::new()),
+            sessions: AtomicUsize::new(0),
+        });
+        Ok(Server { addr, listener, ctx })
     }
 
     /// Shared handle to the router (pre-routing, stats).
     pub fn router(&self) -> Arc<Router> {
-        self.router.clone()
+        self.ctx.router.clone()
     }
 
     /// Accept loop; blocks forever. Call from a dedicated thread when
@@ -57,19 +115,18 @@ impl Server {
                 Ok(s) => s,
                 Err(_) => continue,
             };
-            let router = self.router.clone();
-            let sessions = self.sessions.clone();
+            let ctx = self.ctx.clone();
             std::thread::spawn(move || {
-                sessions.fetch_add(1, Ordering::Relaxed);
-                let _ = handle_conn(stream, &router, &sessions);
-                sessions.fetch_sub(1, Ordering::Relaxed);
+                ctx.sessions.fetch_add(1, Ordering::Relaxed);
+                let _ = handle_conn(stream, &ctx);
+                ctx.sessions.fetch_sub(1, Ordering::Relaxed);
             });
         }
         Ok(())
     }
 }
 
-fn handle_conn(stream: TcpStream, router: &Router, sessions: &AtomicUsize) -> Result<()> {
+fn handle_conn(stream: TcpStream, ctx: &Ctx) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
     let mut line = String::new();
@@ -83,12 +140,18 @@ fn handle_conn(stream: TcpStream, router: &Router, sessions: &AtomicUsize) -> Re
         }
         let resp = match Request::parse(&line) {
             Ok(Request::Ping) => r#"{"ok":true,"pong":true}"#.to_string(),
-            Ok(Request::Stats) => stats_response(router, sessions),
-            Ok(Request::Sample(req)) => match run_sample(router, &req) {
+            Ok(Request::Stats) => stats_response(ctx),
+            Ok(Request::Sample(req)) => match ctx
+                .router_for(&req.chaos)
+                .and_then(|router| run_sample(&router, &req))
+            {
                 Ok(resp) => resp,
                 Err(e) => err_response(&format!("{e:#}")),
             },
-            Ok(Request::SampleFleet(req)) => match run_sample_fleet(router, &req) {
+            Ok(Request::SampleFleet(req)) => match ctx
+                .router_for(&req.base.chaos)
+                .and_then(|router| run_sample_fleet(&router, &req))
+            {
                 Ok(resp) => resp,
                 Err(e) => err_response(&format!("{e:#}")),
             },
@@ -187,13 +250,17 @@ fn run_sample_fleet(router: &Router, req: &FleetRequest) -> Result<String> {
     Ok(fleet_ok_response(&runs, &fleet))
 }
 
-fn stats_response(router: &Router, sessions: &AtomicUsize) -> String {
+fn stats_response(ctx: &Ctx) -> String {
     obj(vec![
         ("ok", Json::Bool(true)),
-        ("sessions", Json::Num(sessions.load(Ordering::Relaxed) as f64)),
+        ("sessions", Json::Num(ctx.sessions.load(Ordering::Relaxed) as f64)),
+        (
+            "chaos_routers",
+            Json::Num(ctx.chaos.lock().unwrap().len() as f64),
+        ),
         (
             "datasets",
-            Json::Arr(router.datasets().into_iter().map(Json::Str).collect()),
+            Json::Arr(ctx.router.datasets().into_iter().map(Json::Str).collect()),
         ),
     ])
     .to_string()

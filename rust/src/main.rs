@@ -9,7 +9,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 use tpp_sd::coordinator::Server;
-use tpp_sd::runtime::{backend_from_arg, Backend, Uncached};
+use tpp_sd::runtime::{backend_from_arg, Backend, ChaosBackend, FaultPlan, Uncached};
 use tpp_sd::sampler::{
     fleet_seeds, sample_ar_fleet, sample_sd_fleet, FleetRuns, Gamma, SampleCfg, SampleStats, SdCfg,
 };
@@ -35,6 +35,11 @@ commands:
           [--uncached]              force full-window forwards even when
                                     the backend has incremental streams
                                     (A/B knob; events are bit-identical)
+          [--chaos spec]            inject deterministic faults, e.g.
+                                    'seed=7,err=0.2,loss=0.1' (keys: seed,
+                                    err, delay, delay-ms, loss, pad, die);
+                                    recoverable plans print the same
+                                    events as a fault-free run
   serve   [--listen 127.0.0.1:7077] [--max-batch 8] [--batch-window-ms 2]
 
 options (all commands):
@@ -88,6 +93,19 @@ fn sample(args: &Args) -> Result<()> {
     let encoder = args.str_or("encoder", "attnhp").to_string();
     let method = args.str_or("method", "sd").to_string();
     let backend = pick_backend(args)?;
+    // --chaos wraps the whole registry before any model loads, so every
+    // forward below runs under the fault plan (DESIGN.md §13).
+    let mut chaos_stats = None;
+    let backend: std::sync::Arc<dyn Backend> = {
+        let plan = FaultPlan::parse(args.str_or("chaos", ""))?;
+        if plan.is_noop() {
+            backend
+        } else {
+            let wrapped = std::sync::Arc::new(ChaosBackend::new(backend, plan));
+            chaos_stats = Some(wrapped.stats());
+            wrapped
+        }
+    };
     let num_types = backend.num_types(&dataset)?;
     let cfg = SampleCfg {
         num_types,
@@ -175,6 +193,18 @@ fn sample(args: &Args) -> Result<()> {
         stats.draft_forwards,
         stats.acceptance_rate()
     );
+    if let Some(cs) = chaos_stats {
+        eprintln!(
+            "# chaos: {} faults injected ({} errors, {} delays, {} losses, {} corruptions); {} streams recovered, {} sessions degraded uncached",
+            cs.total(),
+            cs.errors.load(std::sync::atomic::Ordering::Relaxed),
+            cs.delays.load(std::sync::atomic::Ordering::Relaxed),
+            cs.losses.load(std::sync::atomic::Ordering::Relaxed),
+            cs.corruptions.load(std::sync::atomic::Ordering::Relaxed),
+            fleet.stream_recoveries,
+            fleet.degraded_uncached,
+        );
+    }
     Ok(())
 }
 

@@ -438,6 +438,30 @@ impl ForwardOut {
             .collect();
         TypeDist::from_logits(&logits, k)
     }
+
+    /// Deterministically overwrite batch slot `b`'s rows at and past
+    /// `first_pad` with garbage-but-finite parameters (still *valid*
+    /// distributions, per the row-layout contract above).
+    ///
+    /// Chaos-layer support ([`crate::runtime::chaos`]): padding rows must
+    /// never influence sampling, so scrambling them is invisible to a
+    /// correct consumer and loudly visible to one that reads padding.
+    pub fn scramble_padding(&mut self, b: usize, first_pad: usize, salt: u64) {
+        debug_assert!(b < self.batch);
+        let mut rng = crate::util::rng::Rng::new(salt);
+        for row in first_pad..self.bucket {
+            let m_off = (b * self.bucket + row) * self.n_mix;
+            for i in 0..self.n_mix {
+                self.log_w[m_off + i] = rng.uniform_in(-3.0, 0.0) as f32;
+                self.mu[m_off + i] = rng.uniform_in(-5.0, 5.0) as f32;
+                self.log_sigma[m_off + i] = rng.uniform_in(-2.0, 1.0) as f32;
+            }
+            let l_off = (b * self.bucket + row) * self.k_max;
+            for i in 0..self.k_max {
+                self.logits[l_off + i] = rng.uniform_in(-4.0, 4.0) as f32;
+            }
+        }
+    }
 }
 
 #[cfg(test)]

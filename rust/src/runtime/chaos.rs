@@ -1,0 +1,564 @@
+//! Chaos-injection layer (DESIGN.md §13, ADR-004): seeded, deterministic
+//! fault injection behind the backend seam.
+//!
+//! Every wrapper here implements the same traits as the object it wraps —
+//! [`Forward`], [`BatchForward`], [`CachedForward`], [`ModelBackend`],
+//! [`Backend`] — so the samplers, the fleet engine and the coordinator run
+//! *unchanged* while a [`FaultPlan`] injects faults underneath them:
+//!
+//! * **transient errors** (`err=P`) — the op fails with a
+//!   [`TRANSIENT_MARKER`]-tagged `Err` *before* touching the inner model
+//!   (fail-stop: no partial side effects, so a retry observes the same
+//!   pre-state);
+//! * **latency spikes** (`delay=P`, `delay-ms=N`) — the op sleeps before
+//!   executing (exercises deadlines, never changes results);
+//! * **stream loss** (`loss=P`) — a delta forward force-closes its own
+//!   stream first and fails; the next use of the id reports "unknown
+//!   stream", which consumers recover from by rebasing on a fresh stream;
+//! * **corrupted padding rows** (`pad=P`) — a full forward's padding rows
+//!   (rows past each sequence's length, batch slots past the real
+//!   sequences) are overwritten with garbage-but-finite parameters. Real
+//!   rows are untouched, so a correct consumer is bit-identical — this
+//!   fault *detects* padding reads instead of tolerating them;
+//! * **executor death** (`die=P`) — the op panics (thread-killing fault;
+//!   only meaningful under the coordinator, whose handle observes the
+//!   executor channel disconnect).
+//!
+//! All decisions come from one seeded [`Rng`] per wrapped object, so a
+//! fault schedule is a pure function of `(plan, op sequence)`: the same
+//! single-threaded run replays the same faults every time. Injected
+//! faults are tallied in a shared [`ChaosStats`], which the recovery test
+//! suite (`rust/tests/chaos.rs`) reconciles against the consumers'
+//! retry/recovery counters.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::backend::{
+    Backend, BatchForward, CachedForward, Forward, ForwardOut, ModelBackend, SeqDelta, SeqInput,
+    SlotOut, StreamId,
+};
+
+/// Substring marking an injected error as *transient* (retry-worthy). The
+/// batcher's retry loop only resubmits errors carrying this marker —
+/// everything else (e.g. "unknown stream" after a loss) propagates
+/// immediately so the stream-recovery ladder can handle it instead.
+pub const TRANSIENT_MARKER: &str = "transient";
+
+/// True when an error is marked transient (safe and useful to retry).
+pub fn is_transient(err: &anyhow::Error) -> bool {
+    format!("{err:#}").contains(TRANSIENT_MARKER)
+}
+
+/// Per-fault-kind probability schedule of one chaos run. Parsed from the
+/// `--chaos` CLI / wire spec: comma-separated `key=value` pairs, e.g.
+/// `seed=7,err=0.2,delay=0.1,delay-ms=2,loss=0.05,pad=0.3`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// seed of the fault-decision stream (`seed=N`, default 0)
+    pub seed: u64,
+    /// probability a forward-type op fails with a transient error
+    /// (`err=P`); `err=1` makes every attempt fail — the canonical
+    /// *unrecoverable* plan
+    pub p_err: f64,
+    /// probability an op sleeps [`FaultPlan::delay`] first (`delay=P`)
+    pub p_delay: f64,
+    /// latency-spike duration (`delay-ms=N`, default 1ms)
+    pub delay: Duration,
+    /// probability a delta forward loses its stream (`loss=P`)
+    pub p_loss: f64,
+    /// probability a full forward's padding rows are corrupted (`pad=P`)
+    pub p_pad: f64,
+    /// probability an op panics, killing its executor thread (`die=P`)
+    pub p_die: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            p_err: 0.0,
+            p_delay: 0.0,
+            delay: Duration::from_millis(1),
+            p_loss: 0.0,
+            p_pad: 0.0,
+            p_die: 0.0,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Parse a `key=value,...` spec. Unknown keys and probabilities
+    /// outside [0, 1] are errors (a typo'd chaos spec silently injecting
+    /// nothing would defeat the whole point).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow!("chaos spec '{part}': expected key=value"))?;
+            let prob = |what: &str| -> Result<f64> {
+                let p: f64 = val
+                    .parse()
+                    .map_err(|_| anyhow!("chaos spec: bad {what} probability '{val}'"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    bail!("chaos spec: {what}={p} outside [0,1]");
+                }
+                Ok(p)
+            };
+            match key {
+                "seed" => {
+                    plan.seed = val
+                        .parse()
+                        .map_err(|_| anyhow!("chaos spec: bad seed '{val}'"))?
+                }
+                "err" => plan.p_err = prob("err")?,
+                "delay" => plan.p_delay = prob("delay")?,
+                "delay-ms" | "delay_ms" => {
+                    let ms: u64 = val
+                        .parse()
+                        .map_err(|_| anyhow!("chaos spec: bad delay-ms '{val}'"))?;
+                    plan.delay = Duration::from_millis(ms);
+                }
+                "loss" => plan.p_loss = prob("loss")?,
+                "pad" => plan.p_pad = prob("pad")?,
+                "die" => plan.p_die = prob("die")?,
+                other => {
+                    bail!("chaos spec: unknown key '{other}' (seed|err|delay|delay-ms|loss|pad|die)")
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// True when every injected fault is recoverable by the retry /
+    /// rebase / degradation ladder: sub-certain transient errors, any
+    /// amount of latency, stream loss and padding corruption. `err=1`
+    /// (every attempt fails) and any `die` make a plan unrecoverable.
+    pub fn recoverable(&self) -> bool {
+        self.p_err < 1.0 && self.p_die == 0.0
+    }
+
+    /// True when the plan injects nothing (e.g. parsed from `""`).
+    pub fn is_noop(&self) -> bool {
+        self.p_err == 0.0
+            && self.p_delay == 0.0
+            && self.p_loss == 0.0
+            && self.p_pad == 0.0
+            && self.p_die == 0.0
+    }
+}
+
+/// Tally of every fault actually injected (shared across the wrappers of
+/// one [`ChaosBackend`], so a test can reconcile the totals against the
+/// consumers' retry/recovery counters).
+#[derive(Debug, Default)]
+pub struct ChaosStats {
+    /// transient `Err` returns injected
+    pub errors: AtomicUsize,
+    /// latency spikes injected
+    pub delays: AtomicUsize,
+    /// streams force-closed under a delta forward
+    pub losses: AtomicUsize,
+    /// full forwards whose padding rows were scrambled
+    pub corruptions: AtomicUsize,
+    /// injected panics (executor deaths)
+    pub deaths: AtomicUsize,
+}
+
+impl ChaosStats {
+    /// Total faults injected, over every kind.
+    pub fn total(&self) -> usize {
+        let l = |c: &AtomicUsize| c.load(Ordering::Relaxed);
+        l(&self.errors) + l(&self.delays) + l(&self.losses) + l(&self.corruptions) + l(&self.deaths)
+    }
+
+    /// Relaxed load of one counter (test convenience).
+    pub fn get(c: &AtomicUsize) -> usize {
+        c.load(Ordering::Relaxed)
+    }
+}
+
+/// The seeded fault-decision core shared by the wrappers: one plan, one
+/// RNG (mutexed — determinism is guaranteed for deterministic op
+/// sequences, i.e. single-threaded drivers), one stats tally.
+#[derive(Debug)]
+struct ChaosCore {
+    plan: FaultPlan,
+    rng: Mutex<Rng>,
+    stats: Arc<ChaosStats>,
+}
+
+impl ChaosCore {
+    fn new(plan: FaultPlan, seed: u64, stats: Arc<ChaosStats>) -> ChaosCore {
+        ChaosCore { plan, rng: Mutex::new(Rng::new(seed)), stats }
+    }
+
+    fn roll(&self, p: f64) -> bool {
+        p > 0.0 && self.rng.lock().unwrap().uniform() < p
+    }
+
+    /// Pre-op fault gate, in fixed roll order (die, delay, err) so a
+    /// seeded schedule is reproducible. Runs *before* the inner op:
+    /// injected errors are fail-stop and a retry sees unchanged state.
+    fn before_op(&self, what: &str) -> Result<()> {
+        if self.roll(self.plan.p_die) {
+            self.stats.deaths.fetch_add(1, Ordering::Relaxed);
+            panic!("chaos: injected death during {what}");
+        }
+        if self.roll(self.plan.p_delay) {
+            self.stats.delays.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(self.plan.delay);
+        }
+        if self.roll(self.plan.p_err) {
+            self.stats.errors.fetch_add(1, Ordering::Relaxed);
+            bail!("chaos: injected {TRANSIENT_MARKER} fault during {what}");
+        }
+        Ok(())
+    }
+
+    /// Stream-loss roll for a delta forward.
+    fn lose_stream(&self) -> bool {
+        let lose = self.roll(self.plan.p_loss);
+        if lose {
+            self.stats.losses.fetch_add(1, Ordering::Relaxed);
+        }
+        lose
+    }
+
+    /// Padding-corruption roll for a full forward; returns a scramble
+    /// salt when the fault fires.
+    fn corrupt_salt(&self) -> Option<u64> {
+        if self.roll(self.plan.p_pad) {
+            self.stats.corruptions.fetch_add(1, Ordering::Relaxed);
+            Some(self.rng.lock().unwrap().next_u64())
+        } else {
+            None
+        }
+    }
+}
+
+/// Fault-injecting wrapper around any [`Forward`] / [`BatchForward`] /
+/// [`CachedForward`] — the direct-path chaos harness (tests wrap a model
+/// or a [`crate::coordinator::ExecutorHandle`] in one of these and run
+/// the samplers unchanged).
+pub struct ChaosForward<F> {
+    inner: F,
+    core: ChaosCore,
+}
+
+impl<F> ChaosForward<F> {
+    /// Wrap `inner`, drawing fault decisions from `plan.seed`.
+    pub fn new(inner: F, plan: FaultPlan) -> ChaosForward<F> {
+        let seed = plan.seed;
+        ChaosForward { inner, core: ChaosCore::new(plan, seed, Arc::new(ChaosStats::default())) }
+    }
+
+    /// The injected-fault tally.
+    pub fn stats(&self) -> Arc<ChaosStats> {
+        self.core.stats.clone()
+    }
+
+    /// The wrapped object.
+    pub fn inner(&self) -> &F {
+        &self.inner
+    }
+}
+
+impl<F: Forward> ChaosForward<F> {
+    fn inner_cached(&self) -> Result<&dyn CachedForward> {
+        self.inner
+            .cached()
+            .ok_or_else(|| anyhow!("chaos: inner model has no incremental streams"))
+    }
+}
+
+impl<F: Forward> Forward for ChaosForward<F> {
+    fn forward1(&self, seq: SeqInput) -> Result<SlotOut> {
+        self.core.before_op("forward1")?;
+        self.inner.forward1(seq)
+    }
+
+    fn max_bucket(&self) -> usize {
+        self.inner.max_bucket()
+    }
+
+    fn cached(&self) -> Option<&dyn CachedForward> {
+        self.inner.cached().map(|_| self as &dyn CachedForward)
+    }
+}
+
+impl<F: BatchForward> BatchForward for ChaosForward<F> {
+    fn forward_batch(&self, seqs: Vec<SeqInput>) -> Result<Vec<SlotOut>> {
+        self.core.before_op("forward_batch")?;
+        self.inner.forward_batch(seqs)
+    }
+
+    fn max_batch(&self) -> usize {
+        self.inner.max_batch()
+    }
+}
+
+impl<F: Forward> CachedForward for ChaosForward<F> {
+    fn open_stream(&self) -> Result<StreamId> {
+        self.core.before_op("open_stream")?;
+        self.inner_cached()?.open_stream()
+    }
+
+    fn forward_delta(&self, stream: StreamId, delta: &SeqDelta) -> Result<SlotOut> {
+        self.core.before_op("forward_delta")?;
+        let c = self.inner_cached()?;
+        if self.core.lose_stream() {
+            c.close_stream(stream);
+            bail!("chaos: stream {stream} lost (forced close)");
+        }
+        c.forward_delta(stream, delta)
+    }
+
+    fn rewind(&self, stream: StreamId, len: usize) -> Result<()> {
+        self.inner_cached()?.rewind(stream, len)
+    }
+
+    fn close_stream(&self, stream: StreamId) {
+        if let Some(c) = self.inner.cached() {
+            c.close_stream(stream);
+        }
+    }
+}
+
+/// Fault-injecting wrapper around one loaded [`ModelBackend`] (what a
+/// [`ChaosBackend`] hands to the coordinator's executor threads).
+pub struct ChaosModel {
+    inner: Box<dyn ModelBackend>,
+    core: ChaosCore,
+}
+
+impl ChaosModel {
+    /// Wrap a loaded model; `seed` must be stable per model so fault
+    /// schedules do not depend on load order.
+    pub fn new(
+        inner: Box<dyn ModelBackend>,
+        plan: FaultPlan,
+        seed: u64,
+        stats: Arc<ChaosStats>,
+    ) -> ChaosModel {
+        ChaosModel { inner, core: ChaosCore::new(plan, seed, stats) }
+    }
+
+    fn inner_cached(&self) -> Result<&dyn CachedForward> {
+        self.inner
+            .as_ref()
+            .cached()
+            .ok_or_else(|| anyhow!("chaos: inner model has no incremental streams"))
+    }
+}
+
+impl ModelBackend for ChaosModel {
+    fn forward(&self, seqs: &[SeqInput]) -> Result<ForwardOut> {
+        self.core.before_op("forward")?;
+        let mut out = self.inner.forward(seqs)?;
+        if let Some(salt) = self.core.corrupt_salt() {
+            // Scramble every padding region: rows past each sequence's
+            // length, and whole batch slots past the real sequences. Real
+            // rows stay untouched — a consumer that never reads padding
+            // is bit-identical under this fault.
+            for (b, seq) in seqs.iter().enumerate() {
+                out.scramble_padding(b, seq.len_with_bos(), salt ^ b as u64);
+            }
+            for b in seqs.len()..out.batch {
+                out.scramble_padding(b, 0, salt ^ b as u64);
+            }
+        }
+        Ok(out)
+    }
+
+    fn max_bucket(&self) -> usize {
+        self.inner.max_bucket()
+    }
+
+    fn max_batch(&self) -> usize {
+        self.inner.max_batch()
+    }
+
+    fn pick_bucket(&self, len: usize) -> Result<usize> {
+        self.inner.pick_bucket(len)
+    }
+
+    fn warmup(&self) -> Result<()> {
+        self.inner.warmup()
+    }
+
+    fn warmup_batch(&self, batch: usize) -> Result<()> {
+        self.inner.warmup_batch(batch)
+    }
+
+    fn call_count(&self) -> usize {
+        self.inner.call_count()
+    }
+
+    fn cached(&self) -> Option<&dyn CachedForward> {
+        self.inner.as_ref().cached().map(|_| self as &dyn CachedForward)
+    }
+
+    fn descriptor(&self) -> String {
+        format!("chaos({})", self.inner.descriptor())
+    }
+}
+
+impl CachedForward for ChaosModel {
+    fn open_stream(&self) -> Result<StreamId> {
+        self.core.before_op("open_stream")?;
+        self.inner_cached()?.open_stream()
+    }
+
+    fn forward_delta(&self, stream: StreamId, delta: &SeqDelta) -> Result<SlotOut> {
+        self.core.before_op("forward_delta")?;
+        let c = self.inner_cached()?;
+        if self.core.lose_stream() {
+            c.close_stream(stream);
+            bail!("chaos: stream {stream} lost (forced close)");
+        }
+        c.forward_delta(stream, delta)
+    }
+
+    fn rewind(&self, stream: StreamId, len: usize) -> Result<()> {
+        self.inner_cached()?.rewind(stream, len)
+    }
+
+    fn close_stream(&self, stream: StreamId) {
+        if let Some(c) = self.inner.as_ref().cached() {
+            c.close_stream(stream);
+        }
+    }
+}
+
+/// Fault-injecting model *registry*: wraps every model a [`Backend`]
+/// loads in a [`ChaosModel`] sharing one [`ChaosStats`] tally. This is
+/// what `tppsd sample --chaos <spec>`, the wire protocol's `"chaos"`
+/// field and the recovery test suite plug into the coordinator.
+pub struct ChaosBackend {
+    inner: Arc<dyn Backend>,
+    plan: FaultPlan,
+    stats: Arc<ChaosStats>,
+}
+
+impl ChaosBackend {
+    /// Wrap a registry with a fault plan.
+    pub fn new(inner: Arc<dyn Backend>, plan: FaultPlan) -> ChaosBackend {
+        ChaosBackend { inner, plan, stats: Arc::new(ChaosStats::default()) }
+    }
+
+    /// The injected-fault tally, shared by every model this registry has
+    /// loaded (or will load).
+    pub fn stats(&self) -> Arc<ChaosStats> {
+        self.stats.clone()
+    }
+
+    /// The wrapped plan.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+}
+
+/// Stable 64-bit fold of a model key, so each [`ChaosModel`]'s fault
+/// stream depends on *which* model it is, never on load order.
+fn key_seed(base: u64, dataset: &str, encoder: &str, size: &str) -> u64 {
+    let mut h = base ^ 0x9E37_79B9_7F4A_7C15;
+    for b in dataset.bytes().chain(encoder.bytes()).chain(size.bytes()) {
+        h = (h ^ b as u64).wrapping_mul(0x100_0000_01B3);
+    }
+    h
+}
+
+impl Backend for ChaosBackend {
+    fn name(&self) -> &'static str {
+        "chaos"
+    }
+
+    fn datasets(&self) -> Vec<String> {
+        self.inner.datasets()
+    }
+
+    fn num_types(&self, dataset: &str) -> Result<usize> {
+        self.inner.num_types(dataset)
+    }
+
+    fn dataset_spec(&self, dataset: &str) -> Result<Json> {
+        self.inner.dataset_spec(dataset)
+    }
+
+    fn load_model(
+        &self,
+        dataset: &str,
+        encoder: &str,
+        size: &str,
+    ) -> Result<Box<dyn ModelBackend>> {
+        let inner = self.inner.load_model(dataset, encoder, size)?;
+        let seed = key_seed(self.plan.seed, dataset, encoder, size);
+        Ok(Box::new(ChaosModel::new(inner, self.plan.clone(), seed, self.stats.clone())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::mock::MockModel;
+
+    #[test]
+    fn plan_parses_and_validates() {
+        let p = FaultPlan::parse("seed=7,err=0.25,delay=0.5,delay-ms=3,loss=0.1,pad=1").unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.p_err, 0.25);
+        assert_eq!(p.p_delay, 0.5);
+        assert_eq!(p.delay, Duration::from_millis(3));
+        assert_eq!(p.p_loss, 0.1);
+        assert_eq!(p.p_pad, 1.0);
+        assert!(p.recoverable());
+        assert!(!p.is_noop());
+        assert!(FaultPlan::parse("").unwrap().is_noop());
+        assert!(!FaultPlan::parse("err=1").unwrap().recoverable());
+        assert!(!FaultPlan::parse("die=0.5").unwrap().recoverable());
+        assert!(FaultPlan::parse("err=1.5").is_err());
+        assert!(FaultPlan::parse("bogus=1").is_err());
+        assert!(FaultPlan::parse("err").is_err());
+    }
+
+    #[test]
+    fn injected_errors_are_transient_and_counted() {
+        let plan = FaultPlan::parse("seed=1,err=1").unwrap();
+        let chaos = ChaosForward::new(MockModel::default(), plan);
+        let err = chaos.forward1(SeqInput::default()).unwrap_err();
+        assert!(is_transient(&err), "{err:#}");
+        assert_eq!(ChaosStats::get(&chaos.stats().errors), 1);
+    }
+
+    #[test]
+    fn noop_plan_is_bit_exact_passthrough() {
+        let inner = MockModel::default();
+        let chaos = ChaosForward::new(MockModel::default(), FaultPlan::default());
+        let seq = SeqInput { t0: 0.0, times: vec![0.5, 1.5], types: vec![0, 1] };
+        let a = chaos.forward1(seq.clone()).unwrap();
+        let b = inner.forward1(seq).unwrap();
+        assert_eq!(a.mixture(2).mu, b.mixture(2).mu);
+        assert_eq!(chaos.stats().total(), 0);
+    }
+
+    #[test]
+    fn fault_schedule_is_deterministic() {
+        let run = || {
+            let plan = FaultPlan::parse("seed=5,err=0.4").unwrap();
+            let chaos = ChaosForward::new(MockModel::default(), plan);
+            (0..50)
+                .map(|_| chaos.forward1(SeqInput::default()).is_err())
+                .collect::<Vec<bool>>()
+        };
+        assert_eq!(run(), run());
+        assert!(run().iter().any(|&e| e) && run().iter().any(|&e| !e));
+    }
+}

@@ -7,6 +7,7 @@
 //! [`ModelBackend`] / [`Forward`] traits (DESIGN.md §5).
 
 pub mod backend;
+pub mod chaos;
 #[cfg(feature = "xla")]
 pub mod executor;
 pub mod manifest;
@@ -16,6 +17,7 @@ pub use backend::{
     Backend, BatchForward, CachedForward, Forward, ForwardOut, ModelBackend, SeqDelta, SeqInput,
     SlotOut, StreamGuard, StreamId, Uncached,
 };
+pub use chaos::{ChaosBackend, ChaosForward, ChaosModel, ChaosStats, FaultPlan};
 pub use manifest::{ArtifactDir, Manifest};
 pub use native::{NativeBackend, NativeModel};
 

@@ -143,6 +143,16 @@ impl ArSession {
         &self.rng
     }
 
+    /// Forget everything the target stream had committed — the stream was
+    /// lost or errored and its replacement starts empty (DESIGN.md §13).
+    /// The next [`ArSession::pending_delta`] then carries `base_len == 0`
+    /// and the full window: a *rebase*, the same move a window slide
+    /// forces. Recovery consumes no RNG and recomputes identical rows, so
+    /// sampled events are unchanged.
+    pub fn rebase_stream(&mut self) {
+        self.cursor = 0;
+    }
+
     /// Consume the finished (or abandoned) session into its event stream
     /// and counters.
     pub fn into_output(mut self) -> (Vec<Event>, SampleStats) {
@@ -159,21 +169,50 @@ impl ArSession {
     }
 }
 
+/// Per-step cap on lost/errored-stream recovery attempts in the blocking
+/// samplers before degrading to the uncached path (DESIGN.md §13).
+pub(super) const STREAM_RECOVER_ATTEMPTS: usize = 4;
+
 /// Sample one sequence autoregressively from `target` (blocking driver
 /// over [`ArSession`]). Uses the backend's incremental stream when it has
 /// one ([`Forward::cached`]), making each AR step O(1) instead of O(L);
 /// the outputs are bit-identical either way (`rust/tests/cached_forward.rs`).
+///
+/// Fault tolerance (DESIGN.md §13): a lost or errored stream is replaced
+/// by a fresh one and rebased from the session's full window; repeated
+/// failures degrade the run to full-window forwards. Either way the rows
+/// — and therefore the sampled events — are bit-identical to the
+/// fault-free run.
 pub fn sample_ar<F: Forward + ?Sized>(
     target: &F,
     cfg: &SampleCfg,
     rng: &mut Rng,
 ) -> Result<(Vec<Event>, SampleStats)> {
     let mut session = ArSession::new(cfg.clone(), target.max_bucket(), rng.clone());
-    let stream = StreamGuard::open(target)?;
+    let mut stream = StreamGuard::open(target).unwrap_or(None);
     while !session.is_done() {
-        let fwd = match &stream {
-            Some(g) => g.forward_delta(&session.pending_delta().expect("pending delta"))?,
-            None => target.forward1(session.pending_input().expect("pending input"))?,
+        let mut tries = 0;
+        let fwd = loop {
+            match &stream {
+                Some(g) => {
+                    match g.forward_delta(&session.pending_delta().expect("pending delta")) {
+                        Ok(f) => break f,
+                        Err(_) => {
+                            // Stream lost/errored: rebase on a fresh
+                            // stream, degrading to uncached when the
+                            // failures persist.
+                            tries += 1;
+                            session.rebase_stream();
+                            stream = if tries < STREAM_RECOVER_ATTEMPTS {
+                                StreamGuard::open(target).unwrap_or(None)
+                            } else {
+                                None
+                            };
+                        }
+                    }
+                }
+                None => break target.forward1(session.pending_input().expect("pending input"))?,
+            }
         };
         session.advance(&fwd);
     }

@@ -31,6 +31,15 @@
 //! co-batch just like full inputs. Rows are bit-identical on both paths
 //! (`rust/tests/cached_forward.rs`), so caching never moves a
 //! probability either.
+//!
+//! **Fault tolerance** (DESIGN.md §13): a failed wave is isolated — each
+//! member re-runs alone — and a lost or errored stream is replaced and
+//! rebased from the session's full window ([`recover_delta`]); sessions
+//! whose streams keep dying degrade to full-window forwards. All of it is
+//! invisible in the outputs (forwards are pure and consume no sampler
+//! randomness) and visible in [`FleetStats::stream_recoveries`] /
+//! [`FleetStats::degraded_uncached`]. Property-tested in
+//! `rust/tests/chaos.rs`.
 
 use anyhow::{ensure, Result};
 
@@ -40,7 +49,7 @@ use crate::runtime::{
 };
 use crate::util::rng::Rng;
 
-use super::ar::{ArSession, SampleCfg};
+use super::ar::{ArSession, SampleCfg, STREAM_RECOVER_ATTEMPTS};
 use super::sd::{SdCfg, SdSession};
 use super::SampleStats;
 
@@ -76,6 +85,12 @@ pub trait FleetSession {
     /// Feed the forward result for the pending input and advance.
     fn advance(&mut self, fwd: &SlotOut);
 
+    /// Forget everything `role`'s incremental stream had committed (the
+    /// stream was lost or errored; its replacement starts empty): the
+    /// next [`FleetSession::pending_delta`] for that role must rebase
+    /// with `base_len == 0` and the full window (DESIGN.md §13).
+    fn rebase(&mut self, role: ModelRole);
+
     /// Consume the session into its event stream and counters.
     fn into_output(self) -> (Vec<Event>, SampleStats);
 }
@@ -99,6 +114,10 @@ impl FleetSession for SdSession {
 
     fn advance(&mut self, fwd: &SlotOut) {
         SdSession::advance(self, fwd)
+    }
+
+    fn rebase(&mut self, role: ModelRole) {
+        SdSession::rebase_stream(self, role)
     }
 
     fn into_output(self) -> (Vec<Event>, SampleStats) {
@@ -125,6 +144,10 @@ impl FleetSession for ArSession {
 
     fn advance(&mut self, fwd: &SlotOut) {
         ArSession::advance(self, fwd)
+    }
+
+    fn rebase(&mut self, _role: ModelRole) {
+        ArSession::rebase_stream(self)
     }
 
     fn into_output(self) -> (Vec<Event>, SampleStats) {
@@ -154,6 +177,13 @@ pub struct FleetStats {
     pub delta_batches: usize,
     /// Σ sequences over delta waves
     pub delta_seqs: usize,
+    /// lost or errored incremental streams successfully replaced and
+    /// rebased mid-run (DESIGN.md §13); the affected sequences' outputs
+    /// are bit-identical to the fault-free run
+    pub stream_recoveries: usize,
+    /// sessions permanently degraded to full-window forwards after
+    /// repeated stream failures — graceful degradation, not an error
+    pub degraded_uncached: usize,
 }
 
 impl FleetStats {
@@ -233,34 +263,70 @@ where
 /// on a [`CachedForward`] model. Streams of finished sessions are closed
 /// eagerly; the `Drop` impl closes whatever is left, so an aborted drive
 /// (forward error) cannot leak backend state.
+///
+/// Fault tolerance (DESIGN.md §13): opens retry up to
+/// [`STREAM_RECOVER_ATTEMPTS`] times; a session whose stream keeps
+/// failing is marked `dead` and degrades to full-window forwards for the
+/// rest of the run (`degraded`), while successful replacements count into
+/// `recovered`. Both tallies surface in [`FleetStats`].
 struct RoleStreams<'a> {
     cached: Option<&'a dyn CachedForward>,
     ids: Vec<Option<StreamId>>,
+    /// sessions degraded to full-window forwards; never retried
+    dead: Vec<bool>,
+    /// lost/errored streams successfully replaced and rebased
+    recovered: usize,
+    /// sessions that fell into `dead`
+    degraded: usize,
 }
 
 impl<'a> RoleStreams<'a> {
     fn new(cached: Option<&'a dyn CachedForward>, n: usize) -> RoleStreams<'a> {
-        RoleStreams { cached, ids: vec![None; n] }
+        RoleStreams {
+            cached,
+            ids: vec![None; n],
+            dead: vec![false; n],
+            recovered: 0,
+            degraded: 0,
+        }
     }
 
-    /// Session `i`'s stream id, opening one on first use; `None` when the
-    /// role's model has no incremental-stream support.
-    fn stream_for(&mut self, i: usize) -> Result<Option<StreamId>> {
-        match self.cached {
-            None => Ok(None),
-            Some(c) => {
-                if self.ids[i].is_none() {
-                    self.ids[i] = Some(c.open_stream()?);
+    /// Session `i`'s stream id, opening one on first use (with bounded
+    /// retries); `None` when the role's model has no incremental-stream
+    /// support or the session has degraded to the uncached path.
+    fn stream_for(&mut self, i: usize) -> Option<StreamId> {
+        let c = self.cached?;
+        if self.dead[i] {
+            return None;
+        }
+        if self.ids[i].is_none() {
+            for _ in 0..STREAM_RECOVER_ATTEMPTS {
+                if let Ok(id) = c.open_stream() {
+                    self.ids[i] = Some(id);
+                    break;
                 }
-                Ok(self.ids[i])
+            }
+            if self.ids[i].is_none() {
+                self.mark_dead(i);
             }
         }
+        self.ids[i]
     }
 
     /// Release session `i`'s stream (idempotent).
     fn close(&mut self, i: usize) {
         if let (Some(c), Some(id)) = (self.cached, self.ids[i].take()) {
             c.close_stream(id);
+        }
+    }
+
+    /// Degrade session `i` to full-window forwards for the rest of the
+    /// run (idempotent).
+    fn mark_dead(&mut self, i: usize) {
+        self.close(i);
+        if !self.dead[i] {
+            self.dead[i] = true;
+            self.degraded += 1;
         }
     }
 }
@@ -315,7 +381,7 @@ where
                 continue;
             }
             match s.role() {
-                ModelRole::Draft => match d_streams.stream_for(i)? {
+                ModelRole::Draft => match d_streams.stream_for(i) {
                     Some(sid) => {
                         draft_delta_ids.push(i);
                         draft_delta_in.push((sid, s.pending_delta().expect("pending delta")));
@@ -325,7 +391,7 @@ where
                         draft_in.push(s.pending_input().expect("pending input"));
                     }
                 },
-                ModelRole::Target => match t_streams.stream_for(i)? {
+                ModelRole::Target => match t_streams.stream_for(i) {
                     Some(sid) => {
                         target_delta_ids.push(i);
                         target_delta_in.push((sid, s.pending_delta().expect("pending delta")));
@@ -342,6 +408,8 @@ where
             && target_ids.is_empty()
             && target_delta_ids.is_empty()
         {
+            fleet.stream_recoveries = t_streams.recovered + d_streams.recovered;
+            fleet.degraded_uncached = t_streams.degraded + d_streams.degraded;
             return Ok(fleet);
         }
         fleet.steps += 1;
@@ -352,7 +420,8 @@ where
             };
             let role = run_role(
                 d,
-                d_streams.cached,
+                &mut d_streams,
+                ModelRole::Draft,
                 &draft_ids,
                 draft_in,
                 &draft_delta_ids,
@@ -367,7 +436,8 @@ where
         if !target_ids.is_empty() || !target_delta_ids.is_empty() {
             let role = run_role(
                 target,
-                t_streams.cached,
+                &mut t_streams,
+                ModelRole::Target,
                 &target_ids,
                 target_in,
                 &target_delta_ids,
@@ -396,7 +466,8 @@ struct RoleCounters {
 /// roles, so their fan-out and accounting can never drift apart.
 fn run_role<B, S>(
     model: &B,
-    cached: Option<&dyn CachedForward>,
+    streams: &mut RoleStreams,
+    role: ModelRole,
     full_ids: &[usize],
     full_in: Vec<SeqInput>,
     delta_ids: &[usize],
@@ -414,9 +485,7 @@ where
         out.seqs += n;
     }
     if !delta_ids.is_empty() {
-        let c = cached.expect("delta gathered without a cached model");
-        let cap = BatchForward::max_batch(model);
-        let (b, n) = fan_out_delta(c, cap, delta_ids, delta_in, sessions)?;
+        let (b, n) = fan_out_delta(model, streams, role, delta_ids, delta_in, sessions)?;
         out.batches += b;
         out.seqs += n;
         out.delta_batches += b;
@@ -428,6 +497,10 @@ where
 /// Run one role's gathered inputs through the model in `max_batch`-sized
 /// chunks and advance the owning sessions. Returns (batches issued,
 /// sequences forwarded).
+///
+/// A failed wave is isolated: each of its sequences re-runs alone with
+/// bounded retries, so one faulty forward cannot sink its batchmates.
+/// Forwards are pure (DESIGN.md §13), so re-run rows are bit-identical.
 fn fan_out<B, S>(
     model: &B,
     ids: &[usize],
@@ -444,15 +517,24 @@ where
     while start < ids.len() {
         let take = cap.min(ids.len() - start);
         let chunk: Vec<SeqInput> = inputs.drain(..take).collect();
-        let outs = model.forward_batch(chunk)?;
-        ensure!(
-            outs.len() == take,
-            "forward_batch returned {} slots for {} sequences",
-            outs.len(),
-            take
-        );
-        for (j, out) in outs.iter().enumerate() {
-            sessions[ids[start + j]].advance(out);
+        match model.forward_batch(chunk.clone()) {
+            Ok(outs) => {
+                ensure!(
+                    outs.len() == take,
+                    "forward_batch returned {} slots for {} sequences",
+                    outs.len(),
+                    take
+                );
+                for (j, out) in outs.iter().enumerate() {
+                    sessions[ids[start + j]].advance(out);
+                }
+            }
+            Err(_) => {
+                for (j, seq) in chunk.into_iter().enumerate() {
+                    let out = forward1_retry(model, seq)?;
+                    sessions[ids[start + j]].advance(&out);
+                }
+            }
         }
         batches += 1;
         start += take;
@@ -460,41 +542,119 @@ where
     Ok((batches, ids.len()))
 }
 
-/// Run one role's gathered stream deltas in `cap`-sized waves and advance
-/// the owning sessions. A wave goes through
+/// `forward1` with up to [`STREAM_RECOVER_ATTEMPTS`] attempts, absorbing
+/// transient faults on the direct (executor-less) path. Forwards are pure
+/// and consume no sampler randomness, so every attempt computes the same
+/// rows and a retry cannot move a probability.
+fn forward1_retry<B>(model: &B, seq: SeqInput) -> Result<SlotOut>
+where
+    B: BatchForward + ?Sized,
+{
+    let mut last = None;
+    for _ in 0..STREAM_RECOVER_ATTEMPTS {
+        match model.forward1(seq.clone()) {
+            Ok(out) => return Ok(out),
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(last.expect("at least one forward attempt"))
+}
+
+/// Run one role's gathered stream deltas in `max_batch`-sized waves and
+/// advance the owning sessions. A wave goes through
 /// [`CachedForward::forward_delta_batch`], so the serving-path handle
 /// enqueues it whole and the executor thread coalesces the deltas like a
 /// batch. Returns (waves issued, sequences forwarded).
-fn fan_out_delta<S>(
-    model: &dyn CachedForward,
-    cap: usize,
+///
+/// A failed wave is isolated per delta — deltas are idempotent (rewind to
+/// `base_len`, then append), so re-running the ones the aborted wave had
+/// already applied is safe. A delta that still fails alone means its
+/// stream is lost; [`recover_delta`] replaces the stream, rebases the
+/// session, and degrades to full-window forwards if streams keep dying.
+fn fan_out_delta<B, S>(
+    model: &B,
+    streams: &mut RoleStreams,
+    role: ModelRole,
     ids: &[usize],
     mut inputs: Vec<(StreamId, SeqDelta)>,
     sessions: &mut [S],
 ) -> Result<(usize, usize)>
 where
+    B: BatchForward + ?Sized,
     S: FleetSession,
 {
-    let cap = cap.max(1);
+    let c = streams.cached.expect("delta gathered without a cached model");
+    let cap = BatchForward::max_batch(model).max(1);
     let mut batches = 0;
     let mut start = 0;
     while start < ids.len() {
         let take = cap.min(ids.len() - start);
         let chunk: Vec<(StreamId, SeqDelta)> = inputs.drain(..take).collect();
-        let outs = model.forward_delta_batch(chunk)?;
-        ensure!(
-            outs.len() == take,
-            "forward_delta_batch returned {} slots for {} sequences",
-            outs.len(),
-            take
-        );
-        for (j, out) in outs.iter().enumerate() {
-            sessions[ids[start + j]].advance(out);
+        match c.forward_delta_batch(chunk.clone()) {
+            Ok(outs) => {
+                ensure!(
+                    outs.len() == take,
+                    "forward_delta_batch returned {} slots for {} sequences",
+                    outs.len(),
+                    take
+                );
+                for (j, out) in outs.iter().enumerate() {
+                    sessions[ids[start + j]].advance(out);
+                }
+            }
+            Err(_) => {
+                for (j, (sid, delta)) in chunk.into_iter().enumerate() {
+                    let i = ids[start + j];
+                    let out = match c.forward_delta(sid, &delta) {
+                        Ok(out) => out,
+                        Err(_) => recover_delta(model, streams, role, i, sessions)?,
+                    };
+                    sessions[i].advance(&out);
+                }
+            }
         }
         batches += 1;
         start += take;
     }
     Ok((batches, ids.len()))
+}
+
+/// Recover session `i` after its `role` stream was lost or errored:
+/// replace the stream, rebase the session onto it (`base_len == 0`, the
+/// full window — the same move a window slide forces), and re-run the
+/// forward. Streams that keep dying degrade the session to full-window
+/// forwards for the rest of the run. Recovery consumes no sampler
+/// randomness and forwards are pure, so the returned row — and therefore
+/// every sampled event — is bit-identical to the fault-free run
+/// (DESIGN.md §13; property-tested in `rust/tests/chaos.rs`).
+fn recover_delta<B, S>(
+    model: &B,
+    streams: &mut RoleStreams,
+    role: ModelRole,
+    i: usize,
+    sessions: &mut [S],
+) -> Result<SlotOut>
+where
+    B: BatchForward + ?Sized,
+    S: FleetSession,
+{
+    streams.close(i);
+    for _ in 0..STREAM_RECOVER_ATTEMPTS {
+        let Some(sid) = streams.stream_for(i) else {
+            break;
+        };
+        sessions[i].rebase(role);
+        let delta = sessions[i].pending_delta().expect("pending delta");
+        let c = streams.cached.expect("recovering a stream without a cached model");
+        if let Ok(out) = c.forward_delta(sid, &delta) {
+            streams.recovered += 1;
+            return Ok(out);
+        }
+        streams.close(i);
+    }
+    streams.mark_dead(i);
+    sessions[i].rebase(role);
+    forward1_retry(model, sessions[i].pending_input().expect("pending input"))
 }
 
 #[cfg(test)]

@@ -238,6 +238,19 @@ impl SdSession {
         &self.rng
     }
 
+    /// Forget everything `role`'s incremental stream had committed — the
+    /// stream was lost or errored and its replacement starts empty
+    /// (DESIGN.md §13). The next [`SdSession::pending_delta`] for that
+    /// role then carries `base_len == 0` and the full window: a *rebase*,
+    /// the same move a window slide forces. Recovery consumes no RNG and
+    /// recomputes identical rows, so sampled events are unchanged.
+    pub fn rebase_stream(&mut self, role: ModelRole) {
+        match role {
+            ModelRole::Draft => self.d_cursor = 0,
+            ModelRole::Target => self.t_cursor = 0,
+        }
+    }
+
     /// Consume the finished (or abandoned) session into its event stream
     /// and counters.
     pub fn into_output(mut self) -> (Vec<Event>, SampleStats) {
@@ -416,6 +429,11 @@ impl SdSession {
 /// ([`Forward::cached`]) is driven through per-event deltas — a draft
 /// step then costs O(1) and a verify pass O(γ) instead of O(L) — with
 /// bit-identical outputs either way (`rust/tests/cached_forward.rs`).
+/// Fault tolerance (DESIGN.md §13): either role's lost or errored stream
+/// is replaced by a fresh one and rebased from the session's full window;
+/// repeated failures degrade that role to full-window forwards. Either
+/// way the rows — and therefore the sampled events — are bit-identical to
+/// the fault-free run.
 pub fn sample_sd<FT: Forward + ?Sized, FD: Forward + ?Sized>(
     target: &FT,
     draft: &FD,
@@ -424,18 +442,49 @@ pub fn sample_sd<FT: Forward + ?Sized, FD: Forward + ?Sized>(
 ) -> Result<(Vec<Event>, SampleStats)> {
     let cap = target.max_bucket().min(draft.max_bucket());
     let mut session = SdSession::new(cfg.clone(), cap, rng.clone());
-    let t_stream = StreamGuard::open(target)?;
-    let d_stream = StreamGuard::open(draft)?;
+    let mut t_stream = StreamGuard::open(target).unwrap_or(None);
+    let mut d_stream = StreamGuard::open(draft).unwrap_or(None);
     while !session.is_done() {
-        let fwd = match session.role() {
-            ModelRole::Draft => match &d_stream {
-                Some(g) => g.forward_delta(&session.pending_delta().expect("pending delta"))?,
-                None => draft.forward1(session.pending_input().expect("pending input"))?,
-            },
-            ModelRole::Target => match &t_stream {
-                Some(g) => g.forward_delta(&session.pending_delta().expect("pending delta"))?,
-                None => target.forward1(session.pending_input().expect("pending input"))?,
-            },
+        let role = session.role();
+        let mut tries = 0;
+        let fwd = loop {
+            let stream = match role {
+                ModelRole::Draft => &d_stream,
+                ModelRole::Target => &t_stream,
+            };
+            match stream {
+                Some(g) => {
+                    match g.forward_delta(&session.pending_delta().expect("pending delta")) {
+                        Ok(f) => break f,
+                        Err(_) => {
+                            // Stream lost/errored: rebase the role on a
+                            // fresh stream, degrading it to uncached when
+                            // the failures persist.
+                            tries += 1;
+                            session.rebase_stream(role);
+                            let fresh = if tries < super::ar::STREAM_RECOVER_ATTEMPTS {
+                                match role {
+                                    ModelRole::Draft => StreamGuard::open(draft).unwrap_or(None),
+                                    ModelRole::Target => StreamGuard::open(target).unwrap_or(None),
+                                }
+                            } else {
+                                None
+                            };
+                            match role {
+                                ModelRole::Draft => d_stream = fresh,
+                                ModelRole::Target => t_stream = fresh,
+                            }
+                        }
+                    }
+                }
+                None => {
+                    let input = session.pending_input().expect("pending input");
+                    break match role {
+                        ModelRole::Draft => draft.forward1(input)?,
+                        ModelRole::Target => target.forward1(input)?,
+                    };
+                }
+            }
         };
         session.advance(&fwd);
     }

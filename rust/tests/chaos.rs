@@ -1,0 +1,321 @@
+//! Chaos-recovery suite (ISSUE 6 acceptance): deterministic fault
+//! injection must be *invisible in the outputs* and *visible in the
+//! counters*.
+//!
+//! Properties pinned here (DESIGN.md §13):
+//!   * under any recoverable fault plan, AR and SD fleet outputs — events
+//!     AND `SampleStats` — are bit-for-bit identical to the fault-free
+//!     run, on the direct backend path and through the coordinator's
+//!     executors;
+//!   * every injected fault is tallied ([`ChaosStats`]) and reconciles
+//!     with the consumers' retry/recovery counters;
+//!   * an unrecoverable plan yields a structured `{"ok":false,...}`
+//!     server error — no hang, no poisoned connection.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use tpp_sd::coordinator::{
+    Client, ExecutorHandle, Request, RetryPolicy, SampleRequest, Server,
+};
+use tpp_sd::runtime::{
+    Backend, ChaosBackend, FaultPlan, Forward, NativeBackend, SeqInput, Uncached,
+};
+use tpp_sd::sampler::{
+    fleet_seeds, sample_ar_fleet, sample_sd_fleet, FleetRuns, Gamma, SampleCfg, SdCfg,
+};
+use tpp_sd::util::rng::Rng;
+
+mod common;
+use common::assert_stats_eq;
+
+const T_END: f64 = 6.0;
+
+fn native() -> Arc<dyn Backend> {
+    Arc::new(NativeBackend::new())
+}
+
+fn sd_cfg(num_types: usize) -> SdCfg {
+    SdCfg {
+        sample: SampleCfg { num_types, t_end: T_END, max_events: 4096 },
+        gamma: Gamma::Fixed(5),
+        ..Default::default()
+    }
+}
+
+fn ar_cfg(num_types: usize) -> SampleCfg {
+    SampleCfg { num_types, t_end: T_END, max_events: 4096 }
+}
+
+fn load(c: &AtomicUsize) -> usize {
+    c.load(Ordering::Relaxed)
+}
+
+/// Fault-free SD and AR fleet runs on the plain native backend — the
+/// ground truth every chaotic run must reproduce bit-for-bit.
+fn baseline(dataset: &str, num_types: usize, seeds: &[u64]) -> (FleetRuns, FleetRuns) {
+    let b = NativeBackend::new();
+    let target = b.load_model(dataset, "thp", "target").unwrap();
+    let draft = b.load_model(dataset, "thp", "draft").unwrap();
+    let (sd, _) = sample_sd_fleet(&target, &draft, &sd_cfg(num_types), seeds).unwrap();
+    let (ar, _) = sample_ar_fleet(&target, &ar_cfg(num_types), seeds).unwrap();
+    (sd, ar)
+}
+
+fn assert_runs_eq(got: &FleetRuns, want: &FleetRuns, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: run count");
+    for (i, ((ge, gs), (we, ws))) in got.iter().zip(want).enumerate() {
+        assert!(!we.is_empty(), "{what} seq {i}: degenerate baseline");
+        assert_eq!(ge, we, "{what} seq {i}: events diverge under faults");
+        assert_stats_eq(gs, ws, &format!("{what} seq {i}"));
+    }
+}
+
+fn random_seq(rng: &mut Rng, max_n: usize) -> SeqInput {
+    let n = 1 + rng.below(max_n);
+    let mut s = SeqInput::default();
+    let mut t = 0.0;
+    for _ in 0..n {
+        t += rng.exponential(3.0);
+        s.times.push(t);
+        s.types.push(0);
+    }
+    s
+}
+
+#[test]
+fn fault_plan_classification() {
+    assert!(!FaultPlan::parse("err=1").unwrap().recoverable());
+    assert!(!FaultPlan::parse("die=0.5").unwrap().recoverable());
+    // losses, corruption, delays and sub-certain errors are all survivable
+    assert!(FaultPlan::parse("err=0.99,loss=1,pad=1,delay=1").unwrap().recoverable());
+    assert!(FaultPlan::parse("").unwrap().is_noop());
+    assert!(FaultPlan::parse("bogus=1").is_err());
+    assert!(FaultPlan::parse("err=1.5").is_err());
+}
+
+/// Direct (executor-less) path: stream losses force the engine through
+/// the recovery ladder — reopen + rebase, degrading to full-window
+/// forwards when streams keep dying — and none of it may move an event
+/// or a deterministic counter.
+#[test]
+fn recoverable_plans_are_bit_exact_on_the_direct_path() {
+    let seeds = fleet_seeds(42, 3);
+    let (want_sd, want_ar) = baseline("hawkes", 1, &seeds);
+    for spec in ["seed=4,loss=0.25", "seed=6,loss=0.15,delay=0.05,delay-ms=1"] {
+        let plan = FaultPlan::parse(spec).unwrap();
+        assert!(plan.recoverable(), "{spec}");
+        let chaos = ChaosBackend::new(native(), plan);
+        let stats = chaos.stats();
+        let target = chaos.load_model("hawkes", "thp", "target").unwrap();
+        let draft = chaos.load_model("hawkes", "thp", "draft").unwrap();
+        let (sd, fleet_sd) = sample_sd_fleet(&target, &draft, &sd_cfg(1), &seeds).unwrap();
+        assert_runs_eq(&sd, &want_sd, &format!("[{spec}] sd"));
+        let (ar, fleet_ar) = sample_ar_fleet(&target, &ar_cfg(1), &seeds).unwrap();
+        assert_runs_eq(&ar, &want_ar, &format!("[{spec}] ar"));
+        assert!(load(&stats.losses) >= 1, "[{spec}] loss plan never fired");
+        // every forced stream loss must have been recovered or degraded
+        let handled = fleet_sd.stream_recoveries
+            + fleet_sd.degraded_uncached
+            + fleet_ar.stream_recoveries
+            + fleet_ar.degraded_uncached;
+        assert!(handled >= 1, "[{spec}] losses injected but never handled");
+    }
+}
+
+/// Scrambled padding rows (the classic batching bug, injected on purpose)
+/// must never leak into real rows: sessions only read their own row, so
+/// the outputs are bit-identical even when every padding row is garbage.
+#[test]
+fn padding_corruption_never_leaks_into_real_rows() {
+    let seeds = fleet_seeds(42, 3);
+    let (want_sd, _) = baseline("hawkes", 1, &seeds);
+    let chaos = ChaosBackend::new(native(), FaultPlan::parse("seed=9,pad=0.5").unwrap());
+    let stats = chaos.stats();
+    let target = chaos.load_model("hawkes", "thp", "target").unwrap();
+    let draft = chaos.load_model("hawkes", "thp", "draft").unwrap();
+    // Uncached forces the full-forward path, where padding exists at all.
+    let (sd, _) =
+        sample_sd_fleet(&Uncached(&target), &Uncached(&draft), &sd_cfg(1), &seeds).unwrap();
+    assert_runs_eq(&sd, &want_sd, "pad/sd");
+    assert!(load(&stats.corruptions) >= 1, "pad plan never fired");
+}
+
+/// Certain stream loss (`loss=1`): every incremental stream dies on its
+/// first delta, every session must degrade to full-window forwards — and
+/// the outputs still cannot move.
+#[test]
+fn total_stream_loss_degrades_to_uncached_but_stays_bit_exact() {
+    let seeds = fleet_seeds(42, 3);
+    let (want_sd, _) = baseline("hawkes", 1, &seeds);
+    let chaos = ChaosBackend::new(native(), FaultPlan::parse("seed=8,loss=1").unwrap());
+    let target = chaos.load_model("hawkes", "thp", "target").unwrap();
+    let draft = chaos.load_model("hawkes", "thp", "draft").unwrap();
+    let (sd, fleet) = sample_sd_fleet(&target, &draft, &sd_cfg(1), &seeds).unwrap();
+    assert_runs_eq(&sd, &want_sd, "loss=1/sd");
+    assert!(
+        fleet.degraded_uncached >= seeds.len(),
+        "every session's streams die; expected ≥ {} degradations, saw {}",
+        seeds.len(),
+        fleet.degraded_uncached
+    );
+    assert_eq!(fleet.stream_recoveries, 0, "no recovery can succeed under loss=1");
+}
+
+/// Serving path: transient errors are absorbed by the handle's bounded
+/// retry, every injected error reconciles 1:1 with a counted retry, and
+/// a retried forward returns bit-identical rows to the fault-free direct
+/// path.
+#[test]
+fn executor_retries_reconcile_with_injected_errors() {
+    let chaos = Arc::new(ChaosBackend::new(
+        native(),
+        FaultPlan::parse("seed=11,err=0.2").unwrap(),
+    ));
+    let stats = chaos.stats();
+    let handle = ExecutorHandle::spawn_with_policy(
+        chaos,
+        "hawkes",
+        "thp",
+        "draft",
+        8,
+        Duration::from_millis(1),
+        RetryPolicy {
+            max_attempts: 10,
+            backoff: Duration::from_micros(50),
+            deadline: Duration::from_secs(30),
+        },
+    )
+    .unwrap();
+    let direct = NativeBackend::new().load_model("hawkes", "thp", "draft").unwrap();
+    let mut rng = Rng::new(3);
+    for _ in 0..100 {
+        let seq = random_seq(&mut rng, 30);
+        let row = seq.times.len();
+        let got = handle.forward1(seq.clone()).unwrap();
+        let want = direct.forward1(seq).unwrap();
+        assert_eq!(
+            got.mixture(row).mu,
+            want.mixture(row).mu,
+            "a retried forward must return bit-identical rows"
+        );
+    }
+    assert!(load(&stats.errors) >= 1, "err plan never fired");
+    assert_eq!(
+        load(&handle.stats.retries),
+        load(&stats.errors),
+        "every injected transient error must be retried exactly once"
+    );
+    assert_eq!(load(&handle.stats.gave_up), 0);
+    assert_eq!(load(&handle.stats.timeouts), 0);
+}
+
+/// The crown-jewel property: AR and SD fleets driven through batching
+/// executors over a backend injecting BOTH transient errors and stream
+/// losses reproduce the fault-free direct runs bit-for-bit, with no
+/// request ever given up on.
+#[test]
+fn fleet_over_chaotic_executors_is_bit_exact() {
+    let seeds = fleet_seeds(21, 3);
+    let (want_sd, want_ar) = baseline("hawkes", 1, &seeds);
+    let chaos = Arc::new(ChaosBackend::new(
+        native(),
+        FaultPlan::parse("seed=13,err=0.15,loss=0.1").unwrap(),
+    ));
+    let stats = chaos.stats();
+    let policy = RetryPolicy {
+        max_attempts: 10,
+        backoff: Duration::from_micros(50),
+        deadline: Duration::from_secs(30),
+    };
+    let target = ExecutorHandle::spawn_with_policy(
+        chaos.clone(),
+        "hawkes",
+        "thp",
+        "target",
+        8,
+        Duration::from_millis(1),
+        policy,
+    )
+    .unwrap();
+    let draft = ExecutorHandle::spawn_with_policy(
+        chaos.clone(),
+        "hawkes",
+        "thp",
+        "draft",
+        8,
+        Duration::from_millis(1),
+        policy,
+    )
+    .unwrap();
+    let (sd, fleet_sd) = sample_sd_fleet(&target, &draft, &sd_cfg(1), &seeds).unwrap();
+    assert_runs_eq(&sd, &want_sd, "executor-chaos/sd");
+    let (ar, fleet_ar) = sample_ar_fleet(&target, &ar_cfg(1), &seeds).unwrap();
+    assert_runs_eq(&ar, &want_ar, "executor-chaos/ar");
+    assert!(stats.total() > 0, "chaos plan never fired");
+    assert!(load(&stats.losses) >= 1, "loss component never fired");
+    assert_eq!(
+        load(&target.stats.gave_up) + load(&draft.stats.gave_up),
+        0,
+        "a recoverable plan must never exhaust the retry budget"
+    );
+    let handled = fleet_sd.stream_recoveries
+        + fleet_sd.degraded_uncached
+        + fleet_ar.stream_recoveries
+        + fleet_ar.degraded_uncached;
+    assert!(handled >= 1, "losses injected but never recovered or degraded");
+}
+
+/// Server front-end: an unrecoverable chaos spec must come back as a
+/// structured `{"ok":false,...}` error — promptly, leaving the connection
+/// healthy — while a recoverable spec returns a response whose events are
+/// bit-identical to the fault-free one. Fault-free traffic shares nothing
+/// with chaos traffic (per-spec routers).
+#[test]
+fn server_chaos_errors_are_structured_and_recoverable_specs_are_exact() {
+    let server = Server::bind(native(), "127.0.0.1:0", 8, Duration::from_millis(1)).unwrap();
+    let addr = server.addr;
+    std::thread::spawn(move || server.serve());
+    let mut cli = Client::connect(addr).unwrap();
+
+    let mk = |chaos: &str, seed: u64| {
+        Request::Sample(SampleRequest {
+            dataset: "hawkes".into(),
+            encoder: "thp".into(),
+            method: "sd".into(),
+            gamma: 5,
+            t_end: 2.0,
+            seed,
+            draft_size: "draft".into(),
+            cached: true,
+            chaos: chaos.into(),
+        })
+    };
+
+    // err=1: every forward fails; bounded retries exhaust -> structured error
+    let resp = cli.call(&mk("seed=1,err=1", 1)).unwrap();
+    assert!(resp.contains("\"ok\":false"), "err=1 must fail structurally: {resp}");
+    assert!(resp.contains("executor"), "error should name the executor: {resp}");
+
+    // die=1: the executor thread is killed; still a structured error, no hang
+    let resp = cli.call(&mk("seed=2,die=1", 2)).unwrap();
+    assert!(resp.contains("\"ok\":false"), "die=1 must fail structurally: {resp}");
+
+    // a malformed spec is rejected cleanly too
+    let resp = cli.call(&mk("bogus=1", 3)).unwrap();
+    assert!(resp.contains("\"ok\":false"), "bad spec must be rejected: {resp}");
+
+    // the connection survived all of the above
+    assert!(cli.call(&Request::Ping).unwrap().contains("pong"));
+
+    // recoverable spec: events bit-identical to the fault-free response
+    let (clean, _) =
+        tpp_sd::coordinator::protocol::parse_response(&cli.call(&mk("", 5)).unwrap()).unwrap();
+    let (faulty, _) = tpp_sd::coordinator::protocol::parse_response(
+        &cli.call(&mk("seed=3,loss=0.2", 5)).unwrap(),
+    )
+    .unwrap();
+    assert!(!clean.is_empty(), "degenerate fault-free sample");
+    assert_eq!(clean, faulty, "recoverable chaos moved an event on the server path");
+}

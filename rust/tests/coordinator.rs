@@ -7,9 +7,12 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use tpp_sd::coordinator::{
-    Client, ExecutorHandle, FleetRequest, Request, Router, SampleRequest, Server,
+    Client, ExecutorHandle, FleetRequest, Request, RetryPolicy, Router, SampleRequest, Server,
 };
-use tpp_sd::runtime::{Backend, BatchForward, Forward, ModelBackend, SeqInput};
+use tpp_sd::runtime::{
+    Backend, BatchForward, CachedForward, ChaosBackend, FaultPlan, Forward, ModelBackend, SeqDelta,
+    SeqInput,
+};
 use tpp_sd::util::rng::Rng;
 
 fn backend() -> Arc<dyn Backend> {
@@ -197,6 +200,7 @@ fn server_roundtrip_ar_and_sd() {
                 seed: 1,
                 draft_size: "draft".into(),
                 cached: true,
+                chaos: String::new(),
             }))
             .unwrap();
         let (events, wall_ms) =
@@ -216,6 +220,7 @@ fn server_roundtrip_ar_and_sd() {
             seed: 0,
             draft_size: "draft".into(),
             cached: true,
+            chaos: String::new(),
         }))
         .unwrap();
     assert!(resp.contains("\"ok\":false"));
@@ -242,6 +247,7 @@ fn server_cached_flag_does_not_change_events() {
                 seed: 9,
                 draft_size: "draft".into(),
                 cached,
+                chaos: String::new(),
             })
         };
         let (on, _) =
@@ -272,6 +278,7 @@ fn server_fleet_matches_single_samples() {
         seed: 10,
         draft_size: "draft".into(),
         cached: true,
+        chaos: String::new(),
     };
     let resp = cli
         .call(&Request::SampleFleet(FleetRequest { base: base.clone(), n_seq: 3 }))
@@ -286,4 +293,126 @@ fn server_fleet_matches_single_samples() {
         assert_eq!(seq, &events, "fleet sequence {i} vs single sample");
         assert!(tpp_sd::events::is_valid_sequence(seq, 3.0));
     }
+}
+
+fn load(c: &std::sync::atomic::AtomicUsize) -> usize {
+    c.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+/// A dead executor and an exceeded deadline are structurally distinct
+/// failures (ISSUE 6): the former reports "died" immediately (no retry
+/// can help), the latter reports the deadline and counts a timeout — the
+/// two must never conflate, or operators would retry the unretryable.
+#[test]
+fn dead_executor_vs_deadline_are_distinct_errors() {
+    // die=1: the executor thread panics on its first forward; the handle
+    // must surface the death without hanging or retrying.
+    let chaos = Arc::new(ChaosBackend::new(
+        backend(),
+        FaultPlan::parse("seed=1,die=1").unwrap(),
+    ));
+    let handle =
+        ExecutorHandle::spawn(chaos, "hawkes", "thp", "draft", 8, Duration::from_millis(1))
+            .unwrap();
+    let mut rng = Rng::new(1);
+    let err = handle.forward1(random_seq(&mut rng, 10)).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("died"), "want a death error, got: {msg}");
+    assert_eq!(load(&handle.stats.timeouts), 0);
+
+    // delay=1 longer than a tight per-request deadline: the handle gives
+    // up with a deadline error and counts a timeout, not a death.
+    let chaos = Arc::new(ChaosBackend::new(
+        backend(),
+        FaultPlan::parse("seed=2,delay=1,delay-ms=200").unwrap(),
+    ));
+    let handle = ExecutorHandle::spawn_with_policy(
+        chaos,
+        "hawkes",
+        "thp",
+        "draft",
+        8,
+        Duration::from_millis(1),
+        RetryPolicy {
+            max_attempts: 2,
+            backoff: Duration::from_micros(100),
+            deadline: Duration::from_millis(40),
+        },
+    )
+    .unwrap();
+    let err = handle.forward1(random_seq(&mut rng, 10)).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("deadline"), "want a deadline error, got: {msg}");
+    assert!(!msg.contains("died"), "deadline must not report a death: {msg}");
+    assert!(load(&handle.stats.timeouts) >= 1);
+}
+
+/// Stream control ops (open/rewind/close) are served on receipt, not held
+/// for the batch window: with a pathologically long window they must
+/// still return immediately.
+#[test]
+fn stream_ops_bypass_the_batch_window() {
+    let handle = ExecutorHandle::spawn(
+        backend(),
+        "hawkes",
+        "thp",
+        "draft",
+        8,
+        Duration::from_secs(3),
+    )
+    .unwrap();
+    let t0 = std::time::Instant::now();
+    let sid = handle.open_stream().unwrap();
+    handle.rewind(sid, 0).unwrap();
+    handle.close_stream(sid);
+    assert!(
+        t0.elapsed() < Duration::from_secs(2),
+        "control ops waited for the batch window: {:?}",
+        t0.elapsed()
+    );
+}
+
+/// `delta_occupancy()` tracks delta waves separately from full-forward
+/// batches: under a mixed load the full-batch counters and the delta
+/// counters must each stay consistent on their own, never conflated.
+#[test]
+fn delta_occupancy_accounts_mixed_waves() {
+    let handle = ExecutorHandle::spawn(
+        backend(),
+        "hawkes",
+        "thp",
+        "draft",
+        8,
+        Duration::from_millis(10),
+    )
+    .unwrap();
+    // one 4-delta wave enqueued whole + one lone delta
+    let delta = |t: f64| SeqDelta { base_len: 0, t0: 0.0, times: vec![t], types: vec![0] };
+    let wave: Vec<_> = (0..4)
+        .map(|i| (handle.open_stream().unwrap(), delta(0.5 + i as f64)))
+        .collect();
+    let sids: Vec<_> = wave.iter().map(|(s, _)| *s).collect();
+    let outs = handle.forward_delta_batch(wave).unwrap();
+    assert_eq!(outs.len(), 4);
+    let lone = handle.open_stream().unwrap();
+    handle.forward_delta(lone, &delta(9.0)).unwrap();
+    // two sequential full forwards ride the full-batch counters only
+    let mut rng = Rng::new(5);
+    handle.forward1(random_seq(&mut rng, 10)).unwrap();
+    handle.forward1(random_seq(&mut rng, 10)).unwrap();
+    for sid in sids.into_iter().chain([lone]) {
+        handle.close_stream(sid);
+    }
+
+    assert_eq!(load(&handle.stats.requests), 7, "2 full + 5 delta submissions");
+    assert_eq!(load(&handle.stats.delta_requests), 5);
+    assert_eq!(load(&handle.stats.batched_deltas), 5, "every delta served in some wave");
+    let waves = load(&handle.stats.delta_waves);
+    assert!((1..=5).contains(&waves), "delta waves: {waves}");
+    assert!(handle.stats.delta_occupancy() >= 1.0);
+    assert!(load(&handle.stats.max_delta_wave) >= 1);
+    // full-forward occupancy is computed from full batches alone
+    assert_eq!(load(&handle.stats.batched_requests), 2);
+    assert_eq!(load(&handle.stats.batches), 2);
+    assert!((handle.stats.occupancy() - 1.0).abs() < 1e-12);
 }

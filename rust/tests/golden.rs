@@ -1,0 +1,103 @@
+//! Golden regression fixtures: exact event streams per encoder × method,
+//! pinned as text under `tests/golden/` (see its README for the bless
+//! workflow).
+//!
+//! These catch what the equivalence suites cannot: a change that shifts
+//! AR and SD *together* (e.g. a thinning tweak) leaves `fleet.rs` and
+//! `sd_correctness.rs` green but moves every sampled time — the fixtures
+//! pin the absolute output. Events are rendered with Rust's shortest
+//! round-trip float formatting, so a single ULP of drift fails the diff.
+//!
+//! Fixtures auto-bless: a missing file is written from the current run and
+//! the test passes, so a fresh checkout (or an intentional change, after
+//! deleting the stale file) regenerates them in one `cargo test` run.
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use tpp_sd::runtime::{Backend, NativeBackend};
+use tpp_sd::sampler::{
+    sample_ar_fleet, sample_sd_fleet, Gamma, SampleCfg, SampleStats, SdCfg,
+};
+use tpp_sd::Event;
+
+const SEED: u64 = 17;
+const T_END: f64 = 8.0;
+const GAMMA: usize = 5;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
+}
+
+/// Deterministic textual snapshot of one run. `wall` is deliberately
+/// excluded — it is the one nondeterministic stat.
+fn render(dataset: &str, encoder: &str, method: &str, events: &[Event], s: &SampleStats) -> String {
+    let mut out = String::new();
+    writeln!(out, "# golden {dataset}/{encoder}/{method} seed={SEED} t_end={T_END} gamma={GAMMA}")
+        .unwrap();
+    writeln!(out, "events {}", events.len()).unwrap();
+    for e in events {
+        writeln!(out, "{} {}", e.t, e.k).unwrap();
+    }
+    writeln!(
+        out,
+        "stats events={} rounds={} target_forwards={} draft_forwards={} drafted={} accepted={} resampled={} bonus={} adjust_proposals={}",
+        s.events,
+        s.rounds,
+        s.target_forwards,
+        s.draft_forwards,
+        s.drafted,
+        s.accepted,
+        s.resampled,
+        s.bonus,
+        s.adjust_proposals,
+    )
+    .unwrap();
+    out
+}
+
+fn run_case(dataset: &str, num_types: usize, encoder: &str, method: &str) -> String {
+    let b = NativeBackend::new();
+    let target = b.load_model(dataset, encoder, "target").unwrap();
+    let cfg = SampleCfg { num_types, t_end: T_END, max_events: 4096 };
+    let (events, stats) = match method {
+        "ar" => sample_ar_fleet(&target, &cfg, &[SEED]).unwrap().0.pop().unwrap(),
+        "sd" => {
+            let draft = b.load_model(dataset, encoder, "draft").unwrap();
+            let sd = SdCfg { sample: cfg, gamma: Gamma::Fixed(GAMMA), ..Default::default() };
+            sample_sd_fleet(&target, &draft, &sd, &[SEED]).unwrap().0.pop().unwrap()
+        }
+        other => panic!("unknown method {other}"),
+    };
+    assert!(!events.is_empty(), "{dataset}/{encoder}/{method}: degenerate golden run");
+    render(dataset, encoder, method, &events, &stats)
+}
+
+fn check(dataset: &str, num_types: usize, encoder: &str, method: &str) {
+    let got = run_case(dataset, num_types, encoder, method);
+    let path = golden_dir().join(format!("{dataset}_{encoder}_{method}.txt"));
+    if !path.exists() {
+        std::fs::write(&path, &got)
+            .unwrap_or_else(|e| panic!("blessing {}: {e}", path.display()));
+        eprintln!("golden: blessed new fixture {}", path.display());
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        got,
+        want,
+        "golden fixture {} diverged — if the change is intentional, delete the file and rerun to re-bless",
+        path.display()
+    );
+}
+
+#[test]
+fn golden_fixtures_are_stable() {
+    for encoder in ["thp", "sahp", "attnhp"] {
+        for method in ["ar", "sd"] {
+            check("hawkes", 1, encoder, method);
+        }
+    }
+    // one multi-type dataset to pin the type-sampling path too
+    check("taxi_sim", 10, "thp", "sd");
+}
