@@ -97,11 +97,12 @@ fn main() -> Result<()> {
         );
     }
 
-    // batcher occupancy + reliability report
+    // batcher occupancy + reliability + pool/buffer report, one line per
+    // executor (retries/timeouts/gave_up are all zero on a healthy backend)
     for ds in &datasets {
         let pair = router.route(ds, &encoder, "draft")?;
-        report_executor(&pair.target);
-        report_executor(&pair.draft);
+        println!("{}", tpp_sd::bench::executor_report(&pair.target.name, &pair.target.stats));
+        println!("{}", tpp_sd::bench::executor_report(&pair.draft.name, &pair.draft.stats));
     }
     if !chaos.is_empty() {
         // Chaos traffic runs on dedicated per-spec routers (their retry
@@ -112,21 +113,4 @@ fn main() -> Result<()> {
         println!("chaos spec '{chaos}' active; server stats: {}", stats.trim());
     }
     Ok(())
-}
-
-/// One line per executor: batching efficiency plus the fault-tolerance
-/// counters (retries/timeouts/gave_up are all zero on a healthy backend).
-fn report_executor(h: &tpp_sd::coordinator::ExecutorHandle) {
-    let load = |c: &std::sync::atomic::AtomicUsize| c.load(std::sync::atomic::Ordering::Relaxed);
-    println!(
-        "executor {:<28} batches={:<5} occupancy={:.2} delta_occupancy={:.2} \
-         retries={} timeouts={} gave_up={}",
-        h.name,
-        load(&h.stats.batches),
-        h.stats.occupancy(),
-        h.stats.delta_occupancy(),
-        load(&h.stats.retries),
-        load(&h.stats.timeouts),
-        load(&h.stats.gave_up),
-    );
 }

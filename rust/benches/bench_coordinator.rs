@@ -94,22 +94,14 @@ fn main() -> Result<()> {
             events += j.join().expect("session")?;
         }
         let wall = t.elapsed().as_secs_f64();
-        let load = |c: &std::sync::atomic::AtomicUsize| {
-            c.load(std::sync::atomic::Ordering::Relaxed)
-        };
         println!(
-            "batched {} sessions (window {}ms): {:.3}s  {:.1} events/s  \
-             occupancy {:.2} (delta {:.2})  retries={} timeouts={} gave_up={}",
+            "batched {} sessions (window {}ms): {:.3}s  {:.1} events/s",
             sessions,
             window_ms,
             wall,
             events as f64 / wall,
-            handle.stats.occupancy(),
-            handle.stats.delta_occupancy(),
-            load(&handle.stats.retries),
-            load(&handle.stats.timeouts),
-            load(&handle.stats.gave_up),
         );
+        println!("{}", tpp_sd::bench::executor_report(&handle.name, &handle.stats));
     }
     Ok(())
 }

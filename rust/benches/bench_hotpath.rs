@@ -1,0 +1,237 @@
+//! Bench: the zero-allocation hot path (ISSUE 7, DESIGN.md §14) — what do
+//! the persistent worker pool and buffer recycling actually buy?
+//!
+//! Two measurements, both on the native backend by default:
+//!
+//! * **batched-forward throughput** (rows/s): repeated full forwards of
+//!   N ∈ {1, 8} sequences at L = 256, persistent pool vs the old
+//!   spawn-scoped-threads-per-wave baseline (`pool::set_scoped_baseline`).
+//!   One forward is sanity-compared across modes before timing — the pool
+//!   must be a pure scheduling change.
+//! * **allocations per event**: warmed `sample_ar`/`sample_sd` runs (N=1
+//!   blocking, N=8 fleet) under the counting global allocator, recycling
+//!   + pool on vs the baseline (scoped threads, recycling off).
+//!
+//! The process exits non-zero (the CI `bench-smoke` gate) if pooled
+//! throughput falls below `--min-ratio` × scoped (default 0.97, noise
+//! guard on an "at least as fast" target) at any measured shape, or if
+//! the N=1 allocations-per-event drop falls below `--min-alloc-drop`
+//! (default 10). The numbers are merged into `BENCH_sampling.json` under
+//! the `bench_hotpath` key.
+//!
+//!     cargo bench --bench bench_hotpath [-- --dataset hawkes
+//!         --encoder thp --iters 200 --t-end 150 --gamma 10
+//!         --min-ratio 0.97 --min-alloc-drop 10 --out BENCH_sampling.json]
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+use tpp_sd::bench::alloc_count::{allocations, CountingAllocator};
+use tpp_sd::bench::merge_snapshot;
+use tpp_sd::runtime::{pool, Backend, ModelBackend, SeqInput};
+use tpp_sd::sampler::{
+    sample_ar, sample_ar_fleet, sample_sd, sample_sd_fleet, Gamma, SampleCfg, SdCfg,
+};
+use tpp_sd::util::cli::Args;
+use tpp_sd::util::json::Json;
+use tpp_sd::util::rng::Rng;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+/// Default snapshot path: the workspace root, independent of the cwd
+/// cargo runs the bench with.
+const DEFAULT_OUT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sampling.json");
+
+/// Sequence length (events) filling the L=256 bucket (255 events + BOS).
+const LEN: usize = 255;
+
+/// A deterministic history (0.1-spaced, round-robin types), offset per
+/// batch slot so the slots are not identical.
+fn history(len: usize, k: usize, slot: usize) -> SeqInput {
+    SeqInput {
+        t0: 0.0,
+        times: (0..len).map(|i| (i + 1) as f64 * 0.1 + slot as f64 * 1e-3).collect(),
+        types: (0..len).map(|i| ((i + slot) % k) as u32).collect(),
+    }
+}
+
+/// Best-of-`reps` batched-forward throughput in rows/s for the current
+/// pool mode (arms are interleaved by the caller, so drift hits both).
+fn forward_rows_per_s(
+    model: &dyn ModelBackend,
+    seqs: &[SeqInput],
+    iters: usize,
+    reps: usize,
+) -> Result<f64> {
+    let rows: usize = seqs.iter().map(SeqInput::len_with_bos).sum();
+    let mut best = 0f64;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            let out = model.forward(seqs)?;
+            std::hint::black_box(out.mixture(0, LEN).mu[0]);
+        }
+        let rps = (rows * iters) as f64 / t0.elapsed().as_secs_f64().max(1e-12);
+        best = best.max(rps);
+    }
+    Ok(best)
+}
+
+/// Run `f`, returning (allocation calls, events generated).
+fn count_allocs(f: impl FnOnce() -> Result<usize>) -> Result<(usize, usize)> {
+    let before = allocations();
+    let events = f()?;
+    Ok((allocations() - before, events))
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let dataset = args.str_or("dataset", "hawkes").to_string();
+    let encoder = args.str_or("encoder", "thp").to_string();
+    let iters = args.usize_or("iters", 200).max(1);
+    let reps = args.usize_or("reps", 5).max(1);
+    let gamma = args.usize_or("gamma", 10).max(1);
+    let t_end = args.f64_or("t-end", 150.0);
+    let min_ratio = args.f64_or("min-ratio", 0.97);
+    let min_alloc_drop = args.f64_or("min-alloc-drop", 10.0);
+    let out_path = args.str_or("out", DEFAULT_OUT).to_string();
+
+    let backend = tpp_sd::runtime::backend_from_arg(args.get("backend"))?;
+    let k = backend.num_types(&dataset)?;
+    let target = backend.load_model(&dataset, &encoder, "target")?;
+    let draft = backend.load_model(&dataset, &encoder, "draft")?;
+    target.warmup()?;
+    draft.warmup()?;
+    println!(
+        "== hot path: pool + recycling vs scoped threads ({dataset}/{encoder}, backend={}, \
+         L={}) ==",
+        backend.name(),
+        LEN + 1
+    );
+
+    // --- part 1: batched full-forward throughput, pooled vs scoped ---
+    let mut snapshot: Vec<(String, Json)> = vec![
+        ("backend".into(), Json::Str(backend.name().into())),
+        ("dataset".into(), Json::Str(dataset.clone())),
+        ("encoder".into(), Json::Str(encoder.clone())),
+        ("len".into(), Json::Num((LEN + 1) as f64)),
+        ("iters".into(), Json::Num(iters as f64)),
+        ("t_end".into(), Json::Num(t_end)),
+    ];
+    let mut throughput_ok = true;
+    for n in [1usize, 8] {
+        let seqs: Vec<SeqInput> = (0..n).map(|s| history(LEN, k, s)).collect();
+        // sanity: the pool must not change a single output bit
+        pool::set_scoped_baseline(true);
+        let scoped_out = target.forward(&seqs)?;
+        pool::set_scoped_baseline(false);
+        let pooled_out = target.forward(&seqs)?;
+        for b in 0..n {
+            ensure!(
+                scoped_out.mixture(b, LEN) == pooled_out.mixture(b, LEN),
+                "pooled forward diverged from scoped forward at N={n} b={b} — \
+                 refusing to time a broken pool"
+            );
+        }
+        let (mut scoped, mut pooled) = (0f64, 0f64);
+        for _ in 0..reps {
+            pool::set_scoped_baseline(true);
+            scoped = scoped.max(forward_rows_per_s(target.as_ref(), &seqs, iters, 1)?);
+            pool::set_scoped_baseline(false);
+            pooled = pooled.max(forward_rows_per_s(target.as_ref(), &seqs, iters, 1)?);
+        }
+        let ratio = pooled / scoped;
+        println!(
+            "forward N={n}: pooled {pooled:12.0} rows/s | scoped {scoped:12.0} rows/s | \
+             {ratio:.2}x"
+        );
+        throughput_ok &= ratio >= min_ratio;
+        snapshot.push((format!("rows_per_s_pooled_n{n}"), Json::Num(pooled)));
+        snapshot.push((format!("rows_per_s_scoped_n{n}"), Json::Num(scoped)));
+        snapshot.push((format!("pool_ratio_n{n}"), Json::Num(ratio)));
+    }
+
+    // --- part 2: allocations per generated event ---
+    let cfg = SampleCfg { num_types: k, t_end, max_events: 16 * 1024 };
+    let sd_cfg = SdCfg { sample: cfg.clone(), gamma: Gamma::Fixed(gamma), ..Default::default() };
+    let seeds: Vec<u64> = (0..8).map(|i| 1000 + i).collect();
+
+    // N=1 blocking drivers: baseline (scoped + no recycling) vs optimized.
+    let mut gates: Vec<(String, f64, f64)> = Vec::new();
+    for (mode, scoped, recycle) in [("base", true, false), ("opt", false, true)] {
+        pool::set_scoped_baseline(scoped);
+        pool::set_recycling(recycle);
+        // warm: fills the buffer/shell pools and the session scratch
+        sample_ar(&target, &cfg, &mut Rng::new(7))?;
+        sample_sd(&target, &draft, &sd_cfg, &mut Rng::new(7))?;
+
+        let (a, ev) = count_allocs(|| {
+            let (ev, _) = sample_ar(&target, &cfg, &mut Rng::new(11))?;
+            Ok(ev.len())
+        })?;
+        let ar_ape = a as f64 / (ev.max(1)) as f64;
+        let (a, ev) = count_allocs(|| {
+            let (ev, _) = sample_sd(&target, &draft, &sd_cfg, &mut Rng::new(11))?;
+            Ok(ev.len())
+        })?;
+        let sd_ape = a as f64 / (ev.max(1)) as f64;
+
+        // N=8 fleets through the engine
+        let (a, ev) = count_allocs(|| {
+            let (runs, _) = sample_ar_fleet(&target, &cfg, &seeds)?;
+            Ok(runs.iter().map(|(ev, _)| ev.len()).sum())
+        })?;
+        let ar_fleet_ape = a as f64 / (ev.max(1)) as f64;
+        let (a, ev) = count_allocs(|| {
+            let (runs, _) = sample_sd_fleet(&target, &draft, &sd_cfg, &seeds)?;
+            Ok(runs.iter().map(|(ev, _)| ev.len()).sum())
+        })?;
+        let sd_fleet_ape = a as f64 / (ev.max(1)) as f64;
+
+        println!(
+            "allocs/event [{mode:4}]: ar {ar_ape:8.2}  sd {sd_ape:8.2}  \
+             ar_fleet(8) {ar_fleet_ape:8.2}  sd_fleet(8) {sd_fleet_ape:8.2}"
+        );
+        for (name, v) in [
+            ("ar", ar_ape),
+            ("sd", sd_ape),
+            ("ar_fleet8", ar_fleet_ape),
+            ("sd_fleet8", sd_fleet_ape),
+        ] {
+            snapshot.push((format!("allocs_per_event_{name}_{mode}"), Json::Num(v)));
+            match gates.iter_mut().find(|(n, _, _)| n == name) {
+                Some(g) => g.2 = v,
+                None => gates.push((name.to_string(), v, v)),
+            }
+        }
+    }
+    // restore process defaults before any gate can early-exit the process
+    pool::set_scoped_baseline(false);
+    pool::set_recycling(true);
+
+    let mut drops = Vec::new();
+    for (name, base, opt) in &gates {
+        let ratio = *base / opt.max(1e-9);
+        println!("allocs/event drop [{name}]: {ratio:.1}x (base {base:.2} -> opt {opt:.2})");
+        snapshot.push((format!("alloc_drop_{name}"), Json::Num(ratio)));
+        drops.push((name.clone(), ratio));
+    }
+
+    merge_snapshot(&out_path, "bench_hotpath", Json::Obj(snapshot.into_iter().collect()))?;
+    println!("snapshot merged into {out_path}");
+
+    // --- gates (CI bench-smoke) ---
+    ensure!(
+        throughput_ok,
+        "pooled forward throughput fell below {min_ratio:.2}x the scoped baseline"
+    );
+    for (name, drop) in &drops {
+        let bar = if name.ends_with("_fleet8") { 1.0 } else { min_alloc_drop };
+        ensure!(
+            *drop >= bar,
+            "allocations-per-event drop for {name} is {drop:.1}x, below the {bar:.1}x gate"
+        );
+    }
+    Ok(())
+}

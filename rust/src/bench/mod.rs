@@ -3,11 +3,12 @@
 //! (experiment index in DESIGN.md §6). Examples and `cargo bench` targets
 //! are thin CLI wrappers around this module.
 
+pub mod alloc_count;
 pub mod eval;
 pub mod timing;
 
 pub use eval::{real_cell, synthetic_cell, EvalCfg, RealCell, SyntheticCell};
-pub use timing::{bench_loop, BenchResult};
+pub use timing::{bench_loop, executor_report, BenchResult};
 
 use anyhow::Result;
 

@@ -1,8 +1,10 @@
 //! Micro-benchmark substrate (no criterion in the offline registry):
 //! warmup + timed iterations + percentile reporting.
 
+use std::sync::atomic::Ordering;
 use std::time::{Duration, Instant};
 
+use crate::coordinator::BatcherStats;
 use crate::util::math::{mean, percentile, std_dev};
 
 /// Timing samples of one benchmarked closure.
@@ -67,6 +69,29 @@ pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
     let t = Instant::now();
     let out = f();
     (out, t.elapsed())
+}
+
+/// One formatted executor-counter line — the single report format shared
+/// by `examples/serve.rs` and `benches/bench_coordinator.rs`, so the two
+/// surfaces can never drift apart.
+pub fn executor_report(name: &str, stats: &BatcherStats) -> String {
+    let load = |c: &std::sync::atomic::AtomicUsize| c.load(Ordering::Relaxed);
+    format!(
+        "executor {:<28} batches={:<5} occupancy={:.2} delta_occupancy={:.2} retries={} \
+         timeouts={} gave_up={} pool_dispatches={} pool_steals={} buffers_reused={} \
+         buffers_allocated={}",
+        name,
+        load(&stats.batches),
+        stats.occupancy(),
+        stats.delta_occupancy(),
+        load(&stats.retries),
+        load(&stats.timeouts),
+        load(&stats.gave_up),
+        load(&stats.pool_dispatches),
+        load(&stats.pool_steals),
+        load(&stats.buffers_reused),
+        load(&stats.buffers_allocated),
+    )
 }
 
 #[cfg(test)]

@@ -41,8 +41,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::runtime::{
-    Backend, BatchForward, CachedForward, Forward, ModelBackend, SeqDelta, SeqInput, SlotOut,
-    StreamId,
+    pool, Backend, BatchForward, CachedForward, Forward, ModelBackend, PoolStats, SeqDelta,
+    SeqInput, SlotOut, StreamId,
 };
 
 /// Aggregate counters exposed by an executor thread.
@@ -83,6 +83,18 @@ pub struct BatcherStats {
     /// requests that exhausted [`RetryPolicy::max_attempts`] and returned
     /// the last transient error to the caller
     pub gave_up: AtomicUsize,
+    /// worker-pool group dispatches attributed to this executor's forward
+    /// calls (DESIGN.md §14). The pool counters are process-wide, so the
+    /// attribution is approximate when several executors run concurrently
+    /// — within one executor the deltas are still monotone and indicative.
+    pub pool_dispatches: AtomicUsize,
+    /// worker-pool job steals attributed to this executor's forward calls
+    pub pool_steals: AtomicUsize,
+    /// recycled output buffers served during this executor's forward calls
+    pub buffers_reused: AtomicUsize,
+    /// freshly allocated output buffers during this executor's forward
+    /// calls
+    pub buffers_allocated: AtomicUsize,
 }
 
 impl BatcherStats {
@@ -103,6 +115,15 @@ impl BatcherStats {
             return 0.0;
         }
         self.batched_deltas.load(Ordering::Relaxed) as f64 / w as f64
+    }
+
+    /// Fold a [`PoolStats`] interval delta into the pool/buffer counters
+    /// (called by the executor loop around each model call).
+    fn add_pool_delta(&self, d: &PoolStats) {
+        self.pool_dispatches.fetch_add(d.pool_dispatches, Ordering::Relaxed);
+        self.pool_steals.fetch_add(d.pool_steals, Ordering::Relaxed);
+        self.buffers_reused.fetch_add(d.buffers_reused, Ordering::Relaxed);
+        self.buffers_allocated.fetch_add(d.buffers_allocated, Ordering::Relaxed);
     }
 }
 
@@ -446,9 +467,12 @@ fn run_loop(
             stats.batches.fetch_add(1, Ordering::Relaxed);
             stats.batched_requests.fetch_add(seqs.len(), Ordering::Relaxed);
             stats.max_batch_seen.fetch_max(seqs.len(), Ordering::Relaxed);
-            match exec.forward(&seqs) {
+            let pool_before = pool::stats();
+            let served = exec.forward(&seqs);
+            stats.add_pool_delta(&pool::stats().since(&pool_before));
+            match served {
                 Ok(out) => {
-                    let out = Arc::new(out);
+                    let out = out.into_shared();
                     for (b, reply) in replies.into_iter().enumerate() {
                         let _ = reply.send(Ok(SlotOut::new(out.clone(), b)));
                     }
@@ -472,10 +496,12 @@ fn run_loop(
             // every requester in the wave.
             let (wave, dreplies): (Vec<(StreamId, SeqDelta)>, Vec<SyncSender<Result<SlotOut>>>) =
                 deltas.into_iter().map(|(s, d, r)| ((s, d), r)).unzip();
+            let pool_before = pool::stats();
             let served = match exec.as_ref().cached() {
                 Some(c) => c.forward_delta_batch(wave),
                 None => Err(no_streams(exec.as_ref())),
             };
+            stats.add_pool_delta(&pool::stats().since(&pool_before));
             match served {
                 Ok(outs) if outs.len() == dreplies.len() => {
                     for (out, reply) in outs.into_iter().zip(dreplies) {

@@ -10,7 +10,7 @@ use crate::util::rng::Rng;
 
 /// Parameters of one position's inter-event-interval distribution
 /// `g(τ|h) = Σ_m w_m LogNormal(τ; μ_m, σ_m)`.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Mixture {
     /// normalized component log-weights
     pub log_w: Vec<f64>,
@@ -33,18 +33,28 @@ impl Mixture {
         (self.mu[z] + eps * self.log_sigma[z].exp()).exp()
     }
 
-    /// log g(τ) — stable log-sum-exp over components.
+    /// log g(τ) — stable log-sum-exp over components. Allocation-free for
+    /// mixtures of up to 8 components (a stack buffer; the native head has
+    /// 2) — the verify loop calls this per candidate per proposal.
     pub fn logpdf(&self, tau: f64) -> f64 {
         let tau = tau.max(1e-300);
         let log_tau = tau.ln();
-        let comps: Vec<f64> = (0..self.n_components())
-            .map(|m| {
-                let ls = self.log_sigma[m];
-                let z = (log_tau - self.mu[m]) * (-ls).exp();
-                self.log_w[m] - log_tau - ls + norm_logpdf(z)
-            })
-            .collect();
-        logsumexp(&comps)
+        let n = self.n_components();
+        let comp = |m: usize| {
+            let ls = self.log_sigma[m];
+            let z = (log_tau - self.mu[m]) * (-ls).exp();
+            self.log_w[m] - log_tau - ls + norm_logpdf(z)
+        };
+        if n <= 8 {
+            let mut comps = [0f64; 8];
+            for (m, c) in comps[..n].iter_mut().enumerate() {
+                *c = comp(m);
+            }
+            logsumexp(&comps[..n])
+        } else {
+            let comps: Vec<f64> = (0..n).map(comp).collect();
+            logsumexp(&comps)
+        }
     }
 
     /// g(τ) — density (may underflow to 0 for extreme τ; callers use
@@ -75,7 +85,7 @@ impl Mixture {
 
 /// Categorical event-type distribution from raw logits, restricted to the
 /// first `k` real types of the `K_MAX`-padded head.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct TypeDist {
     /// normalized probabilities over the first k types
     pub probs: Vec<f64>,
@@ -92,6 +102,24 @@ impl TypeDist {
             *p /= s;
         }
         TypeDist { probs }
+    }
+
+    /// [`TypeDist::from_logits`] over an `f32` logits row, refilling
+    /// `self` in place (the backends' allocation-free read path). Same
+    /// math on the same widened `f64` values, so the probabilities are
+    /// bit-identical to collecting the row and calling `from_logits`.
+    pub fn assign_from_logits_f32(&mut self, logits: &[f32], k: usize) {
+        assert!(k >= 1 && k <= logits.len(), "k={k} logits={}", logits.len());
+        let m = logits[..k]
+            .iter()
+            .map(|&l| l as f64)
+            .fold(f64::NEG_INFINITY, f64::max);
+        self.probs.clear();
+        self.probs.extend(logits[..k].iter().map(|&l| (l as f64 - m).exp()));
+        let s: f64 = self.probs.iter().sum();
+        for p in &mut self.probs {
+            *p /= s;
+        }
     }
 
     /// Draw a type index.

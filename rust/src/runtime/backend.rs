@@ -27,6 +27,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use super::pool;
 use crate::model::mixture::{Mixture, TypeDist};
 use crate::util::json::Json;
 
@@ -85,10 +86,24 @@ impl SlotOut {
         self.out.mixture(self.b, row - self.row_off)
     }
 
+    /// [`SlotOut::mixture`] into caller-owned storage (the samplers' hot
+    /// loops reuse one scratch [`Mixture`] instead of allocating per read).
+    pub fn mixture_into(&self, row: usize, out: &mut Mixture) {
+        debug_assert!(row >= self.row_off, "row {row} below delta offset {}", self.row_off);
+        self.out.mixture_into(self.b, row - self.row_off, out);
+    }
+
     /// Event-type distribution at `row`, restricted to `k` real types.
     pub fn type_dist(&self, row: usize, k: usize) -> TypeDist {
         debug_assert!(row >= self.row_off, "row {row} below delta offset {}", self.row_off);
         self.out.type_dist(self.b, row - self.row_off, k)
+    }
+
+    /// [`SlotOut::type_dist`] into caller-owned storage (allocation-free
+    /// once the scratch [`TypeDist`] has warmed up).
+    pub fn type_dist_into(&self, row: usize, k: usize, out: &mut TypeDist) {
+        debug_assert!(row >= self.row_off, "row {row} below delta offset {}", self.row_off);
+        self.out.type_dist_into(self.b, row - self.row_off, k, out);
     }
 
     /// Bucket (row capacity) of the underlying forward output.
@@ -99,6 +114,39 @@ impl SlotOut {
     /// Absolute row index this view starts at (0 for full forwards).
     pub fn row_offset(&self) -> usize {
         self.row_off
+    }
+}
+
+/// The always-alive placeholder a dropped [`SlotOut`] leaves behind so its
+/// real `Arc` can be moved out and (when uniquely owned) shell-pooled.
+fn empty_shared() -> Arc<ForwardOut> {
+    static EMPTY: std::sync::OnceLock<Arc<ForwardOut>> = std::sync::OnceLock::new();
+    EMPTY
+        .get_or_init(|| {
+            Arc::new(ForwardOut::from_raw(
+                1,
+                0,
+                0,
+                0,
+                Vec::new(),
+                Vec::new(),
+                Vec::new(),
+                Vec::new(),
+            ))
+        })
+        .clone()
+}
+
+impl Drop for SlotOut {
+    /// Return the underlying `Arc` shell to the pool when this was the
+    /// last view of it (shared views — clones, sibling batch slots — pool
+    /// only on the final drop; the static placeholder is never pooled
+    /// because the `OnceLock` keeps its count above 1).
+    fn drop(&mut self) {
+        let out = std::mem::replace(&mut self.out, empty_shared());
+        if Arc::strong_count(&out) == 1 {
+            pool::put_shell(out);
+        }
     }
 }
 
@@ -305,7 +353,7 @@ pub trait ModelBackend {
 impl Forward for Box<dyn ModelBackend> {
     fn forward1(&self, seq: SeqInput) -> Result<SlotOut> {
         let out = self.as_ref().forward(std::slice::from_ref(&seq))?;
-        Ok(SlotOut::new(Arc::new(out), 0))
+        Ok(SlotOut::new(out.into_shared(), 0))
     }
 
     fn max_bucket(&self) -> usize {
@@ -343,7 +391,7 @@ impl BatchForward for Box<dyn ModelBackend> {
         if seqs.is_empty() {
             return Ok(Vec::new());
         }
-        let out = Arc::new(self.as_ref().forward(&seqs)?);
+        let out = self.as_ref().forward(&seqs)?.into_shared();
         Ok((0..seqs.len()).map(|b| SlotOut::new(out.clone(), b)).collect())
     }
 
@@ -415,28 +463,61 @@ impl ForwardOut {
 
     /// Mixture parameters of `g(τ_{row+1} | history ≤ row)` for batch row b.
     pub fn mixture(&self, b: usize, row: usize) -> Mixture {
+        let mut out = Mixture::default();
+        self.mixture_into(b, row, &mut out);
+        out
+    }
+
+    /// [`ForwardOut::mixture`] into caller-owned storage: clears and
+    /// refills `out`'s parameter vectors with exactly the values
+    /// [`ForwardOut::mixture`] would collect, allocation-free once `out`'s
+    /// capacity has warmed up.
+    pub fn mixture_into(&self, b: usize, row: usize, out: &mut Mixture) {
         debug_assert!(b < self.batch && row < self.bucket);
         let m = self.n_mix;
         let off = (b * self.bucket + row) * m;
-        Mixture {
-            log_w: self.log_w[off..off + m].iter().map(|&x| x as f64).collect(),
-            mu: self.mu[off..off + m].iter().map(|&x| x as f64).collect(),
-            log_sigma: self.log_sigma[off..off + m]
-                .iter()
-                .map(|&x| x as f64)
-                .collect(),
-        }
+        out.log_w.clear();
+        out.log_w.extend(self.log_w[off..off + m].iter().map(|&x| x as f64));
+        out.mu.clear();
+        out.mu.extend(self.mu[off..off + m].iter().map(|&x| x as f64));
+        out.log_sigma.clear();
+        out.log_sigma.extend(self.log_sigma[off..off + m].iter().map(|&x| x as f64));
     }
 
     /// Event-type distribution at `row`, restricted to `k` real types.
     pub fn type_dist(&self, b: usize, row: usize, k: usize) -> TypeDist {
+        let mut out = TypeDist { probs: Vec::new() };
+        self.type_dist_into(b, row, k, &mut out);
+        out
+    }
+
+    /// [`ForwardOut::type_dist`] into caller-owned storage (same values,
+    /// no per-read allocations once `out` has warmed up).
+    pub fn type_dist_into(&self, b: usize, row: usize, k: usize, out: &mut TypeDist) {
         debug_assert!(b < self.batch && row < self.bucket);
         let off = (b * self.bucket + row) * self.k_max;
-        let logits: Vec<f64> = self.logits[off..off + self.k_max]
-            .iter()
-            .map(|&x| x as f64)
-            .collect();
-        TypeDist::from_logits(&logits, k)
+        out.assign_from_logits_f32(&self.logits[off..off + self.k_max], k);
+    }
+
+    /// Move `self` into an `Arc`, reusing a pooled shell (a previously
+    /// dropped forward's `Arc` allocation) when one is available. The
+    /// shell's stale buffers travel back through `self`'s `Drop` to the
+    /// buffer free list, so nothing leaks either way.
+    pub fn into_shared(mut self) -> Arc<ForwardOut> {
+        if let Some(mut shell) = pool::take_shell() {
+            if let Some(dst) = Arc::get_mut(&mut shell) {
+                dst.batch = self.batch;
+                dst.bucket = self.bucket;
+                dst.n_mix = self.n_mix;
+                dst.k_max = self.k_max;
+                std::mem::swap(&mut dst.log_w, &mut self.log_w);
+                std::mem::swap(&mut dst.mu, &mut self.mu);
+                std::mem::swap(&mut dst.log_sigma, &mut self.log_sigma);
+                std::mem::swap(&mut dst.logits, &mut self.logits);
+                return shell;
+            }
+        }
+        Arc::new(self)
     }
 
     /// Deterministically overwrite batch slot `b`'s rows at and past
@@ -461,6 +542,18 @@ impl ForwardOut {
                 self.logits[l_off + i] = rng.uniform_in(-4.0, 4.0) as f32;
             }
         }
+    }
+}
+
+impl Drop for ForwardOut {
+    /// Recycle the four output buffers (DESIGN.md §14). A value emptied by
+    /// [`ForwardOut::into_shared`] contributes only zero-capacity husks,
+    /// which the recycler ignores.
+    fn drop(&mut self) {
+        pool::recycle(std::mem::take(&mut self.log_w));
+        pool::recycle(std::mem::take(&mut self.mu));
+        pool::recycle(std::mem::take(&mut self.log_sigma));
+        pool::recycle(std::mem::take(&mut self.logits));
     }
 }
 

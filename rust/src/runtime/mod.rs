@@ -12,6 +12,7 @@ pub mod chaos;
 pub mod executor;
 pub mod manifest;
 pub mod native;
+pub mod pool;
 
 pub use backend::{
     Backend, BatchForward, CachedForward, Forward, ForwardOut, ModelBackend, SeqDelta, SeqInput,
@@ -20,6 +21,7 @@ pub use backend::{
 pub use chaos::{ChaosBackend, ChaosForward, ChaosModel, ChaosStats, FaultPlan};
 pub use manifest::{ArtifactDir, Manifest};
 pub use native::{NativeBackend, NativeModel};
+pub use pool::PoolStats;
 
 #[cfg(feature = "xla")]
 pub use executor::{cpu_client, ModelExecutor, XlaBackend};

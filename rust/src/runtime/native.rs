@@ -23,13 +23,14 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Mutex;
 
 use anyhow::{bail, ensure, Context as _, Result};
 
 use super::backend::{
     Backend, CachedForward, ForwardOut, ModelBackend, SeqDelta, SeqInput, SlotOut, StreamId,
 };
+use super::pool;
 use crate::util::json::{obj, Json};
 
 /// Sequence-length buckets (incl. BOS), mirroring `config.BUCKETS`.
@@ -50,57 +51,13 @@ const ENCODERS: [&str; 3] = ["thp", "sahp", "attnhp"];
 type SlotStripe<'a> =
     (usize, &'a mut [f32], &'a mut [f32], &'a mut [f32], &'a mut [f32]);
 
-/// Below this many total rows (slots × bucket) a batched fill runs on the
-/// calling thread: thread-spawn overhead (~tens of µs) would exceed the
-/// transcendental work being parallelized.
-const MIN_PARALLEL_ROWS: usize = 256;
-
-/// Worker count for batched fills, queried once — `available_parallelism`
-/// is a syscall and the fleet engine issues thousands of forwards per run.
-fn fill_workers() -> usize {
-    static WORKERS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
-    *WORKERS.get_or_init(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
-}
-
-/// Partition `jobs` into ≤ `workers` contiguous groups and run `f` over
-/// every job, fanning the groups across scoped threads (the calling
-/// thread works group 0). The shared fan-out scaffold of batched full
-/// forwards and delta waves — one copy, so both paths always carry the
-/// same parallelism policy. `workers <= 1` runs everything on the caller
-/// (the latency path pays no spawn cost).
-fn fan_groups<T: Send>(jobs: Vec<T>, workers: usize, f: impl Fn(T) + Sync) {
-    if workers <= 1 || jobs.len() <= 1 {
-        for j in jobs {
-            f(j);
-        }
-        return;
-    }
-    let per = jobs.len().div_ceil(workers.min(jobs.len()));
-    let mut groups: Vec<Vec<T>> = Vec::with_capacity(workers);
-    let mut it = jobs.into_iter();
-    loop {
-        let g: Vec<T> = it.by_ref().take(per).collect();
-        if g.is_empty() {
-            break;
-        }
-        groups.push(g);
-    }
-    std::thread::scope(|sc| {
-        let f = &f;
-        let mut rest = groups.split_off(1);
-        for group in rest.drain(..) {
-            sc.spawn(move || {
-                for j in group {
-                    f(j);
-                }
-            });
-        }
-        // the calling thread works too (group 0)
-        for j in groups.remove(0) {
-            f(j);
-        }
-    });
-}
+/// Fixed lane width of the chunked [`NativeModel::fill_slot`] passes: the
+/// decay factors of up to `LANES` consecutive rows are computed in one
+/// slice pass (each depends only on the input times), then the dependent
+/// excitation fold consumes them. Same float ops in the same order as the
+/// row-at-a-time loop — output-identical, but the independent pass is
+/// autovectorizable.
+const LANES: usize = 8;
 
 /// Model-size ladder: `(name, mean shift vs target, type-head amplitude)`.
 /// `target` is the reference; the `draft*` sizes are increasingly close to
@@ -397,16 +354,14 @@ impl NativeModel {
         log_sigma[0] = -0.7;
         log_sigma[1] = -0.3;
 
+        // Slice fills instead of a per-element branch ladder: 0.3 over the
+        // live types, 0.0 over the padding tail, then the single preferred
+        // peak — the same values, but `fill` lowers to vectorized stores.
         let pref = if last_k >= self.num_types { 0 } else { (last_k + 1) % self.num_types };
-        for (k, l) in logits.iter_mut().enumerate() {
-            *l = if k == pref {
-                self.type_amp as f32
-            } else if k < self.num_types {
-                0.3
-            } else {
-                0.0
-            };
-        }
+        let live = self.num_types.min(logits.len());
+        logits[..live].fill(0.3);
+        logits[live..].fill(0.0);
+        logits[pref] = self.type_amp as f32;
     }
 
     /// Fill one batch slot's rows for `seq` (padding rows past the sequence
@@ -422,26 +377,53 @@ impl NativeModel {
     ) {
         let n = seq.times.len();
         // Hawkes-style recursion: s_r = Σ_{i<r} exp(-decay (t_anchor - t_i)),
-        // updated in O(1) as each event becomes visible. The per-event fold
-        // is StreamState::advance — the same code the CachedForward streams
-        // run, so cached rows are bit-identical to cold rows.
+        // updated in O(1) as each event becomes visible. The fold below is
+        // StreamState::advance unrolled into lane chunks: pass 1 computes
+        // the decay factors exp(-decay·Δt) of up to LANES consecutive rows
+        // (each Δt depends only on the *input* times, so the pass has no
+        // loop-carried dependence), pass 2 runs the dependent
+        // `s = s·decay + 1` recurrence and writes the rows. Same float ops
+        // in the same order ⇒ bit-identical to the incremental
+        // CachedForward streams, which run StreamState::advance directly.
         let mut st = StreamState::bos(seq.t0);
         let real_rows = bucket.min(n + 1);
-        for row in 0..real_rows {
-            if row >= 1 {
-                st.advance(seq.times[row - 1], seq.types[row - 1], self.decay);
+        self.write_row(
+            st.s,
+            st.t_anchor,
+            st.last_k,
+            &mut log_w[..N_MIX],
+            &mut mu[..N_MIX],
+            &mut log_sigma[..N_MIX],
+            &mut logits[..K_MAX],
+        );
+        let mut decays = [0f64; LANES];
+        let mut row = 1;
+        while row < real_rows {
+            let chunk = LANES.min(real_rows - row);
+            for (j, d) in decays[..chunk].iter_mut().enumerate() {
+                let r = row + j;
+                let prev_t = if r == 1 { seq.t0 } else { seq.times[r - 2] };
+                let dt = (seq.times[r - 1] - prev_t).max(0.0);
+                *d = (-self.decay * dt).exp();
             }
-            let m0 = row * N_MIX;
-            let l0 = row * K_MAX;
-            self.write_row(
-                st.s,
-                st.t_anchor,
-                st.last_k,
-                &mut log_w[m0..m0 + N_MIX],
-                &mut mu[m0..m0 + N_MIX],
-                &mut log_sigma[m0..m0 + N_MIX],
-                &mut logits[l0..l0 + K_MAX],
-            );
+            for (j, &d) in decays[..chunk].iter().enumerate() {
+                let r = row + j;
+                st.s = st.s * d + 1.0;
+                st.t_anchor = seq.times[r - 1];
+                st.last_k = seq.types[r - 1] as usize;
+                let m0 = r * N_MIX;
+                let l0 = r * K_MAX;
+                self.write_row(
+                    st.s,
+                    st.t_anchor,
+                    st.last_k,
+                    &mut log_w[m0..m0 + N_MIX],
+                    &mut mu[m0..m0 + N_MIX],
+                    &mut log_sigma[m0..m0 + N_MIX],
+                    &mut logits[l0..l0 + K_MAX],
+                );
+            }
+            row += chunk;
         }
         // Padding rows are the final row frozen in place: copy, don't
         // recompute the transcendental math per row.
@@ -498,10 +480,10 @@ impl NativeModel {
 
         let m = delta.times.len();
         let rows = m + 1;
-        let mut log_w = vec![0f32; rows * N_MIX];
-        let mut mu = vec![0f32; rows * N_MIX];
-        let mut log_sigma = vec![0f32; rows * N_MIX];
-        let mut logits = vec![0f32; rows * K_MAX];
+        let mut log_w = pool::checkout(rows * N_MIX);
+        let mut mu = pool::checkout(rows * N_MIX);
+        let mut log_sigma = pool::checkout(rows * N_MIX);
+        let mut logits = pool::checkout(rows * K_MAX);
         let mut cur = *st.states.last().unwrap();
         for row in 0..rows {
             if row >= 1 {
@@ -521,7 +503,7 @@ impl NativeModel {
             );
         }
         let out = ForwardOut::from_raw(1, rows, N_MIX, K_MAX, log_w, mu, log_sigma, logits);
-        Ok(SlotOut::with_row_offset(Arc::new(out), 0, delta.base_len))
+        Ok(SlotOut::with_row_offset(out.into_shared(), 0, delta.base_len))
     }
 }
 
@@ -559,7 +541,7 @@ impl CachedForward for NativeModel {
         let mut ids: Vec<StreamId> = reqs.iter().map(|(s, _)| *s).collect();
         ids.sort_unstable();
         let has_dup = ids.windows(2).any(|w| w[0] == w[1]);
-        if reqs.len() <= 1 || total_rows < MIN_PARALLEL_ROWS || has_dup {
+        if reqs.len() <= 1 || total_rows < pool::MIN_PARALLEL_ROWS || has_dup {
             return reqs.iter().map(|(s, d)| self.forward_delta(*s, d)).collect();
         }
         // Extract every stream up front (all-or-nothing, so an unknown id
@@ -583,14 +565,16 @@ impl CachedForward for NativeModel {
         {
             type DeltaJob<'a> =
                 (StreamId, &'a SeqDelta, &'a mut NativeStream, &'a mut Option<Result<SlotOut>>);
-            let jobs: Vec<DeltaJob> = reqs
+            let mut jobs: Vec<DeltaJob> = reqs
                 .iter()
                 .zip(taken.iter_mut())
                 .zip(results.iter_mut())
                 .map(|(((s, d), st), r)| (*s, d, st, r))
                 .collect();
-            let workers = fill_workers().min(jobs.len());
-            fan_groups(jobs, workers, |(s, d, st, r)| *r = Some(self.delta_on(s, st, d)));
+            let workers = pool::wave_workers(total_rows, jobs.len());
+            pool::run_wave(&mut jobs, workers, |(s, d, st, r)| {
+                **r = Some(self.delta_on(*s, st, d))
+            });
         }
         // Re-register every stream, even those whose delta failed — the
         // owner decides whether to retry, rebase or close.
@@ -637,21 +621,22 @@ impl ModelBackend for NativeModel {
             .with_context(|| format!("no batch capacity ≥ {} (max {})", seqs.len(), 8))?;
         self.calls.fetch_add(1, Ordering::Relaxed);
 
-        let mut log_w = vec![0f32; batch * bucket * N_MIX];
-        let mut mu = vec![0f32; batch * bucket * N_MIX];
-        let mut log_sigma = vec![0f32; batch * bucket * N_MIX];
-        let mut logits = vec![0f32; batch * bucket * K_MAX];
+        let mut log_w = pool::checkout(batch * bucket * N_MIX);
+        let mut mu = pool::checkout(batch * bucket * N_MIX);
+        let mut log_sigma = pool::checkout(batch * bucket * N_MIX);
+        let mut logits = pool::checkout(batch * bucket * K_MAX);
         let empty = SeqInput::default();
         // Real slots, plus ONE padding slot (the empty sequence); the
         // remaining padding slots are copies of it (valid, never read).
         let filled = batch.min(seqs.len() + 1);
         {
             // Per-slot stripes of the flat buffers; disjoint, so batched
-            // fills fan out across cores (single-sequence calls stay on the
-            // calling thread — the sequential samplers' latency path pays
-            // no spawn cost). Every stripe runs the identical per-row math,
-            // so batched rows stay bit-identical to single-sequence rows.
-            let stripes: Vec<SlotStripe> = log_w
+            // fills fan out across the persistent pool (single-sequence
+            // calls stay on the calling thread — the sequential samplers'
+            // latency path pays no dispatch cost). Every stripe runs the
+            // identical per-row math, so batched rows stay bit-identical
+            // to single-sequence rows.
+            let mut stripes: Vec<SlotStripe> = log_w
                 .chunks_mut(bucket * N_MIX)
                 .zip(mu.chunks_mut(bucket * N_MIX))
                 .zip(log_sigma.chunks_mut(bucket * N_MIX))
@@ -660,13 +645,9 @@ impl ModelBackend for NativeModel {
                 .enumerate()
                 .map(|(b, (((lw, m), ls), lg))| (b, lw, m, ls, lg))
                 .collect();
-            let workers = if filled * bucket < MIN_PARALLEL_ROWS {
-                1
-            } else {
-                fill_workers().min(filled)
-            };
-            fan_groups(stripes, workers, |(b, lw, m, ls, lg)| {
-                self.fill_slot(seqs.get(b).unwrap_or(&empty), bucket, lw, m, ls, lg)
+            let workers = pool::wave_workers(filled * bucket, filled);
+            pool::run_wave(&mut stripes, workers, |(b, lw, m, ls, lg)| {
+                self.fill_slot(seqs.get(*b).unwrap_or(&empty), bucket, lw, m, ls, lg)
             });
         }
         let pad_m = seqs.len() * bucket * N_MIX..(seqs.len() + 1) * bucket * N_MIX;

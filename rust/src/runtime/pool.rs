@@ -1,0 +1,455 @@
+//! Persistent worker pool + buffer recycling for the native hot path
+//! (DESIGN.md §14).
+//!
+//! Every batched full forward and every delta wave used to pay two
+//! mechanical costs per call: a `std::thread::scope` spawn/join for the
+//! fan-out, and four fresh `vec![0f32; batch*bucket*dim]` output buffers.
+//! Under steady-state fleet traffic (thousands of forwards per run) both
+//! are pure overhead. This module removes them without changing a single
+//! output bit:
+//!
+//! * [`run_wave`] executes a wave of independent jobs over parked worker
+//!   threads. The wave is partitioned into the **same contiguous groups**
+//!   the old scoped fan-out used (`per = ceil(n/workers)` jobs per group),
+//!   and each job writes only its own disjoint output slice, so scheduling
+//!   order is invisible in the results — pooled, scoped, and serial
+//!   execution are bit-identical by construction.
+//! * [`checkout`]/[`recycle`] keep a free list of `Vec<f32>` output
+//!   buffers. A checkout is `clear()` + `resize(len, 0.0)`, which is
+//!   observationally identical to `vec![0f32; len]` — and the native
+//!   kernels overwrite every row they hand out anyway.
+//!
+//! Benches A/B the old behaviour through [`set_scoped_baseline`] and
+//! [`set_recycling`]; [`stats`] exposes the counters that
+//! `BatcherStats`/`FleetStats` surface per executor / per fleet run.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use super::backend::ForwardOut;
+
+/// Below this many total rows a wave runs on the calling thread: even a
+/// pool dispatch (~a few µs) exceeds the transcendental work being
+/// parallelized. Shared by batched full forwards and delta waves so both
+/// paths always carry the same parallelism policy.
+pub const MIN_PARALLEL_ROWS: usize = 256;
+
+/// Most free `Vec<f32>` buffers the recycler holds; beyond this, returned
+/// buffers are simply freed (bounds worst-case idle memory).
+const MAX_POOLED_BUFFERS: usize = 64;
+
+/// Most pooled [`ForwardOut`] shells (`Arc` allocations) kept for reuse.
+const MAX_POOLED_SHELLS: usize = 16;
+
+/// Worker count for batched fills, queried once — `available_parallelism`
+/// is a syscall and the fleet engine issues thousands of forwards per run.
+pub fn fill_workers() -> usize {
+    static WORKERS: OnceLock<usize> = OnceLock::new();
+    *WORKERS.get_or_init(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+/// The shared worker-count policy for a wave of `jobs` independent fills
+/// covering `total_rows` output rows: 1 (serial, no dispatch) below
+/// [`MIN_PARALLEL_ROWS`], else one worker per job up to [`fill_workers`].
+pub fn wave_workers(total_rows: usize, jobs: usize) -> usize {
+    if jobs <= 1 || total_rows < MIN_PARALLEL_ROWS {
+        1
+    } else {
+        fill_workers().min(jobs)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// mode toggles (benches/tests A/B the pre-pool behaviour)
+// ---------------------------------------------------------------------------
+
+static SCOPED_BASELINE: AtomicBool = AtomicBool::new(false);
+static RECYCLING: AtomicBool = AtomicBool::new(true);
+
+/// Route [`run_wave`] through the old per-wave `std::thread::scope`
+/// spawn/join instead of the persistent pool. For benches that measure the
+/// pool's win and tests that prove output equivalence; process-global.
+pub fn set_scoped_baseline(on: bool) {
+    SCOPED_BASELINE.store(on, Ordering::Relaxed);
+}
+
+/// Enable/disable buffer and shell recycling (disabled = every checkout is
+/// a fresh allocation, the pre-pool behaviour). Process-global.
+pub fn set_recycling(on: bool) {
+    RECYCLING.store(on, Ordering::Relaxed);
+}
+
+fn scoped_baseline() -> bool {
+    SCOPED_BASELINE.load(Ordering::Relaxed)
+}
+
+fn recycling() -> bool {
+    RECYCLING.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------------
+// counters
+// ---------------------------------------------------------------------------
+
+static POOL_DISPATCHES: AtomicUsize = AtomicUsize::new(0);
+static POOL_STEALS: AtomicUsize = AtomicUsize::new(0);
+static BUFFERS_REUSED: AtomicUsize = AtomicUsize::new(0);
+static BUFFERS_ALLOCATED: AtomicUsize = AtomicUsize::new(0);
+
+/// Snapshot of the process-wide pool/recycler counters. Attribution to one
+/// executor or fleet run is approximate when several run concurrently —
+/// the counters are monotone, so deltas over an interval still bound the
+/// interval's activity.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Wave groups handed to pool workers (the caller always works group 0
+    /// itself, so a W-group wave dispatches W−1).
+    pub pool_dispatches: usize,
+    /// Jobs a thread claimed from another group's cursor after draining
+    /// its own (work-stealing kept a straggler group from idling cores).
+    pub pool_steals: usize,
+    /// Output buffers served from the free list instead of the allocator.
+    pub buffers_reused: usize,
+    /// Output buffers that had to be freshly allocated.
+    pub buffers_allocated: usize,
+}
+
+impl PoolStats {
+    /// Counter deltas since an `earlier` snapshot (saturating, so a stale
+    /// snapshot cannot underflow).
+    pub fn since(&self, earlier: &PoolStats) -> PoolStats {
+        PoolStats {
+            pool_dispatches: self.pool_dispatches.saturating_sub(earlier.pool_dispatches),
+            pool_steals: self.pool_steals.saturating_sub(earlier.pool_steals),
+            buffers_reused: self.buffers_reused.saturating_sub(earlier.buffers_reused),
+            buffers_allocated: self.buffers_allocated.saturating_sub(earlier.buffers_allocated),
+        }
+    }
+}
+
+/// Current process-wide pool/recycler counters.
+pub fn stats() -> PoolStats {
+    PoolStats {
+        pool_dispatches: POOL_DISPATCHES.load(Ordering::Relaxed),
+        pool_steals: POOL_STEALS.load(Ordering::Relaxed),
+        buffers_reused: BUFFERS_REUSED.load(Ordering::Relaxed),
+        buffers_allocated: BUFFERS_ALLOCATED.load(Ordering::Relaxed),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// buffer + shell recycling
+// ---------------------------------------------------------------------------
+
+static FREE: Mutex<Vec<Vec<f32>>> = Mutex::new(Vec::new());
+static SHELLS: Mutex<Vec<Arc<ForwardOut>>> = Mutex::new(Vec::new());
+
+/// Check out a zeroed `len`-element buffer, reusing a recycled one when
+/// available. `clear()` + `resize(len, 0.0)` makes the reused buffer
+/// element-for-element identical to a fresh `vec![0f32; len]`, so
+/// recycling cannot change outputs (DESIGN.md §14) — and the fill paths
+/// overwrite every row they expose regardless.
+pub fn checkout(len: usize) -> Vec<f32> {
+    if recycling() {
+        if let Some(mut v) = FREE.lock().unwrap().pop() {
+            BUFFERS_REUSED.fetch_add(1, Ordering::Relaxed);
+            v.clear();
+            v.resize(len, 0.0);
+            return v;
+        }
+    }
+    BUFFERS_ALLOCATED.fetch_add(1, Ordering::Relaxed);
+    vec![0f32; len]
+}
+
+/// Return a buffer to the free list (no-op while recycling is disabled,
+/// for zero-capacity husks, or when the list is at capacity).
+pub fn recycle(mut v: Vec<f32>) {
+    if !recycling() || v.capacity() == 0 {
+        return;
+    }
+    let mut free = FREE.lock().unwrap();
+    if free.len() < MAX_POOLED_BUFFERS {
+        v.clear();
+        free.push(v);
+    }
+}
+
+/// Take a pooled `Arc<ForwardOut>` shell (uniquely owned, so the caller
+/// can `Arc::get_mut` it) to avoid a fresh `Arc` allocation per forward.
+pub(crate) fn take_shell() -> Option<Arc<ForwardOut>> {
+    if !recycling() {
+        return None;
+    }
+    SHELLS.lock().unwrap().pop()
+}
+
+/// Pool a uniquely-owned shell for reuse. The shell keeps its buffers
+/// until the next [`ForwardOut::into_shared`] swaps them out (at which
+/// point they reach the free list through `ForwardOut`'s `Drop`).
+pub(crate) fn put_shell(shell: Arc<ForwardOut>) {
+    debug_assert_eq!(Arc::strong_count(&shell), 1);
+    if !recycling() {
+        return;
+    }
+    let mut shells = SHELLS.lock().unwrap();
+    if shells.len() < MAX_POOLED_SHELLS {
+        shells.push(shell);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the persistent worker pool
+// ---------------------------------------------------------------------------
+
+/// Type-erased view of one in-flight wave. `data` points at a stack-held
+/// [`Ctx`] in the *calling* frame; `call(data, i)` runs job `i`.
+///
+/// Soundness: the caller blocks until `done == total`, and `done` only
+/// reaches `total` after every claimed job has finished running, so no
+/// thread dereferences `data` after the caller's frame moves on. Each job
+/// index is claimed exactly once (a `fetch_add` on its group cursor), so
+/// no `&mut` job aliasing occurs. Stale queue tickets left by a finished
+/// wave only ever read the (exhausted) cursors, never `data`.
+struct Wave {
+    data: *const (),
+    call: fn(*const (), usize),
+    /// next unclaimed job index per group
+    cursors: Vec<AtomicUsize>,
+    /// one-past-the-last job index per group
+    ends: Vec<usize>,
+    total: usize,
+    done: Mutex<usize>,
+    cv: Condvar,
+    poisoned: AtomicBool,
+}
+
+// SAFETY: `data`/`call` erase a `&mut [T]` of `T: Send` jobs and a
+// `&F: Sync` closure (bounds enforced by `run_pooled`); the claim protocol
+// above guarantees exclusive access per job and a happens-before edge from
+// every job run to the caller's wake-up (the `done` mutex).
+unsafe impl Send for Wave {}
+// SAFETY: see above — all shared mutation goes through atomics/locks.
+unsafe impl Sync for Wave {}
+
+/// Typed context a wave's `data` pointer erases.
+struct Ctx<T, F> {
+    jobs: *mut T,
+    f: *const F,
+}
+
+/// Run job `i` of the wave behind `data`. Declared safe so that the plain
+/// fn-pointer type (`fn(*const (), usize)`) erases `T`/`F`; the interior
+/// unsafety is justified by the `Wave` claim protocol.
+fn call_one<T, F: Fn(&mut T)>(data: *const (), i: usize) {
+    // SAFETY: `data` points at a live `Ctx<T, F>` (the caller of
+    // `run_pooled` blocks until all jobs finish), `i` was claimed exactly
+    // once so the `&mut` is exclusive, and `F: Sync` makes `&F` shareable.
+    unsafe {
+        let ctx = &*(data as *const Ctx<T, F>);
+        (&*ctx.f)(&mut *ctx.jobs.add(i));
+    }
+}
+
+struct Ticket {
+    wave: Arc<Wave>,
+    home: usize,
+}
+
+struct Queue {
+    q: Mutex<VecDeque<Ticket>>,
+    cv: Condvar,
+}
+
+fn queue() -> &'static Queue {
+    static Q: OnceLock<Queue> = OnceLock::new();
+    Q.get_or_init(|| Queue { q: Mutex::new(VecDeque::new()), cv: Condvar::new() })
+}
+
+/// Spawn the persistent workers once, lazily (first parallel wave). The
+/// threads park on the queue condvar between waves and live for the
+/// process lifetime — steady-state waves never spawn.
+fn ensure_workers() {
+    static SPAWN: std::sync::Once = std::sync::Once::new();
+    SPAWN.call_once(|| {
+        for i in 0..fill_workers().saturating_sub(1) {
+            std::thread::Builder::new()
+                .name(format!("tpp-pool-{i}"))
+                .spawn(worker_loop)
+                .expect("spawn pool worker");
+        }
+    });
+}
+
+fn worker_loop() {
+    let q = queue();
+    loop {
+        let ticket = {
+            let mut guard = q.q.lock().unwrap();
+            loop {
+                match guard.pop_front() {
+                    Some(t) => break t,
+                    None => guard = q.cv.wait(guard).unwrap(),
+                }
+            }
+        };
+        work(&ticket.wave, ticket.home);
+    }
+}
+
+/// Drain the wave starting from group `home`, then steal from the other
+/// groups round-robin. Every claim is a `fetch_add`, so each job runs on
+/// exactly one thread; job panics poison the wave instead of deadlocking
+/// the caller.
+fn work(wave: &Wave, home: usize) {
+    let groups = wave.cursors.len();
+    for off in 0..groups {
+        let g = (home + off) % groups;
+        loop {
+            let i = wave.cursors[g].fetch_add(1, Ordering::Relaxed);
+            if i >= wave.ends[g] {
+                break;
+            }
+            if off > 0 {
+                POOL_STEALS.fetch_add(1, Ordering::Relaxed);
+            }
+            if catch_unwind(AssertUnwindSafe(|| (wave.call)(wave.data, i))).is_err() {
+                wave.poisoned.store(true, Ordering::Relaxed);
+            }
+            let mut done = wave.done.lock().unwrap();
+            *done += 1;
+            if *done == wave.total {
+                wave.cv.notify_all();
+            }
+        }
+    }
+}
+
+/// Run `f` over every job of a wave. `workers <= 1` (or a single job)
+/// runs serially on the caller; otherwise the wave is partitioned into
+/// the same contiguous groups the old scoped fan-out used and executed on
+/// the persistent pool (or, under [`set_scoped_baseline`], on per-wave
+/// scoped threads). Jobs must be independent — each receives `&mut` to
+/// its own element only — which is what makes all three execution modes
+/// bit-identical.
+pub fn run_wave<T: Send, F: Fn(&mut T) + Sync>(jobs: &mut [T], workers: usize, f: F) {
+    if workers <= 1 || jobs.len() <= 1 {
+        for j in jobs.iter_mut() {
+            f(j);
+        }
+        return;
+    }
+    if scoped_baseline() {
+        run_scoped(jobs, workers, &f);
+    } else {
+        ensure_workers();
+        run_pooled(jobs, workers, &f);
+    }
+}
+
+/// The pre-pool behaviour: per-wave scoped spawn/join, same grouping.
+fn run_scoped<T: Send, F: Fn(&mut T) + Sync>(jobs: &mut [T], workers: usize, f: &F) {
+    let per = jobs.len().div_ceil(workers.min(jobs.len()));
+    let mut chunks = jobs.chunks_mut(per);
+    let first = chunks.next().expect("non-empty wave");
+    std::thread::scope(|sc| {
+        for chunk in chunks.by_ref() {
+            sc.spawn(move || {
+                for j in chunk {
+                    f(j);
+                }
+            });
+        }
+        // the calling thread works too (group 0)
+        for j in first {
+            f(j);
+        }
+    });
+}
+
+fn run_pooled<T: Send, F: Fn(&mut T) + Sync>(jobs: &mut [T], workers: usize, f: &F) {
+    let n = jobs.len();
+    let per = n.div_ceil(workers.min(n));
+    let groups = n.div_ceil(per);
+    let ctx = Ctx { jobs: jobs.as_mut_ptr(), f: f as *const F };
+    let wave = Arc::new(Wave {
+        data: &ctx as *const Ctx<T, F> as *const (),
+        call: call_one::<T, F>,
+        cursors: (0..groups).map(|g| AtomicUsize::new(g * per)).collect(),
+        ends: (0..groups).map(|g| ((g + 1) * per).min(n)).collect(),
+        total: n,
+        done: Mutex::new(0),
+        cv: Condvar::new(),
+        poisoned: AtomicBool::new(false),
+    });
+    let q = queue();
+    {
+        let mut guard = q.q.lock().unwrap();
+        for g in 1..groups {
+            guard.push_back(Ticket { wave: Arc::clone(&wave), home: g });
+        }
+    }
+    POOL_DISPATCHES.fetch_add(groups - 1, Ordering::Relaxed);
+    q.cv.notify_all();
+    // The caller is group 0's worker (and steals any stragglers).
+    work(&wave, 0);
+    let mut done = wave.done.lock().unwrap();
+    while *done < wave.total {
+        done = wave.cv.wait(done).unwrap();
+    }
+    drop(done);
+    // Hygiene: drop this wave's unclaimed tickets (all cursors are
+    // exhausted, so a late pop would be a no-op scan anyway).
+    q.q.lock().unwrap().retain(|t| !Arc::ptr_eq(&t.wave, &wave));
+    if wave.poisoned.load(Ordering::Relaxed) {
+        panic!("worker-pool wave job panicked");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill(jobs: &mut [(usize, Vec<f32>)], workers: usize) {
+        run_wave(jobs, workers, |(base, out)| {
+            for (r, v) in out.iter_mut().enumerate() {
+                *v = ((*base * 31 + r) as f32 * 0.1).sin();
+            }
+        });
+    }
+
+    #[test]
+    fn pooled_wave_matches_serial() {
+        for &(n, rows, workers) in &[(1usize, 4usize, 4usize), (3, 7, 2), (8, 16, 4), (13, 5, 8)] {
+            let mk = || (0..n).map(|i| (i, vec![0f32; rows])).collect::<Vec<_>>();
+            let mut serial = mk();
+            fill(&mut serial, 1);
+            let mut pooled = mk();
+            fill(&mut pooled, workers);
+            assert_eq!(serial, pooled, "n={n} workers={workers}");
+        }
+    }
+
+    #[test]
+    fn checkout_is_zeroed_and_reuse_counted() {
+        set_recycling(true);
+        let before = stats();
+        let v = checkout(32);
+        assert!(v.iter().all(|&x| x == 0.0));
+        recycle(v);
+        let w = checkout(16);
+        assert_eq!(w.len(), 16);
+        assert!(w.iter().all(|&x| x == 0.0));
+        let d = stats().since(&before);
+        assert!(d.buffers_reused + d.buffers_allocated >= 2);
+    }
+
+    #[test]
+    fn wave_workers_policy() {
+        assert_eq!(wave_workers(10, 1), 1);
+        assert_eq!(wave_workers(MIN_PARALLEL_ROWS - 1, 8), 1);
+        assert!(wave_workers(MIN_PARALLEL_ROWS, 8) >= 1);
+    }
+}

@@ -15,6 +15,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::events::Event;
+use crate::model::mixture::{Mixture, TypeDist};
 use crate::runtime::{Forward, SeqDelta, SeqInput, SlotOut, StreamGuard};
 use crate::util::rng::Rng;
 
@@ -58,6 +59,11 @@ pub struct ArSession {
     /// [`Context::epoch`] snapshot — a mismatch means the window slid and
     /// the stream must rebase
     seen_epoch: usize,
+    /// scratch mixture the forward row is decoded into each step (reused
+    /// capacity — the per-event hot path allocates nothing, DESIGN.md §14)
+    mix: Mixture,
+    /// scratch type distribution, same lifecycle as `mix`
+    td: TypeDist,
 }
 
 impl ArSession {
@@ -72,6 +78,8 @@ impl ArSession {
             started: Instant::now(),
             cursor: 0,
             seen_epoch: 0,
+            mix: Mixture::default(),
+            td: TypeDist::default(),
             cfg,
             rng,
         };
@@ -101,6 +109,18 @@ impl ArSession {
         }
     }
 
+    /// [`ArSession::pending_delta`] into a caller-owned scratch delta,
+    /// reusing its capacity. Returns `false` (leaving `d` untouched) once
+    /// done.
+    pub fn pending_delta_into(&self, d: &mut SeqDelta) -> bool {
+        if self.done {
+            false
+        } else {
+            self.ctx.seq_delta_into(&[], self.cursor, d);
+            true
+        }
+    }
+
     /// True once the sampling window closed or the event cap was hit.
     pub fn is_done(&self) -> bool {
         self.done
@@ -117,8 +137,10 @@ impl ArSession {
         // path, the stream is now committed through the current window.
         self.cursor = self.ctx.len();
         let row = self.ctx.next_row(0);
-        let tau = fwd.mixture(row).sample(&mut self.rng);
-        let k = fwd.type_dist(row, self.cfg.num_types).sample(&mut self.rng) as u32;
+        fwd.mixture_into(row, &mut self.mix);
+        fwd.type_dist_into(row, self.cfg.num_types, &mut self.td);
+        let tau = self.mix.sample(&mut self.rng);
+        let k = self.td.sample(&mut self.rng) as u32;
         let t = self.ctx.last_time() + tau;
         if t > self.cfg.t_end {
             self.finish();
@@ -190,12 +212,15 @@ pub fn sample_ar<F: Forward + ?Sized>(
 ) -> Result<(Vec<Event>, SampleStats)> {
     let mut session = ArSession::new(cfg.clone(), target.max_bucket(), rng.clone());
     let mut stream = StreamGuard::open(target).unwrap_or(None);
+    let mut dbuf = SeqDelta::default();
     while !session.is_done() {
         let mut tries = 0;
         let fwd = loop {
             match &stream {
                 Some(g) => {
-                    match g.forward_delta(&session.pending_delta().expect("pending delta")) {
+                    let filled = session.pending_delta_into(&mut dbuf);
+                    assert!(filled, "pending delta");
+                    match g.forward_delta(&dbuf) {
                         Ok(f) => break f,
                         Err(_) => {
                             // Stream lost/errored: rebase on a fresh

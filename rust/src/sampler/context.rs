@@ -100,21 +100,31 @@ impl Context {
     /// carries only the events past `base_len`. O(new events), which is
     /// what makes cached sampling O(1) per event.
     pub fn seq_delta(&self, extra: &[Event], base_len: usize) -> SeqDelta {
+        let mut out = SeqDelta::default();
+        self.seq_delta_into(extra, base_len, &mut out);
+        out
+    }
+
+    /// [`Context::seq_delta`] into a caller-owned scratch delta, reusing
+    /// its `times`/`types` capacity — the steady-state sampling loops call
+    /// this once per wave, so the per-event hot path allocates nothing
+    /// (DESIGN.md §14). Field-for-field identical to `seq_delta`.
+    pub fn seq_delta_into(&self, extra: &[Event], base_len: usize, out: &mut SeqDelta) {
         let w = self.window.len();
         debug_assert!(base_len <= w + extra.len(), "cursor {base_len} beyond input");
-        let m = (w + extra.len()).saturating_sub(base_len);
-        let mut times = Vec::with_capacity(m);
-        let mut types = Vec::with_capacity(m);
+        out.base_len = base_len;
+        out.t0 = self.t0;
+        out.times.clear();
+        out.types.clear();
         let it = self
             .window
             .iter()
             .skip(base_len.min(w))
             .chain(extra.iter().skip(base_len.saturating_sub(w)));
         for e in it {
-            times.push(e.t);
-            types.push(e.k);
+            out.times.push(e.t);
+            out.types.push(e.k);
         }
-        SeqDelta { base_len, t0: self.t0, times, types }
     }
 
     /// Output row that parameterizes the next event's distribution when

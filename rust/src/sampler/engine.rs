@@ -45,7 +45,7 @@ use anyhow::{ensure, Result};
 
 use crate::events::Event;
 use crate::runtime::{
-    BatchForward, CachedForward, Forward as _, SeqDelta, SeqInput, SlotOut, StreamId,
+    pool, BatchForward, CachedForward, Forward as _, SeqDelta, SeqInput, SlotOut, StreamId,
 };
 use crate::util::rng::Rng;
 
@@ -184,6 +184,16 @@ pub struct FleetStats {
     /// sessions permanently degraded to full-window forwards after
     /// repeated stream failures — graceful degradation, not an error
     pub degraded_uncached: usize,
+    /// worker-pool group dispatches during this run (DESIGN.md §14). The
+    /// pool counters are process-wide, so concurrent fleet runs may
+    /// cross-attribute; within a single run the delta is exact.
+    pub pool_dispatches: usize,
+    /// worker-pool job steals during this run
+    pub pool_steals: usize,
+    /// recycled output buffers served during this run
+    pub buffers_reused: usize,
+    /// freshly allocated output buffers during this run
+    pub buffers_allocated: usize,
 }
 
 impl FleetStats {
@@ -363,17 +373,28 @@ where
     S: FleetSession,
 {
     let mut fleet = FleetStats::default();
+    let pool_before = pool::stats();
     let mut t_streams = RoleStreams::new(target.cached(), sessions.len());
     let mut d_streams = RoleStreams::new(draft.and_then(|d| d.cached()), sessions.len());
+    // Gather buffers live across engine steps so the steady-state loop
+    // reuses their capacity instead of reallocating every wave (§14).
+    let mut draft_ids: Vec<usize> = Vec::new();
+    let mut draft_in: Vec<SeqInput> = Vec::new();
+    let mut draft_delta_ids: Vec<usize> = Vec::new();
+    let mut draft_delta_in: Vec<(StreamId, SeqDelta)> = Vec::new();
+    let mut target_ids: Vec<usize> = Vec::new();
+    let mut target_in: Vec<SeqInput> = Vec::new();
+    let mut target_delta_ids: Vec<usize> = Vec::new();
+    let mut target_delta_in: Vec<(StreamId, SeqDelta)> = Vec::new();
     loop {
-        let mut draft_ids: Vec<usize> = Vec::new();
-        let mut draft_in: Vec<SeqInput> = Vec::new();
-        let mut draft_delta_ids: Vec<usize> = Vec::new();
-        let mut draft_delta_in: Vec<(StreamId, SeqDelta)> = Vec::new();
-        let mut target_ids: Vec<usize> = Vec::new();
-        let mut target_in: Vec<SeqInput> = Vec::new();
-        let mut target_delta_ids: Vec<usize> = Vec::new();
-        let mut target_delta_in: Vec<(StreamId, SeqDelta)> = Vec::new();
+        draft_ids.clear();
+        draft_in.clear();
+        draft_delta_ids.clear();
+        draft_delta_in.clear();
+        target_ids.clear();
+        target_in.clear();
+        target_delta_ids.clear();
+        target_delta_in.clear();
         for (i, s) in sessions.iter().enumerate() {
             if s.is_done() {
                 t_streams.close(i);
@@ -410,6 +431,11 @@ where
         {
             fleet.stream_recoveries = t_streams.recovered + d_streams.recovered;
             fleet.degraded_uncached = t_streams.degraded + d_streams.degraded;
+            let pd = pool::stats().since(&pool_before);
+            fleet.pool_dispatches = pd.pool_dispatches;
+            fleet.pool_steals = pd.pool_steals;
+            fleet.buffers_reused = pd.buffers_reused;
+            fleet.buffers_allocated = pd.buffers_allocated;
             return Ok(fleet);
         }
         fleet.steps += 1;
@@ -423,9 +449,9 @@ where
                 &mut d_streams,
                 ModelRole::Draft,
                 &draft_ids,
-                draft_in,
+                &mut draft_in,
                 &draft_delta_ids,
-                draft_delta_in,
+                &mut draft_delta_in,
                 sessions,
             )?;
             fleet.draft_batches += role.batches;
@@ -439,9 +465,9 @@ where
                 &mut t_streams,
                 ModelRole::Target,
                 &target_ids,
-                target_in,
+                &mut target_in,
                 &target_delta_ids,
-                target_delta_in,
+                &mut target_delta_in,
                 sessions,
             )?;
             fleet.target_batches += role.batches;
@@ -469,9 +495,9 @@ fn run_role<B, S>(
     streams: &mut RoleStreams,
     role: ModelRole,
     full_ids: &[usize],
-    full_in: Vec<SeqInput>,
+    full_in: &mut Vec<SeqInput>,
     delta_ids: &[usize],
-    delta_in: Vec<(StreamId, SeqDelta)>,
+    delta_in: &mut Vec<(StreamId, SeqDelta)>,
     sessions: &mut [S],
 ) -> Result<RoleCounters>
 where
@@ -501,10 +527,13 @@ where
 /// A failed wave is isolated: each of its sequences re-runs alone with
 /// bounded retries, so one faulty forward cannot sink its batchmates.
 /// Forwards are pure (DESIGN.md §13), so re-run rows are bit-identical.
+/// The gathered inputs move into the model un-cloned; the failure path
+/// re-derives each one from its session (which has not advanced, so
+/// [`FleetSession::pending_input`] rebuilds the identical input).
 fn fan_out<B, S>(
     model: &B,
     ids: &[usize],
-    mut inputs: Vec<SeqInput>,
+    inputs: &mut Vec<SeqInput>,
     sessions: &mut [S],
 ) -> Result<(usize, usize)>
 where
@@ -517,7 +546,7 @@ where
     while start < ids.len() {
         let take = cap.min(ids.len() - start);
         let chunk: Vec<SeqInput> = inputs.drain(..take).collect();
-        match model.forward_batch(chunk.clone()) {
+        match model.forward_batch(chunk) {
             Ok(outs) => {
                 ensure!(
                     outs.len() == take,
@@ -530,9 +559,11 @@ where
                 }
             }
             Err(_) => {
-                for (j, seq) in chunk.into_iter().enumerate() {
+                for j in 0..take {
+                    let i = ids[start + j];
+                    let seq = sessions[i].pending_input().expect("pending input");
                     let out = forward1_retry(model, seq)?;
-                    sessions[ids[start + j]].advance(&out);
+                    sessions[i].advance(&out);
                 }
             }
         }
@@ -576,7 +607,7 @@ fn fan_out_delta<B, S>(
     streams: &mut RoleStreams,
     role: ModelRole,
     ids: &[usize],
-    mut inputs: Vec<(StreamId, SeqDelta)>,
+    inputs: &mut Vec<(StreamId, SeqDelta)>,
     sessions: &mut [S],
 ) -> Result<(usize, usize)>
 where
@@ -590,7 +621,12 @@ where
     while start < ids.len() {
         let take = cap.min(ids.len() - start);
         let chunk: Vec<(StreamId, SeqDelta)> = inputs.drain(..take).collect();
-        match c.forward_delta_batch(chunk.clone()) {
+        // The wave moves into the model un-cloned. If it fails, each
+        // (stream, delta) pair is re-derived from its session: sessions
+        // have not advanced and streams were not touched mid-wave, so
+        // `stream_for` returns the same id and `pending_delta` rebuilds
+        // the identical delta the wave carried.
+        match c.forward_delta_batch(chunk) {
             Ok(outs) => {
                 ensure!(
                     outs.len() == take,
@@ -603,8 +639,10 @@ where
                 }
             }
             Err(_) => {
-                for (j, (sid, delta)) in chunk.into_iter().enumerate() {
+                for j in 0..take {
                     let i = ids[start + j];
+                    let sid = streams.stream_for(i).expect("stream lost mid-wave");
+                    let delta = sessions[i].pending_delta().expect("pending delta");
                     let out = match c.forward_delta(sid, &delta) {
                         Ok(out) => out,
                         Err(_) => recover_delta(model, streams, role, i, sessions)?,

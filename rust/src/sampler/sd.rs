@@ -127,8 +127,18 @@ pub struct SdSession {
     gamma: usize,
     ctx: Context,
     cand: Vec<Event>,
+    /// drafted interval mixtures, slot `l` for candidate `l`. Slots are
+    /// REUSED across rounds (never cleared — DESIGN.md §14): only
+    /// `0..gamma` are meaningful in a round, and each is overwritten by
+    /// [`SdSession::advance_draft`] before verification reads it.
     d_mix: Vec<Mixture>,
+    /// drafted type pmfs, same slot lifecycle as `d_mix`
     d_type: Vec<TypeDist>,
+    /// scratch mixture the target's verify rows decode into (reused
+    /// capacity, one row at a time)
+    t_mix: Mixture,
+    /// scratch type pmf, same lifecycle as `t_mix`
+    t_td: TypeDist,
     out: Vec<Event>,
     stats: SampleStats,
     phase: SdPhase,
@@ -168,6 +178,8 @@ impl SdSession {
             cand: Vec::new(),
             d_mix: Vec::new(),
             d_type: Vec::new(),
+            t_mix: Mixture::default(),
+            t_td: TypeDist::default(),
             out: Vec::new(),
             stats: SampleStats::default(),
             phase: SdPhase::Done,
@@ -214,6 +226,23 @@ impl SdSession {
             SdPhase::Done => None,
             SdPhase::Drafting(_) => Some(self.ctx.seq_delta(&self.cand, self.d_cursor)),
             SdPhase::Verifying => Some(self.ctx.seq_delta(&self.cand, self.t_cursor)),
+        }
+    }
+
+    /// [`SdSession::pending_delta`] into a caller-owned scratch delta,
+    /// reusing its capacity. Returns `false` (leaving `d` untouched) once
+    /// done.
+    pub fn pending_delta_into(&self, d: &mut SeqDelta) -> bool {
+        match self.phase {
+            SdPhase::Done => false,
+            SdPhase::Drafting(_) => {
+                self.ctx.seq_delta_into(&self.cand, self.d_cursor, d);
+                true
+            }
+            SdPhase::Verifying => {
+                self.ctx.seq_delta_into(&self.cand, self.t_cursor, d);
+                true
+            }
         }
     }
 
@@ -270,8 +299,8 @@ impl SdSession {
         }
         self.stats.rounds += 1;
         self.cand.clear();
-        self.d_mix.clear();
-        self.d_type.clear();
+        // d_mix/d_type are NOT cleared: their slots (and the Vec capacity
+        // inside each) are reused round over round — see the field docs.
         self.phase = SdPhase::Drafting(0);
     }
 
@@ -283,14 +312,16 @@ impl SdSession {
         // candidate sampled BELOW is not committed until the next step.
         self.d_cursor = self.ctx.len() + l;
         let row = self.ctx.next_row(l);
-        let mix = fwd.mixture(row);
-        let td = fwd.type_dist(row, self.cfg.sample.num_types);
-        let tau = mix.sample(&mut self.rng);
-        let k = td.sample(&mut self.rng) as u32;
+        if self.d_mix.len() <= l {
+            self.d_mix.push(Mixture::default());
+            self.d_type.push(TypeDist::default());
+        }
+        fwd.mixture_into(row, &mut self.d_mix[l]);
+        fwd.type_dist_into(row, self.cfg.sample.num_types, &mut self.d_type[l]);
+        let tau = self.d_mix[l].sample(&mut self.rng);
+        let k = self.d_type[l].sample(&mut self.rng) as u32;
         let prev = self.cand.last().map(|e| e.t).unwrap_or(self.ctx.last_time());
         self.cand.push(Event::new(prev + tau, k));
-        self.d_mix.push(mix);
-        self.d_type.push(td);
         if l + 1 < self.gamma {
             self.phase = SdPhase::Drafting(l + 1);
         } else {
@@ -320,24 +351,24 @@ impl SdSession {
         let mut stopped = false;
         for l in 0..gamma {
             let row = base_row + l;
-            let t_mix = fwd_t.mixture(row);
-            let t_td = fwd_t.type_dist(row, num_types);
+            fwd_t.mixture_into(row, &mut self.t_mix);
+            fwd_t.type_dist_into(row, num_types, &mut self.t_td);
             let prev = if l == 0 { round_start_time } else { self.cand[l - 1].t };
             let tau_hat = self.cand[l].t - prev;
 
             // interval test: u < g_T(τ̂)/g_D(τ̂)
-            let log_ratio = t_mix.logpdf(tau_hat) - self.d_mix[l].logpdf(tau_hat);
+            let log_ratio = self.t_mix.logpdf(tau_hat) - self.d_mix[l].logpdf(tau_hat);
             let tau_ok = self.vrng.uniform().ln() < log_ratio;
             if !tau_ok {
                 // τ̂ rejected → τ′ ~ g′ (Theorem 1), k ~ f_T fresh.
                 let (tau2, tries) = sample_adjusted_interval(
-                    &t_mix,
+                    &self.t_mix,
                     &self.d_mix[l],
                     &mut self.vrng,
                     self.cfg.max_adjust_tries,
                 );
                 self.stats.adjust_proposals += tries;
-                let k2 = t_td.sample(&mut self.vrng) as u32;
+                let k2 = self.t_td.sample(&mut self.vrng) as u32;
                 let e = Event::new(prev + tau2, k2);
                 self.stats.resampled += 1;
                 rejected_at = Some(l);
@@ -348,10 +379,10 @@ impl SdSession {
             }
             // type test: u < f_T(k̂)/f_D(k̂)
             let k_hat = self.cand[l].k as usize;
-            let type_ok = self.vrng.uniform() * self.d_type[l].pmf(k_hat) < t_td.pmf(k_hat);
+            let type_ok = self.vrng.uniform() * self.d_type[l].pmf(k_hat) < self.t_td.pmf(k_hat);
             if !type_ok {
                 // k̂ rejected → keep τ̂, k′ ~ f′ = norm(max(0, f_T − f_D)).
-                let adj = TypeDist::adjusted(&t_td, &self.d_type[l]);
+                let adj = TypeDist::adjusted(&self.t_td, &self.d_type[l]);
                 let k2 = adj.sample(&mut self.vrng) as u32;
                 let e = Event::new(self.cand[l].t, k2);
                 self.stats.resampled += 1;
@@ -374,10 +405,10 @@ impl SdSession {
         // truncated the context window).
         if !stopped && rejected_at.is_none() {
             let row = base_row + gamma;
-            let mix = fwd_t.mixture(row);
-            let td = fwd_t.type_dist(row, num_types);
-            let tau = mix.sample(&mut self.rng);
-            let k = td.sample(&mut self.rng) as u32;
+            fwd_t.mixture_into(row, &mut self.t_mix);
+            fwd_t.type_dist_into(row, num_types, &mut self.t_td);
+            let tau = self.t_mix.sample(&mut self.rng);
+            let k = self.t_td.sample(&mut self.rng) as u32;
             let e =
                 Event::new(self.cand.last().map(|e| e.t).unwrap_or(round_start_time) + tau, k);
             self.stats.bonus += 1;
@@ -444,6 +475,7 @@ pub fn sample_sd<FT: Forward + ?Sized, FD: Forward + ?Sized>(
     let mut session = SdSession::new(cfg.clone(), cap, rng.clone());
     let mut t_stream = StreamGuard::open(target).unwrap_or(None);
     let mut d_stream = StreamGuard::open(draft).unwrap_or(None);
+    let mut dbuf = SeqDelta::default();
     while !session.is_done() {
         let role = session.role();
         let mut tries = 0;
@@ -454,7 +486,9 @@ pub fn sample_sd<FT: Forward + ?Sized, FD: Forward + ?Sized>(
             };
             match stream {
                 Some(g) => {
-                    match g.forward_delta(&session.pending_delta().expect("pending delta")) {
+                    let filled = session.pending_delta_into(&mut dbuf);
+                    assert!(filled, "pending delta");
+                    match g.forward_delta(&dbuf) {
                         Ok(f) => break f,
                         Err(_) => {
                             // Stream lost/errored: rebase the role on a

@@ -128,10 +128,25 @@ impl Rng {
     }
 
     /// Sample an index from log-weights (log-sum-exp normalized).
+    ///
+    /// Streams the shifted weights `(l − max)·exp` twice instead of
+    /// collecting them: the same float values in the same order as the
+    /// old collect-then-[`Rng::categorical`] form (one `uniform()` draw at
+    /// the same stream position, identical subtract-walk), with zero
+    /// allocations — [`crate::model::mixture::Mixture::sample`] calls this
+    /// once per proposed event.
     pub fn categorical_logits(&mut self, logits: &[f64]) -> usize {
         let m = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-        let w: Vec<f64> = logits.iter().map(|l| (l - m).exp()).collect();
-        self.categorical(&w)
+        let total: f64 = logits.iter().map(|l| (l - m).exp()).sum();
+        debug_assert!(total > 0.0, "categorical_logits: empty/degenerate logits");
+        let mut u = self.uniform() * total;
+        for (i, l) in logits.iter().enumerate() {
+            u -= (l - m).exp();
+            if u < 0.0 {
+                return i;
+            }
+        }
+        logits.len() - 1
     }
 }
 

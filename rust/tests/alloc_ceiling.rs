@@ -1,0 +1,55 @@
+//! Allocations-per-event ceiling (ISSUE 7, DESIGN.md §14): once the
+//! buffer pool, forward-shell pool and session scratch are warm, the AR
+//! streaming loop must run in (amortized) constant allocations per event.
+//!
+//! The counting allocator is process-global, so this test lives in its
+//! own integration-test binary: nothing else races the counter.
+
+use tpp_sd::bench::alloc_count::{allocations, CountingAllocator};
+use tpp_sd::runtime::{pool, Backend, NativeBackend};
+use tpp_sd::sampler::{sample_ar, SampleCfg};
+use tpp_sd::util::rng::Rng;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+#[test]
+fn warmed_ar_loop_stays_under_allocation_ceiling() {
+    // The loop's steady state allocates nothing; the ceiling of 2 per
+    // event absorbs one-off growth (event Vec doubling, pool misses on
+    // rewind-boundary bucket changes) without letting a per-event
+    // allocation regression (one `vec![]` in the hot loop ≈ +1.0) hide.
+    const CEILING: f64 = 2.0;
+
+    let b = NativeBackend::new();
+    let k = b.num_types("hawkes").unwrap();
+    let model = b.load_model("hawkes", "thp", "target").unwrap();
+    let cfg = SampleCfg { num_types: k, t_end: 100.0, max_events: 16 * 1024 };
+
+    // warm run: grows the event Vec, context window, mixture scratch, and
+    // seeds the buffer/shell free lists
+    let (warm, _) = sample_ar(&model, &cfg, &mut Rng::new(7)).unwrap();
+    assert!(warm.len() > 100, "warm run produced only {} events", warm.len());
+
+    let pool_before = pool::stats();
+    let allocs_before = allocations();
+    let (ev, _) = sample_ar(&model, &cfg, &mut Rng::new(11)).unwrap();
+    let allocs = allocations() - allocs_before;
+    let pd = pool::stats().since(&pool_before);
+
+    assert!(ev.len() > 100, "measured run produced only {} events", ev.len());
+    let per_event = allocs as f64 / ev.len() as f64;
+    assert!(
+        per_event <= CEILING,
+        "warmed AR loop allocated {allocs} times for {} events ({per_event:.2}/event, \
+         ceiling {CEILING})",
+        ev.len()
+    );
+    // and the economy must come from recycling, not from luck
+    assert!(
+        pd.buffers_reused > 0,
+        "no buffers were recycled during the measured run (reused={}, allocated={})",
+        pd.buffers_reused,
+        pd.buffers_allocated
+    );
+}

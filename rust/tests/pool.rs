@@ -1,0 +1,157 @@
+//! Worker-pool and buffer-recycling invariants (ISSUE 7, DESIGN.md §14):
+//! the persistent pool is a pure scheduling change, and a recycled buffer
+//! can never leak one forward's contents into another.
+//!
+//! * **Wave equivalence** (property test): for random job counts, worker
+//!   counts and row widths, a pooled wave and a scoped-thread wave write
+//!   bit-identically to a serial loop.
+//! * **Panic propagation**: a panicking job fails the wave's caller
+//!   instead of deadlocking or silently succeeding it.
+//! * **Recycled-buffer isolation**: concurrent delta waves on disjoint
+//!   incremental streams stay bit-identical to cold forwards even while a
+//!   chaos-wrapped model (`pad=1`) keeps scrambling the padding of full
+//!   forwards and returning those poisoned buffers to the shared pool.
+
+use std::sync::Arc;
+
+use tpp_sd::runtime::{
+    pool, Backend, CachedForward as _, ChaosModel, ChaosStats, FaultPlan, ModelBackend,
+    NativeBackend, SeqDelta, SeqInput, StreamId,
+};
+use tpp_sd::util::rng::Rng;
+
+#[test]
+fn pooled_and_scoped_waves_match_serial_across_random_shapes() {
+    let fill = |jobs: &mut [(usize, Vec<f32>)], workers: usize| {
+        pool::run_wave(jobs, workers, |(base, out)| {
+            for (r, v) in out.iter_mut().enumerate() {
+                *v = ((*base * 131 + r * 7) as f32 * 0.01).sin();
+            }
+        });
+    };
+    let mut rng = Rng::new(42);
+    for case in 0..30 {
+        let n = 1 + rng.below(40);
+        let workers = 1 + rng.below(8);
+        let rows = 1 + rng.below(64);
+        let mk = || (0..n).map(|i| (i, vec![0f32; rows])).collect::<Vec<_>>();
+
+        let mut serial = mk();
+        fill(&mut serial, 1);
+        pool::set_scoped_baseline(false);
+        let mut pooled = mk();
+        fill(&mut pooled, workers);
+        pool::set_scoped_baseline(true);
+        let mut scoped = mk();
+        fill(&mut scoped, workers);
+        pool::set_scoped_baseline(false);
+
+        let shape = format!("n={n} workers={workers} rows={rows}");
+        assert_eq!(serial, pooled, "case {case}: pooled wave diverged ({shape})");
+        assert_eq!(serial, scoped, "case {case}: scoped wave diverged ({shape})");
+    }
+}
+
+#[test]
+#[should_panic]
+fn wave_propagates_job_panics() {
+    let mut jobs: Vec<(usize, Vec<f32>)> = (0..8).map(|i| (i, vec![0f32; 4])).collect();
+    pool::run_wave(&mut jobs, 4, |(base, _out)| {
+        assert!(*base != 5, "boom");
+    });
+}
+
+/// Random strictly-increasing event stream for one session.
+fn stream_events(seed: u64, n: usize, k: usize) -> (Vec<f64>, Vec<u32>) {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    let mut times = Vec::with_capacity(n);
+    let mut types = Vec::with_capacity(n);
+    for _ in 0..n {
+        t += 0.05 + rng.uniform() * 0.1;
+        times.push(t);
+        types.push(rng.below(k) as u32);
+    }
+    (times, types)
+}
+
+#[test]
+fn concurrent_delta_streams_never_alias_recycled_buffers_under_pad_chaos() {
+    const STREAMS: usize = 4;
+    const PER_ROUND: usize = 80;
+    const ROUNDS: usize = 3;
+
+    let b = NativeBackend::new();
+    let k = b.num_types("hawkes").unwrap();
+    // streams + cold references run on the plain native model; the chaos
+    // wrapper (same weights) scrambles every full forward's padding and
+    // drops the poisoned buffers back into the shared pool
+    let native = b.load_model("hawkes", "thp", "target").unwrap();
+    let chaos = ChaosModel::new(
+        b.load_model("hawkes", "thp", "target").unwrap(),
+        FaultPlan::parse("seed=1,pad=1").unwrap(),
+        7,
+        Arc::new(ChaosStats::default()),
+    );
+
+    let seqs: Vec<(Vec<f64>, Vec<u32>)> =
+        (0..STREAMS).map(|s| stream_events(100 + s as u64, PER_ROUND * ROUNDS, k)).collect();
+    let c = native.cached().expect("native backend exposes incremental streams");
+    let sids: Vec<StreamId> = (0..STREAMS).map(|_| c.open_stream().unwrap()).collect();
+
+    // short, padding-heavy input: most of its bucket rows get scrambled
+    let small = SeqInput {
+        t0: 0.0,
+        times: (0..10).map(|i| (i + 1) as f64 * 0.3).collect(),
+        types: vec![0; 10],
+    };
+
+    for round in 0..ROUNDS {
+        let base = round * PER_ROUND;
+        // poison the free list right before the wave checks buffers out
+        drop(chaos.forward(std::slice::from_ref(&small)).unwrap());
+
+        let wave: Vec<(StreamId, SeqDelta)> = (0..STREAMS)
+            .map(|s| {
+                let (times, types) = &seqs[s];
+                let d = SeqDelta {
+                    base_len: base,
+                    t0: 0.0,
+                    times: times[base..base + PER_ROUND].to_vec(),
+                    types: types[base..base + PER_ROUND].to_vec(),
+                };
+                (sids[s], d)
+            })
+            .collect();
+        // 4 × 81 = 324 output rows ≥ MIN_PARALLEL_ROWS: the parallel path
+        let outs = c.forward_delta_batch(wave).unwrap();
+        drop(chaos.forward(std::slice::from_ref(&small)).unwrap());
+
+        for (s, slot) in outs.iter().enumerate() {
+            let (times, types) = &seqs[s];
+            let upto = base + PER_ROUND;
+            let cold = native
+                .forward(&[SeqInput {
+                    t0: 0.0,
+                    times: times[..upto].to_vec(),
+                    types: types[..upto].to_vec(),
+                }])
+                .unwrap();
+            for row in base..=upto {
+                assert_eq!(
+                    slot.mixture(row),
+                    cold.mixture(0, row),
+                    "stream {s} round {round} row {row}: mixture"
+                );
+                assert_eq!(
+                    slot.type_dist(row, k).probs,
+                    cold.type_dist(0, row, k).probs,
+                    "stream {s} round {round} row {row}: type dist"
+                );
+            }
+        }
+    }
+    for sid in sids {
+        c.close_stream(sid);
+    }
+}
