@@ -42,6 +42,12 @@ fn main() -> Result<()> {
         router.route(ds, &encoder, "draft")?;
     }
 
+    // Dedicated metrics connection: each `delta:true` call reports only
+    // the window since the previous one (DESIGN.md §15), so this baseline
+    // call makes the first per-method window start at zero.
+    let mut metrics_cli = Client::connect(addr)?;
+    metrics_cli.call(&Request::Metrics { delta: true })?;
+
     for method in ["ar", "sd"] {
         let t0 = Instant::now();
         let mut handles = Vec::new();
@@ -95,6 +101,10 @@ fn main() -> Result<()> {
             mean(&lats),
             events,
         );
+        // This phase's telemetry window: per-stage latency percentiles +
+        // acceptance for the requests above only.
+        let window = metrics_cli.call(&Request::Metrics { delta: true })?;
+        println!("{method:<3}  window metrics: {}", window.trim());
     }
 
     // batcher occupancy + reliability + pool/buffer report, one line per
@@ -112,5 +122,7 @@ fn main() -> Result<()> {
         let stats = cli.call(&Request::Stats)?;
         println!("chaos spec '{chaos}' active; server stats: {}", stats.trim());
     }
+    // Whole-run summary from the same registry the wire snapshots read.
+    println!("{}", tpp_sd::telemetry::report());
     Ok(())
 }

@@ -103,5 +103,8 @@ fn main() -> Result<()> {
         );
         println!("{}", tpp_sd::bench::executor_report(&handle.name, &handle.stats));
     }
+    // One process-wide telemetry summary over everything this bench ran
+    // (per-stage latency percentiles + acceptance, DESIGN.md §15).
+    println!("{}", tpp_sd::telemetry::report());
     Ok(())
 }

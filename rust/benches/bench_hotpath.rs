@@ -11,13 +11,17 @@
 //! * **allocations per event**: warmed `sample_ar`/`sample_sd` runs (N=1
 //!   blocking, N=8 fleet) under the counting global allocator, recycling
 //!   + pool on vs the baseline (scoped threads, recycling off).
+//! * **telemetry overhead** (ISSUE 8, DESIGN.md §15): SD-fleet events/s
+//!   with the telemetry registry recording vs disabled, after an equality
+//!   probe proving the toggle moves no sampled event (RNG neutrality).
 //!
 //! The process exits non-zero (the CI `bench-smoke` gate) if pooled
 //! throughput falls below `--min-ratio` × scoped (default 0.97, noise
-//! guard on an "at least as fast" target) at any measured shape, or if
+//! guard on an "at least as fast" target) at any measured shape, if
 //! the N=1 allocations-per-event drop falls below `--min-alloc-drop`
-//! (default 10). The numbers are merged into `BENCH_sampling.json` under
-//! the `bench_hotpath` key.
+//! (default 10), or if telemetry-on throughput falls below `--min-ratio`
+//! × telemetry-off. The numbers are merged into `BENCH_sampling.json`
+//! under the `bench_hotpath` key.
 //!
 //!     cargo bench --bench bench_hotpath [-- --dataset hawkes
 //!         --encoder thp --iters 200 --t-end 150 --gamma 10
@@ -32,6 +36,7 @@ use tpp_sd::runtime::{pool, Backend, ModelBackend, SeqInput};
 use tpp_sd::sampler::{
     sample_ar, sample_ar_fleet, sample_sd, sample_sd_fleet, Gamma, SampleCfg, SdCfg,
 };
+use tpp_sd::telemetry;
 use tpp_sd::util::cli::Args;
 use tpp_sd::util::json::Json;
 use tpp_sd::util::rng::Rng;
@@ -218,6 +223,43 @@ fn main() -> Result<()> {
         drops.push((name.clone(), ratio));
     }
 
+    // --- part 3: telemetry overhead A/B (ISSUE 8, DESIGN.md §15) ---
+    // Sanity first: toggling telemetry must not move a single event —
+    // recording consumes no sampler RNG, so the streams are identical.
+    let tel_probe = |on: bool| -> Result<usize> {
+        telemetry::set_enabled(on);
+        let (runs, _) = sample_sd_fleet(&target, &draft, &sd_cfg, &seeds)?;
+        Ok(runs.iter().map(|(ev, _)| ev.len()).sum())
+    };
+    let ev_on = tel_probe(true)?;
+    let ev_off = tel_probe(false)?;
+    ensure!(
+        ev_on == ev_off && ev_on > 0,
+        "telemetry toggled the sampled events ({ev_on} on vs {ev_off} off) — \
+         recording must be RNG-neutral"
+    );
+    // Interleaved best-of-reps SD-fleet events/s, telemetry off vs on.
+    let (mut tel_off, mut tel_on) = (0f64, 0f64);
+    for _ in 0..reps {
+        for (on, best) in [(false, &mut tel_off), (true, &mut tel_on)] {
+            telemetry::set_enabled(on);
+            let t0 = Instant::now();
+            let (runs, _) = sample_sd_fleet(&target, &draft, &sd_cfg, &seeds)?;
+            let events: usize = runs.iter().map(|(ev, _)| ev.len()).sum();
+            let eps = events as f64 / t0.elapsed().as_secs_f64().max(1e-12);
+            *best = best.max(eps);
+        }
+    }
+    telemetry::set_enabled(true);
+    let tel_ratio = tel_on / tel_off.max(1e-12);
+    println!(
+        "sd_fleet(8) events/s: telemetry on {tel_on:10.0} | off {tel_off:10.0} | \
+         {tel_ratio:.2}x"
+    );
+    snapshot.push(("events_per_s_telemetry_on".into(), Json::Num(tel_on)));
+    snapshot.push(("events_per_s_telemetry_off".into(), Json::Num(tel_off)));
+    snapshot.push(("telemetry_ratio".into(), Json::Num(tel_ratio)));
+
     merge_snapshot(&out_path, "bench_hotpath", Json::Obj(snapshot.into_iter().collect()))?;
     println!("snapshot merged into {out_path}");
 
@@ -233,5 +275,11 @@ fn main() -> Result<()> {
             "allocations-per-event drop for {name} is {drop:.1}x, below the {bar:.1}x gate"
         );
     }
+    ensure!(
+        tel_ratio >= min_ratio,
+        "telemetry-on throughput is {tel_ratio:.2}x telemetry-off, below the \
+         {min_ratio:.2}x gate — recording must stay effectively free"
+    );
+    println!("{}", telemetry::report());
     Ok(())
 }

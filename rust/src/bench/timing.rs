@@ -35,16 +35,23 @@ impl BenchResult {
     pub fn p95_s(&self) -> f64 {
         percentile(&self.samples, 0.95)
     }
+    /// 99th-percentile wall time in seconds. Like every percentile here,
+    /// NaN samples are ignored per [`percentile`]'s contract (an all-NaN
+    /// sample set yields NaN rather than a panic).
+    pub fn p99_s(&self) -> f64 {
+        percentile(&self.samples, 0.99)
+    }
 
     /// One formatted report line.
     pub fn report(&self) -> String {
         format!(
-            "{:<40} {:>10.3}ms ±{:>8.3}ms  p50 {:>8.3}ms  p95 {:>8.3}ms  (n={})",
+            "{:<40} {:>10.3}ms ±{:>8.3}ms  p50 {:>8.3}ms  p95 {:>8.3}ms  p99 {:>8.3}ms  (n={})",
             self.name,
             self.mean_s() * 1e3,
             self.std_s() * 1e3,
             self.p50_s() * 1e3,
             self.p95_s() * 1e3,
+            self.p99_s() * 1e3,
             self.iters
         )
     }

@@ -381,7 +381,11 @@ impl ExecutorHandle {
                         self.policy.deadline
                     ));
                 }
-                std::thread::sleep(backoff);
+                {
+                    let _backoff_span =
+                        crate::telemetry::Span::start(crate::telemetry::Stage::RetryBackoff);
+                    std::thread::sleep(backoff);
+                }
                 backoff = (backoff * 2).min(MAX_BACKOFF);
                 attempt += 1;
                 self.stats.retries.fetch_add(1, Ordering::Relaxed);
@@ -416,6 +420,7 @@ fn run_loop(
         let mut pending = vec![first];
         let mut disconnected = false;
         let deadline = Instant::now() + batch_window;
+        let wait_span = crate::telemetry::Span::start(crate::telemetry::Stage::BatchWait);
         while pending.len() < cap {
             let wait = deadline.saturating_duration_since(Instant::now());
             let next = if wait.is_zero() {
@@ -442,6 +447,7 @@ fn run_loop(
                 }
             }
         }
+        drop(wait_span);
         // Partition the drained wave (control ops were already served on
         // receipt). Full forwards batch into ONE model call; deltas batch
         // into ONE forward_delta_batch call (the backend decides whether

@@ -4,7 +4,14 @@
 //!   {"op":"sample","dataset":"hawkes","encoder":"attnhp","method":"sd",
 //!    "gamma":10,"t_end":30.0,"seed":1,"draft_size":"draft","cached":true}
 //!   {"op":"sample_fleet", ...same fields..., "n_seq":8}
-//!   {"op":"ping"} | {"op":"stats"}
+//!   {"op":"ping"} | {"op":"stats"} | {"op":"metrics","delta":false}
+//!
+//! `metrics` returns the full telemetry snapshot (per-stage latency
+//! p50/p95/p99 + per-role acceptance, DESIGN.md §15) plus every
+//! executor's batcher counters; `"delta":true` reports only the activity
+//! since the connection's previous `metrics` call — the windowed readout
+//! `serve.rs` prints between phases. `stats` includes the same executor
+//! counters next to the session/router tallies.
 //!
 //! `"cached"` (default `true`) lets the sampler use the backend's
 //! incremental-forward streams (DESIGN.md §12) when it has them;
@@ -45,6 +52,13 @@ pub enum Request {
     Ping,
     /// server-side counters
     Stats,
+    /// full telemetry snapshot (per-stage latency + acceptance, DESIGN.md
+    /// §15); `delta` reports only the activity since this connection's
+    /// previous `metrics` call
+    Metrics {
+        /// window the snapshot against the connection's previous call
+        delta: bool,
+    },
     /// sample one sequence
     Sample(SampleRequest),
     /// sample many sequences in lockstep on the fleet engine
@@ -122,6 +136,9 @@ impl Request {
         match j.str_at("op") {
             Some("ping") => Ok(Request::Ping),
             Some("stats") => Ok(Request::Stats),
+            Some("metrics") => {
+                Ok(Request::Metrics { delta: j.bool_at("delta").unwrap_or(false) })
+            }
             Some("sample") => Ok(Request::Sample(parse_sample_fields(&j))),
             Some("sample_fleet") => Ok(Request::SampleFleet(FleetRequest {
                 base: parse_sample_fields(&j),
@@ -136,6 +153,11 @@ impl Request {
         match self {
             Request::Ping => r#"{"op":"ping"}"#.to_string(),
             Request::Stats => r#"{"op":"stats"}"#.to_string(),
+            Request::Metrics { delta } => obj(vec![
+                ("op", Json::Str("metrics".to_string())),
+                ("delta", Json::Bool(*delta)),
+            ])
+            .to_string(),
             Request::Sample(s) => obj(sample_fields("sample", s)).to_string(),
             Request::SampleFleet(f) => {
                 let mut fields = sample_fields("sample_fleet", &f.base);
@@ -158,6 +180,34 @@ pub fn stats_json(s: &SampleStats) -> Json {
         ("resampled", Json::Num(s.resampled as f64)),
         ("bonus", Json::Num(s.bonus as f64)),
         ("wall_ms", Json::Num(s.wall.as_secs_f64() * 1e3)),
+    ])
+}
+
+/// Serialize one executor's [`super::batcher::BatcherStats`] — every
+/// counter, not a summary. Shared by the `stats` and `metrics` responses
+/// so the two surfaces can never drift apart (the old `stats` handler
+/// silently dropped all of these).
+pub fn batcher_stats_json(s: &super::batcher::BatcherStats) -> Json {
+    use std::sync::atomic::Ordering;
+    let load = |a: &std::sync::atomic::AtomicUsize| Json::Num(a.load(Ordering::Relaxed) as f64);
+    obj(vec![
+        ("requests", load(&s.requests)),
+        ("batches", load(&s.batches)),
+        ("batched_requests", load(&s.batched_requests)),
+        ("max_batch_seen", load(&s.max_batch_seen)),
+        ("occupancy", Json::Num(s.occupancy())),
+        ("delta_requests", load(&s.delta_requests)),
+        ("delta_waves", load(&s.delta_waves)),
+        ("batched_deltas", load(&s.batched_deltas)),
+        ("max_delta_wave", load(&s.max_delta_wave)),
+        ("delta_occupancy", Json::Num(s.delta_occupancy())),
+        ("retries", load(&s.retries)),
+        ("timeouts", load(&s.timeouts)),
+        ("gave_up", load(&s.gave_up)),
+        ("pool_dispatches", load(&s.pool_dispatches)),
+        ("pool_steals", load(&s.pool_steals)),
+        ("buffers_reused", load(&s.buffers_reused)),
+        ("buffers_allocated", load(&s.buffers_allocated)),
     ])
 }
 
@@ -292,6 +342,54 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn metrics_request_roundtrip() {
+        for delta in [false, true] {
+            let r = Request::Metrics { delta };
+            assert_eq!(Request::parse(&r.to_line()).unwrap(), r);
+        }
+        // `delta` defaults to false when absent
+        assert_eq!(
+            Request::parse(r#"{"op":"metrics"}"#).unwrap(),
+            Request::Metrics { delta: false }
+        );
+    }
+
+    #[test]
+    fn batcher_stats_json_carries_every_counter() {
+        use std::sync::atomic::Ordering;
+        let s = super::super::batcher::BatcherStats::default();
+        s.requests.store(5, Ordering::Relaxed);
+        s.batches.store(2, Ordering::Relaxed);
+        s.batched_requests.store(4, Ordering::Relaxed);
+        s.retries.store(3, Ordering::Relaxed);
+        let j = batcher_stats_json(&s);
+        for key in [
+            "requests",
+            "batches",
+            "batched_requests",
+            "max_batch_seen",
+            "occupancy",
+            "delta_requests",
+            "delta_waves",
+            "batched_deltas",
+            "max_delta_wave",
+            "delta_occupancy",
+            "retries",
+            "timeouts",
+            "gave_up",
+            "pool_dispatches",
+            "pool_steals",
+            "buffers_reused",
+            "buffers_allocated",
+        ] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        assert_eq!(j.f64_at("requests"), Some(5.0));
+        assert_eq!(j.f64_at("retries"), Some(3.0));
+        assert_eq!(j.f64_at("occupancy"), Some(2.0));
     }
 
     #[test]

@@ -85,4 +85,16 @@ impl Router {
         self.pairs.lock().unwrap().insert(key, pair.clone());
         Ok(pair)
     }
+
+    /// Every routed `(dataset, encoder, draft_size)` key with its executor
+    /// pair — the `stats`/`metrics` responses walk this to report each
+    /// executor's batcher counters.
+    pub fn pairs(&self) -> Vec<((String, String, String), ModelPair)> {
+        self.pairs
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
 }

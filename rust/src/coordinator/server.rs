@@ -22,13 +22,15 @@ use std::time::Duration;
 use anyhow::Result;
 
 use super::protocol::{
-    err_response, fleet_ok_response, ok_response, FleetRequest, Request, SampleRequest,
+    batcher_stats_json, err_response, fleet_ok_response, ok_response, FleetRequest, Request,
+    SampleRequest,
 };
 use super::router::{ModelPair, Router};
 use crate::runtime::{Backend, BatchForward, ChaosBackend, FaultPlan, Uncached};
 use crate::sampler::{
     fleet_seeds, sample_ar_fleet, sample_sd_fleet, FleetRuns, FleetStats, Gamma, SampleCfg, SdCfg,
 };
+use crate::telemetry;
 use crate::util::json::{obj, Json};
 
 /// Cap on distinct chaos specs a server builds routers for — each one
@@ -130,6 +132,10 @@ fn handle_conn(stream: TcpStream, ctx: &Ctx) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
     let mut line = String::new();
+    // Per-connection delta baseline: `{"op":"metrics","delta":true}`
+    // reports only the activity since this connection's previous metrics
+    // call (every metrics call moves the baseline, delta or not).
+    let mut metrics_base = telemetry::snapshot();
     loop {
         line.clear();
         if reader.read_line(&mut line)? == 0 {
@@ -141,6 +147,12 @@ fn handle_conn(stream: TcpStream, ctx: &Ctx) -> Result<()> {
         let resp = match Request::parse(&line) {
             Ok(Request::Ping) => r#"{"ok":true,"pong":true}"#.to_string(),
             Ok(Request::Stats) => stats_response(ctx),
+            Ok(Request::Metrics { delta }) => {
+                let now = telemetry::snapshot();
+                let view = if delta { now.since(&metrics_base) } else { now.clone() };
+                metrics_base = now;
+                metrics_response(ctx, &view)
+            }
             Ok(Request::Sample(req)) => match ctx
                 .router_for(&req.chaos)
                 .and_then(|router| run_sample(&router, &req))
@@ -250,6 +262,23 @@ fn run_sample_fleet(router: &Router, req: &FleetRequest) -> Result<String> {
     Ok(fleet_ok_response(&runs, &fleet))
 }
 
+/// Every routed executor's batcher counters, two entries per model pair
+/// (target then draft). Shared by `stats` and `metrics` so the two
+/// surfaces report identical numbers.
+fn executors_json(router: &Router) -> Json {
+    let mut out = Vec::new();
+    for ((dataset, encoder, draft_size), pair) in router.pairs() {
+        for handle in [&pair.target, &pair.draft] {
+            out.push(obj(vec![
+                ("name", Json::Str(handle.name.clone())),
+                ("pair", Json::Str(format!("{dataset}/{encoder}/{draft_size}"))),
+                ("stats", batcher_stats_json(&handle.stats)),
+            ]));
+        }
+    }
+    Json::Arr(out)
+}
+
 fn stats_response(ctx: &Ctx) -> String {
     obj(vec![
         ("ok", Json::Bool(true)),
@@ -262,9 +291,28 @@ fn stats_response(ctx: &Ctx) -> String {
             "datasets",
             Json::Arr(ctx.router.datasets().into_iter().map(Json::Str).collect()),
         ),
+        // The batcher retry/timeout/pool/occupancy counters — the old
+        // handler silently dropped all of these.
+        ("executors", executors_json(&ctx.router)),
     ])
     .to_string()
 }
+
+/// `{"op":"metrics"}` response: the (possibly delta-windowed) telemetry
+/// snapshot (DESIGN.md §15) plus every executor's batcher counters.
+fn metrics_response(ctx: &Ctx, view: &telemetry::Snapshot) -> String {
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("telemetry", view.to_json()),
+        ("executors", executors_json(&ctx.router)),
+    ])
+    .to_string()
+}
+
+/// Default read timeout of a [`Client`]: generous enough for release-mode
+/// fleet requests, but finite — a wedged server fails the call instead of
+/// hanging the test suite forever.
+const CLIENT_READ_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// Minimal blocking client for tests and the serve example.
 pub struct Client {
@@ -273,19 +321,36 @@ pub struct Client {
 }
 
 impl Client {
-    /// Connect to a running server.
+    /// Connect to a running server. The connection starts with a
+    /// [`CLIENT_READ_TIMEOUT`] read timeout (tune it with
+    /// [`Client::set_read_timeout`]).
     pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
         let stream = TcpStream::connect(addr)?;
+        stream.set_read_timeout(Some(CLIENT_READ_TIMEOUT))?;
         Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
     }
 
+    /// Adjust the read timeout (`None` blocks forever). The reader and
+    /// writer share one socket, so this covers [`Client::call`]'s reply
+    /// wait.
+    pub fn set_read_timeout(&self, timeout: Option<Duration>) -> Result<()> {
+        self.writer.set_read_timeout(timeout)?;
+        Ok(())
+    }
+
     /// Send one request and read one response line.
+    ///
+    /// A zero-byte read means the server hung up before replying; that is
+    /// a structured error here, not `Ok("")` — the old behaviour made
+    /// downstream JSON parsing misreport a dead server as a protocol
+    /// error.
     pub fn call(&mut self, req: &Request) -> Result<String> {
         self.writer.write_all(req.to_line().as_bytes())?;
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
         let mut line = String::new();
-        self.reader.read_line(&mut line)?;
+        let n = self.reader.read_line(&mut line)?;
+        anyhow::ensure!(n > 0, "connection closed: server hung up before sending a response");
         Ok(line)
     }
 }

@@ -22,6 +22,7 @@ pub mod model;
 pub mod processes;
 pub mod runtime;
 pub mod sampler;
+pub mod telemetry;
 pub mod util;
 
 pub use events::Event;

@@ -40,6 +40,9 @@ commands:
                                     err, delay, delay-ms, loss, pad, die);
                                     recoverable plans print the same
                                     events as a fault-free run
+          [--metrics]               print the per-stage latency /
+                                    acceptance telemetry report to stderr
+                                    at the end of the run
   serve   [--listen 127.0.0.1:7077] [--max-batch 8] [--batch-window-ms 2]
 
 options (all commands):
@@ -204,6 +207,9 @@ fn sample(args: &Args) -> Result<()> {
             fleet.stream_recoveries,
             fleet.degraded_uncached,
         );
+    }
+    if args.has("metrics") {
+        eprintln!("{}", tpp_sd::telemetry::report());
     }
     Ok(())
 }

@@ -341,6 +341,9 @@ pub fn run_wave<T: Send, F: Fn(&mut T) + Sync>(jobs: &mut [T], workers: usize, f
         }
         return;
     }
+    // Only genuinely parallel waves are timed — the serial short-circuit
+    // above is the per-event hot path and stays span-free.
+    let _span = crate::telemetry::Span::start(crate::telemetry::Stage::PoolDispatch);
     if scoped_baseline() {
         run_scoped(jobs, workers, &f);
     } else {

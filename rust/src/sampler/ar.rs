@@ -17,6 +17,7 @@ use anyhow::Result;
 use crate::events::Event;
 use crate::model::mixture::{Mixture, TypeDist};
 use crate::runtime::{Forward, SeqDelta, SeqInput, SlotOut, StreamGuard};
+use crate::telemetry::{self, Stage};
 use crate::util::rng::Rng;
 
 use super::context::Context;
@@ -53,6 +54,10 @@ pub struct ArSession {
     stats: SampleStats,
     done: bool,
     started: Instant,
+    /// wall-clock of the last emitted event — feeds the `event_latency`
+    /// telemetry stage (DESIGN.md §15); never read by sampling logic and
+    /// never touches an RNG stream
+    last_emit: Instant,
     /// events of the current window a cached-forward stream has committed
     /// (DESIGN.md §12); 0 until the first forward and after every slide
     cursor: usize,
@@ -76,6 +81,7 @@ impl ArSession {
             stats: SampleStats::default(),
             done: false,
             started: Instant::now(),
+            last_emit: Instant::now(),
             cursor: 0,
             seen_epoch: 0,
             mix: Mixture::default(),
@@ -149,6 +155,16 @@ impl ArSession {
         let e = Event::new(t, k);
         self.out.push(e);
         self.ctx.push(e);
+        // Telemetry (DESIGN.md §15): wall-clock gap between emitted
+        // events. Only `Instant` + atomics — no sampler RNG is touched.
+        if telemetry::enabled() {
+            let now = Instant::now();
+            telemetry::record_ns(
+                Stage::EventLatency,
+                now.duration_since(self.last_emit).as_nanos() as u64,
+            );
+            self.last_emit = now;
+        }
         if self.ctx.epoch() != self.seen_epoch {
             // Window slid: stream checkpoints are stale — rebase from 0.
             self.seen_epoch = self.ctx.epoch();
@@ -215,6 +231,7 @@ pub fn sample_ar<F: Forward + ?Sized>(
     let mut dbuf = SeqDelta::default();
     while !session.is_done() {
         let mut tries = 0;
+        let fwd_span = telemetry::Span::start(Stage::VerifyForward);
         let fwd = loop {
             match &stream {
                 Some(g) => {
@@ -226,6 +243,7 @@ pub fn sample_ar<F: Forward + ?Sized>(
                             // Stream lost/errored: rebase on a fresh
                             // stream, degrading to uncached when the
                             // failures persist.
+                            let _recover = telemetry::Span::start(Stage::StreamRecovery);
                             tries += 1;
                             session.rebase_stream();
                             stream = if tries < STREAM_RECOVER_ATTEMPTS {
@@ -239,6 +257,7 @@ pub fn sample_ar<F: Forward + ?Sized>(
                 None => break target.forward1(session.pending_input().expect("pending input"))?,
             }
         };
+        drop(fwd_span);
         session.advance(&fwd);
     }
     *rng = session.rng().clone();

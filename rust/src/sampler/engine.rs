@@ -47,6 +47,7 @@ use crate::events::Event;
 use crate::runtime::{
     pool, BatchForward, CachedForward, Forward as _, SeqDelta, SeqInput, SlotOut, StreamId,
 };
+use crate::telemetry;
 use crate::util::rng::Rng;
 
 use super::ar::{ArSession, SampleCfg, STREAM_RECOVER_ATTEMPTS};
@@ -478,6 +479,14 @@ where
     }
 }
 
+/// The telemetry stage a role's forward waves are timed under.
+fn role_stage(role: ModelRole) -> telemetry::Stage {
+    match role {
+        ModelRole::Draft => telemetry::Stage::DraftForward,
+        ModelRole::Target => telemetry::Stage::VerifyForward,
+    }
+}
+
 /// One engine step's batch counters for a single model role.
 #[derive(Default)]
 struct RoleCounters {
@@ -506,7 +515,7 @@ where
 {
     let mut out = RoleCounters::default();
     if !full_ids.is_empty() {
-        let (b, n) = fan_out(model, full_ids, full_in, sessions)?;
+        let (b, n) = fan_out(model, role, full_ids, full_in, sessions)?;
         out.batches += b;
         out.seqs += n;
     }
@@ -532,6 +541,7 @@ where
 /// [`FleetSession::pending_input`] rebuilds the identical input).
 fn fan_out<B, S>(
     model: &B,
+    role: ModelRole,
     ids: &[usize],
     inputs: &mut Vec<SeqInput>,
     sessions: &mut [S],
@@ -546,7 +556,10 @@ where
     while start < ids.len() {
         let take = cap.min(ids.len() - start);
         let chunk: Vec<SeqInput> = inputs.drain(..take).collect();
-        match model.forward_batch(chunk) {
+        let t0 = telemetry::now_if_enabled();
+        let served = model.forward_batch(chunk);
+        telemetry::record_since(t0, &[role_stage(role)]);
+        match served {
             Ok(outs) => {
                 ensure!(
                     outs.len() == take,
@@ -626,7 +639,12 @@ where
         // have not advanced and streams were not touched mid-wave, so
         // `stream_for` returns the same id and `pending_delta` rebuilds
         // the identical delta the wave carried.
-        match c.forward_delta_batch(chunk) {
+        let t0 = telemetry::now_if_enabled();
+        let served = c.forward_delta_batch(chunk);
+        // One measured wave, recorded under both the issuing role's
+        // forward stage and the shared delta-wave stage.
+        telemetry::record_since(t0, &[role_stage(role), telemetry::Stage::DeltaWave]);
+        match served {
             Ok(outs) => {
                 ensure!(
                     outs.len() == take,
@@ -676,6 +694,7 @@ where
     B: BatchForward + ?Sized,
     S: FleetSession,
 {
+    let _span = telemetry::Span::start(telemetry::Stage::StreamRecovery);
     streams.close(i);
     for _ in 0..STREAM_RECOVER_ATTEMPTS {
         let Some(sid) = streams.stream_for(i) else {

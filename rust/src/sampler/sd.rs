@@ -43,6 +43,7 @@ use anyhow::Result;
 use crate::events::Event;
 use crate::model::mixture::{sample_adjusted_interval, Mixture, TypeDist};
 use crate::runtime::{Forward, SeqDelta, SeqInput, SlotOut, StreamGuard};
+use crate::telemetry::{self, Stage};
 use crate::util::rng::Rng;
 
 use super::ar::SampleCfg;
@@ -143,6 +144,10 @@ pub struct SdSession {
     stats: SampleStats,
     phase: SdPhase,
     started: Instant,
+    /// wall-clock of the last event-emitting advance — feeds the
+    /// `event_latency` telemetry stage (DESIGN.md §15); never read by
+    /// sampling logic and never touches an RNG stream
+    last_emit: Instant,
     /// events of (window ++ candidates) the DRAFT model's cached-forward
     /// stream has committed (DESIGN.md §12); rewound on rejection, zeroed
     /// on window slide
@@ -184,6 +189,7 @@ impl SdSession {
             stats: SampleStats::default(),
             phase: SdPhase::Done,
             started: Instant::now(),
+            last_emit: Instant::now(),
             d_cursor: 0,
             t_cursor: 0,
             seen_epoch: 0,
@@ -335,6 +341,8 @@ impl SdSession {
     /// all-accept, then adapt γ and begin the next round.
     fn advance_verify(&mut self, fwd_t: &SlotOut) {
         self.stats.target_forwards += 1;
+        let accepted_before = self.stats.accepted;
+        let out_before = self.out.len();
         let num_types = self.cfg.sample.num_types;
         let t_end = self.cfg.sample.t_end;
         let gamma = self.gamma;
@@ -434,6 +442,20 @@ impl SdSession {
             self.t_cursor = 0;
         }
 
+        // Telemetry (DESIGN.md §15): acceptance accounting per role plus
+        // the wall-clock gap between event-emitting verify passes. Only
+        // `Instant` + atomics — no sampler RNG is touched.
+        let acc_round = self.stats.accepted - accepted_before;
+        telemetry::record_round(gamma, acc_round, rejected_at.is_none() && acc_round == gamma);
+        if self.out.len() > out_before && telemetry::enabled() {
+            let now = Instant::now();
+            telemetry::record_ns(
+                Stage::EventLatency,
+                now.duration_since(self.last_emit).as_nanos() as u64,
+            );
+            self.last_emit = now;
+        }
+
         if stopped {
             self.finish();
             return;
@@ -479,6 +501,10 @@ pub fn sample_sd<FT: Forward + ?Sized, FD: Forward + ?Sized>(
     while !session.is_done() {
         let role = session.role();
         let mut tries = 0;
+        let fwd_span = telemetry::Span::start(match role {
+            ModelRole::Draft => Stage::DraftForward,
+            ModelRole::Target => Stage::VerifyForward,
+        });
         let fwd = loop {
             let stream = match role {
                 ModelRole::Draft => &d_stream,
@@ -494,6 +520,7 @@ pub fn sample_sd<FT: Forward + ?Sized, FD: Forward + ?Sized>(
                             // Stream lost/errored: rebase the role on a
                             // fresh stream, degrading it to uncached when
                             // the failures persist.
+                            let _recover = telemetry::Span::start(Stage::StreamRecovery);
                             tries += 1;
                             session.rebase_stream(role);
                             let fresh = if tries < super::ar::STREAM_RECOVER_ATTEMPTS {
@@ -520,6 +547,7 @@ pub fn sample_sd<FT: Forward + ?Sized, FD: Forward + ?Sized>(
                 }
             }
         };
+        drop(fwd_span);
         session.advance(&fwd);
     }
     *rng = session.rng().clone();

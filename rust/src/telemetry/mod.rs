@@ -1,0 +1,582 @@
+//! Lock-free telemetry: per-stage latency histograms + acceptance tracking.
+//!
+//! The paper's speedup claim reduces to two quantities — the acceptance
+//! rate α and the draft length γ (Leviathan et al.; Chen et al. report
+//! per-stage timing to validate the cost model). This module records both,
+//! plus wall-clock latency for every hot-path stage, with three hard
+//! constraints (DESIGN.md §15):
+//!
+//! * **lock-free**: recording is a handful of `Relaxed` atomic adds into
+//!   fixed-size arrays — no locks, no allocation, safe from any thread.
+//! * **RNG-neutral**: recording touches only [`std::time::Instant`] and
+//!   atomics, never a sampler [`crate::util::rng::Rng`] — golden fixtures
+//!   stay byte-identical with telemetry on or off (pinned by
+//!   `tests/telemetry.rs`).
+//! * **cheap enough to leave on**: `bench_hotpath` gates telemetry-on
+//!   sampling throughput at ≥ 0.97× telemetry-off.
+//!
+//! Latencies land in 64 log₂-scale nanosecond buckets (bucket *i* ≥ 1
+//! covers `[2^i, 2^(i+1))` ns), so quantile readout is exact to the bucket
+//! upper edge — within 2× of the true value across 19 orders of magnitude,
+//! from a constant 512-byte array per stage and zero stored samples.
+//!
+//! Use [`Span`] to time a scope, [`record_round`] for SD accept/reject
+//! accounting, [`snapshot`] / [`Snapshot::since`] for windowed deltas, and
+//! [`report`] for the shared human-readable summary used by the CLI,
+//! `serve.rs` and the benches.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+/// Number of log₂ latency buckets per stage histogram. Bucket 0 holds
+/// `[0, 2)` ns; bucket `i ≥ 1` holds `[2^i, 2^(i+1))` ns; bucket 63 is
+/// open-ended.
+pub const NUM_BUCKETS: usize = 64;
+
+/// A hot-path stage with its own latency histogram.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// One draft-model forward acquisition (blocking driver or fleet wave).
+    DraftForward,
+    /// One target-model (verify) forward acquisition.
+    VerifyForward,
+    /// One incremental `forward_delta_batch` wave (also recorded under the
+    /// issuing role's forward stage).
+    DeltaWave,
+    /// Time an executor's batch loop spent waiting out the batch window.
+    BatchWait,
+    /// One parallel wave dispatched onto the persistent worker pool.
+    PoolDispatch,
+    /// One retry backoff sleep inside the executor retry ladder.
+    RetryBackoff,
+    /// One stream-recovery ladder pass (close → reopen → rebase).
+    StreamRecovery,
+    /// Wall-clock gap between consecutive emitted events, per session.
+    EventLatency,
+}
+
+impl Stage {
+    /// Every stage, in wire/report order.
+    pub const ALL: [Stage; 8] = [
+        Stage::DraftForward,
+        Stage::VerifyForward,
+        Stage::DeltaWave,
+        Stage::BatchWait,
+        Stage::PoolDispatch,
+        Stage::RetryBackoff,
+        Stage::StreamRecovery,
+        Stage::EventLatency,
+    ];
+
+    /// Stable snake_case name used in JSON snapshots and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::DraftForward => "draft_forward",
+            Stage::VerifyForward => "verify_forward",
+            Stage::DeltaWave => "delta_wave",
+            Stage::BatchWait => "batch_wait",
+            Stage::PoolDispatch => "pool_dispatch",
+            Stage::RetryBackoff => "retry_backoff",
+            Stage::StreamRecovery => "stream_recovery",
+            Stage::EventLatency => "event_latency",
+        }
+    }
+}
+
+/// Number of distinct [`Stage`]s.
+pub const NUM_STAGES: usize = Stage::ALL.len();
+
+/// Index of the log₂ bucket covering `ns` nanoseconds.
+///
+/// `bucket_index(0) == bucket_index(1) == 0`; for `ns ≥ 2` the index is
+/// `⌊log₂ ns⌋`, saturating at [`NUM_BUCKETS`]` - 1`.
+pub fn bucket_index(ns: u64) -> usize {
+    if ns < 2 {
+        0
+    } else {
+        (ns.ilog2() as usize).min(NUM_BUCKETS - 1)
+    }
+}
+
+/// Inclusive upper edge (ns) of bucket `i` — the value quantile readout
+/// reports for samples landing in that bucket.
+fn bucket_hi(i: usize) -> u64 {
+    if i + 1 >= NUM_BUCKETS {
+        u64::MAX
+    } else {
+        (1u64 << (i + 1)) - 1
+    }
+}
+
+/// A lock-free fixed-bucket log₂ latency histogram.
+///
+/// Recording is three `Relaxed` atomic adds; readout ([`Histo::snap`]) is
+/// a racy-but-monotone scan, which is exactly what windowed deltas need.
+#[derive(Debug)]
+pub struct Histo {
+    buckets: [AtomicU64; NUM_BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Histo {
+    /// A fresh all-zero histogram.
+    pub fn new() -> Self {
+        Histo {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one latency sample of `ns` nanoseconds.
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// A point-in-time copy of the counters.
+    pub fn snap(&self) -> HistoSnap {
+        HistoSnap {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            count: self.count.load(Ordering::Relaxed),
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for Histo {
+    fn default() -> Self {
+        Histo::new()
+    }
+}
+
+/// A plain-value snapshot of one [`Histo`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HistoSnap {
+    /// Per-bucket sample counts (see [`bucket_index`]).
+    pub buckets: [u64; NUM_BUCKETS],
+    /// Total samples recorded.
+    pub count: u64,
+    /// Sum of all recorded latencies, in nanoseconds.
+    pub sum_ns: u64,
+}
+
+impl Default for HistoSnap {
+    fn default() -> Self {
+        HistoSnap { buckets: [0; NUM_BUCKETS], count: 0, sum_ns: 0 }
+    }
+}
+
+impl HistoSnap {
+    /// The samples recorded between `earlier` and `self`, saturating to
+    /// zero per field (snapshots race with recorders, so a field read
+    /// slightly out of order must not wrap).
+    pub fn since(&self, earlier: &HistoSnap) -> HistoSnap {
+        HistoSnap {
+            buckets: std::array::from_fn(|i| {
+                self.buckets[i].saturating_sub(earlier.buckets[i])
+            }),
+            count: self.count.saturating_sub(earlier.count),
+            sum_ns: self.sum_ns.saturating_sub(earlier.sum_ns),
+        }
+    }
+
+    /// Mean latency in nanoseconds; NaN when no samples were recorded.
+    pub fn mean_ns(&self) -> f64 {
+        self.sum_ns as f64 / self.count as f64
+    }
+
+    /// The `q`-quantile (clamped to `[0, 1]`) as the inclusive upper edge
+    /// of the bucket holding the rank-`⌈q·count⌉` sample — exact to the
+    /// bucket bound, i.e. within 2× of the true latency. `None` when the
+    /// histogram is empty.
+    pub fn quantile_ns(&self, q: f64) -> Option<u64> {
+        if self.count == 0 {
+            return None;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= rank {
+                return Some(bucket_hi(i));
+            }
+        }
+        Some(bucket_hi(NUM_BUCKETS - 1))
+    }
+}
+
+/// The two model roles tracked by the acceptance tracker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// Draft-level accounting: α = accepted / proposed draft events.
+    Draft,
+    /// Target-level accounting: fraction of verify rounds accepting the
+    /// whole draft (the bonus-event rate).
+    Target,
+}
+
+impl Role {
+    /// Both roles, in wire/report order.
+    pub const ALL: [Role; 2] = [Role::Draft, Role::Target];
+
+    /// Stable snake_case name used in JSON snapshots and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Role::Draft => "draft",
+            Role::Target => "target",
+        }
+    }
+}
+
+/// Streaming acceptance counters for one role (atomics; see [`RoleSnap`]).
+#[derive(Debug, Default)]
+struct RoleAccept {
+    rounds: AtomicU64,
+    proposed: AtomicU64,
+    accepted: AtomicU64,
+    gamma_sum: AtomicU64,
+}
+
+/// A plain-value snapshot of one role's acceptance counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RoleSnap {
+    /// Verify rounds observed.
+    pub rounds: u64,
+    /// Units proposed: draft events for [`Role::Draft`], one whole-draft
+    /// trial per round for [`Role::Target`].
+    pub proposed: u64,
+    /// Units accepted out of `proposed`.
+    pub accepted: u64,
+    /// Sum of draft lengths γ across rounds (for mean-γ readout).
+    pub gamma_sum: u64,
+}
+
+impl RoleSnap {
+    /// The activity between `earlier` and `self`, saturating per field.
+    pub fn since(&self, earlier: &RoleSnap) -> RoleSnap {
+        RoleSnap {
+            rounds: self.rounds.saturating_sub(earlier.rounds),
+            proposed: self.proposed.saturating_sub(earlier.proposed),
+            accepted: self.accepted.saturating_sub(earlier.accepted),
+            gamma_sum: self.gamma_sum.saturating_sub(earlier.gamma_sum),
+        }
+    }
+
+    /// Acceptance rate α = accepted / proposed; NaN when nothing proposed.
+    pub fn alpha(&self) -> f64 {
+        self.accepted as f64 / self.proposed as f64
+    }
+
+    /// Mean accepted units per verify round; NaN when no rounds ran.
+    pub fn accepted_per_round(&self) -> f64 {
+        self.accepted as f64 / self.rounds as f64
+    }
+
+    /// Mean draft length γ per round; NaN when no rounds ran.
+    pub fn mean_gamma(&self) -> f64 {
+        self.gamma_sum as f64 / self.rounds as f64
+    }
+}
+
+/// A full metrics registry: one [`Histo`] per [`Stage`] plus one
+/// acceptance tracker per [`Role`].
+///
+/// The process-wide instance behind [`snapshot`]/[`record_duration`] is
+/// reached through the module-level free functions, which honor
+/// [`set_enabled`]; `Registry` methods themselves always record, so tests
+/// can exercise isolated instances deterministically.
+#[derive(Debug)]
+pub struct Registry {
+    stages: [Histo; NUM_STAGES],
+    roles: [RoleAccept; 2],
+}
+
+impl Registry {
+    /// A fresh all-zero registry.
+    pub fn new() -> Self {
+        Registry {
+            stages: std::array::from_fn(|_| Histo::new()),
+            roles: std::array::from_fn(|_| RoleAccept::default()),
+        }
+    }
+
+    /// Record one latency sample for `stage`.
+    pub fn record_ns(&self, stage: Stage, ns: u64) {
+        self.stages[stage as usize].record_ns(ns);
+    }
+
+    /// Record one SD verify round: `gamma` events drafted, `accepted` of
+    /// them kept, `all_accepted` when the whole draft survived (the bonus
+    /// event fired).
+    pub fn record_round(&self, gamma: usize, accepted: usize, all_accepted: bool) {
+        let d = &self.roles[Role::Draft as usize];
+        d.rounds.fetch_add(1, Ordering::Relaxed);
+        d.proposed.fetch_add(gamma as u64, Ordering::Relaxed);
+        d.accepted.fetch_add(accepted as u64, Ordering::Relaxed);
+        d.gamma_sum.fetch_add(gamma as u64, Ordering::Relaxed);
+        let t = &self.roles[Role::Target as usize];
+        t.rounds.fetch_add(1, Ordering::Relaxed);
+        t.proposed.fetch_add(1, Ordering::Relaxed);
+        t.accepted.fetch_add(all_accepted as u64, Ordering::Relaxed);
+        t.gamma_sum.fetch_add(gamma as u64, Ordering::Relaxed);
+    }
+
+    /// A point-in-time copy of every counter in the registry.
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            stages: std::array::from_fn(|i| self.stages[i].snap()),
+            roles: std::array::from_fn(|i| RoleSnap {
+                rounds: self.roles[i].rounds.load(Ordering::Relaxed),
+                proposed: self.roles[i].proposed.load(Ordering::Relaxed),
+                accepted: self.roles[i].accepted.load(Ordering::Relaxed),
+                gamma_sum: self.roles[i].gamma_sum.load(Ordering::Relaxed),
+            }),
+        }
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+/// A plain-value snapshot of a whole [`Registry`], indexable by
+/// [`Stage`]/[`Role`] and subtractable for windowed readout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    /// One histogram snapshot per [`Stage::ALL`] entry, same order.
+    pub stages: [HistoSnap; NUM_STAGES],
+    /// One acceptance snapshot per [`Role::ALL`] entry, same order.
+    pub roles: [RoleSnap; 2],
+}
+
+impl Default for Snapshot {
+    fn default() -> Self {
+        Snapshot { stages: [HistoSnap::default(); NUM_STAGES], roles: [RoleSnap::default(); 2] }
+    }
+}
+
+impl Snapshot {
+    /// The histogram snapshot for `stage`.
+    pub fn stage(&self, stage: Stage) -> &HistoSnap {
+        &self.stages[stage as usize]
+    }
+
+    /// The acceptance snapshot for `role`.
+    pub fn role(&self, role: Role) -> &RoleSnap {
+        &self.roles[role as usize]
+    }
+
+    /// The activity between `earlier` and `self` (per-field saturating
+    /// subtraction) — the delta-window primitive behind the server's
+    /// `{"op":"metrics","delta":true}`.
+    pub fn since(&self, earlier: &Snapshot) -> Snapshot {
+        Snapshot {
+            stages: std::array::from_fn(|i| self.stages[i].since(&earlier.stages[i])),
+            roles: std::array::from_fn(|i| self.roles[i].since(&earlier.roles[i])),
+        }
+    }
+
+    /// Serialize to the wire JSON shape used by `Request::Metrics`:
+    /// `{"stages":{name:{count,total_ms,mean_us,p50_us,p95_us,p99_us}},
+    ///   "roles":{name:{rounds,proposed,accepted,alpha,accepted_per_round,
+    ///   mean_gamma}}}`. Undefined ratios (empty stage/role) serialize as
+    /// `null`, never NaN.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{obj, Json};
+        let us = |ns: u64| ns as f64 / 1e3;
+        let finite = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
+        let stages = Stage::ALL
+            .iter()
+            .map(|&s| {
+                let h = self.stage(s);
+                let q = |p: f64| match h.quantile_ns(p) {
+                    Some(ns) => Json::Num(us(ns)),
+                    None => Json::Null,
+                };
+                (
+                    s.name(),
+                    obj(vec![
+                        ("count", Json::Num(h.count as f64)),
+                        ("total_ms", Json::Num(h.sum_ns as f64 / 1e6)),
+                        ("mean_us", finite(h.mean_ns() / 1e3)),
+                        ("p50_us", q(0.50)),
+                        ("p95_us", q(0.95)),
+                        ("p99_us", q(0.99)),
+                    ]),
+                )
+            })
+            .collect::<Vec<_>>();
+        let roles = Role::ALL
+            .iter()
+            .map(|&r| {
+                let a = self.role(r);
+                (
+                    r.name(),
+                    obj(vec![
+                        ("rounds", Json::Num(a.rounds as f64)),
+                        ("proposed", Json::Num(a.proposed as f64)),
+                        ("accepted", Json::Num(a.accepted as f64)),
+                        ("alpha", finite(a.alpha())),
+                        ("accepted_per_round", finite(a.accepted_per_round())),
+                        ("mean_gamma", finite(a.mean_gamma())),
+                    ]),
+                )
+            })
+            .collect::<Vec<_>>();
+        obj(vec![
+            ("stages", Json::Obj(stages.into_iter().map(|(k, v)| (k.to_string(), v)).collect())),
+            ("roles", Json::Obj(roles.into_iter().map(|(k, v)| (k.to_string(), v)).collect())),
+        ])
+    }
+
+    /// Human-readable multi-line summary: one line per active stage
+    /// (count, mean, p50/p95/p99 in µs) and per active role (rounds, α,
+    /// accepted/round, mean γ). Shared by `tppsd sample --metrics`,
+    /// `serve.rs` and the benches.
+    pub fn report(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let us = |ns: u64| ns as f64 / 1e3;
+        for &stage in &Stage::ALL {
+            let h = self.stage(stage);
+            if h.count == 0 {
+                continue;
+            }
+            let q = |p: f64| us(h.quantile_ns(p).unwrap_or(0));
+            writeln!(
+                s,
+                "  {:<16} n={:<9} mean {:>10.1}us  p50 {:>10.1}us  p95 {:>10.1}us  \
+                 p99 {:>10.1}us",
+                stage.name(),
+                h.count,
+                h.mean_ns() / 1e3,
+                q(0.50),
+                q(0.95),
+                q(0.99),
+            )
+            .expect("write to String");
+        }
+        for &role in &Role::ALL {
+            let a = self.role(role);
+            if a.rounds == 0 {
+                continue;
+            }
+            writeln!(
+                s,
+                "  accept[{:<6}]   rounds={:<7} alpha {:.3}  accepted/round {:.2}  \
+                 mean_gamma {:.2}",
+                role.name(),
+                a.rounds,
+                a.alpha(),
+                a.accepted_per_round(),
+                a.mean_gamma(),
+            )
+            .expect("write to String");
+        }
+        if s.is_empty() {
+            return "telemetry: no samples recorded".to_string();
+        }
+        s.pop();
+        format!("telemetry (per-stage latency + acceptance):\n{s}")
+    }
+}
+
+/// Process-wide enable flag. Recording through the free functions and
+/// [`Span`] is a no-op when disabled; snapshots still read.
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Enable or disable global recording (used by the `bench_hotpath` A/B
+/// gate). Snapshots and reports keep working either way.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether global recording is currently enabled.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// The process-wide registry.
+fn global() -> &'static Registry {
+    static R: OnceLock<Registry> = OnceLock::new();
+    R.get_or_init(Registry::new)
+}
+
+/// Record `ns` nanoseconds for `stage` in the global registry,
+/// unconditionally (callers that pre-check [`enabled`] use this).
+pub fn record_ns(stage: Stage, ns: u64) {
+    global().record_ns(stage, ns);
+}
+
+/// Record a duration for `stage` in the global registry, if enabled.
+pub fn record_duration(stage: Stage, d: Duration) {
+    if enabled() {
+        global().record_ns(stage, d.as_nanos() as u64);
+    }
+}
+
+/// Record one SD verify round in the global registry, if enabled
+/// (see [`Registry::record_round`] for the per-role accounting).
+pub fn record_round(gamma: usize, accepted: usize, all_accepted: bool) {
+    if enabled() {
+        global().record_round(gamma, accepted, all_accepted);
+    }
+}
+
+/// `Some(Instant::now())` when recording is enabled, else `None` — the
+/// zero-cost-when-off half of a manual span.
+pub fn now_if_enabled() -> Option<Instant> {
+    enabled().then(Instant::now)
+}
+
+/// Close a manual span opened with [`now_if_enabled`]: record the elapsed
+/// time once under each stage in `stages`. No-op when `start` is `None`.
+pub fn record_since(start: Option<Instant>, stages: &[Stage]) {
+    if let Some(t0) = start {
+        let ns = t0.elapsed().as_nanos() as u64;
+        for &s in stages {
+            record_ns(s, ns);
+        }
+    }
+}
+
+/// A point-in-time copy of the global registry.
+pub fn snapshot() -> Snapshot {
+    global().snapshot()
+}
+
+/// The shared human-readable report over the global registry
+/// (see [`Snapshot::report`]).
+pub fn report() -> String {
+    snapshot().report()
+}
+
+/// RAII timing guard: records the elapsed wall-clock time for one stage
+/// into the global registry on drop. Constructing one while telemetry is
+/// disabled yields a no-op guard (no `Instant` is ever taken).
+#[derive(Debug)]
+pub struct Span {
+    stage: Stage,
+    start: Option<Instant>,
+}
+
+impl Span {
+    /// Start timing `stage` (no-op guard when telemetry is disabled).
+    pub fn start(stage: Stage) -> Self {
+        Span { stage, start: now_if_enabled() }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(t0) = self.start {
+            record_ns(self.stage, t0.elapsed().as_nanos() as u64);
+        }
+    }
+}

@@ -65,12 +65,18 @@ pub fn std_dev(xs: &[f64]) -> f64 {
 }
 
 /// p-th percentile (linear interpolation) of an unsorted slice.
+///
+/// NaN contract: NaN samples are ignored (a latency sample that failed to
+/// compute must not poison the whole distribution); an empty or all-NaN
+/// input returns NaN. Never panics — the previous
+/// `partial_cmp().unwrap()` sort aborted the entire bench run on a single
+/// NaN sample.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if v.is_empty() {
         return f64::NAN;
     }
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = p.clamp(0.0, 1.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -133,5 +139,31 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 1.0), 4.0);
         assert!((percentile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_ignores_nan_samples() {
+        // regression: the old partial_cmp().unwrap() sort panicked here
+        let xs = [f64::NAN, 1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.5) - 2.5).abs() < 1e-12);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+        // NaN position must not matter
+        let xs = [1.0, 2.0, f64::NAN, 3.0, 4.0, f64::NAN];
+        assert!((percentile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_empty_or_all_nan_is_nan() {
+        assert!(percentile(&[], 0.5).is_nan());
+        assert!(percentile(&[f64::NAN, f64::NAN], 0.5).is_nan());
+    }
+
+    #[test]
+    fn percentile_handles_signed_zero_and_infinities() {
+        // total_cmp orders -0.0 < +0.0 and infinities at the ends
+        let xs = [0.0, -0.0, f64::INFINITY, f64::NEG_INFINITY];
+        assert_eq!(percentile(&xs, 0.0), f64::NEG_INFINITY);
+        assert_eq!(percentile(&xs, 1.0), f64::INFINITY);
     }
 }

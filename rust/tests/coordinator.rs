@@ -372,6 +372,168 @@ fn stream_ops_bypass_the_batch_window() {
     );
 }
 
+/// `stats` must carry the FULL `BatcherStats` snapshot for every live
+/// executor (ISSUE 8 satellite): the response previously summarized a
+/// couple of counters; this pins every field so a dropped counter is a
+/// wire-protocol regression, not a silent omission.
+#[test]
+fn stats_reports_executor_counters() {
+    let server = Server::bind(backend(), "127.0.0.1:0", 8, Duration::from_millis(1)).unwrap();
+    let addr = server.addr;
+    std::thread::spawn(move || server.serve());
+    let mut cli = Client::connect(addr).unwrap();
+
+    // one sample so the router holds exactly one pair (2 executors)
+    cli.call(&Request::Sample(SampleRequest {
+        dataset: "hawkes".into(),
+        encoder: "thp".into(),
+        method: "sd".into(),
+        gamma: 4,
+        t_end: 2.0,
+        seed: 3,
+        draft_size: "draft".into(),
+        cached: true,
+        chaos: String::new(),
+    }))
+    .unwrap();
+
+    let resp = cli.call(&Request::Stats).unwrap();
+    let j = tpp_sd::util::json::Json::parse(&resp).unwrap();
+    assert_eq!(j.bool_at("ok"), Some(true));
+    let execs = match j.path("executors") {
+        Some(tpp_sd::util::json::Json::Arr(v)) => v,
+        other => panic!("executors must be an array, got {other:?}"),
+    };
+    assert_eq!(execs.len(), 2, "one routed pair = target + draft executors");
+    const COUNTERS: [&str; 17] = [
+        "requests",
+        "batches",
+        "batched_requests",
+        "max_batch_seen",
+        "delta_requests",
+        "delta_waves",
+        "batched_deltas",
+        "max_delta_wave",
+        "retries",
+        "timeouts",
+        "gave_up",
+        "pool_dispatches",
+        "pool_steals",
+        "buffers_reused",
+        "buffers_allocated",
+        "occupancy",
+        "delta_occupancy",
+    ];
+    let mut saw_traffic = false;
+    for e in execs {
+        assert!(e.str_at("name").is_some(), "executor entry without a name");
+        assert!(e.str_at("pair").is_some(), "executor entry without its pair id");
+        for key in COUNTERS {
+            let v = e.f64_at(&format!("stats.{key}"));
+            assert!(v.is_some(), "stats.{key} missing from {e:?}");
+        }
+        saw_traffic |= e.f64_at("stats.requests").unwrap() > 0.0;
+    }
+    assert!(saw_traffic, "the sample above must have moved some counter");
+}
+
+/// `{"op":"metrics"}` round-trip: absolute snapshots carry per-stage
+/// percentiles and per-role acceptance; `delta:true` calls report only the
+/// window since that connection's previous metrics call. The registry is
+/// process-wide and shared with the other tests in this binary, so window
+/// assertions are lower bounds, never idle-zero checks.
+#[test]
+fn metrics_roundtrip_and_delta_windows() {
+    let server = Server::bind(backend(), "127.0.0.1:0", 8, Duration::from_millis(1)).unwrap();
+    let addr = server.addr;
+    std::thread::spawn(move || server.serve());
+    let mut cli = Client::connect(addr).unwrap();
+
+    let sample = |cli: &mut Client, seed: u64| {
+        cli.call(&Request::Sample(SampleRequest {
+            dataset: "hawkes".into(),
+            encoder: "thp".into(),
+            method: "sd".into(),
+            gamma: 5,
+            t_end: 2.0,
+            seed,
+            draft_size: "draft".into(),
+            cached: true,
+            chaos: String::new(),
+        }))
+        .unwrap()
+    };
+    sample(&mut cli, 1);
+
+    let resp = cli.call(&Request::Metrics { delta: false }).unwrap();
+    let j = tpp_sd::util::json::Json::parse(&resp).unwrap();
+    assert_eq!(j.bool_at("ok"), Some(true));
+    assert!(
+        j.f64_at("telemetry.stages.verify_forward.count").expect("verify_forward") >= 1.0,
+        "{resp}"
+    );
+    let p50 = j.f64_at("telemetry.stages.verify_forward.p50_us").expect("p50");
+    let p99 = j.f64_at("telemetry.stages.verify_forward.p99_us").expect("p99");
+    assert!(p50 > 0.0 && p99 >= p50, "p50 {p50} p99 {p99}");
+    assert!(j.f64_at("telemetry.roles.draft.rounds").expect("rounds") >= 1.0);
+    assert!(j.f64_at("telemetry.roles.draft.alpha").is_some(), "alpha absent: {resp}");
+    assert!(j.path("executors").is_some(), "metrics carries executor stats too");
+
+    // windowing: set the baseline, sample again, read the delta — the
+    // window must contain (at least) that one request's forwards.
+    cli.call(&Request::Metrics { delta: true }).unwrap();
+    sample(&mut cli, 2);
+    let resp = cli.call(&Request::Metrics { delta: true }).unwrap();
+    let w = tpp_sd::util::json::Json::parse(&resp).unwrap();
+    assert!(
+        w.f64_at("telemetry.stages.verify_forward.count").expect("windowed count") >= 1.0,
+        "delta window missed the sample: {resp}"
+    );
+    assert!(w.f64_at("telemetry.roles.draft.rounds").expect("windowed rounds") >= 1.0);
+}
+
+/// Regression (ISSUE 8 satellite): a server hangup used to surface as a
+/// bogus "unexpected response" parse of an empty line. A zero-byte read
+/// now reports a structured connection-closed error, and a configurable
+/// read timeout keeps a silent peer from hanging the client forever.
+#[test]
+fn client_surfaces_server_hangup() {
+    use std::io::BufRead;
+
+    // hangup: the acceptor reads the full request line, then drops the
+    // socket without replying — the client sees clean EOF, not EPIPE.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let acceptor = std::thread::spawn(move || {
+        let (sock, _) = listener.accept().unwrap();
+        let mut line = String::new();
+        std::io::BufReader::new(sock).read_line(&mut line).unwrap();
+    });
+    let mut cli = Client::connect(addr).unwrap();
+    let err = cli.call(&Request::Ping).unwrap_err();
+    acceptor.join().unwrap();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("connection closed"), "want a hangup error, got: {msg}");
+
+    // timeout: the acceptor holds the connection open without replying;
+    // a short read timeout turns the would-be hang into an error.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let (hold_tx, hold_rx) = std::sync::mpsc::channel::<()>();
+    let acceptor = std::thread::spawn(move || {
+        let (sock, _) = listener.accept().unwrap();
+        let _ = hold_rx.recv(); // keep the socket open until the test ends
+        drop(sock);
+    });
+    let mut cli = Client::connect(addr).unwrap();
+    cli.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+    let t0 = std::time::Instant::now();
+    assert!(cli.call(&Request::Ping).is_err(), "silent peer must not hang the client");
+    assert!(t0.elapsed() < Duration::from_secs(30), "timeout did not fire");
+    drop(hold_tx);
+    acceptor.join().unwrap();
+}
+
 /// `delta_occupancy()` tracks delta waves separately from full-forward
 /// batches: under a mixed load the full-batch counters and the delta
 /// counters must each stay consistent on their own, never conflated.

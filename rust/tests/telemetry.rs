@@ -1,0 +1,185 @@
+//! Telemetry registry suite (ISSUE 8, DESIGN.md §15): bucket-boundary
+//! exactness, concurrent-recording linearizability, snapshot-delta
+//! arithmetic, JSON shape, and the RNG-neutrality property — toggling
+//! telemetry must not move a single sampled event.
+//!
+//! The RNG-neutrality test toggles the PROCESS-WIDE enable flag, which is
+//! why it lives in its own integration-test binary: cargo runs each
+//! `tests/*.rs` file as a separate process, so the toggle cannot suppress
+//! recording that other suites assert on.
+
+use std::sync::Arc;
+
+use tpp_sd::runtime::Backend;
+use tpp_sd::sampler::{sample_ar, sample_sd, Gamma, SampleCfg, SdCfg};
+use tpp_sd::telemetry::{self, bucket_index, Histo, NUM_BUCKETS, Registry, Role, Snapshot, Stage};
+use tpp_sd::util::rng::Rng;
+
+#[test]
+fn bucket_boundaries_are_exact_powers_of_two() {
+    assert_eq!(bucket_index(0), 0);
+    assert_eq!(bucket_index(1), 0);
+    for i in 1..(NUM_BUCKETS - 1) {
+        let lo = 1u64 << i;
+        // the lower edge of bucket i lands in bucket i…
+        assert_eq!(bucket_index(lo), i, "2^{i}");
+        // …one below it lands in bucket i-1…
+        assert_eq!(bucket_index(lo - 1), i - 1, "2^{i} - 1");
+        // …and the inclusive upper edge still lands in bucket i.
+        assert_eq!(bucket_index(2 * lo - 1), i, "2^{} - 1", i + 1);
+    }
+    // the last bucket is open-ended
+    assert_eq!(bucket_index(u64::MAX), NUM_BUCKETS - 1);
+}
+
+#[test]
+fn quantiles_read_exact_bucket_bounds() {
+    let h = Histo::new();
+    assert_eq!(h.snap().quantile_ns(0.5), None, "empty histogram has no quantiles");
+    // 90 samples in bucket 3 ([8,16) ns), 10 in bucket 10 ([1024,2048) ns)
+    for _ in 0..90 {
+        h.record_ns(9);
+    }
+    for _ in 0..10 {
+        h.record_ns(1 << 10);
+    }
+    let s = h.snap();
+    assert_eq!(s.count, 100);
+    // ranks 1..=90 sit in bucket 3, whose inclusive upper edge is 15
+    assert_eq!(s.quantile_ns(0.50), Some(15));
+    assert_eq!(s.quantile_ns(0.90), Some(15));
+    // ranks 91..=100 sit in bucket 10, upper edge 2047
+    assert_eq!(s.quantile_ns(0.91), Some(2047));
+    assert_eq!(s.quantile_ns(0.99), Some(2047));
+    assert_eq!(s.quantile_ns(1.0), Some(2047));
+    // exact mean from the tracked sum, not the buckets
+    let want_mean = (90.0 * 9.0 + 10.0 * 1024.0) / 100.0;
+    assert!((s.mean_ns() - want_mean).abs() < 1e-9);
+}
+
+#[test]
+fn concurrent_recording_loses_nothing() {
+    const THREADS: u64 = 8;
+    const PER_THREAD: u64 = 10_000;
+    let h = Arc::new(Histo::new());
+    let mut join = Vec::new();
+    for t in 0..THREADS {
+        let h = h.clone();
+        join.push(std::thread::spawn(move || {
+            for i in 0..PER_THREAD {
+                h.record_ns(t * 1_000 + (i % 7));
+            }
+        }));
+    }
+    for j in join {
+        j.join().expect("recorder thread");
+    }
+    let s = h.snap();
+    // linearizability of the counters: nothing lost, nothing doubled
+    assert_eq!(s.count, THREADS * PER_THREAD);
+    assert_eq!(s.buckets.iter().sum::<u64>(), s.count, "bucket sum == count");
+    let want_sum: u64 = (0..THREADS)
+        .map(|t| (0..PER_THREAD).map(|i| t * 1_000 + (i % 7)).sum::<u64>())
+        .sum();
+    assert_eq!(s.sum_ns, want_sum);
+}
+
+#[test]
+fn snapshot_delta_arithmetic() {
+    let r = Registry::new();
+    r.record_ns(Stage::DraftForward, 100);
+    r.record_round(5, 3, false);
+    let a = r.snapshot();
+    r.record_ns(Stage::DraftForward, 200);
+    r.record_ns(Stage::EventLatency, 50);
+    r.record_round(5, 5, true);
+    let b = r.snapshot();
+
+    let d = b.since(&a);
+    assert_eq!(d.stage(Stage::DraftForward).count, 1);
+    assert_eq!(d.stage(Stage::DraftForward).sum_ns, 200);
+    assert_eq!(d.stage(Stage::EventLatency).count, 1);
+    assert_eq!(d.stage(Stage::VerifyForward).count, 0);
+    // roles: the second round proposed 5, accepted 5, all-accept
+    assert_eq!(d.role(Role::Draft).rounds, 1);
+    assert_eq!(d.role(Role::Draft).proposed, 5);
+    assert_eq!(d.role(Role::Draft).accepted, 5);
+    assert_eq!(d.role(Role::Target).proposed, 1);
+    assert_eq!(d.role(Role::Target).accepted, 1);
+    assert!((d.role(Role::Draft).alpha() - 1.0).abs() < 1e-12);
+
+    // subtracting in the wrong order saturates to zero instead of wrapping
+    let wrong = a.since(&b);
+    assert_eq!(wrong.stage(Stage::DraftForward).count, 0);
+    assert_eq!(wrong.role(Role::Draft).proposed, 0);
+    // a snapshot minus itself is the zero snapshot
+    assert_eq!(b.since(&b), Snapshot::default());
+}
+
+#[test]
+fn snapshot_json_shape() {
+    let r = Registry::new();
+    r.record_ns(Stage::EventLatency, 1_000);
+    r.record_ns(Stage::EventLatency, 3_000);
+    r.record_round(4, 2, false);
+    let j = r.snapshot().to_json();
+
+    assert_eq!(j.f64_at("stages.event_latency.count"), Some(2.0));
+    assert!(j.f64_at("stages.event_latency.p50_us").expect("p50") > 0.0);
+    let p50 = j.f64_at("stages.event_latency.p50_us").unwrap();
+    let p99 = j.f64_at("stages.event_latency.p99_us").unwrap();
+    assert!(p99 >= p50, "p99 {p99} < p50 {p50}");
+    // draft role: α = 2/4
+    assert_eq!(j.f64_at("roles.draft.proposed"), Some(4.0));
+    assert_eq!(j.f64_at("roles.draft.alpha"), Some(0.5));
+    assert_eq!(j.f64_at("roles.target.accepted"), Some(0.0));
+    // an idle stage serializes its undefined percentiles as null, not NaN
+    assert_eq!(
+        j.path("stages.draft_forward.p50_us"),
+        Some(&tpp_sd::util::json::Json::Null)
+    );
+    assert_eq!(j.f64_at("stages.draft_forward.count"), Some(0.0));
+    // the wire line must parse back (NaN would break this)
+    let line = j.to_string();
+    assert!(tpp_sd::util::json::Json::parse(&line).is_ok(), "unparseable: {line}");
+
+    // the shared report mentions active stages and roles
+    let report = r.snapshot().report();
+    assert!(report.contains("event_latency"), "{report}");
+    assert!(report.contains("accept[draft"), "{report}");
+    assert!(!report.contains("draft_forward"), "idle stages stay silent: {report}");
+}
+
+#[test]
+fn recording_consumes_no_sampler_rng() {
+    // Golden-fixture property: the event stream must be byte-identical
+    // with telemetry enabled and disabled — recording touches only
+    // `Instant` and atomics, never a sampler RNG. Safe to toggle the
+    // process-wide flag here: this test binary is its own process.
+    let backend: Arc<dyn Backend> = tpp_sd::runtime::discover_backend().expect("backend");
+    let target = backend.load_model("hawkes", "thp", "target").expect("target");
+    let draft = backend.load_model("hawkes", "thp", "draft").expect("draft");
+    let cfg = SampleCfg { num_types: 1, t_end: 8.0, max_events: 4096 };
+    let sd = SdCfg { sample: cfg.clone(), gamma: Gamma::Fixed(6), ..Default::default() };
+
+    let run = |on: bool| {
+        telemetry::set_enabled(on);
+        let mut rng = Rng::new(42);
+        let sd_out = sample_sd(&target, &draft, &sd, &mut rng).expect("sd");
+        let mut rng = Rng::new(42);
+        let ar_out = sample_ar(&target, &cfg, &mut rng).expect("ar");
+        (sd_out.0, ar_out.0)
+    };
+    let (sd_on, ar_on) = run(true);
+    let (sd_off, ar_off) = run(false);
+    telemetry::set_enabled(true);
+
+    assert!(!sd_on.is_empty() && !ar_on.is_empty(), "degenerate run");
+    assert_eq!(sd_on, sd_off, "telemetry moved an SD event");
+    assert_eq!(ar_on, ar_off, "telemetry moved an AR event");
+
+    // and the enabled run did record something
+    let snap = telemetry::snapshot();
+    assert!(snap.stage(Stage::VerifyForward).count > 0);
+    assert!(snap.role(Role::Draft).rounds > 0);
+}
