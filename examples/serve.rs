@@ -70,6 +70,7 @@ fn main() -> Result<()> {
                         draft_size: "draft".into(),
                         cached: true,
                         chaos: chaos.clone(),
+                        deadline_ms: 0,
                     });
                     let t = Instant::now();
                     let resp = cli.call(&req)?;

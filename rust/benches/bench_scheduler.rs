@@ -1,0 +1,271 @@
+//! Bench: continuous-batching scheduler vs per-request fleets (DESIGN.md
+//! §16).
+//!
+//! Phase 1 — capacity: a Poisson arrival stream of mixed ar/sd/sd-adaptive
+//! requests, served two ways on the SAME executor pair: (a) every request
+//! submitted to the shared scheduler pool (requests co-batch their
+//! forwards), (b) every request driving its own isolated fleet — the
+//! pre-scheduler serving path. Per-request events must be bit-identical
+//! between the two; the comparison is pure wall-clock/throughput.
+//!
+//! Phase 2 — overload: a burst of deadline-carrying requests against tight
+//! admission limits (`max_live`/`queue_depth`); reports the shed/expired
+//! split, demonstrating load shedding instead of unbounded queueing.
+//!
+//! Merges a snapshot under the `bench_scheduler` key of
+//! `BENCH_sampling.json`.
+//!
+//!     cargo bench --bench bench_scheduler [-- --dataset hawkes --encoder thp
+//!                                            --requests 12 --rate 4 --t-end 6
+//!                                            --gamma 8 --burst 16
+//!                                            --out BENCH_sampling.json]
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use tpp_sd::coordinator::{build_sessions, ModelPair, Router, Scheduler, SchedulerCfg};
+use tpp_sd::sampler::{
+    fleet_seeds, sample_ar_fleet, sample_sd_fleet, FleetRuns, Gamma, SampleCfg, SdCfg,
+};
+use tpp_sd::util::cli::Args;
+use tpp_sd::util::json::{obj, Json};
+use tpp_sd::util::math::percentile;
+use tpp_sd::util::rng::Rng;
+
+/// Default snapshot path: the workspace root, independent of the cwd
+/// cargo runs the bench with.
+const DEFAULT_OUT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sampling.json");
+
+const METHODS: [&str; 3] = ["ar", "sd", "sd-adaptive"];
+
+struct Req {
+    /// seconds after the stream start this request arrives
+    arrival: f64,
+    method: &'static str,
+    n_seq: usize,
+    seed: u64,
+}
+
+/// The isolated per-request fleet (the old serving path), for the
+/// baseline side and the bit-equality oracle.
+fn isolated_fleet(
+    pair: &ModelPair,
+    method: &str,
+    gamma: usize,
+    cfg: &SampleCfg,
+    seeds: &[u64],
+) -> Result<FleetRuns> {
+    let runs = match method {
+        "ar" => sample_ar_fleet(&pair.target, cfg, seeds)?.0,
+        "sd" => {
+            let sd =
+                SdCfg { sample: cfg.clone(), gamma: Gamma::Fixed(gamma), ..Default::default() };
+            sample_sd_fleet(&pair.target, &pair.draft, &sd, seeds)?.0
+        }
+        "sd-adaptive" => {
+            let sd = SdCfg {
+                sample: cfg.clone(),
+                gamma: Gamma::Adaptive { init: gamma, min: 2, max: 4 * gamma.max(1) },
+                ..Default::default()
+            };
+            sample_sd_fleet(&pair.target, &pair.draft, &sd, seeds)?.0
+        }
+        other => anyhow::bail!("unknown method '{other}'"),
+    };
+    Ok(runs)
+}
+
+/// Drive the arrival stream, one thread per request; `serve` runs the
+/// request once its arrival time comes. Returns per-request runs, the
+/// per-request latencies (seconds), and the stream's wall-clock.
+fn drive<F>(plan: &[Req], serve: F) -> (Vec<FleetRuns>, Vec<f64>, f64)
+where
+    F: Fn(&Req) -> FleetRuns + Send + Sync + 'static,
+{
+    let serve = Arc::new(serve);
+    let t0 = Instant::now();
+    let joins: Vec<_> = plan
+        .iter()
+        .map(|r| {
+            let serve = serve.clone();
+            let req = Req { arrival: r.arrival, method: r.method, n_seq: r.n_seq, seed: r.seed };
+            std::thread::spawn(move || {
+                let wait = req.arrival - t0.elapsed().as_secs_f64();
+                if wait > 0.0 {
+                    std::thread::sleep(Duration::from_secs_f64(wait));
+                }
+                let t = Instant::now();
+                let runs = serve(&req);
+                (runs, t.elapsed().as_secs_f64())
+            })
+        })
+        .collect();
+    let mut runs = Vec::new();
+    let mut lats = Vec::new();
+    for j in joins {
+        let (r, l) = j.join().expect("request thread");
+        runs.push(r);
+        lats.push(l);
+    }
+    (runs, lats, t0.elapsed().as_secs_f64())
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let dataset = args.str_or("dataset", "hawkes").to_string();
+    let encoder = args.str_or("encoder", "thp").to_string();
+    let requests = args.usize_or("requests", 12).max(1);
+    let rate = args.f64_or("rate", 4.0); // mean arrivals per second
+    let t_end = args.f64_or("t-end", 6.0);
+    let gamma = args.usize_or("gamma", 8);
+    let burst = args.usize_or("burst", 16).max(1);
+    let out_path = args.str_or("out", DEFAULT_OUT).to_string();
+
+    let backend = tpp_sd::runtime::backend_from_arg(args.get("backend"))?;
+    let router = Arc::new(Router::with_scheduler(
+        backend.clone(),
+        8,
+        Duration::from_millis(1),
+        SchedulerCfg::default(),
+    )?);
+    let pair = router.route(&dataset, &encoder, "draft")?;
+    let cfg = SampleCfg { num_types: pair.num_types, t_end, max_events: 16 * 1024 };
+    let sched = router.scheduler(&dataset, &encoder, "draft")?;
+
+    // Poisson arrivals of a deterministic method/size mix.
+    let mut rng = Rng::new(7);
+    let mut t = 0.0;
+    let plan: Vec<Req> = (0..requests)
+        .map(|i| {
+            t += rng.exponential(rate);
+            Req {
+                arrival: t,
+                method: METHODS[i % METHODS.len()],
+                n_seq: 1 + i % 3,
+                seed: 1000 * i as u64,
+            }
+        })
+        .collect();
+
+    // Warm executor compile caches so both phases time pure serving.
+    {
+        let warm = SampleCfg { t_end: 1.0, ..cfg.clone() };
+        let s = build_sessions(&pair, "sd", gamma, warm.clone(), &[99])?;
+        sched
+            .submit(s, true, None)
+            .map_err(|r| anyhow::anyhow!("warmup rejected: {}", r.message()))?;
+        isolated_fleet(&pair, "ar", gamma, &warm, &[98])?;
+    }
+
+    println!(
+        "== scheduler vs per-request fleets ({dataset}/{encoder}, backend={}, {requests} reqs, λ={rate}/s, T={t_end}) ==",
+        backend.name()
+    );
+
+    // (a) shared continuous-batching pool
+    let (sched_runs, sched_lat, sched_wall) = {
+        let (pair, cfg, sched, gamma) = (pair.clone(), cfg.clone(), sched.clone(), gamma);
+        drive(&plan, move |r| {
+            let sessions =
+                build_sessions(&pair, r.method, gamma, cfg.clone(), &fleet_seeds(r.seed, r.n_seq))
+                    .expect("sessions");
+            sched.submit(sessions, true, None).expect("submit").0
+        })
+    };
+
+    // (b) one isolated fleet per request (the pre-scheduler path)
+    let (base_runs, base_lat, base_wall) = {
+        let (pair, cfg, gamma) = (pair.clone(), cfg.clone(), gamma);
+        drive(&plan, move |r| {
+            isolated_fleet(&pair, r.method, gamma, &cfg, &fleet_seeds(r.seed, r.n_seq))
+                .expect("fleet")
+        })
+    };
+
+    // The oracle: co-batching across requests must not move a single event.
+    let mut events = 0usize;
+    for (i, (a, b)) in sched_runs.iter().zip(&base_runs).enumerate() {
+        assert_eq!(a.len(), b.len(), "request {i}: run count");
+        for (j, ((ev_a, _), (ev_b, _))) in a.iter().zip(b).enumerate() {
+            assert_eq!(ev_a, ev_b, "request {i} sequence {j}: scheduler diverged from fleet");
+            events += ev_a.len();
+        }
+    }
+
+    let sched_eps = events as f64 / sched_wall.max(1e-12);
+    let base_eps = events as f64 / base_wall.max(1e-12);
+    println!(
+        "scheduler : {sched_eps:10.0} ev/s  wall {sched_wall:6.2}s  p50 {:6.3}s p95 {:6.3}s",
+        percentile(&sched_lat, 0.5),
+        percentile(&sched_lat, 0.95)
+    );
+    println!(
+        "per-req   : {base_eps:10.0} ev/s  wall {base_wall:6.2}s  p50 {:6.3}s p95 {:6.3}s",
+        percentile(&base_lat, 0.5),
+        percentile(&base_lat, 0.95)
+    );
+    println!("throughput ratio: {:.2}x (identical events: {events})", sched_eps / base_eps);
+
+    // --- Phase 2: overload under tight limits ---
+    let tight_cfg = SchedulerCfg { max_live: 2, queue_depth: 2 };
+    let tight = Scheduler::spawn(pair.clone(), tight_cfg);
+    let burst_cfg = SampleCfg { t_end: (t_end / 2.0).max(1.0), ..cfg.clone() };
+    let joins: Vec<_> = (0..burst)
+        .map(|i| {
+            let (pair, c, tight) = (pair.clone(), burst_cfg.clone(), tight.clone());
+            std::thread::spawn(move || {
+                let sessions = build_sessions(&pair, "sd", 8, c, &[5000 + i as u64])
+                    .expect("sessions");
+                tight
+                    .submit(sessions, true, Some(Duration::from_millis(25)))
+                    .map(|_| ())
+                    .map_err(|r| r.code())
+            })
+        })
+        .collect();
+    let mut completed = 0usize;
+    let mut shed = 0usize;
+    let mut expired = 0usize;
+    for j in joins {
+        match j.join().expect("burst thread") {
+            Ok(()) => completed += 1,
+            Err("overloaded") => shed += 1,
+            Err("expired") => expired += 1,
+            Err(other) => panic!("unexpected rejection '{other}'"),
+        }
+    }
+    let shed_rate = (shed + expired) as f64 / burst as f64;
+    println!(
+        "overload  : burst {burst} vs max_live {}/depth {} → {completed} completed, {shed} shed, \
+         {expired} expired (shed rate {shed_rate:.2})",
+        tight_cfg.max_live, tight_cfg.queue_depth
+    );
+
+    let snapshot = obj(vec![
+        ("backend", Json::Str(backend.name().into())),
+        ("dataset", Json::Str(dataset.clone())),
+        ("encoder", Json::Str(encoder.clone())),
+        ("requests", Json::Num(requests as f64)),
+        ("arrival_rate_per_s", Json::Num(rate)),
+        ("t_end", Json::Num(t_end)),
+        ("gamma", Json::Num(gamma as f64)),
+        ("scheduler_events_per_s", Json::Num(sched_eps)),
+        ("per_request_events_per_s", Json::Num(base_eps)),
+        ("throughput_ratio", Json::Num(sched_eps / base_eps)),
+        ("scheduler_p50_latency_s", Json::Num(percentile(&sched_lat, 0.5))),
+        ("scheduler_p95_latency_s", Json::Num(percentile(&sched_lat, 0.95))),
+        ("per_request_p50_latency_s", Json::Num(percentile(&base_lat, 0.5))),
+        ("per_request_p95_latency_s", Json::Num(percentile(&base_lat, 0.95))),
+        ("burst", Json::Num(burst as f64)),
+        ("burst_completed", Json::Num(completed as f64)),
+        ("burst_shed", Json::Num(shed as f64)),
+        ("burst_expired", Json::Num(expired as f64)),
+        ("burst_shed_rate", Json::Num(shed_rate)),
+    ]);
+    tpp_sd::bench::merge_snapshot(&out_path, "bench_scheduler", snapshot)?;
+    println!("snapshot merged into {out_path}");
+    // Per-stage latency report — includes the new queue_wait stage.
+    println!("{}", tpp_sd::telemetry::report());
+    Ok(())
+}

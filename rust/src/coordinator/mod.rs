@@ -1,25 +1,62 @@
 //! Layer-3 serving coordinator (the vLLM-router-shaped part of the repo):
-//! per-model batching executors, a lazy model router, and a TCP front-end.
+//! per-model batching executors, a lazy model router, a continuous-batching
+//! scheduler with admission control, and a TCP front-end.
 //!
 //! Architecture (thread-based — the offline registry has no tokio, and the
 //! workload is CPU-bound on a single PJRT device, so a reactor would add
 //! nothing; bounded channels give the same backpressure):
 //!
 //! ```text
-//!   client conns ──> session threads ──┐
-//!                                      ├─> ExecutorHandle(target) ─┐
-//!        (sampler code, generic over   │      batching thread      ├─ Backend
-//!         runtime::Forward)            ├─> ExecutorHandle(draft)  ─┘  (native
-//!                                      │      batching thread         or xla)
-//!   Router: (dataset, encoder) ────────┘
+//!   client conns ──> session threads ──┐ build_sessions + submit
+//!                                      v
+//!   Scheduler (per routed pair): bounded FIFO admission queue
+//!        │   max_live cap, deadline check, shed when full
+//!        v
+//!   SessionPool: one rolling wave over ALL admitted requests
+//!        │ co-batched forwards per ModelRole
+//!        ├─> ExecutorHandle(target) ─┐
+//!        │      batching thread      ├─ worker pool ─ Backend
+//!        └─> ExecutorHandle(draft)  ─┘               (native or xla)
+//!
+//!   Router: (dataset, encoder, draft_size) -> {executor pair, scheduler}
+//! ```
+//!
+//! Requests flow top to bottom: a connection thread parses one JSON line,
+//! builds one resumable session per requested sequence
+//! ([`scheduler::build_sessions`]), and blocks on
+//! [`scheduler::Scheduler::submit`]. The per-pair scheduler admits whole
+//! requests FIFO into its shared [`crate::sampler::SessionPool`], so
+//! sequences from *different* requests share the same batched draft and
+//! target forwards — and the admission queue is bounded, so overload turns
+//! into structured `{"ok":false,"err":"overloaded"}` rejections instead of
+//! unbounded queueing (DESIGN.md §16; `docs/OPERATIONS.md` documents every
+//! wire op).
+//!
+//! End-to-end (this is the whole client surface — one JSON line each way):
+//!
+//! ```
+//! use std::time::Duration;
+//! use tpp_sd::coordinator::{Client, Request, SampleRequest, Server};
+//!
+//! let backend = tpp_sd::runtime::discover_backend().unwrap();
+//! let server = Server::bind(backend, "127.0.0.1:0", 8, Duration::from_millis(1)).unwrap();
+//! let addr = server.addr; // port 0 -> ephemeral, read it back
+//! std::thread::spawn(move || server.serve());
+//!
+//! let mut client = Client::connect(addr).unwrap();
+//! let req = Request::Sample(SampleRequest { t_end: 5.0, ..Default::default() });
+//! let line = client.call(&req).unwrap();
+//! assert!(line.contains("\"ok\":true"), "unexpected response: {line}");
 //! ```
 
 pub mod batcher;
 pub mod protocol;
 pub mod router;
+pub mod scheduler;
 pub mod server;
 
 pub use batcher::{BatcherStats, ExecutorHandle, RetryPolicy};
 pub use protocol::{FleetRequest, Request, SampleRequest};
 pub use router::{ModelPair, Router};
+pub use scheduler::{build_sessions, SchedReject, SchedStats, Scheduler, SchedulerCfg};
 pub use server::{Client, Server};

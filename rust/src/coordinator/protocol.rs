@@ -27,10 +27,21 @@
 //! — while unrecoverable ones surface as `{"ok":false,...}` instead of a
 //! hang.
 //!
+//! `"deadline_ms"` (default `0` = none) bounds the time a request may
+//! wait in the scheduler's admission queue (DESIGN.md §16): a request
+//! whose deadline passes before admission is rejected with
+//! `{"ok":false,"err":"expired",...}` instead of admitted to do work
+//! nobody is waiting for. A full admission queue sheds the request
+//! immediately with `{"ok":false,"err":"overloaded",...}`.
+//!
 //! Response:
 //!   {"ok":true,"events":[[t,k],...],"stats":{...}}
 //!   {"ok":true,"sequences":[[[t,k],...],...],"stats":{...},"fleet":{...}}
 //!   {"ok":false,"error":"..."}
+//!   {"ok":false,"err":"overloaded"|"expired"|"failed","error":"..."}
+//!
+//! The `"err"` code is machine-readable and stable; plain request errors
+//! (bad op, unknown dataset, …) carry only `"error"` text.
 //!
 //! `sample_fleet` runs `n_seq` sequences in lockstep on the fleet engine
 //! (DESIGN.md §11); sequence `i` is seeded `seed + i`, so its events are
@@ -88,6 +99,29 @@ pub struct SampleRequest {
     /// fault-injection spec (`""` = off), e.g. `"seed=7,err=0.2"` —
     /// parsed by [`crate::runtime::chaos::FaultPlan::parse`]
     pub chaos: String,
+    /// most milliseconds the request may wait for admission (`0` = no
+    /// deadline); an expired request is rejected with
+    /// `{"ok":false,"err":"expired",...}`
+    pub deadline_ms: u64,
+}
+
+impl Default for SampleRequest {
+    /// The wire defaults — what `{"op":"sample"}` with no other fields
+    /// parses to.
+    fn default() -> Self {
+        SampleRequest {
+            dataset: "hawkes".to_string(),
+            encoder: "attnhp".to_string(),
+            method: "sd".to_string(),
+            gamma: 10,
+            t_end: 30.0,
+            seed: 0,
+            draft_size: "draft".to_string(),
+            cached: true,
+            chaos: String::new(),
+            deadline_ms: 0,
+        }
+    }
 }
 
 /// Parameters of a `sample_fleet` request.
@@ -111,6 +145,7 @@ fn parse_sample_fields(j: &Json) -> SampleRequest {
         draft_size: j.str_at("draft_size").unwrap_or("draft").to_string(),
         cached: j.bool_at("cached").unwrap_or(true),
         chaos: j.str_at("chaos").unwrap_or("").to_string(),
+        deadline_ms: j.f64_at("deadline_ms").unwrap_or(0.0) as u64,
     }
 }
 
@@ -126,6 +161,7 @@ fn sample_fields(op: &str, s: &SampleRequest) -> Vec<(&'static str, Json)> {
         ("draft_size", Json::Str(s.draft_size.clone())),
         ("cached", Json::Bool(s.cached)),
         ("chaos", Json::Str(s.chaos.clone())),
+        ("deadline_ms", Json::Num(s.deadline_ms as f64)),
     ]
 }
 
@@ -302,6 +338,20 @@ pub fn err_response(msg: &str) -> String {
     .to_string()
 }
 
+/// Admission-control rejection: an error response with a stable
+/// machine-readable `"err"` code (`"overloaded"` | `"expired"` |
+/// `"failed"`) next to the human-readable `"error"` text, so clients can
+/// branch on the code (back off, drop, retry elsewhere) without parsing
+/// prose.
+pub fn overload_response(code: &str, msg: &str) -> String {
+    obj(vec![
+        ("ok", Json::Bool(false)),
+        ("err", Json::Str(code.to_string())),
+        ("error", Json::Str(msg.to_string())),
+    ])
+    .to_string()
+}
+
 /// Parse a server response into (events, wall_ms).
 pub fn parse_response(line: &str) -> Result<(Vec<Event>, f64)> {
     let j = Json::parse(line.trim())?;
@@ -329,16 +379,20 @@ mod tests {
             draft_size: "draft".into(),
             cached: false,
             chaos: "seed=7,err=0.25,loss=0.1".into(),
+            deadline_ms: 250,
         });
         let line = r.to_line();
         assert_eq!(Request::parse(&line).unwrap(), r);
         assert_eq!(Request::parse(r#"{"op":"ping"}"#).unwrap(), Request::Ping);
         assert!(Request::parse(r#"{"op":"bogus"}"#).is_err());
-        // `cached` defaults to true and `chaos` to off when absent
+        // `cached` defaults to true, `chaos` to off, `deadline_ms` to 0 —
+        // and the bare request parses to exactly `SampleRequest::default()`
         match Request::parse(r#"{"op":"sample"}"#).unwrap() {
             Request::Sample(s) => {
                 assert!(s.cached);
                 assert!(s.chaos.is_empty());
+                assert_eq!(s.deadline_ms, 0);
+                assert_eq!(s, SampleRequest::default());
             }
             other => panic!("{other:?}"),
         }
@@ -415,6 +469,7 @@ mod tests {
                 draft_size: "draft".into(),
                 cached: true,
                 chaos: String::new(),
+                deadline_ms: 0,
             },
             n_seq: 8,
         });

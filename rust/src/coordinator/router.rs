@@ -1,7 +1,9 @@
 //! Model router: maps `(dataset, encoder)` to a target/draft executor pair,
 //! spawning executor threads lazily and reusing them across sessions. The
 //! router is backend-agnostic — it only talks to the
-//! [`crate::runtime::Backend`] registry.
+//! [`crate::runtime::Backend`] registry. It also owns one lazily spawned
+//! continuous-batching [`Scheduler`] per routed pair, so every request for
+//! a pair shares one rolling session pool (DESIGN.md §16).
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
@@ -10,6 +12,7 @@ use std::time::Duration;
 use anyhow::Result;
 
 use super::batcher::ExecutorHandle;
+use super::scheduler::{Scheduler, SchedulerCfg};
 use crate::runtime::Backend;
 
 /// A routed model pair ready for sampling.
@@ -23,28 +26,45 @@ pub struct ModelPair {
     pub num_types: usize,
 }
 
-/// Lazily spawning, reusing registry of executor pairs.
+/// Lazily spawning, reusing registry of executor pairs (and of the
+/// per-pair schedulers feeding them).
 pub struct Router {
     backend: Arc<dyn Backend>,
     pairs: Mutex<BTreeMap<(String, String, String), ModelPair>>,
+    scheds: Mutex<BTreeMap<(String, String, String), Arc<Scheduler>>>,
     /// largest batch an executor thread may coalesce
     pub max_batch: usize,
     /// how long an executor thread waits for co-batchable requests
     pub batch_window: Duration,
+    /// admission limits handed to every per-pair [`Scheduler`]
+    pub sched_cfg: SchedulerCfg,
 }
 
 impl Router {
-    /// Build a router over a model registry.
+    /// Build a router over a model registry with default admission limits.
     pub fn new(
         backend: Arc<dyn Backend>,
         max_batch: usize,
         batch_window: Duration,
     ) -> Result<Router> {
+        Router::with_scheduler(backend, max_batch, batch_window, SchedulerCfg::default())
+    }
+
+    /// Build a router with explicit scheduler admission limits
+    /// (`tppsd serve --max-live N --queue-depth Q`).
+    pub fn with_scheduler(
+        backend: Arc<dyn Backend>,
+        max_batch: usize,
+        batch_window: Duration,
+        sched_cfg: SchedulerCfg,
+    ) -> Result<Router> {
         Ok(Router {
             backend,
             pairs: Mutex::new(BTreeMap::new()),
+            scheds: Mutex::new(BTreeMap::new()),
             max_batch,
             batch_window,
+            sched_cfg,
         })
     }
 
@@ -86,11 +106,45 @@ impl Router {
         Ok(pair)
     }
 
+    /// Get (spawning if needed) the continuous-batching scheduler for a
+    /// model pair. All requests naming the same `(dataset, encoder,
+    /// draft_size)` share one scheduler — that sharing is what lets their
+    /// forwards co-batch across requests.
+    pub fn scheduler(
+        &self,
+        dataset: &str,
+        encoder: &str,
+        draft_size: &str,
+    ) -> Result<Arc<Scheduler>> {
+        let key = (dataset.to_string(), encoder.to_string(), draft_size.to_string());
+        if let Some(s) = self.scheds.lock().unwrap().get(&key) {
+            return Ok(s.clone());
+        }
+        let pair = self.route(dataset, encoder, draft_size)?;
+        let mut map = self.scheds.lock().unwrap();
+        let sched = map
+            .entry(key)
+            .or_insert_with(|| Scheduler::spawn(pair, self.sched_cfg))
+            .clone();
+        Ok(sched)
+    }
+
     /// Every routed `(dataset, encoder, draft_size)` key with its executor
     /// pair — the `stats`/`metrics` responses walk this to report each
     /// executor's batcher counters.
     pub fn pairs(&self) -> Vec<((String, String, String), ModelPair)> {
         self.pairs
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
+
+    /// Every spawned scheduler with its pair key — the `stats`/`metrics`
+    /// responses walk this to report admission counters and gauges.
+    pub fn schedulers(&self) -> Vec<((String, String, String), Arc<Scheduler>)> {
+        self.scheds
             .lock()
             .unwrap()
             .iter()

@@ -1,0 +1,407 @@
+//! Continuous-batching scheduler with admission control (DESIGN.md §16):
+//! one rolling [`SessionPool`] per routed model pair, fed from a bounded
+//! FIFO admission queue, so concurrent `sample`/`sample_fleet` requests
+//! co-batch their draft and target forwards *across requests* — the
+//! vLLM-style serving move — instead of each request driving an isolated
+//! fleet at partial wave occupancy.
+//!
+//! One scheduler thread owns the pool. Connection threads build their
+//! sessions ([`build_sessions`]) and [`Scheduler::submit`] them; the
+//! scheduler admits whole requests in strict FIFO order whenever the
+//! head-of-queue request fits under the `max_live` session cap, then
+//! steps the pool — sessions of newly admitted requests join mid-wave,
+//! and finished sessions leave the moment they retire. The head request
+//! never waits on anyone admitted after it (no overtaking), so a stream
+//! of small requests cannot starve a large one.
+//!
+//! **Admission control / load shedding**: the pending queue is bounded
+//! (`queue_depth`); a submit that finds it full is shed immediately with
+//! a structured [`SchedReject::Overloaded`] — the wire's
+//! `{"ok":false,"err":"overloaded",...}` — rather than queued without
+//! bound. A request carrying a deadline that has already passed when its
+//! turn comes is rejected as [`SchedReject::Expired`] instead of being
+//! admitted to do work nobody is waiting for. Every submit ends in
+//! exactly one of `{completed, shed, expired, failed}` — the
+//! [`SchedStats`] counters reconcile with client-observed outcomes to the
+//! unit (`rust/tests/scheduler.rs`).
+//!
+//! **Bit-exactness**: admission order, pool membership and wave
+//! composition decide only *which rows share a batched forward*. The
+//! backend contract makes batched rows equal single-sequence rows
+//! exactly, each session owns its RNG streams, and each (session, role)
+//! owns its incremental-stream cursor — so a request's events are
+//! bit-for-bit what a sequential per-request run with the same seeds
+//! would produce, under any cross-request interleaving. That property is
+//! the core oracle of `rust/tests/scheduler.rs`.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::router::ModelPair;
+use crate::events::Event;
+use crate::sampler::{
+    AnySession, ArSession, FleetRuns, FleetStats, Gamma, SampleCfg, SampleStats, SdCfg, SdSession,
+    SessionPool,
+};
+use crate::telemetry;
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+
+/// Admission-control limits of a [`Scheduler`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SchedulerCfg {
+    /// Most sessions resident in the pool at once. A request is admitted
+    /// only when all of its sessions fit under the cap (whole requests
+    /// are admitted atomically, so a fleet is never half-resident).
+    pub max_live: usize,
+    /// Most requests waiting in the pending queue. A submit that finds
+    /// the queue full is shed with [`SchedReject::Overloaded`].
+    pub queue_depth: usize,
+}
+
+impl Default for SchedulerCfg {
+    fn default() -> Self {
+        SchedulerCfg { max_live: 64, queue_depth: 128 }
+    }
+}
+
+/// Why [`Scheduler::submit`] did not return results. `Overloaded` and
+/// `Expired` are admission verdicts (the work never ran); `Failed` means
+/// the pool could not finish the request (a wave failed beyond every
+/// retry and recovery ladder).
+#[derive(Debug, Clone)]
+pub enum SchedReject {
+    /// shed at submit: the pending queue is full (or the request can
+    /// never fit under `max_live`)
+    Overloaded(String),
+    /// rejected at admission: the request's deadline had already passed
+    /// when its turn came
+    Expired(String),
+    /// the pool failed mid-run; partial work is discarded
+    Failed(String),
+}
+
+impl SchedReject {
+    /// The stable machine-readable code of the wire's `"err"` field.
+    pub fn code(&self) -> &'static str {
+        match self {
+            SchedReject::Overloaded(_) => "overloaded",
+            SchedReject::Expired(_) => "expired",
+            SchedReject::Failed(_) => "failed",
+        }
+    }
+
+    /// The human-readable detail of the wire's `"error"` field.
+    pub fn message(&self) -> &str {
+        match self {
+            SchedReject::Overloaded(m) | SchedReject::Expired(m) | SchedReject::Failed(m) => m,
+        }
+    }
+}
+
+/// Lock-free scheduler counters and gauges. Every submit ends in exactly
+/// one of `{completed, shed, expired, failed}`, and
+/// `admitted == completed + failed + in-flight` — the reconciliation
+/// invariant `rust/tests/scheduler.rs` pins against client-observed
+/// outcomes.
+#[derive(Debug, Default)]
+pub struct SchedStats {
+    /// requests admitted into the pool (FIFO, whole-request)
+    pub admitted: AtomicUsize,
+    /// requests shed at submit (queue full / can never fit)
+    pub shed: AtomicUsize,
+    /// requests whose deadline passed before admission
+    pub expired: AtomicUsize,
+    /// admitted requests that returned full results
+    pub completed: AtomicUsize,
+    /// admitted requests discarded by a pool failure
+    pub failed: AtomicUsize,
+    /// gauge: sessions resident in the pool right now
+    pub live_sessions: AtomicUsize,
+    /// gauge: requests waiting in the pending queue right now
+    pub queued: AtomicUsize,
+    /// high-water mark of `live_sessions` (bounded by `max_live`)
+    pub max_live_seen: AtomicUsize,
+}
+
+/// What a request's `submit` call resolves to.
+type Outcome = std::result::Result<(FleetRuns, FleetStats), SchedReject>;
+
+/// One pending request: its ready-to-run sessions plus the reply channel
+/// its connection thread is blocked on.
+struct Job {
+    sessions: Vec<AnySession>,
+    use_streams: bool,
+    deadline: Option<Instant>,
+    enqueued: Instant,
+    reply: mpsc::Sender<Outcome>,
+}
+
+/// An admitted request the scheduler is still collecting outputs for.
+struct Active {
+    out: Vec<Option<(Vec<Event>, SampleStats)>>,
+    left: usize,
+    /// totals snapshot at admission; the reply reports `totals.since`
+    base: FleetStats,
+    reply: mpsc::Sender<Outcome>,
+}
+
+/// State shared between submitters and the scheduler thread.
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    stats: SchedStats,
+}
+
+/// A continuous-batching scheduler over one routed model pair: a single
+/// scheduler thread drives one rolling [`SessionPool`], admitting queued
+/// requests (FIFO, whole-request, capped at `max_live` sessions) between
+/// engine waves. See the module docs for the admission policy and the
+/// bit-exactness argument.
+pub struct Scheduler {
+    shared: Arc<Shared>,
+    cfg: SchedulerCfg,
+}
+
+impl Scheduler {
+    /// Spawn the scheduler thread for a routed pair.
+    pub fn spawn(pair: ModelPair, cfg: SchedulerCfg) -> Arc<Scheduler> {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            stats: SchedStats::default(),
+        });
+        let thread_shared = shared.clone();
+        std::thread::spawn(move || run_loop(pair, cfg, thread_shared));
+        Arc::new(Scheduler { shared, cfg })
+    }
+
+    /// The scheduler's admission limits.
+    pub fn cfg(&self) -> SchedulerCfg {
+        self.cfg
+    }
+
+    /// The scheduler's counters and gauges.
+    pub fn stats(&self) -> &SchedStats {
+        &self.shared.stats
+    }
+
+    /// Submit a request and block until it resolves: results, or a
+    /// structured rejection. `use_streams: false` pins the request's
+    /// sessions to full-window forwards (the wire's `cached:false`);
+    /// `deadline` bounds the time the request may spend waiting — a
+    /// request whose deadline passes before admission is rejected as
+    /// [`SchedReject::Expired`] instead of admitted.
+    ///
+    /// The returned [`FleetStats`] window covers the pool's activity
+    /// during the request's residency; when other requests were
+    /// co-resident, their waves count too (that sharing is the point —
+    /// per-sequence [`SampleStats`] remain exact per request).
+    pub fn submit(
+        &self,
+        sessions: Vec<AnySession>,
+        use_streams: bool,
+        deadline: Option<Duration>,
+    ) -> Outcome {
+        let n = sessions.len();
+        if n == 0 {
+            return Ok((FleetRuns::new(), FleetStats::default()));
+        }
+        if n > self.cfg.max_live {
+            self.shared.stats.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(SchedReject::Overloaded(format!(
+                "request needs {n} sessions but max_live is {} — it can never be admitted",
+                self.cfg.max_live
+            )));
+        }
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            if q.len() >= self.cfg.queue_depth {
+                self.shared.stats.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(SchedReject::Overloaded(format!(
+                    "admission queue full ({} pending, depth {})",
+                    q.len(),
+                    self.cfg.queue_depth
+                )));
+            }
+            q.push_back(Job {
+                sessions,
+                use_streams,
+                deadline: deadline.map(|d| Instant::now() + d),
+                enqueued: Instant::now(),
+                reply: tx,
+            });
+            self.shared.stats.queued.store(q.len(), Ordering::Relaxed);
+        }
+        self.shared.cv.notify_one();
+        match rx.recv() {
+            Ok(outcome) => outcome,
+            Err(_) => Err(SchedReject::Failed("scheduler thread terminated".to_string())),
+        }
+    }
+
+    /// The scheduler's limits, counters and gauges as one JSON object
+    /// (the `stats`/`metrics` responses embed this per routed pair).
+    pub fn stats_json(&self) -> Json {
+        let s = &self.shared.stats;
+        let load = |a: &AtomicUsize| Json::Num(a.load(Ordering::Relaxed) as f64);
+        obj(vec![
+            ("max_live", Json::Num(self.cfg.max_live as f64)),
+            ("queue_depth", Json::Num(self.cfg.queue_depth as f64)),
+            ("admitted", load(&s.admitted)),
+            ("shed", load(&s.shed)),
+            ("expired", load(&s.expired)),
+            ("completed", load(&s.completed)),
+            ("failed", load(&s.failed)),
+            ("live_sessions", load(&s.live_sessions)),
+            ("queued", load(&s.queued)),
+            ("max_live_seen", load(&s.max_live_seen)),
+        ])
+    }
+}
+
+/// The scheduler thread: admit every fitting head-of-queue request, step
+/// the pool one wave, deliver retired outputs, repeat. Parks on the
+/// condvar when both the pool and the queue are empty.
+fn run_loop(pair: ModelPair, cfg: SchedulerCfg, shared: Arc<Shared>) {
+    let mut pool: SessionPool<AnySession> = SessionPool::new();
+    let mut totals = FleetStats::default();
+    let mut active: BTreeMap<u64, Active> = BTreeMap::new();
+    let mut next_req: u64 = 0;
+    loop {
+        // Admission: strict FIFO — pop the head while it fits under
+        // max_live; a head that does not fit blocks everything behind it
+        // (no overtaking, so big requests cannot starve).
+        loop {
+            let job = {
+                let mut q = shared.queue.lock().unwrap();
+                loop {
+                    let head_fits =
+                        q.front().map(|j| pool.live() + j.sessions.len() <= cfg.max_live);
+                    match head_fits {
+                        Some(true) => {
+                            let j = q.pop_front().expect("non-empty queue");
+                            shared.stats.queued.store(q.len(), Ordering::Relaxed);
+                            break Some(j);
+                        }
+                        Some(false) => break None,
+                        None if pool.is_empty() => {
+                            q = shared.cv.wait(q).unwrap();
+                        }
+                        None => break None,
+                    }
+                }
+            };
+            let Some(job) = job else { break };
+            telemetry::record_duration(telemetry::Stage::QueueWait, job.enqueued.elapsed());
+            if job.deadline.is_some_and(|dl| Instant::now() >= dl) {
+                shared.stats.expired.fetch_add(1, Ordering::Relaxed);
+                let _ = job.reply.send(Err(SchedReject::Expired(format!(
+                    "deadline passed after {:?} in the admission queue",
+                    job.enqueued.elapsed()
+                ))));
+                continue;
+            }
+            shared.stats.admitted.fetch_add(1, Ordering::Relaxed);
+            let id = next_req;
+            next_req += 1;
+            let n = job.sessions.len();
+            for (idx, s) in job.sessions.into_iter().enumerate() {
+                pool.admit(s, (id << 16) | idx as u64, job.use_streams);
+            }
+            active.insert(
+                id,
+                Active {
+                    out: (0..n).map(|_| None).collect(),
+                    left: n,
+                    base: totals.clone(),
+                    reply: job.reply,
+                },
+            );
+            let live = pool.live();
+            shared.stats.live_sessions.store(live, Ordering::Relaxed);
+            shared.stats.max_live_seen.fetch_max(live, Ordering::Relaxed);
+        }
+        if pool.is_empty() {
+            continue; // woke with nothing admitted (e.g. every job expired)
+        }
+        match pool.step(&pair.target, Some(&pair.draft), &mut totals) {
+            Ok(done) => {
+                for (ticket, events, stats) in done {
+                    let id = ticket >> 16;
+                    let Some(a) = active.get_mut(&id) else { continue };
+                    a.out[(ticket & 0xffff) as usize] = Some((events, stats));
+                    a.left -= 1;
+                    if a.left == 0 {
+                        let a = active.remove(&id).expect("active request");
+                        let window = totals.since(&a.base);
+                        shared.stats.completed.fetch_add(1, Ordering::Relaxed);
+                        let runs: FleetRuns = a
+                            .out
+                            .into_iter()
+                            .map(|o| o.expect("every session retired"))
+                            .collect();
+                        let _ = a.reply.send(Ok((runs, window)));
+                    }
+                }
+                shared.stats.live_sessions.store(pool.live(), Ordering::Relaxed);
+            }
+            Err(e) => {
+                // A wave failed beyond the retry and stream-recovery
+                // ladders: no resident session can make progress. Fail
+                // every active request with the cause, release every
+                // stream, and keep serving the queue.
+                pool.abort(&pair.target, Some(&pair.draft));
+                shared.stats.live_sessions.store(0, Ordering::Relaxed);
+                let msg = format!("{e:#}");
+                for (_, a) in std::mem::take(&mut active) {
+                    shared.stats.failed.fetch_add(1, Ordering::Relaxed);
+                    let _ = a.reply.send(Err(SchedReject::Failed(msg.clone())));
+                }
+            }
+        }
+    }
+}
+
+/// Build the ready-to-run sessions of one wire request: one per seed, on
+/// the method the request named. This is the single method-dispatch point
+/// of the serving path — `sample` is the 1-seed case of `sample_fleet`,
+/// and both feed the same scheduler pool.
+pub fn build_sessions(
+    pair: &ModelPair,
+    method: &str,
+    gamma: usize,
+    cfg: SampleCfg,
+    seeds: &[u64],
+) -> Result<Vec<AnySession>> {
+    match method {
+        "ar" => {
+            let cap = pair.target.max_bucket();
+            Ok(seeds
+                .iter()
+                .map(|&s| AnySession::Ar(Box::new(ArSession::new(cfg.clone(), cap, Rng::new(s)))))
+                .collect())
+        }
+        "sd" | "sd-adaptive" => {
+            let cap = pair.target.max_bucket().min(pair.draft.max_bucket());
+            let policy = if method == "sd" {
+                Gamma::Fixed(gamma)
+            } else {
+                Gamma::Adaptive { init: gamma, min: 2, max: 4 * gamma.max(1) }
+            };
+            let sd = SdCfg { sample: cfg, gamma: policy, ..Default::default() };
+            Ok(seeds
+                .iter()
+                .map(|&s| {
+                    AnySession::Sd(Box::new(SdSession::new(sd.clone(), cap, Rng::new(s))))
+                })
+                .collect())
+        }
+        other => anyhow::bail!("unknown method '{other}' (ar|sd|sd-adaptive)"),
+    }
+}

@@ -1,6 +1,11 @@
-//! TCP sampling server: line-protocol front-end over the router + batching
-//! executors. One lightweight thread per connection (sessions); the heavy
-//! lifting batches on the per-model executor threads.
+//! TCP sampling server: line-protocol front-end over the router, the
+//! per-pair continuous-batching schedulers, and the batching executors.
+//! One lightweight thread per connection (sessions); sampling work is
+//! handed to the pair's [`Scheduler`](super::scheduler::Scheduler), whose
+//! single rolling pool co-batches forwards across concurrent requests
+//! (DESIGN.md §16). Overload is answered, not absorbed: a full admission
+//! queue or a passed deadline yields `{"ok":false,"err":...}` structured
+//! rejections.
 //!
 //! Fault injection (DESIGN.md §13): a request carrying a non-empty
 //! `"chaos"` spec is served by a dedicated router whose backend is wrapped
@@ -22,21 +27,20 @@ use std::time::Duration;
 use anyhow::Result;
 
 use super::protocol::{
-    batcher_stats_json, err_response, fleet_ok_response, ok_response, FleetRequest, Request,
-    SampleRequest,
+    batcher_stats_json, err_response, fleet_ok_response, ok_response, overload_response,
+    FleetRequest, Request, SampleRequest,
 };
-use super::router::{ModelPair, Router};
-use crate::runtime::{Backend, BatchForward, ChaosBackend, FaultPlan, Uncached};
-use crate::sampler::{
-    fleet_seeds, sample_ar_fleet, sample_sd_fleet, FleetRuns, FleetStats, Gamma, SampleCfg, SdCfg,
-};
+use super::router::Router;
+use super::scheduler::{build_sessions, SchedReject, SchedulerCfg};
+use crate::runtime::{Backend, ChaosBackend, FaultPlan};
+use crate::sampler::{fleet_seeds, SampleCfg};
 use crate::telemetry;
 use crate::util::json::{obj, Json};
 
 /// Cap on distinct chaos specs a server builds routers for — each one
 /// spawns its own executor threads, and chaos is a testing facility, not a
 /// production path. Further specs are rejected with `{"ok":false,...}`.
-const MAX_CHAOS_ROUTERS: usize = 8;
+pub const MAX_CHAOS_ROUTERS: usize = 8;
 
 /// Everything a connection thread needs: the fault-free router plus the
 /// makings of per-spec chaos routers.
@@ -67,7 +71,14 @@ impl Ctx {
             "too many distinct chaos specs (cap {MAX_CHAOS_ROUTERS})"
         );
         let wrapped: Arc<dyn Backend> = Arc::new(ChaosBackend::new(self.backend.clone(), plan));
-        let r = Arc::new(Router::new(wrapped, self.max_batch, self.batch_window)?);
+        // Chaos routers inherit the server's admission limits, so overload
+        // behaviour is testable under injected faults too.
+        let r = Arc::new(Router::with_scheduler(
+            wrapped,
+            self.max_batch,
+            self.batch_window,
+            self.router.sched_cfg,
+        )?);
         map.insert(spec.to_string(), r.clone());
         Ok(r)
     }
@@ -83,14 +94,33 @@ pub struct Server {
 
 impl Server {
     /// Bind (use port 0 for an ephemeral port) and build the router over
-    /// the given model registry.
+    /// the given model registry, with default scheduler admission limits.
     pub fn bind(
         backend: Arc<dyn crate::runtime::Backend>,
         host_port: &str,
         max_batch: usize,
         batch_window: Duration,
     ) -> Result<Server> {
-        let router = Arc::new(Router::new(backend.clone(), max_batch, batch_window)?);
+        Server::bind_with_scheduler(
+            backend,
+            host_port,
+            max_batch,
+            batch_window,
+            SchedulerCfg::default(),
+        )
+    }
+
+    /// Bind with explicit scheduler admission limits
+    /// (`tppsd serve --max-live N --queue-depth Q`).
+    pub fn bind_with_scheduler(
+        backend: Arc<dyn crate::runtime::Backend>,
+        host_port: &str,
+        max_batch: usize,
+        batch_window: Duration,
+        sched_cfg: SchedulerCfg,
+    ) -> Result<Server> {
+        let router =
+            Arc::new(Router::with_scheduler(backend.clone(), max_batch, batch_window, sched_cfg)?);
         let listener = TcpListener::bind(host_port)?;
         let addr = listener.local_addr()?;
         let ctx = Arc::new(Ctx {
@@ -175,59 +205,22 @@ fn handle_conn(stream: TcpStream, ctx: &Ctx) -> Result<()> {
     }
 }
 
-/// Shared method dispatch of both sample ops: run the requested sampler
-/// for `seeds.len()` sequences on the fleet engine. The single-sample op
-/// is the 1-seed case — fleet(N=1) is bit-for-bit the blocking sampler
-/// (`rust/tests/fleet.rs`), so the server has exactly one dispatch.
+/// Map a scheduler rejection to its wire form: a structured
+/// `{"ok":false,"err":code,"error":msg}` the client can branch on.
+fn reject_response(rej: &SchedReject) -> String {
+    overload_response(rej.code(), rej.message())
+}
+
+/// Shared dispatch of both sample ops: build one session per seed and
+/// submit the whole request to the pair's continuous-batching scheduler.
+/// The single-sample op is the 1-seed case — fleet(N=1) is bit-for-bit the
+/// blocking sampler (`rust/tests/fleet.rs`, `rust/tests/scheduler.rs`), so
+/// the server has exactly one dispatch and every concurrent request
+/// co-batches in the same pool.
 ///
-/// `cached: false` wraps both executor handles in
-/// [`crate::runtime::Uncached`], forcing full-window forwards — the
-/// wire-level A/B knob; the events are bit-identical either way.
-fn run_fleet(
-    pair: &ModelPair,
-    method: &str,
-    gamma: usize,
-    cfg: SampleCfg,
-    seeds: &[u64],
-    cached: bool,
-) -> Result<(FleetRuns, FleetStats)> {
-    if cached {
-        dispatch_fleet(&pair.target, &pair.draft, method, gamma, cfg, seeds)
-    } else {
-        dispatch_fleet(&Uncached(&pair.target), &Uncached(&pair.draft), method, gamma, cfg, seeds)
-    }
-}
-
-fn dispatch_fleet<FT, FD>(
-    target: &FT,
-    draft: &FD,
-    method: &str,
-    gamma: usize,
-    cfg: SampleCfg,
-    seeds: &[u64],
-) -> Result<(FleetRuns, FleetStats)>
-where
-    FT: BatchForward,
-    FD: BatchForward,
-{
-    match method {
-        "ar" => sample_ar_fleet(target, &cfg, seeds),
-        "sd" => {
-            let sd = SdCfg { sample: cfg, gamma: Gamma::Fixed(gamma), ..Default::default() };
-            sample_sd_fleet(target, draft, &sd, seeds)
-        }
-        "sd-adaptive" => {
-            let sd = SdCfg {
-                sample: cfg,
-                gamma: Gamma::Adaptive { init: gamma, min: 2, max: 4 * gamma.max(1) },
-                ..Default::default()
-            };
-            sample_sd_fleet(target, draft, &sd, seeds)
-        }
-        other => anyhow::bail!("unknown method '{other}' (ar|sd|sd-adaptive)"),
-    }
-}
-
+/// `cached: false` admits the request's sessions without incremental
+/// streams, forcing full-window forwards — the wire-level A/B knob; the
+/// events are bit-identical either way.
 fn run_sample(router: &Router, req: &SampleRequest) -> Result<String> {
     let pair = router.route(&req.dataset, &req.encoder, &req.draft_size)?;
     let cfg = SampleCfg {
@@ -235,9 +228,16 @@ fn run_sample(router: &Router, req: &SampleRequest) -> Result<String> {
         t_end: req.t_end,
         max_events: 16 * 1024,
     };
-    let (mut runs, _) = run_fleet(&pair, &req.method, req.gamma, cfg, &[req.seed], req.cached)?;
-    let (events, stats) = runs.pop().expect("one run per seed");
-    Ok(ok_response(&events, &stats))
+    let sessions = build_sessions(&pair, &req.method, req.gamma, cfg, &[req.seed])?;
+    let sched = router.scheduler(&req.dataset, &req.encoder, &req.draft_size)?;
+    let deadline = (req.deadline_ms > 0).then(|| Duration::from_millis(req.deadline_ms));
+    match sched.submit(sessions, req.cached, deadline) {
+        Ok((mut runs, _)) => {
+            let (events, stats) = runs.pop().expect("one run per seed");
+            Ok(ok_response(&events, &stats))
+        }
+        Err(rej) => Ok(reject_response(&rej)),
+    }
 }
 
 /// Hard cap on sequences per fleet request (keeps one connection from
@@ -257,9 +257,13 @@ fn run_sample_fleet(router: &Router, req: &FleetRequest) -> Result<String> {
         max_events: 16 * 1024,
     };
     let seeds = fleet_seeds(base.seed, req.n_seq.max(1));
-    let (runs, fleet) =
-        run_fleet(&pair, &base.method, base.gamma, cfg, &seeds, base.cached)?;
-    Ok(fleet_ok_response(&runs, &fleet))
+    let sessions = build_sessions(&pair, &base.method, base.gamma, cfg, &seeds)?;
+    let sched = router.scheduler(&base.dataset, &base.encoder, &base.draft_size)?;
+    let deadline = (base.deadline_ms > 0).then(|| Duration::from_millis(base.deadline_ms));
+    match sched.submit(sessions, base.cached, deadline) {
+        Ok((runs, fleet)) => Ok(fleet_ok_response(&runs, &fleet)),
+        Err(rej) => Ok(reject_response(&rej)),
+    }
 }
 
 /// Every routed executor's batcher counters, two entries per model pair
@@ -273,6 +277,28 @@ fn executors_json(router: &Router) -> Json {
                 ("name", Json::Str(handle.name.clone())),
                 ("pair", Json::Str(format!("{dataset}/{encoder}/{draft_size}"))),
                 ("stats", batcher_stats_json(&handle.stats)),
+            ]));
+        }
+    }
+    Json::Arr(out)
+}
+
+/// Every spawned scheduler's admission counters and gauges, across the
+/// fault-free router and every chaos router (`"chaos"` names the spec,
+/// `""` for the fault-free one). Shared by `stats` and `metrics`, and the
+/// ground truth the overload tests reconcile client outcomes against.
+fn schedulers_json(ctx: &Ctx) -> Json {
+    let mut routers: Vec<(String, Arc<Router>)> = vec![(String::new(), ctx.router.clone())];
+    for (spec, r) in ctx.chaos.lock().unwrap().iter() {
+        routers.push((spec.clone(), r.clone()));
+    }
+    let mut out = Vec::new();
+    for (spec, router) in routers {
+        for ((dataset, encoder, draft_size), sched) in router.schedulers() {
+            out.push(obj(vec![
+                ("pair", Json::Str(format!("{dataset}/{encoder}/{draft_size}"))),
+                ("chaos", Json::Str(spec.clone())),
+                ("stats", sched.stats_json()),
             ]));
         }
     }
@@ -294,6 +320,7 @@ fn stats_response(ctx: &Ctx) -> String {
         // The batcher retry/timeout/pool/occupancy counters — the old
         // handler silently dropped all of these.
         ("executors", executors_json(&ctx.router)),
+        ("schedulers", schedulers_json(ctx)),
     ])
     .to_string()
 }
@@ -305,6 +332,7 @@ fn metrics_response(ctx: &Ctx, view: &telemetry::Snapshot) -> String {
         ("ok", Json::Bool(true)),
         ("telemetry", view.to_json()),
         ("executors", executors_json(&ctx.router)),
+        ("schedulers", schedulers_json(ctx)),
     ])
     .to_string()
 }
@@ -312,7 +340,7 @@ fn metrics_response(ctx: &Ctx, view: &telemetry::Snapshot) -> String {
 /// Default read timeout of a [`Client`]: generous enough for release-mode
 /// fleet requests, but finite — a wedged server fails the call instead of
 /// hanging the test suite forever.
-const CLIENT_READ_TIMEOUT: Duration = Duration::from_secs(120);
+pub const CLIENT_READ_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// Minimal blocking client for tests and the serve example.
 pub struct Client {

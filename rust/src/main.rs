@@ -8,7 +8,7 @@
 use std::time::Duration;
 
 use anyhow::{bail, Result};
-use tpp_sd::coordinator::Server;
+use tpp_sd::coordinator::{SchedulerCfg, Server};
 use tpp_sd::runtime::{backend_from_arg, Backend, ChaosBackend, FaultPlan, Uncached};
 use tpp_sd::sampler::{
     fleet_seeds, sample_ar_fleet, sample_sd_fleet, FleetRuns, Gamma, SampleCfg, SampleStats, SdCfg,
@@ -43,7 +43,15 @@ commands:
           [--metrics]               print the per-stage latency /
                                     acceptance telemetry report to stderr
                                     at the end of the run
-  serve   [--listen 127.0.0.1:7077] [--max-batch 8] [--batch-window-ms 2]
+  serve   [--listen 127.0.0.1:7077]  start the sampling coordinator
+          [--max-batch 8]           largest batch an executor coalesces
+          [--batch-window-ms 2]     how long an executor waits to co-batch
+          [--max-live 64]           scheduler cap on co-resident sessions;
+                                    a request whose sessions can never fit
+                                    is shed with err=overloaded
+          [--queue-depth 128]       bound on the pending admission queue;
+                                    submits past it are shed, not queued
+          (wire protocol and every knob: docs/OPERATIONS.md)
 
 options (all commands):
   --backend auto|native|xla         inference backend [auto]
@@ -227,12 +235,20 @@ fn report_fleet(runs: &[(Vec<Event>, SampleStats)], occupancy: f64, wall: std::t
 fn serve(args: &Args) -> Result<()> {
     let backend = pick_backend(args)?;
     let name = backend.name();
-    let server = Server::bind(
+    let sched_cfg = SchedulerCfg {
+        max_live: args.usize_or("max-live", 64),
+        queue_depth: args.usize_or("queue-depth", 128),
+    };
+    let server = Server::bind_with_scheduler(
         backend,
         args.str_or("listen", "127.0.0.1:7077"),
         args.usize_or("max-batch", 8),
         Duration::from_millis(args.u64_or("batch-window-ms", 2)),
+        sched_cfg,
     )?;
-    println!("tppsd serving on {} (backend: {name})", server.addr);
+    println!(
+        "tppsd serving on {} (backend: {name}, max-live {}, queue-depth {})",
+        server.addr, sched_cfg.max_live, sched_cfg.queue_depth
+    );
     server.serve()
 }

@@ -16,13 +16,21 @@
 //! (chunked at the model's batch capacity), and fans the slots back into
 //! the sessions.
 //!
+//! Sessions live in a [`SessionPool`]: a rolling membership that sessions
+//! join and leave mid-flight. [`drive`] is the closed-fleet special case
+//! (admit everything, step until empty); the serving scheduler
+//! (`coordinator::scheduler`) keeps one long-lived pool and admits
+//! sequences from concurrent requests into it, so forwards co-batch
+//! *across requests*, not just within one.
+//!
 //! **RNG isolation** (the bit-for-bit argument): every session owns its
 //! proposal and decision streams, seeded per sequence, and the backend
 //! contract guarantees batched rows equal single-sequence rows exactly —
 //! so the fleet's per-sequence outputs and [`SampleStats`] are identical
 //! to running the blocking samplers sequentially with the same seeds, for
-//! every fleet size and interleaving. Property-tested in
-//! `rust/tests/fleet.rs`.
+//! every fleet size, membership and interleaving. Property-tested in
+//! `rust/tests/fleet.rs` (closed fleets) and `rust/tests/scheduler.rs`
+//! (cross-request pools).
 //!
 //! **Incremental streams** (DESIGN.md §12): when a role's model exposes
 //! [`CachedForward`], the engine opens one stream per session and ships
@@ -34,18 +42,42 @@
 //!
 //! **Fault tolerance** (DESIGN.md §13): a failed wave is isolated — each
 //! member re-runs alone — and a lost or errored stream is replaced and
-//! rebased from the session's full window ([`recover_delta`]); sessions
-//! whose streams keep dying degrade to full-window forwards. All of it is
-//! invisible in the outputs (forwards are pure and consume no sampler
-//! randomness) and visible in [`FleetStats::stream_recoveries`] /
+//! rebased from the session's full window (the stream-recovery ladder);
+//! sessions whose streams keep dying degrade to full-window forwards. All
+//! of it is invisible in the outputs (forwards are pure and consume no
+//! sampler randomness) and visible in [`FleetStats::stream_recoveries`] /
 //! [`FleetStats::degraded_uncached`]. Property-tested in
 //! `rust/tests/chaos.rs`.
+//!
+//! # Example
+//!
+//! Drive a three-sequence TPP-SD fleet over the in-crate mock model —
+//! the minimal embed-the-engine flow:
+//!
+//! ```
+//! use tpp_sd::model::MockModel;
+//! use tpp_sd::sampler::{fleet_seeds, sample_sd_fleet, Gamma, SampleCfg, SdCfg};
+//!
+//! let target = MockModel::default();
+//! let draft = MockModel { bias: 0.3, type_shift: 1, ..Default::default() };
+//! let cfg = SdCfg {
+//!     sample: SampleCfg { num_types: 4, t_end: 10.0, max_events: 512 },
+//!     gamma: Gamma::Fixed(4),
+//!     ..Default::default()
+//! };
+//! let (runs, fleet) = sample_sd_fleet(&target, &draft, &cfg, &fleet_seeds(7, 3)).unwrap();
+//! assert_eq!(runs.len(), 3);
+//! // Sequence i is bit-for-bit `sample_sd` seeded 7 + i; the fleet's win
+//! // is occupancy: several sequences share each batched forward.
+//! assert!(fleet.target_occupancy() >= 1.0);
+//! ```
 
 use anyhow::{ensure, Result};
 
 use crate::events::Event;
 use crate::runtime::{
-    pool, BatchForward, CachedForward, Forward as _, SeqDelta, SeqInput, SlotOut, StreamId,
+    pool, BatchForward, CachedForward, Forward as _, PoolStats, SeqDelta, SeqInput, SlotOut,
+    StreamId,
 };
 use crate::telemetry;
 use crate::util::rng::Rng;
@@ -66,7 +98,8 @@ pub enum ModelRole {
 /// A resumable per-sequence sampling state machine the engine can drive:
 /// it yields inputs (full or delta form), names the model that must run
 /// them, and consumes the forward results. Implemented by [`SdSession`]
-/// and [`ArSession`].
+/// and [`ArSession`] (and [`AnySession`], which erases the two for mixed
+/// pools).
 pub trait FleetSession {
     /// Which model the pending input is for (only consulted while the
     /// session is not done).
@@ -156,6 +189,68 @@ impl FleetSession for ArSession {
     }
 }
 
+/// A type-erased session, so one [`SessionPool`] can co-batch AR and SD
+/// requests: the scheduler's pool holds `AnySession`s and never cares
+/// which method a request asked for. Boxed so the enum stays pointer-sized
+/// regardless of how the two session types grow.
+pub enum AnySession {
+    /// an autoregressive baseline session
+    Ar(Box<ArSession>),
+    /// a speculative-decoding session
+    Sd(Box<SdSession>),
+}
+
+impl FleetSession for AnySession {
+    fn role(&self) -> ModelRole {
+        match self {
+            AnySession::Ar(s) => FleetSession::role(&**s),
+            AnySession::Sd(s) => FleetSession::role(&**s),
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        match self {
+            AnySession::Ar(s) => FleetSession::is_done(&**s),
+            AnySession::Sd(s) => FleetSession::is_done(&**s),
+        }
+    }
+
+    fn pending_input(&self) -> Option<SeqInput> {
+        match self {
+            AnySession::Ar(s) => FleetSession::pending_input(&**s),
+            AnySession::Sd(s) => FleetSession::pending_input(&**s),
+        }
+    }
+
+    fn pending_delta(&self) -> Option<SeqDelta> {
+        match self {
+            AnySession::Ar(s) => FleetSession::pending_delta(&**s),
+            AnySession::Sd(s) => FleetSession::pending_delta(&**s),
+        }
+    }
+
+    fn advance(&mut self, fwd: &SlotOut) {
+        match self {
+            AnySession::Ar(s) => FleetSession::advance(&mut **s, fwd),
+            AnySession::Sd(s) => FleetSession::advance(&mut **s, fwd),
+        }
+    }
+
+    fn rebase(&mut self, role: ModelRole) {
+        match self {
+            AnySession::Ar(s) => FleetSession::rebase(&mut **s, role),
+            AnySession::Sd(s) => FleetSession::rebase(&mut **s, role),
+        }
+    }
+
+    fn into_output(self) -> (Vec<Event>, SampleStats) {
+        match self {
+            AnySession::Ar(s) => FleetSession::into_output(*s),
+            AnySession::Sd(s) => FleetSession::into_output(*s),
+        }
+    }
+}
+
 /// Engine-level counters of one fleet run: how well the per-sequence
 /// forwards co-batched. (The per-sequence [`SampleStats`] still count
 /// *logical* forwards — what the sequence consumed — so they aggregate
@@ -215,6 +310,28 @@ impl FleetStats {
             self.target_seqs as f64 / self.target_batches as f64
         }
     }
+
+    /// Counter deltas since a `base` snapshot (saturating, per field). The
+    /// scheduler snapshots its running totals when a request is admitted
+    /// and reports `totals.since(&snapshot)` when it completes: the pool
+    /// activity during the request's residency.
+    pub fn since(&self, base: &FleetStats) -> FleetStats {
+        FleetStats {
+            steps: self.steps.saturating_sub(base.steps),
+            draft_batches: self.draft_batches.saturating_sub(base.draft_batches),
+            draft_seqs: self.draft_seqs.saturating_sub(base.draft_seqs),
+            target_batches: self.target_batches.saturating_sub(base.target_batches),
+            target_seqs: self.target_seqs.saturating_sub(base.target_seqs),
+            delta_batches: self.delta_batches.saturating_sub(base.delta_batches),
+            delta_seqs: self.delta_seqs.saturating_sub(base.delta_seqs),
+            stream_recoveries: self.stream_recoveries.saturating_sub(base.stream_recoveries),
+            degraded_uncached: self.degraded_uncached.saturating_sub(base.degraded_uncached),
+            pool_dispatches: self.pool_dispatches.saturating_sub(base.pool_dispatches),
+            pool_steals: self.pool_steals.saturating_sub(base.pool_steals),
+            buffers_reused: self.buffers_reused.saturating_sub(base.buffers_reused),
+            buffers_allocated: self.buffers_allocated.saturating_sub(base.buffers_allocated),
+        }
+    }
 }
 
 /// Per-sequence seeds of a fleet run: sequence `i` gets `base + i`, so
@@ -225,6 +342,10 @@ pub fn fleet_seeds(base: u64, n: usize) -> Vec<u64> {
 
 /// One fleet run's per-sequence `(events, stats)` outputs, in seed order.
 pub type FleetRuns = Vec<(Vec<Event>, SampleStats)>;
+
+/// Sessions a [`SessionPool::step`] retired this wave, as
+/// `(ticket, events, stats)` triples in no particular order.
+pub type Retired = Vec<(u64, Vec<Event>, SampleStats)>;
 
 /// Sample `seeds.len()` sequences with TPP-SD on the fleet engine. Returns
 /// one `(events, stats)` per seed (in order) — each bit-for-bit identical
@@ -241,12 +362,11 @@ where
     FD: BatchForward + ?Sized,
 {
     let cap = target.max_bucket().min(draft.max_bucket());
-    let mut sessions: Vec<SdSession> = seeds
+    let sessions: Vec<SdSession> = seeds
         .iter()
         .map(|&s| SdSession::new(cfg.clone(), cap, Rng::new(s)))
         .collect();
-    let fleet = drive(target, Some(draft), &mut sessions)?;
-    Ok((sessions.into_iter().map(FleetSession::into_output).collect(), fleet))
+    drive(target, Some(draft), sessions)
 }
 
 /// Sample `seeds.len()` sequences autoregressively on the fleet engine.
@@ -262,26 +382,27 @@ where
     FT: BatchForward + ?Sized,
 {
     let cap = target.max_bucket();
-    let mut sessions: Vec<ArSession> = seeds
+    let sessions: Vec<ArSession> = seeds
         .iter()
         .map(|&s| ArSession::new(cfg.clone(), cap, Rng::new(s)))
         .collect();
-    let fleet = drive(target, None::<&FT>, &mut sessions)?;
-    Ok((sessions.into_iter().map(FleetSession::into_output).collect(), fleet))
+    drive(target, None::<&FT>, sessions)
 }
 
-/// Per-session stream ids of one model role in a fleet run, opened lazily
-/// on a [`CachedForward`] model. Streams of finished sessions are closed
-/// eagerly; the `Drop` impl closes whatever is left, so an aborted drive
-/// (forward error) cannot leak backend state.
+/// Per-session stream ids of one model role in a pool, opened lazily on a
+/// [`CachedForward`] model. The table is positional — entry `i` belongs to
+/// the pool's `i`-th live session — and moves in tandem with the session
+/// vector (`push`/`swap_remove`). The pool closes streams eagerly when a
+/// session retires and via [`SessionPool::abort`] on a failed run, so the
+/// backend cannot leak stream state.
 ///
 /// Fault tolerance (DESIGN.md §13): opens retry up to
 /// [`STREAM_RECOVER_ATTEMPTS`] times; a session whose stream keeps
 /// failing is marked `dead` and degrades to full-window forwards for the
 /// rest of the run (`degraded`), while successful replacements count into
 /// `recovered`. Both tallies surface in [`FleetStats`].
-struct RoleStreams<'a> {
-    cached: Option<&'a dyn CachedForward>,
+#[derive(Default)]
+struct RoleStreams {
     ids: Vec<Option<StreamId>>,
     /// sessions degraded to full-window forwards; never retried
     dead: Vec<bool>,
@@ -291,22 +412,28 @@ struct RoleStreams<'a> {
     degraded: usize,
 }
 
-impl<'a> RoleStreams<'a> {
-    fn new(cached: Option<&'a dyn CachedForward>, n: usize) -> RoleStreams<'a> {
-        RoleStreams {
-            cached,
-            ids: vec![None; n],
-            dead: vec![false; n],
-            recovered: 0,
-            degraded: 0,
-        }
+impl RoleStreams {
+    /// Append the slot of a newly admitted session. `dead: true` opts the
+    /// session out of incremental streams from the start (the request
+    /// asked for full-window forwards) without counting it as degraded.
+    fn push(&mut self, dead: bool) {
+        self.ids.push(None);
+        self.dead.push(dead);
+    }
+
+    /// Drop session `i`'s slot (closing its stream), keeping the table in
+    /// tandem with a `Vec::swap_remove` on the session vector.
+    fn swap_remove(&mut self, i: usize, cached: Option<&dyn CachedForward>) {
+        self.close(i, cached);
+        self.ids.swap_remove(i);
+        self.dead.swap_remove(i);
     }
 
     /// Session `i`'s stream id, opening one on first use (with bounded
     /// retries); `None` when the role's model has no incremental-stream
     /// support or the session has degraded to the uncached path.
-    fn stream_for(&mut self, i: usize) -> Option<StreamId> {
-        let c = self.cached?;
+    fn stream_for(&mut self, i: usize, cached: Option<&dyn CachedForward>) -> Option<StreamId> {
+        let c = cached?;
         if self.dead[i] {
             return None;
         }
@@ -318,44 +445,305 @@ impl<'a> RoleStreams<'a> {
                 }
             }
             if self.ids[i].is_none() {
-                self.mark_dead(i);
+                self.mark_dead(i, cached);
             }
         }
         self.ids[i]
     }
 
     /// Release session `i`'s stream (idempotent).
-    fn close(&mut self, i: usize) {
-        if let (Some(c), Some(id)) = (self.cached, self.ids[i].take()) {
+    fn close(&mut self, i: usize, cached: Option<&dyn CachedForward>) {
+        if let (Some(c), Some(id)) = (cached, self.ids[i].take()) {
             c.close_stream(id);
         }
     }
 
     /// Degrade session `i` to full-window forwards for the rest of the
     /// run (idempotent).
-    fn mark_dead(&mut self, i: usize) {
-        self.close(i);
+    fn mark_dead(&mut self, i: usize, cached: Option<&dyn CachedForward>) {
+        self.close(i, cached);
         if !self.dead[i] {
             self.dead[i] = true;
             self.degraded += 1;
         }
     }
-}
 
-impl Drop for RoleStreams<'_> {
-    fn drop(&mut self) {
-        if let Some(c) = self.cached {
+    /// Close every open stream and clear the table (abort path).
+    fn close_all(&mut self, cached: Option<&dyn CachedForward>) {
+        if let Some(c) = cached {
             for id in self.ids.iter_mut().filter_map(Option::take) {
                 c.close_stream(id);
             }
         }
+        self.ids.clear();
+        self.dead.clear();
     }
 }
 
-/// The engine loop: gather pending inputs from all live sessions, batch
-/// them per model role, fan the slots back, repeat until every session is
-/// done. `draft` may be `None` for fleets whose sessions only ever ask for
-/// target forwards (AR).
+/// Reusable gather buffers of one engine step, split by role and path
+/// (full-window vs incremental delta). Living across steps, they keep the
+/// steady-state loop allocation-free (§14).
+#[derive(Default)]
+struct GatherBufs {
+    draft_ids: Vec<usize>,
+    draft_in: Vec<SeqInput>,
+    draft_delta_ids: Vec<usize>,
+    draft_delta_in: Vec<(StreamId, SeqDelta)>,
+    target_ids: Vec<usize>,
+    target_in: Vec<SeqInput>,
+    target_delta_ids: Vec<usize>,
+    target_delta_in: Vec<(StreamId, SeqDelta)>,
+}
+
+impl GatherBufs {
+    fn clear(&mut self) {
+        self.draft_ids.clear();
+        self.draft_in.clear();
+        self.draft_delta_ids.clear();
+        self.draft_delta_in.clear();
+        self.target_ids.clear();
+        self.target_in.clear();
+        self.target_delta_ids.clear();
+        self.target_delta_in.clear();
+    }
+
+    fn has(&self, role: ModelRole) -> bool {
+        match role {
+            ModelRole::Draft => !self.draft_ids.is_empty() || !self.draft_delta_ids.is_empty(),
+            ModelRole::Target => !self.target_ids.is_empty() || !self.target_delta_ids.is_empty(),
+        }
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn role_mut(
+        &mut self,
+        role: ModelRole,
+    ) -> (&[usize], &mut Vec<SeqInput>, &[usize], &mut Vec<(StreamId, SeqDelta)>) {
+        match role {
+            ModelRole::Draft => (
+                &self.draft_ids,
+                &mut self.draft_in,
+                &self.draft_delta_ids,
+                &mut self.draft_delta_in,
+            ),
+            ModelRole::Target => (
+                &self.target_ids,
+                &mut self.target_in,
+                &self.target_delta_ids,
+                &mut self.target_delta_in,
+            ),
+        }
+    }
+}
+
+/// A rolling pool of live sampling sessions — the continuous-batching
+/// core. Sessions join mid-flight ([`SessionPool::admit`]) and leave the
+/// moment they finish (their `(ticket, events, stats)` comes back from
+/// [`SessionPool::step`]), and every step co-batches the forwards of
+/// *whoever is resident* — across requests, methods and cache modes.
+///
+/// Bit-exactness: membership only decides which rows share a batched
+/// forward, and the backend contract makes batched rows equal
+/// single-sequence rows exactly; sessions own their RNG streams and
+/// (per-role) incremental-stream cursors, so a session's output is
+/// independent of who it shared the pool with (`rust/tests/scheduler.rs`).
+///
+/// [`drive`] is the closed-pool convenience: admit a fixed fleet, step
+/// until empty. The serving scheduler keeps one pool per model pair and
+/// feeds it from a bounded admission queue.
+pub struct SessionPool<S> {
+    sessions: Vec<S>,
+    tickets: Vec<u64>,
+    t_streams: RoleStreams,
+    d_streams: RoleStreams,
+    bufs: GatherBufs,
+    pool_base: PoolStats,
+}
+
+impl<S: FleetSession> SessionPool<S> {
+    /// An empty pool.
+    pub fn new() -> SessionPool<S> {
+        SessionPool {
+            sessions: Vec::new(),
+            tickets: Vec::new(),
+            t_streams: RoleStreams::default(),
+            d_streams: RoleStreams::default(),
+            bufs: GatherBufs::default(),
+            pool_base: pool::stats(),
+        }
+    }
+
+    /// Number of live (admitted, not yet retired) sessions.
+    pub fn live(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// True when no session is resident.
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    /// Admit a session mid-flight. `ticket` is an opaque caller tag
+    /// returned with the session's output when it retires.
+    /// `use_streams: false` pins the session to full-window forwards even
+    /// on a [`CachedForward`] model (the wire's `cached:false` knob) —
+    /// the events are bit-identical either way, and the opt-out is not
+    /// counted as a degradation.
+    pub fn admit(&mut self, session: S, ticket: u64, use_streams: bool) {
+        self.sessions.push(session);
+        self.tickets.push(ticket);
+        self.t_streams.push(!use_streams);
+        self.d_streams.push(!use_streams);
+    }
+
+    /// One engine cycle over the resident sessions: retire finished ones,
+    /// gather the rest's pending inputs, run one batched wave per model
+    /// role, and retire whoever finished on it. Returns the retired
+    /// sessions' outputs; batching counters accumulate into `fleet`
+    /// (monotone — snapshot and [`FleetStats::since`] for a window).
+    ///
+    /// On `Err` the wave failed beyond the per-sequence retry and
+    /// stream-recovery ladders; the pool's remaining sessions cannot make
+    /// progress — call [`SessionPool::abort`] to release their streams.
+    pub fn step<FT, FD>(
+        &mut self,
+        target: &FT,
+        draft: Option<&FD>,
+        fleet: &mut FleetStats,
+    ) -> Result<Retired>
+    where
+        FT: BatchForward + ?Sized,
+        FD: BatchForward + ?Sized,
+    {
+        let t_cached = target.cached();
+        let d_cached = draft.and_then(|d| d.cached());
+        let mut done = self.reap(t_cached, d_cached);
+        self.bufs.clear();
+        for (i, s) in self.sessions.iter().enumerate() {
+            match s.role() {
+                ModelRole::Draft => match self.d_streams.stream_for(i, d_cached) {
+                    Some(sid) => {
+                        self.bufs.draft_delta_ids.push(i);
+                        self.bufs.draft_delta_in.push((sid, s.pending_delta().expect("pending delta")));
+                    }
+                    None => {
+                        self.bufs.draft_ids.push(i);
+                        self.bufs.draft_in.push(s.pending_input().expect("pending input"));
+                    }
+                },
+                ModelRole::Target => match self.t_streams.stream_for(i, t_cached) {
+                    Some(sid) => {
+                        self.bufs.target_delta_ids.push(i);
+                        self.bufs.target_delta_in.push((sid, s.pending_delta().expect("pending delta")));
+                    }
+                    None => {
+                        self.bufs.target_ids.push(i);
+                        self.bufs.target_in.push(s.pending_input().expect("pending input"));
+                    }
+                },
+            }
+        }
+        if !self.bufs.has(ModelRole::Draft) && !self.bufs.has(ModelRole::Target) {
+            self.sync(fleet);
+            return Ok(done);
+        }
+        fleet.steps += 1;
+        if self.bufs.has(ModelRole::Draft) {
+            let d = match draft {
+                Some(d) => d,
+                None => anyhow::bail!("sessions need a draft model, but the pool has none"),
+            };
+            let role = run_role(
+                d,
+                &mut self.d_streams,
+                d_cached,
+                ModelRole::Draft,
+                &mut self.bufs,
+                &mut self.sessions,
+            )?;
+            fleet.draft_batches += role.batches;
+            fleet.draft_seqs += role.seqs;
+            fleet.delta_batches += role.delta_batches;
+            fleet.delta_seqs += role.delta_seqs;
+        }
+        if self.bufs.has(ModelRole::Target) {
+            let role = run_role(
+                target,
+                &mut self.t_streams,
+                t_cached,
+                ModelRole::Target,
+                &mut self.bufs,
+                &mut self.sessions,
+            )?;
+            fleet.target_batches += role.batches;
+            fleet.target_seqs += role.seqs;
+            fleet.delta_batches += role.delta_batches;
+            fleet.delta_seqs += role.delta_seqs;
+        }
+        done.extend(self.reap(t_cached, d_cached));
+        self.sync(fleet);
+        Ok(done)
+    }
+
+    /// Release every stream and drop every session (failed-run path).
+    pub fn abort<FT, FD>(&mut self, target: &FT, draft: Option<&FD>)
+    where
+        FT: BatchForward + ?Sized,
+        FD: BatchForward + ?Sized,
+    {
+        self.t_streams.close_all(target.cached());
+        self.d_streams.close_all(draft.and_then(|d| d.cached()));
+        self.sessions.clear();
+        self.tickets.clear();
+    }
+
+    /// Retire every finished session: close its streams, remove it from
+    /// the pool (tables move in tandem) and collect its output.
+    fn reap(
+        &mut self,
+        t_cached: Option<&dyn CachedForward>,
+        d_cached: Option<&dyn CachedForward>,
+    ) -> Retired {
+        let mut out = Retired::new();
+        let mut i = 0;
+        while i < self.sessions.len() {
+            if self.sessions[i].is_done() {
+                self.t_streams.swap_remove(i, t_cached);
+                self.d_streams.swap_remove(i, d_cached);
+                let session = self.sessions.swap_remove(i);
+                let ticket = self.tickets.swap_remove(i);
+                let (events, stats) = session.into_output();
+                out.push((ticket, events, stats));
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
+    /// Refresh `fleet`'s derived tallies (recoveries, degradations, pool
+    /// counters) from the pool's own monotone state.
+    fn sync(&self, fleet: &mut FleetStats) {
+        fleet.stream_recoveries = self.t_streams.recovered + self.d_streams.recovered;
+        fleet.degraded_uncached = self.t_streams.degraded + self.d_streams.degraded;
+        let pd = pool::stats().since(&self.pool_base);
+        fleet.pool_dispatches = pd.pool_dispatches;
+        fleet.pool_steals = pd.pool_steals;
+        fleet.buffers_reused = pd.buffers_reused;
+        fleet.buffers_allocated = pd.buffers_allocated;
+    }
+}
+
+impl<S: FleetSession> Default for SessionPool<S> {
+    fn default() -> Self {
+        SessionPool::new()
+    }
+}
+
+/// The closed-fleet engine loop: admit every session into a fresh
+/// [`SessionPool`], step until the pool drains, and return the outputs in
+/// admission order. `draft` may be `None` for fleets whose sessions only
+/// ever ask for target forwards (AR).
 ///
 /// Models exposing [`CachedForward`] are driven through per-session
 /// incremental streams: each live session contributes a [`SeqDelta`]
@@ -366,117 +754,38 @@ impl Drop for RoleStreams<'_> {
 pub fn drive<FT, FD, S>(
     target: &FT,
     draft: Option<&FD>,
-    sessions: &mut [S],
-) -> Result<FleetStats>
+    sessions: Vec<S>,
+) -> Result<(FleetRuns, FleetStats)>
 where
     FT: BatchForward + ?Sized,
     FD: BatchForward + ?Sized,
     S: FleetSession,
 {
+    let n = sessions.len();
+    let mut pool = SessionPool::new();
+    for (k, s) in sessions.into_iter().enumerate() {
+        pool.admit(s, k as u64, true);
+    }
     let mut fleet = FleetStats::default();
-    let pool_before = pool::stats();
-    let mut t_streams = RoleStreams::new(target.cached(), sessions.len());
-    let mut d_streams = RoleStreams::new(draft.and_then(|d| d.cached()), sessions.len());
-    // Gather buffers live across engine steps so the steady-state loop
-    // reuses their capacity instead of reallocating every wave (§14).
-    let mut draft_ids: Vec<usize> = Vec::new();
-    let mut draft_in: Vec<SeqInput> = Vec::new();
-    let mut draft_delta_ids: Vec<usize> = Vec::new();
-    let mut draft_delta_in: Vec<(StreamId, SeqDelta)> = Vec::new();
-    let mut target_ids: Vec<usize> = Vec::new();
-    let mut target_in: Vec<SeqInput> = Vec::new();
-    let mut target_delta_ids: Vec<usize> = Vec::new();
-    let mut target_delta_in: Vec<(StreamId, SeqDelta)> = Vec::new();
-    loop {
-        draft_ids.clear();
-        draft_in.clear();
-        draft_delta_ids.clear();
-        draft_delta_in.clear();
-        target_ids.clear();
-        target_in.clear();
-        target_delta_ids.clear();
-        target_delta_in.clear();
-        for (i, s) in sessions.iter().enumerate() {
-            if s.is_done() {
-                t_streams.close(i);
-                d_streams.close(i);
-                continue;
+    let mut out: Vec<Option<(Vec<Event>, SampleStats)>> = (0..n).map(|_| None).collect();
+    while !pool.is_empty() {
+        let done = match pool.step(target, draft, &mut fleet) {
+            Ok(done) => done,
+            Err(e) => {
+                pool.abort(target, draft);
+                return Err(e);
             }
-            match s.role() {
-                ModelRole::Draft => match d_streams.stream_for(i) {
-                    Some(sid) => {
-                        draft_delta_ids.push(i);
-                        draft_delta_in.push((sid, s.pending_delta().expect("pending delta")));
-                    }
-                    None => {
-                        draft_ids.push(i);
-                        draft_in.push(s.pending_input().expect("pending input"));
-                    }
-                },
-                ModelRole::Target => match t_streams.stream_for(i) {
-                    Some(sid) => {
-                        target_delta_ids.push(i);
-                        target_delta_in.push((sid, s.pending_delta().expect("pending delta")));
-                    }
-                    None => {
-                        target_ids.push(i);
-                        target_in.push(s.pending_input().expect("pending input"));
-                    }
-                },
-            }
-        }
-        if draft_ids.is_empty()
-            && draft_delta_ids.is_empty()
-            && target_ids.is_empty()
-            && target_delta_ids.is_empty()
-        {
-            fleet.stream_recoveries = t_streams.recovered + d_streams.recovered;
-            fleet.degraded_uncached = t_streams.degraded + d_streams.degraded;
-            let pd = pool::stats().since(&pool_before);
-            fleet.pool_dispatches = pd.pool_dispatches;
-            fleet.pool_steals = pd.pool_steals;
-            fleet.buffers_reused = pd.buffers_reused;
-            fleet.buffers_allocated = pd.buffers_allocated;
-            return Ok(fleet);
-        }
-        fleet.steps += 1;
-        if !draft_ids.is_empty() || !draft_delta_ids.is_empty() {
-            let d = match draft {
-                Some(d) => d,
-                None => anyhow::bail!("sessions need a draft model, but the fleet has none"),
-            };
-            let role = run_role(
-                d,
-                &mut d_streams,
-                ModelRole::Draft,
-                &draft_ids,
-                &mut draft_in,
-                &draft_delta_ids,
-                &mut draft_delta_in,
-                sessions,
-            )?;
-            fleet.draft_batches += role.batches;
-            fleet.draft_seqs += role.seqs;
-            fleet.delta_batches += role.delta_batches;
-            fleet.delta_seqs += role.delta_seqs;
-        }
-        if !target_ids.is_empty() || !target_delta_ids.is_empty() {
-            let role = run_role(
-                target,
-                &mut t_streams,
-                ModelRole::Target,
-                &target_ids,
-                &mut target_in,
-                &target_delta_ids,
-                &mut target_delta_in,
-                sessions,
-            )?;
-            fleet.target_batches += role.batches;
-            fleet.target_seqs += role.seqs;
-            fleet.delta_batches += role.delta_batches;
-            fleet.delta_seqs += role.delta_seqs;
+        };
+        for (ticket, events, stats) in done {
+            out[ticket as usize] = Some((events, stats));
         }
     }
+    Ok((
+        out.into_iter()
+            .map(|r| r.expect("every admitted session retires"))
+            .collect(),
+        fleet,
+    ))
 }
 
 /// The telemetry stage a role's forward waves are timed under.
@@ -502,17 +811,16 @@ struct RoleCounters {
 fn run_role<B, S>(
     model: &B,
     streams: &mut RoleStreams,
+    cached: Option<&dyn CachedForward>,
     role: ModelRole,
-    full_ids: &[usize],
-    full_in: &mut Vec<SeqInput>,
-    delta_ids: &[usize],
-    delta_in: &mut Vec<(StreamId, SeqDelta)>,
+    bufs: &mut GatherBufs,
     sessions: &mut [S],
 ) -> Result<RoleCounters>
 where
     B: BatchForward + ?Sized,
     S: FleetSession,
 {
+    let (full_ids, full_in, delta_ids, delta_in) = bufs.role_mut(role);
     let mut out = RoleCounters::default();
     if !full_ids.is_empty() {
         let (b, n) = fan_out(model, role, full_ids, full_in, sessions)?;
@@ -520,7 +828,8 @@ where
         out.seqs += n;
     }
     if !delta_ids.is_empty() {
-        let (b, n) = fan_out_delta(model, streams, role, delta_ids, delta_in, sessions)?;
+        let c = cached.expect("delta gathered without a cached model");
+        let (b, n) = fan_out_delta(model, streams, c, role, delta_ids, delta_in, sessions)?;
         out.batches += b;
         out.seqs += n;
         out.delta_batches += b;
@@ -613,11 +922,12 @@ where
 /// A failed wave is isolated per delta — deltas are idempotent (rewind to
 /// `base_len`, then append), so re-running the ones the aborted wave had
 /// already applied is safe. A delta that still fails alone means its
-/// stream is lost; [`recover_delta`] replaces the stream, rebases the
+/// stream is lost; `recover_delta` replaces the stream, rebases the
 /// session, and degrades to full-window forwards if streams keep dying.
 fn fan_out_delta<B, S>(
     model: &B,
     streams: &mut RoleStreams,
+    c: &dyn CachedForward,
     role: ModelRole,
     ids: &[usize],
     inputs: &mut Vec<(StreamId, SeqDelta)>,
@@ -627,7 +937,6 @@ where
     B: BatchForward + ?Sized,
     S: FleetSession,
 {
-    let c = streams.cached.expect("delta gathered without a cached model");
     let cap = BatchForward::max_batch(model).max(1);
     let mut batches = 0;
     let mut start = 0;
@@ -659,11 +968,11 @@ where
             Err(_) => {
                 for j in 0..take {
                     let i = ids[start + j];
-                    let sid = streams.stream_for(i).expect("stream lost mid-wave");
+                    let sid = streams.stream_for(i, Some(c)).expect("stream lost mid-wave");
                     let delta = sessions[i].pending_delta().expect("pending delta");
                     let out = match c.forward_delta(sid, &delta) {
                         Ok(out) => out,
-                        Err(_) => recover_delta(model, streams, role, i, sessions)?,
+                        Err(_) => recover_delta(model, streams, c, role, i, sessions)?,
                     };
                     sessions[i].advance(&out);
                 }
@@ -686,6 +995,7 @@ where
 fn recover_delta<B, S>(
     model: &B,
     streams: &mut RoleStreams,
+    c: &dyn CachedForward,
     role: ModelRole,
     i: usize,
     sessions: &mut [S],
@@ -695,21 +1005,20 @@ where
     S: FleetSession,
 {
     let _span = telemetry::Span::start(telemetry::Stage::StreamRecovery);
-    streams.close(i);
+    streams.close(i, Some(c));
     for _ in 0..STREAM_RECOVER_ATTEMPTS {
-        let Some(sid) = streams.stream_for(i) else {
+        let Some(sid) = streams.stream_for(i, Some(c)) else {
             break;
         };
         sessions[i].rebase(role);
         let delta = sessions[i].pending_delta().expect("pending delta");
-        let c = streams.cached.expect("recovering a stream without a cached model");
         if let Ok(out) = c.forward_delta(sid, &delta) {
             streams.recovered += 1;
             return Ok(out);
         }
-        streams.close(i);
+        streams.close(i, Some(c));
     }
-    streams.mark_dead(i);
+    streams.mark_dead(i, Some(c));
     sessions[i].rebase(role);
     forward1_retry(model, sessions[i].pending_input().expect("pending input"))
 }
@@ -767,5 +1076,64 @@ mod tests {
             sample_ar_fleet(&target, &SampleCfg::default(), &[]).unwrap();
         assert!(runs.is_empty());
         assert_eq!(fleet.steps, 0);
+    }
+
+    /// Mid-flight admission (the continuous-batching move): sessions
+    /// admitted while others are half-done still produce bit-identical
+    /// outputs, and mixed AR/SD membership co-batches in one pool.
+    #[test]
+    fn pool_admits_mid_flight_without_moving_outputs() {
+        let target = MockModel::default();
+        let draft = MockModel { bias: 0.3, type_shift: 1, ..Default::default() };
+        let cap = target.max_bucket().min(draft.max_bucket());
+        let scfg = SampleCfg { num_types: 4, t_end: 15.0, max_events: 2048 };
+
+        let mut pool: SessionPool<AnySession> = SessionPool::new();
+        let mut fleet = FleetStats::default();
+        let mut got: std::collections::BTreeMap<u64, (Vec<Event>, SampleStats)> =
+            std::collections::BTreeMap::new();
+        pool.admit(
+            AnySession::Sd(Box::new(SdSession::new(cfg(), cap, Rng::new(21)))),
+            0,
+            true,
+        );
+        pool.admit(
+            AnySession::Ar(Box::new(ArSession::new(scfg.clone(), cap, Rng::new(22)))),
+            1,
+            true,
+        );
+        let mut steps = 0usize;
+        let mut late_admitted = false;
+        while !pool.is_empty() {
+            for (t, ev, st) in pool.step(&target, Some(&draft), &mut fleet).unwrap() {
+                got.insert(t, (ev, st));
+            }
+            steps += 1;
+            if steps == 3 && !late_admitted {
+                // join mid-flight, while tickets 0/1 are in progress
+                pool.admit(
+                    AnySession::Sd(Box::new(SdSession::new(cfg(), cap, Rng::new(23)))),
+                    2,
+                    true,
+                );
+                pool.admit(
+                    AnySession::Ar(Box::new(ArSession::new(scfg.clone(), cap, Rng::new(24)))),
+                    3,
+                    false,
+                );
+                late_admitted = true;
+            }
+        }
+        assert!(late_admitted, "fleet drained before the mid-flight admission");
+        assert_eq!(got.len(), 4);
+
+        let (ev_sd, _) = sample_sd(&target, &draft, &cfg(), &mut Rng::new(21)).unwrap();
+        assert_eq!(got[&0].0, ev_sd);
+        let (ev_ar, _) = sample_ar(&target, &scfg, &mut Rng::new(22)).unwrap();
+        assert_eq!(got[&1].0, ev_ar);
+        let (ev_sd2, _) = sample_sd(&target, &draft, &cfg(), &mut Rng::new(23)).unwrap();
+        assert_eq!(got[&2].0, ev_sd2);
+        let (ev_ar2, _) = sample_ar(&target, &scfg, &mut Rng::new(24)).unwrap();
+        assert_eq!(got[&3].0, ev_ar2);
     }
 }

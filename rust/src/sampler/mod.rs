@@ -17,7 +17,8 @@ pub mod sd;
 pub use ar::{sample_ar, ArSession, SampleCfg};
 pub use context::Context;
 pub use engine::{
-    fleet_seeds, sample_ar_fleet, sample_sd_fleet, FleetRuns, FleetSession, FleetStats, ModelRole,
+    fleet_seeds, sample_ar_fleet, sample_sd_fleet, AnySession, FleetRuns, FleetSession,
+    FleetStats, ModelRole, Retired, SessionPool,
 };
 pub use sd::{sample_sd, Gamma, SdCfg, SdPhase, SdSession};
 

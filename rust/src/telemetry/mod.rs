@@ -54,11 +54,14 @@ pub enum Stage {
     StreamRecovery,
     /// Wall-clock gap between consecutive emitted events, per session.
     EventLatency,
+    /// Time a request spent in the scheduler's pending queue between
+    /// submission and its admission verdict (admitted, shed or expired).
+    QueueWait,
 }
 
 impl Stage {
     /// Every stage, in wire/report order.
-    pub const ALL: [Stage; 8] = [
+    pub const ALL: [Stage; 9] = [
         Stage::DraftForward,
         Stage::VerifyForward,
         Stage::DeltaWave,
@@ -67,6 +70,7 @@ impl Stage {
         Stage::RetryBackoff,
         Stage::StreamRecovery,
         Stage::EventLatency,
+        Stage::QueueWait,
     ];
 
     /// Stable snake_case name used in JSON snapshots and reports.
@@ -80,6 +84,7 @@ impl Stage {
             Stage::RetryBackoff => "retry_backoff",
             Stage::StreamRecovery => "stream_recovery",
             Stage::EventLatency => "event_latency",
+            Stage::QueueWait => "queue_wait",
         }
     }
 }

@@ -290,6 +290,7 @@ fn server_chaos_errors_are_structured_and_recoverable_specs_are_exact() {
             draft_size: "draft".into(),
             cached: true,
             chaos: chaos.into(),
+            deadline_ms: 0,
         })
     };
 

@@ -201,6 +201,7 @@ fn server_roundtrip_ar_and_sd() {
                 draft_size: "draft".into(),
                 cached: true,
                 chaos: String::new(),
+                deadline_ms: 0,
             }))
             .unwrap();
         let (events, wall_ms) =
@@ -221,6 +222,7 @@ fn server_roundtrip_ar_and_sd() {
             draft_size: "draft".into(),
             cached: true,
             chaos: String::new(),
+            deadline_ms: 0,
         }))
         .unwrap();
     assert!(resp.contains("\"ok\":false"));
@@ -248,6 +250,7 @@ fn server_cached_flag_does_not_change_events() {
                 draft_size: "draft".into(),
                 cached,
                 chaos: String::new(),
+                deadline_ms: 0,
             })
         };
         let (on, _) =
@@ -279,6 +282,7 @@ fn server_fleet_matches_single_samples() {
         draft_size: "draft".into(),
         cached: true,
         chaos: String::new(),
+        deadline_ms: 0,
     };
     let resp = cli
         .call(&Request::SampleFleet(FleetRequest { base: base.clone(), n_seq: 3 }))
@@ -394,6 +398,7 @@ fn stats_reports_executor_counters() {
         draft_size: "draft".into(),
         cached: true,
         chaos: String::new(),
+        deadline_ms: 0,
     }))
     .unwrap();
 
@@ -460,6 +465,7 @@ fn metrics_roundtrip_and_delta_windows() {
             draft_size: "draft".into(),
             cached: true,
             chaos: String::new(),
+            deadline_ms: 0,
         }))
         .unwrap()
     };

@@ -1,0 +1,396 @@
+//! Continuous-batching scheduler tests (DESIGN.md §16).
+//!
+//! The core oracle: whatever mix of concurrent requests the scheduler
+//! co-batches — ar and sd, cached and uncached, with or without
+//! recoverable chaos underneath — every request's events must be
+//! bit-for-bit what a sequential per-request run with the same seeds
+//! produces. Admission control is pinned the other way around: overload
+//! must yield structured rejections whose counters reconcile with
+//! client-observed outcomes to the unit.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use tpp_sd::coordinator::{
+    build_sessions, Client, FleetRequest, Request, Router, SampleRequest, SchedReject, Scheduler,
+    SchedulerCfg, Server,
+};
+use tpp_sd::runtime::{Backend, ChaosBackend, FaultPlan};
+use tpp_sd::sampler::{
+    fleet_seeds, sample_ar_fleet, sample_sd_fleet, FleetRuns, FleetStats, Gamma, SampleCfg, SdCfg,
+};
+use tpp_sd::util::json::Json;
+use tpp_sd::Event;
+
+fn backend() -> Arc<dyn Backend> {
+    tpp_sd::runtime::discover_backend().expect("backend")
+}
+
+fn cfg(num_types: usize, t_end: f64) -> SampleCfg {
+    SampleCfg { num_types, t_end, max_events: 16 * 1024 }
+}
+
+/// Spin until `f` holds (the scheduler thread runs asynchronously; its
+/// counters are the only ordering handle the tests have).
+fn poll(what: &str, mut f: impl FnMut() -> bool) {
+    let t0 = std::time::Instant::now();
+    while !f() {
+        assert!(t0.elapsed() < Duration::from_secs(60), "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// The sequential per-request reference: the pre-scheduler serving path
+/// (one isolated fleet per request, cached streams).
+fn reference(
+    router: &Router,
+    method: &str,
+    gamma: usize,
+    cfg: &SampleCfg,
+    seeds: &[u64],
+) -> FleetRuns {
+    let pair = router.route("hawkes", "thp", "draft").unwrap();
+    let (runs, _) = match method {
+        "ar" => sample_ar_fleet(&pair.target, cfg, seeds).unwrap(),
+        "sd" => {
+            let sd = SdCfg { sample: cfg.clone(), gamma: Gamma::Fixed(gamma), ..Default::default() };
+            sample_sd_fleet(&pair.target, &pair.draft, &sd, seeds).unwrap()
+        }
+        "sd-adaptive" => {
+            let sd = SdCfg {
+                sample: cfg.clone(),
+                gamma: Gamma::Adaptive { init: gamma, min: 2, max: 4 * gamma.max(1) },
+                ..Default::default()
+            };
+            sample_sd_fleet(&pair.target, &pair.draft, &sd, seeds).unwrap()
+        }
+        other => panic!("{other}"),
+    };
+    runs
+}
+
+/// Concurrent mixed-method requests through one shared pool are
+/// bit-for-bit the sequential per-request runs — pool membership and
+/// cross-request wave composition must be output-invisible, for cached
+/// and uncached admissions alike.
+#[test]
+fn scheduler_matches_sequential_mixed_methods() {
+    let router = Arc::new(
+        Router::with_scheduler(backend(), 8, Duration::from_millis(1), SchedulerCfg::default())
+            .unwrap(),
+    );
+    let pair = router.route("hawkes", "thp", "draft").unwrap();
+    let c = cfg(pair.num_types, 3.0);
+    let sched = router.scheduler("hawkes", "thp", "draft").unwrap();
+
+    // (method, gamma, cached, base seed, n_seq) — enough mix that sd and
+    // ar sessions of several requests share waves.
+    let reqs: Vec<(&str, usize, bool, u64, usize)> = vec![
+        ("ar", 0, true, 100, 2),
+        ("sd", 5, true, 200, 3),
+        ("sd-adaptive", 4, true, 300, 2),
+        ("sd", 6, false, 400, 2),
+        ("ar", 0, false, 500, 1),
+    ];
+
+    let mut joins = Vec::new();
+    for &(method, gamma, cached, seed, n) in &reqs {
+        let pair = pair.clone();
+        let sched = sched.clone();
+        let c = c.clone();
+        joins.push(std::thread::spawn(move || {
+            let seeds = fleet_seeds(seed, n);
+            let sessions = build_sessions(&pair, method, gamma, c, &seeds).unwrap();
+            sched.submit(sessions, cached, None).unwrap()
+        }));
+    }
+    let got: Vec<FleetRuns> =
+        joins.into_iter().map(|j| j.join().unwrap().0).collect();
+
+    for ((method, gamma, _cached, seed, n), runs) in reqs.iter().zip(&got) {
+        // cached:false must not change events either, so one cached
+        // reference serves both admission modes
+        let want = reference(&router, method, *gamma, &c, &fleet_seeds(*seed, *n));
+        assert_eq!(runs.len(), *n, "{method}/{seed}");
+        for (i, ((ev, st), (ev_ref, _))) in runs.iter().zip(&want).enumerate() {
+            assert!(!ev.is_empty(), "{method}/{seed}: degenerate sequence {i}");
+            assert_eq!(ev, ev_ref, "{method}/{seed}: sequence {i} diverged");
+            assert!(tpp_sd::events::is_valid_sequence(ev, c.t_end));
+            assert_eq!(st.events, ev.len(), "{method}/{seed}: stats/events mismatch");
+        }
+    }
+
+    // full reconciliation: every submit completed, nothing shed/expired,
+    // the pool drained, and the cap was respected
+    let s = sched.stats();
+    assert_eq!(s.admitted.load(Ordering::Relaxed), reqs.len());
+    assert_eq!(s.completed.load(Ordering::Relaxed), reqs.len());
+    assert_eq!(s.shed.load(Ordering::Relaxed), 0);
+    assert_eq!(s.expired.load(Ordering::Relaxed), 0);
+    assert_eq!(s.failed.load(Ordering::Relaxed), 0);
+    assert_eq!(s.queued.load(Ordering::Relaxed), 0);
+    assert_eq!(s.live_sessions.load(Ordering::Relaxed), 0);
+    let peak = s.max_live_seen.load(Ordering::Relaxed);
+    assert!(peak >= 1 && peak <= sched.cfg().max_live, "peak {peak}");
+}
+
+/// The same oracle under recoverable injected faults: retries and stream
+/// recovery run *inside* the shared pool, and every co-batched request
+/// still gets the fault-free sequential events.
+#[test]
+fn scheduler_matches_sequential_under_recoverable_chaos() {
+    let plan = FaultPlan::parse("seed=13,err=0.15,loss=0.1").unwrap();
+    let chaotic: Arc<dyn Backend> = Arc::new(ChaosBackend::new(backend(), plan));
+    let router = Arc::new(
+        Router::with_scheduler(chaotic, 8, Duration::from_millis(1), SchedulerCfg::default())
+            .unwrap(),
+    );
+    // fault-free reference router over the same registry
+    let clean = Router::new(backend(), 8, Duration::from_millis(1)).unwrap();
+
+    let pair = router.route("hawkes", "thp", "draft").unwrap();
+    let c = cfg(pair.num_types, 2.5);
+    let sched = router.scheduler("hawkes", "thp", "draft").unwrap();
+
+    let reqs: Vec<(&str, usize, u64, usize)> =
+        vec![("sd", 5, 700, 2), ("ar", 0, 800, 2), ("sd", 4, 900, 1)];
+    let mut joins = Vec::new();
+    for &(method, gamma, seed, n) in &reqs {
+        let pair = pair.clone();
+        let sched = sched.clone();
+        let c = c.clone();
+        joins.push(std::thread::spawn(move || {
+            let sessions =
+                build_sessions(&pair, method, gamma, c, &fleet_seeds(seed, n)).unwrap();
+            sched.submit(sessions, true, None).unwrap()
+        }));
+    }
+    let got: Vec<FleetRuns> = joins.into_iter().map(|j| j.join().unwrap().0).collect();
+    for ((method, gamma, seed, n), runs) in reqs.iter().zip(&got) {
+        let want = reference(&clean, method, *gamma, &c, &fleet_seeds(*seed, *n));
+        for (i, ((ev, _), (ev_ref, _))) in runs.iter().zip(&want).enumerate() {
+            assert!(!ev.is_empty(), "{method}/{seed}: degenerate sequence {i}");
+            assert_eq!(ev, ev_ref, "{method}/{seed}: chaos changed sequence {i}");
+        }
+    }
+    assert_eq!(sched.stats().completed.load(Ordering::Relaxed), reqs.len());
+    assert_eq!(sched.stats().failed.load(Ordering::Relaxed), 0);
+}
+
+/// One `submit` of `n` ar sessions, ready to run on any thread.
+fn submit_ar(
+    sched: &Scheduler,
+    pair: &tpp_sd::coordinator::ModelPair,
+    c: &SampleCfg,
+    n: usize,
+    seed: u64,
+    deadline: Option<Duration>,
+) -> Result<(FleetRuns, FleetStats), SchedReject> {
+    let sessions = build_sessions(pair, "ar", 0, c.clone(), &fleet_seeds(seed, n)).unwrap();
+    sched.submit(sessions, true, deadline)
+}
+
+/// Admission control, driven deterministically: a request that can never
+/// fit is shed at submit; a full queue sheds; a zero deadline expires at
+/// admission; and the counters reconcile with the observed outcomes
+/// exactly — no submit is ever double- or un-counted.
+#[test]
+fn overload_sheds_and_deadlines_expire() {
+    // every forward sleeps 25ms, so one admitted request holds the pool
+    // long enough to build a queue behind it
+    let plan = FaultPlan::parse("seed=1,delay=1,delay-ms=25").unwrap();
+    let chaotic: Arc<dyn Backend> = Arc::new(ChaosBackend::new(backend(), plan));
+    let scfg = SchedulerCfg { max_live: 1, queue_depth: 1 };
+    let router =
+        Arc::new(Router::with_scheduler(chaotic, 8, Duration::from_millis(1), scfg).unwrap());
+    let pair = router.route("hawkes", "thp", "draft").unwrap();
+    let c = cfg(pair.num_types, 1.0);
+    let sched = router.scheduler("hawkes", "thp", "draft").unwrap();
+    let stats = sched.stats();
+
+    // (1) 2 sessions under max_live=1: can never be admitted → shed now
+    match submit_ar(&sched, &pair, &c, 2, 1, None) {
+        Err(SchedReject::Overloaded(m)) => assert!(m.contains("max_live"), "{m}"),
+        other => panic!("want Overloaded, got {other:?}"),
+    }
+    assert_eq!(stats.shed.load(Ordering::Relaxed), 1);
+
+    // (2) A occupies the pool...
+    let a = {
+        let (sched, pair, c) = (sched.clone(), pair.clone(), c.clone());
+        std::thread::spawn(move || submit_ar(&sched, &pair, &c, 1, 2, None))
+    };
+    poll("A admitted", || stats.admitted.load(Ordering::Relaxed) == 1);
+
+    // (3) ...B waits behind it with an already-passed deadline → expired
+    // when its turn comes, deterministically (Duration::ZERO)
+    let b = {
+        let (sched, pair, c) = (sched.clone(), pair.clone(), c.clone());
+        std::thread::spawn(move || submit_ar(&sched, &pair, &c, 1, 3, Some(Duration::ZERO)))
+    };
+    poll("B queued", || stats.queued.load(Ordering::Relaxed) == 1);
+
+    // (4) the queue (depth 1) is now full → C is shed immediately
+    match submit_ar(&sched, &pair, &c, 1, 4, None) {
+        Err(SchedReject::Overloaded(m)) => assert!(m.contains("queue full"), "{m}"),
+        other => panic!("want Overloaded, got {other:?}"),
+    }
+
+    let (runs, _) = a.join().unwrap().expect("A completes");
+    assert_eq!(runs.len(), 1);
+    assert!(!runs[0].0.is_empty());
+    match b.join().unwrap() {
+        Err(SchedReject::Expired(m)) => assert!(m.contains("deadline"), "{m}"),
+        other => panic!("want Expired, got {other:?}"),
+    }
+
+    // exact reconciliation: 4 submits = 1 completed + 2 shed + 1 expired
+    assert_eq!(stats.admitted.load(Ordering::Relaxed), 1);
+    assert_eq!(stats.completed.load(Ordering::Relaxed), 1);
+    assert_eq!(stats.shed.load(Ordering::Relaxed), 2);
+    assert_eq!(stats.expired.load(Ordering::Relaxed), 1);
+    assert_eq!(stats.failed.load(Ordering::Relaxed), 0);
+    assert_eq!(stats.queued.load(Ordering::Relaxed), 0);
+    assert_eq!(stats.live_sessions.load(Ordering::Relaxed), 0);
+    assert_eq!(stats.max_live_seen.load(Ordering::Relaxed), 1);
+}
+
+fn slow_fleet(seed: u64, deadline_ms: u64) -> Request {
+    Request::SampleFleet(FleetRequest {
+        base: SampleRequest {
+            encoder: "thp".into(),
+            method: "ar".into(),
+            t_end: 1.0,
+            seed,
+            chaos: "seed=2,delay=1,delay-ms=30".into(),
+            deadline_ms,
+            ..Default::default()
+        },
+        n_seq: 1,
+    })
+}
+
+/// Read the chaos scheduler's counter from a `stats` response (`None`
+/// until that scheduler exists).
+fn sched_counter(resp: &str, chaos: &str, key: &str) -> Option<f64> {
+    let j = Json::parse(resp).unwrap();
+    let Some(Json::Arr(entries)) = j.path("schedulers") else { return None };
+    entries
+        .iter()
+        .find(|e| e.str_at("chaos") == Some(chaos))
+        .and_then(|e| e.f64_at(&format!("stats.{key}")))
+}
+
+/// Wire-level overload: queue-full and deadline-expired come back as
+/// structured `{"ok":false,"err":...}` responses, and the scheduler
+/// counters reported by the `stats` op reconcile exactly with what the
+/// clients observed — 2 ok, 1 expired, 1 overloaded.
+#[test]
+fn server_overload_errors_reconcile_with_stats() {
+    let scfg = SchedulerCfg { max_live: 1, queue_depth: 2 };
+    let server = Server::bind_with_scheduler(
+        backend(),
+        "127.0.0.1:0",
+        8,
+        Duration::from_millis(1),
+        scfg,
+    )
+    .unwrap();
+    let addr = server.addr;
+    std::thread::spawn(move || server.serve());
+    let spec = "seed=2,delay=1,delay-ms=30";
+    let mut probe = Client::connect(addr).unwrap();
+    let mut stat = |key: &str| {
+        let resp = probe.call(&Request::Stats).unwrap();
+        sched_counter(&resp, spec, key)
+    };
+
+    // A1 admitted and slow; A2 queued behind it
+    let a1 = std::thread::spawn(move || {
+        Client::connect(addr).unwrap().call(&slow_fleet(10, 0)).unwrap()
+    });
+    poll("A1 admitted", || stat("admitted") == Some(1.0));
+    let a2 = std::thread::spawn(move || {
+        Client::connect(addr).unwrap().call(&slow_fleet(11, 0)).unwrap()
+    });
+    poll("A2 queued", || stat("queued") == Some(1.0));
+
+    // B queues behind A2 with a 1ms deadline — it cannot be admitted
+    // before A1 (and then A2) finish their multi-wave runs, so it expires
+    let b = std::thread::spawn(move || {
+        Client::connect(addr).unwrap().call(&slow_fleet(12, 1)).unwrap()
+    });
+    poll("B queued", || stat("queued") == Some(2.0));
+
+    // the queue (depth 2) is full → C is shed with a structured error
+    let c_resp = Client::connect(addr).unwrap().call(&slow_fleet(13, 0)).unwrap();
+    assert!(c_resp.contains(r#""ok":false"#), "{c_resp}");
+    assert!(c_resp.contains(r#""err":"overloaded""#), "{c_resp}");
+
+    let a1_resp = a1.join().unwrap();
+    let a2_resp = a2.join().unwrap();
+    let b_resp = b.join().unwrap();
+    for (name, resp) in [("A1", &a1_resp), ("A2", &a2_resp)] {
+        let seqs = tpp_sd::coordinator::protocol::parse_fleet_response(resp).unwrap();
+        assert_eq!(seqs.len(), 1, "{name}: {resp}");
+        assert!(!seqs[0].is_empty(), "{name}: degenerate run");
+    }
+    assert!(b_resp.contains(r#""err":"expired""#), "{b_resp}");
+
+    // client-observed outcomes == scheduler counters, to the unit
+    for (key, want) in [
+        ("admitted", 2.0),
+        ("completed", 2.0),
+        ("expired", 1.0),
+        ("shed", 1.0),
+        ("failed", 0.0),
+        ("queued", 0.0),
+        ("live_sessions", 0.0),
+        ("max_live_seen", 1.0),
+    ] {
+        assert_eq!(stat(key), Some(want), "counter {key}");
+    }
+}
+
+/// Concurrent wire clients hitting the shared pool get reproducible
+/// events: re-requesting the same seed sequentially afterwards returns
+/// byte-identical sequences.
+#[test]
+fn concurrent_wire_samples_are_reproducible() {
+    let server = Server::bind(backend(), "127.0.0.1:0", 8, Duration::from_millis(1)).unwrap();
+    let addr = server.addr;
+    std::thread::spawn(move || server.serve());
+
+    let sample = |seed: u64, method: &str| {
+        Request::Sample(SampleRequest {
+            encoder: "thp".into(),
+            method: method.into(),
+            gamma: 5,
+            t_end: 2.0,
+            seed,
+            ..Default::default()
+        })
+    };
+
+    let mix = [(20u64, "sd"), (21, "ar"), (22, "sd-adaptive"), (23, "sd")];
+    let joins: Vec<_> = mix
+        .iter()
+        .map(|&(seed, method)| {
+            let req = sample(seed, method);
+            std::thread::spawn(move || {
+                let resp = Client::connect(addr).unwrap().call(&req).unwrap();
+                tpp_sd::coordinator::protocol::parse_response(&resp).unwrap().0
+            })
+        })
+        .collect();
+    let concurrent: Vec<Vec<Event>> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+
+    let mut cli = Client::connect(addr).unwrap();
+    for (&(seed, method), got) in mix.iter().zip(&concurrent) {
+        let resp = cli.call(&sample(seed, method)).unwrap();
+        let (want, _) = tpp_sd::coordinator::protocol::parse_response(&resp).unwrap();
+        assert!(!want.is_empty(), "{method}/{seed}: degenerate sample");
+        assert_eq!(got, &want, "{method}/{seed}: concurrent vs sequential");
+    }
+}
