@@ -60,18 +60,17 @@ fn main() -> Result<()> {
                 let mut lat = Vec::new();
                 let mut events = 0usize;
                 for r in 0..requests {
-                    let req = Request::Sample(SampleRequest {
-                        dataset: datasets[(c + r) % datasets.len()].clone(),
-                        encoder: encoder.clone(),
-                        method: method.into(),
-                        gamma,
-                        t_end,
-                        seed: (c * 1000 + r) as u64,
-                        draft_size: "draft".into(),
-                        cached: true,
-                        chaos: chaos.clone(),
-                        deadline_ms: 0,
-                    });
+                    let req = Request::Sample(
+                        SampleRequest::builder()
+                            .dataset(datasets[(c + r) % datasets.len()].clone())
+                            .encoder(encoder.clone())
+                            .method(method)
+                            .gamma(gamma)
+                            .t_end(t_end)
+                            .seed((c * 1000 + r) as u64)
+                            .chaos(chaos.clone())
+                            .build(),
+                    );
                     let t = Instant::now();
                     let resp = cli.call(&req)?;
                     lat.push(t.elapsed().as_secs_f64());

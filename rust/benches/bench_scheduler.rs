@@ -208,7 +208,7 @@ fn main() -> Result<()> {
     println!("throughput ratio: {:.2}x (identical events: {events})", sched_eps / base_eps);
 
     // --- Phase 2: overload under tight limits ---
-    let tight_cfg = SchedulerCfg { max_live: 2, queue_depth: 2 };
+    let tight_cfg = SchedulerCfg::builder().max_live(2).queue_depth(2).build();
     let tight = Scheduler::spawn(pair.clone(), tight_cfg);
     let burst_cfg = SampleCfg { t_end: (t_end / 2.0).max(1.0), ..cfg.clone() };
     let joins: Vec<_> = (0..burst)
@@ -220,7 +220,7 @@ fn main() -> Result<()> {
                 tight
                     .submit(sessions, true, Some(Duration::from_millis(25)))
                     .map(|_| ())
-                    .map_err(|r| r.code())
+                    .map_err(|r| r.code().as_str())
             })
         })
         .collect();

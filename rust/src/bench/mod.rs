@@ -8,7 +8,7 @@ pub mod eval;
 pub mod timing;
 
 pub use eval::{real_cell, synthetic_cell, EvalCfg, RealCell, SyntheticCell};
-pub use timing::{bench_loop, executor_report, BenchResult};
+pub use timing::{bench_loop, executor_report, shard_report, BenchResult};
 
 use anyhow::Result;
 

@@ -4,7 +4,7 @@
 use std::sync::atomic::Ordering;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::BatcherStats;
+use crate::coordinator::{BatcherStats, ShardStats};
 use crate::util::math::{mean, percentile, std_dev};
 
 /// Timing samples of one benchmarked closure.
@@ -101,6 +101,25 @@ pub fn executor_report(name: &str, stats: &BatcherStats) -> String {
     )
 }
 
+/// One formatted shard-tier counter line — the single report format
+/// shared by the proxy tests and benches (the sibling of
+/// [`executor_report`], same never-drift rationale).
+pub fn shard_report(name: &str, stats: &ShardStats) -> String {
+    let load = |c: &std::sync::atomic::AtomicUsize| c.load(Ordering::Relaxed);
+    format!(
+        "shard {:<31} routed={:<6} spilled={} failovers={} ejections={} readmissions={} \
+         upstream_errors={} fanouts={}",
+        name,
+        load(&stats.routed),
+        load(&stats.spilled),
+        load(&stats.failovers),
+        load(&stats.ejections),
+        load(&stats.readmissions),
+        load(&stats.upstream_errors),
+        load(&stats.fanouts),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -113,5 +132,24 @@ mod tests {
         assert_eq!(r.iters, 10);
         assert!(r.mean_s() >= 0.0);
         assert!(r.report().contains("noop"));
+    }
+
+    #[test]
+    fn shard_report_carries_every_counter() {
+        let s = ShardStats::default();
+        s.routed.store(9, Ordering::Relaxed);
+        s.failovers.store(2, Ordering::Relaxed);
+        let line = shard_report("proxy", &s);
+        for needle in [
+            "routed=9",
+            "failovers=2",
+            "spilled=0",
+            "ejections=0",
+            "readmissions=0",
+            "upstream_errors=0",
+            "fanouts=0",
+        ] {
+            assert!(line.contains(needle), "missing {needle} in {line}");
+        }
     }
 }

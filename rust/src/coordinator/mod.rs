@@ -7,8 +7,12 @@
 //! nothing; bounded channels give the same backpressure):
 //!
 //! ```text
-//!   client conns ──> session threads ──┐ build_sessions + submit
-//!                                      v
+//!   client conns ──> tppsd proxy (optional shard tier, DESIGN.md §17)
+//!                      │ consistent routing by (dataset,encoder,draft_size)
+//!                      │ health checks · spill on overload · failover
+//!                      v
+//!   replica conns ──> session threads ──┐ build_sessions + submit
+//!                                       v
 //!   Scheduler (per routed pair): bounded FIFO admission queue
 //!        │   max_live cap, deadline check, shed when full
 //!        v
@@ -44,19 +48,27 @@
 //! std::thread::spawn(move || server.serve());
 //!
 //! let mut client = Client::connect(addr).unwrap();
-//! let req = Request::Sample(SampleRequest { t_end: 5.0, ..Default::default() });
+//! let req = Request::Sample(SampleRequest::builder().t_end(5.0).build());
 //! let line = client.call(&req).unwrap();
 //! assert!(line.contains("\"ok\":true"), "unexpected response: {line}");
 //! ```
+//!
+//! For horizontal scale, any number of such servers become replicas
+//! behind `tppsd proxy` (the [`shard`] module): same wire protocol, one
+//! address, health-checked failover.
 
 pub mod batcher;
 pub mod protocol;
 pub mod router;
 pub mod scheduler;
 pub mod server;
+pub mod shard;
 
 pub use batcher::{BatcherStats, ExecutorHandle, RetryPolicy};
-pub use protocol::{FleetRequest, Request, SampleRequest};
+pub use protocol::{ErrCode, Request, SampleRequest, SampleRequestBuilder};
 pub use router::{ModelPair, Router};
-pub use scheduler::{build_sessions, SchedReject, SchedStats, Scheduler, SchedulerCfg};
+pub use scheduler::{
+    build_sessions, SchedReject, SchedStats, Scheduler, SchedulerCfg, SchedulerCfgBuilder,
+};
 pub use server::{Client, Server};
+pub use shard::{ProxyServer, Shard, ShardCfg, ShardCfgBuilder, ShardStats};

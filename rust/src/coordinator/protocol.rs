@@ -1,10 +1,18 @@
 //! Wire protocol of the sampling server: one JSON object per line.
 //!
-//! Request:
-//!   {"op":"sample","dataset":"hawkes","encoder":"attnhp","method":"sd",
-//!    "gamma":10,"t_end":30.0,"seed":1,"draft_size":"draft","cached":true}
-//!   {"op":"sample_fleet", ...same fields..., "n_seq":8}
+//! **v2** (canonical, ADR-008) — one `sample` op covers both the single
+//! sequence and the fleet case via `n_seq` (default 1):
+//!
+//!   {"v":2,"op":"sample","dataset":"hawkes","encoder":"attnhp",
+//!    "method":"sd","gamma":10,"t_end":30.0,"seed":1,"draft_size":"draft",
+//!    "cached":true,"n_seq":8}
 //!   {"op":"ping"} | {"op":"stats"} | {"op":"metrics","delta":false}
+//!
+//! **v1** (compatibility aliases, parsed forever): requests without a
+//! `"v"` field (or with `"v":1`) keep their original meaning, and the old
+//! `sample_fleet` op still parses — it is the same merged request with a
+//! sequences-shaped response. The version gate is strict: a `"v"` other
+//! than 1 or 2 is rejected rather than guessed at.
 //!
 //! `metrics` returns the full telemetry snapshot (per-stage latency
 //! p50/p95/p99 + per-role acceptance, DESIGN.md §15) plus every
@@ -24,37 +32,106 @@
 //! request's backend from a [`crate::runtime::chaos::FaultPlan`] spec such
 //! as `"seed=7,err=0.2,loss=0.1"` (DESIGN.md §13). Recoverable plans
 //! return bit-identical events to the fault-free run — that is the point
-//! — while unrecoverable ones surface as `{"ok":false,...}` instead of a
+//! — while unrecoverable ones surface as a structured error instead of a
 //! hang.
 //!
 //! `"deadline_ms"` (default `0` = none) bounds the time a request may
 //! wait in the scheduler's admission queue (DESIGN.md §16): a request
 //! whose deadline passes before admission is rejected with
-//! `{"ok":false,"err":"expired",...}` instead of admitted to do work
-//! nobody is waiting for. A full admission queue sheds the request
-//! immediately with `{"ok":false,"err":"overloaded",...}`.
+//! `err=expired` instead of admitted to do work nobody is waiting for. A
+//! full admission queue sheds the request immediately with
+//! `err=overloaded`.
 //!
 //! Response:
 //!   {"ok":true,"events":[[t,k],...],"stats":{...}}
 //!   {"ok":true,"sequences":[[[t,k],...],...],"stats":{...},"fleet":{...}}
-//!   {"ok":false,"error":"..."}
-//!   {"ok":false,"err":"overloaded"|"expired"|"failed","error":"..."}
+//!   {"ok":false,"err":<code>,"detail":"...","error":"..."}
 //!
-//! The `"err"` code is machine-readable and stable; plain request errors
-//! (bad op, unknown dataset, …) carry only `"error"` text.
+//! **Errors are structured everywhere**: every failure carries a stable
+//! machine-readable `"err"` code from the closed [`ErrCode`] enum next to
+//! the human-readable `"detail"` text, built by the one shared
+//! [`error_response`] constructor (server, scheduler rejections, chaos
+//! paths and the proxy tier all go through it). `"error"` duplicates
+//! `"detail"` for v1 clients that predate the code field.
 //!
-//! `sample_fleet` runs `n_seq` sequences in lockstep on the fleet engine
-//! (DESIGN.md §11); sequence `i` is seeded `seed + i`, so its events are
-//! bit-for-bit what a `sample` request with `seed + i` would return. The
-//! server rejects `n_seq` beyond its per-request cap (64) with
-//! `{"ok":false,...}` rather than truncating. The response's `wall_ms` is
-//! the fleet's wall-clock (longest session), not the per-sequence sum.
+//! A sequences-shaped response runs `n_seq` sequences in lockstep on the
+//! fleet engine (DESIGN.md §11); sequence `i` is seeded `seed + i`, so
+//! its events are bit-for-bit what a request with `seed + i` and
+//! `n_seq:1` would return. The server rejects `n_seq` beyond its
+//! per-request cap (64) with `err=bad_request` rather than truncating.
+//! The response's `wall_ms` is the fleet's wall-clock (longest session),
+//! not the per-sequence sum.
 
 use anyhow::{bail, Result};
 
 use crate::events::Event;
 use crate::sampler::{FleetStats, SampleStats};
 use crate::util::json::{obj, Json};
+
+/// The closed set of machine-readable error codes every `{"ok":false}`
+/// response carries in its `"err"` field (ADR-008). Codes are stable wire
+/// strings — clients branch on them (back off, drop, retry elsewhere)
+/// without parsing prose, and the proxy tier's failover policy is keyed
+/// entirely off this enum.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrCode {
+    /// admission control shed the request (queue full / can never fit);
+    /// retrying *elsewhere* is reasonable, retrying *here* immediately is
+    /// not
+    Overloaded,
+    /// the request's deadline passed before admission; retrying cannot
+    /// help — the client already stopped waiting
+    Expired,
+    /// the serving replica failed mid-run (a wave failed beyond every
+    /// retry and recovery ladder); the request is idempotent, so another
+    /// replica may succeed
+    Failed,
+    /// the request itself is malformed (unknown op/dataset/method, bad
+    /// version, over-cap `n_seq`); every replica will reject it the same
+    /// way
+    BadRequest,
+    /// no backend is available to serve the request (proxy tier: every
+    /// replica ejected)
+    Unavailable,
+    /// the proxy exhausted its failover budget without any replica
+    /// returning a result
+    UpstreamExhausted,
+}
+
+impl ErrCode {
+    /// Every code, in wire/report order.
+    pub const ALL: [ErrCode; 6] = [
+        ErrCode::Overloaded,
+        ErrCode::Expired,
+        ErrCode::Failed,
+        ErrCode::BadRequest,
+        ErrCode::Unavailable,
+        ErrCode::UpstreamExhausted,
+    ];
+
+    /// The stable snake_case wire string of the `"err"` field.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrCode::Overloaded => "overloaded",
+            ErrCode::Expired => "expired",
+            ErrCode::Failed => "failed",
+            ErrCode::BadRequest => "bad_request",
+            ErrCode::Unavailable => "unavailable",
+            ErrCode::UpstreamExhausted => "upstream_exhausted",
+        }
+    }
+
+    /// Parse a wire string back into its code.
+    pub fn parse(s: &str) -> Option<ErrCode> {
+        ErrCode::ALL.into_iter().find(|c| c.as_str() == s)
+    }
+}
+
+impl std::fmt::Display for ErrCode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
 
 /// One client request (one JSON object per line).
 #[derive(Debug, Clone, PartialEq)]
@@ -70,14 +147,30 @@ pub enum Request {
         /// window the snapshot against the connection's previous call
         delta: bool,
     },
-    /// sample one sequence
+    /// sample `n_seq` sequences (the merged v2 op). The response is
+    /// events-shaped when `n_seq == 1` and sequences-shaped otherwise.
     Sample(SampleRequest),
-    /// sample many sequences in lockstep on the fleet engine
-    SampleFleet(FleetRequest),
+    /// the v1 `sample_fleet` alias: the same merged request, but the
+    /// response is *always* sequences-shaped (even at `n_seq == 1`),
+    /// exactly as v1 clients expect
+    SampleFleet(SampleRequest),
 }
 
-/// Parameters of a `sample` request.
+/// Parameters of a `sample` request (v2 merged op: `n_seq` sequences in
+/// lockstep, default 1).
+///
+/// The struct is `#[non_exhaustive]` so new wire knobs (this PR added
+/// `n_seq`; the shard tier will add more) never break downstream
+/// constructors — build one with [`SampleRequest::builder`]:
+///
+/// ```
+/// use tpp_sd::coordinator::SampleRequest;
+/// let req = SampleRequest::builder().t_end(5.0).seed(3).n_seq(2).build();
+/// assert_eq!(req.n_seq, 2);
+/// assert_eq!(req.dataset, "hawkes"); // wire default
+/// ```
 #[derive(Debug, Clone, PartialEq)]
+#[non_exhaustive]
 pub struct SampleRequest {
     /// dataset name from the registry
     pub dataset: String,
@@ -89,7 +182,7 @@ pub struct SampleRequest {
     pub gamma: usize,
     /// sampling window end T
     pub t_end: f64,
-    /// RNG seed
+    /// RNG seed of sequence 0 (sequence `i` is seeded `seed + i`)
     pub seed: u64,
     /// draft model size (`draft` | `draft2` | `draft3`)
     pub draft_size: String,
@@ -100,9 +193,11 @@ pub struct SampleRequest {
     /// parsed by [`crate::runtime::chaos::FaultPlan::parse`]
     pub chaos: String,
     /// most milliseconds the request may wait for admission (`0` = no
-    /// deadline); an expired request is rejected with
-    /// `{"ok":false,"err":"expired",...}`
+    /// deadline); an expired request is rejected with `err=expired`
     pub deadline_ms: u64,
+    /// sequences driven in lockstep on the fleet engine (default 1,
+    /// clamped ≥ 1; the server caps it per request)
+    pub n_seq: usize,
 }
 
 impl Default for SampleRequest {
@@ -120,18 +215,100 @@ impl Default for SampleRequest {
             cached: true,
             chaos: String::new(),
             deadline_ms: 0,
+            n_seq: 1,
         }
     }
 }
 
-/// Parameters of a `sample_fleet` request.
-#[derive(Debug, Clone, PartialEq)]
-pub struct FleetRequest {
-    /// shared sampling parameters; `base.seed` seeds sequence 0
-    pub base: SampleRequest,
-    /// number of sequences driven in lockstep (sequence `i` is seeded
-    /// `base.seed + i`)
-    pub n_seq: usize,
+impl SampleRequest {
+    /// A builder starting from the wire defaults (the only way to
+    /// construct one outside this crate — the struct is
+    /// `#[non_exhaustive]`).
+    pub fn builder() -> SampleRequestBuilder {
+        SampleRequestBuilder::default()
+    }
+
+    /// The consistent-routing key fields of this request, in shard-tier
+    /// order: requests for the same `(dataset, encoder, draft_size)`
+    /// route to the same home replica so its executors stay hot.
+    pub fn route_fields(&self) -> (&str, &str, &str) {
+        (&self.dataset, &self.encoder, &self.draft_size)
+    }
+}
+
+/// Builder for [`SampleRequest`] — starts from the wire defaults; every
+/// setter is optional and chainable.
+#[derive(Debug, Clone)]
+pub struct SampleRequestBuilder {
+    req: SampleRequest,
+}
+
+impl Default for SampleRequestBuilder {
+    fn default() -> Self {
+        SampleRequestBuilder { req: SampleRequest::default() }
+    }
+}
+
+impl SampleRequestBuilder {
+    /// dataset name from the registry
+    pub fn dataset(mut self, v: impl Into<String>) -> Self {
+        self.req.dataset = v.into();
+        self
+    }
+    /// encoder name (`thp` | `sahp` | `attnhp`)
+    pub fn encoder(mut self, v: impl Into<String>) -> Self {
+        self.req.encoder = v.into();
+        self
+    }
+    /// sampling method (`ar` | `sd` | `sd-adaptive`)
+    pub fn method(mut self, v: impl Into<String>) -> Self {
+        self.req.method = v.into();
+        self
+    }
+    /// draft length γ
+    pub fn gamma(mut self, v: usize) -> Self {
+        self.req.gamma = v;
+        self
+    }
+    /// sampling window end T
+    pub fn t_end(mut self, v: f64) -> Self {
+        self.req.t_end = v;
+        self
+    }
+    /// RNG seed of sequence 0
+    pub fn seed(mut self, v: u64) -> Self {
+        self.req.seed = v;
+        self
+    }
+    /// draft model size (`draft` | `draft2` | `draft3`)
+    pub fn draft_size(mut self, v: impl Into<String>) -> Self {
+        self.req.draft_size = v.into();
+        self
+    }
+    /// use incremental-forward streams when available
+    pub fn cached(mut self, v: bool) -> Self {
+        self.req.cached = v;
+        self
+    }
+    /// fault-injection spec (`""` = off)
+    pub fn chaos(mut self, v: impl Into<String>) -> Self {
+        self.req.chaos = v.into();
+        self
+    }
+    /// most milliseconds the request may wait for admission (0 = none)
+    pub fn deadline_ms(mut self, v: u64) -> Self {
+        self.req.deadline_ms = v;
+        self
+    }
+    /// sequences driven in lockstep (clamped ≥ 1)
+    pub fn n_seq(mut self, v: usize) -> Self {
+        self.req.n_seq = v.max(1);
+        self
+    }
+    /// Finish the builder.
+    pub fn build(self) -> SampleRequest {
+        self.req
+    }
 }
 
 fn parse_sample_fields(j: &Json) -> SampleRequest {
@@ -146,6 +323,7 @@ fn parse_sample_fields(j: &Json) -> SampleRequest {
         cached: j.bool_at("cached").unwrap_or(true),
         chaos: j.str_at("chaos").unwrap_or("").to_string(),
         deadline_ms: j.f64_at("deadline_ms").unwrap_or(0.0) as u64,
+        n_seq: j.usize_at("n_seq").unwrap_or(1).max(1),
     }
 }
 
@@ -162,13 +340,20 @@ fn sample_fields(op: &str, s: &SampleRequest) -> Vec<(&'static str, Json)> {
         ("cached", Json::Bool(s.cached)),
         ("chaos", Json::Str(s.chaos.clone())),
         ("deadline_ms", Json::Num(s.deadline_ms as f64)),
+        ("n_seq", Json::Num(s.n_seq as f64)),
     ]
 }
 
 impl Request {
-    /// Parse one request line.
+    /// Parse one request line. Accepts v1 (no `"v"` field or `"v":1`) and
+    /// v2 (`"v":2`) shapes; any other version is rejected — a future v3
+    /// must fail loudly here, not be half-parsed.
     pub fn parse(line: &str) -> Result<Request> {
         let j = Json::parse(line.trim())?;
+        let v = j.usize_at("v").unwrap_or(1);
+        if v != 1 && v != 2 {
+            bail!("unsupported protocol version {v} (this server speaks v1 and v2)");
+        }
         match j.str_at("op") {
             Some("ping") => Ok(Request::Ping),
             Some("stats") => Ok(Request::Stats),
@@ -176,15 +361,16 @@ impl Request {
                 Ok(Request::Metrics { delta: j.bool_at("delta").unwrap_or(false) })
             }
             Some("sample") => Ok(Request::Sample(parse_sample_fields(&j))),
-            Some("sample_fleet") => Ok(Request::SampleFleet(FleetRequest {
-                base: parse_sample_fields(&j),
-                n_seq: j.usize_at("n_seq").unwrap_or(1).max(1),
-            })),
+            // v1 alias — same merged request, sequences-shaped response
+            Some("sample_fleet") => Ok(Request::SampleFleet(parse_sample_fields(&j))),
             other => bail!("unknown op {other:?}"),
         }
     }
 
     /// Serialize to one request line (without the trailing newline).
+    /// `Sample` serializes canonically as v2; the `SampleFleet` alias
+    /// keeps its v1 shape so a proxy forwarding it is transparent to v1
+    /// backends and packet captures alike.
     pub fn to_line(&self) -> String {
         match self {
             Request::Ping => r#"{"op":"ping"}"#.to_string(),
@@ -194,12 +380,12 @@ impl Request {
                 ("delta", Json::Bool(*delta)),
             ])
             .to_string(),
-            Request::Sample(s) => obj(sample_fields("sample", s)).to_string(),
-            Request::SampleFleet(f) => {
-                let mut fields = sample_fields("sample_fleet", &f.base);
-                fields.push(("n_seq", Json::Num(f.n_seq as f64)));
+            Request::Sample(s) => {
+                let mut fields = sample_fields("sample", s);
+                fields.push(("v", Json::Num(2.0)));
                 obj(fields).to_string()
             }
+            Request::SampleFleet(s) => obj(sample_fields("sample_fleet", s)).to_string(),
         }
     }
 }
@@ -281,8 +467,9 @@ pub fn ok_response(events: &[Event], stats: &SampleStats) -> String {
     .to_string()
 }
 
-/// Success response of a `sample_fleet` request: every sequence's events,
-/// the aggregated sampling counters, and the engine's batching counters.
+/// Sequences-shaped success response (`sample` with `n_seq > 1`, and
+/// every `sample_fleet` alias request): every sequence's events, the
+/// aggregated sampling counters, and the engine's batching counters.
 ///
 /// `wall_ms` is the *fleet's* wall-clock (the longest session — sessions
 /// run in lockstep, so each session's own wall spans the whole run;
@@ -315,11 +502,15 @@ pub fn fleet_ok_response(runs: &[(Vec<Event>, SampleStats)], fleet: &FleetStats)
     .to_string()
 }
 
-/// Parse a `sample_fleet` response into per-sequence event streams.
+/// Parse a sequences-shaped response into per-sequence event streams.
 pub fn parse_fleet_response(line: &str) -> Result<Vec<Vec<Event>>> {
     let j = Json::parse(line.trim())?;
     if j.get("ok") != Some(&Json::Bool(true)) {
-        bail!("server error: {}", j.str_at("error").unwrap_or("?"));
+        bail!(
+            "server error [{}]: {}",
+            j.str_at("err").unwrap_or("?"),
+            j.str_at("detail").or_else(|| j.str_at("error")).unwrap_or("?")
+        );
     }
     let sequences = j
         .get("sequences")
@@ -329,34 +520,57 @@ pub fn parse_fleet_response(line: &str) -> Result<Vec<Vec<Event>>> {
     Ok(sequences)
 }
 
-/// Error response (`{"ok":false,...}`).
-pub fn err_response(msg: &str) -> String {
+/// The one error-response constructor (`{"ok":false,...}`) — server,
+/// scheduler rejections, chaos paths and the proxy all build their
+/// failures here, so the error shape cannot drift between surfaces.
+/// `"err"` is the stable machine-readable [`ErrCode`]; `"detail"` is the
+/// human-readable text; `"error"` duplicates `"detail"` for v1 clients.
+pub fn error_response(code: ErrCode, detail: &str) -> String {
     obj(vec![
         ("ok", Json::Bool(false)),
-        ("error", Json::Str(msg.to_string())),
+        ("err", Json::Str(code.as_str().to_string())),
+        ("detail", Json::Str(detail.to_string())),
+        ("error", Json::Str(detail.to_string())),
     ])
     .to_string()
 }
 
-/// Admission-control rejection: an error response with a stable
-/// machine-readable `"err"` code (`"overloaded"` | `"expired"` |
-/// `"failed"`) next to the human-readable `"error"` text, so clients can
-/// branch on the code (back off, drop, retry elsewhere) without parsing
-/// prose.
-pub fn overload_response(code: &str, msg: &str) -> String {
-    obj(vec![
-        ("ok", Json::Bool(false)),
-        ("err", Json::Str(code.to_string())),
-        ("error", Json::Str(msg.to_string())),
-    ])
-    .to_string()
+/// Classify a response line: `None` for `{"ok":true,...}`, otherwise the
+/// structured error code ([`ErrCode::Failed`] when the line is
+/// unparseable or carries no known code — a replica that answers garbage
+/// is treated like a replica that failed). The proxy's failover policy
+/// branches on exactly this.
+pub fn response_err_code(line: &str) -> Option<ErrCode> {
+    match Json::parse(line.trim()) {
+        Ok(j) if j.get("ok") == Some(&Json::Bool(true)) => None,
+        Ok(j) => Some(
+            j.str_at("err").and_then(ErrCode::parse).unwrap_or(ErrCode::Failed),
+        ),
+        Err(_) => Some(ErrCode::Failed),
+    }
+}
+
+/// The human-readable detail of an error response (empty when absent).
+pub fn response_detail(line: &str) -> String {
+    Json::parse(line.trim())
+        .ok()
+        .and_then(|j| {
+            j.str_at("detail")
+                .or_else(|| j.str_at("error"))
+                .map(str::to_string)
+        })
+        .unwrap_or_default()
 }
 
 /// Parse a server response into (events, wall_ms).
 pub fn parse_response(line: &str) -> Result<(Vec<Event>, f64)> {
     let j = Json::parse(line.trim())?;
     if j.get("ok") != Some(&Json::Bool(true)) {
-        bail!("server error: {}", j.str_at("error").unwrap_or("?"));
+        bail!(
+            "server error [{}]: {}",
+            j.str_at("err").unwrap_or("?"),
+            j.str_at("detail").or_else(|| j.str_at("error")).unwrap_or("?")
+        );
     }
     let events = j.get("events").map(events_from_json).unwrap_or_default();
     let wall = j.f64_at("stats.wall_ms").unwrap_or(f64::NAN);
@@ -369,33 +583,52 @@ mod tests {
 
     #[test]
     fn request_roundtrip() {
-        let r = Request::Sample(SampleRequest {
-            dataset: "taxi_sim".into(),
-            encoder: "thp".into(),
-            method: "sd".into(),
-            gamma: 7,
-            t_end: 42.5,
-            seed: 3,
-            draft_size: "draft".into(),
-            cached: false,
-            chaos: "seed=7,err=0.25,loss=0.1".into(),
-            deadline_ms: 250,
-        });
+        let r = Request::Sample(
+            SampleRequest::builder()
+                .dataset("taxi_sim")
+                .encoder("thp")
+                .method("sd")
+                .gamma(7)
+                .t_end(42.5)
+                .seed(3)
+                .draft_size("draft")
+                .cached(false)
+                .chaos("seed=7,err=0.25,loss=0.1")
+                .deadline_ms(250)
+                .build(),
+        );
         let line = r.to_line();
+        assert!(line.contains("\"v\":2"), "canonical sample line is v2: {line}");
         assert_eq!(Request::parse(&line).unwrap(), r);
         assert_eq!(Request::parse(r#"{"op":"ping"}"#).unwrap(), Request::Ping);
         assert!(Request::parse(r#"{"op":"bogus"}"#).is_err());
-        // `cached` defaults to true, `chaos` to off, `deadline_ms` to 0 —
-        // and the bare request parses to exactly `SampleRequest::default()`
+        // `cached` defaults to true, `chaos` to off, `deadline_ms` to 0,
+        // `n_seq` to 1 — and the bare request parses to exactly
+        // `SampleRequest::default()`
         match Request::parse(r#"{"op":"sample"}"#).unwrap() {
             Request::Sample(s) => {
                 assert!(s.cached);
                 assert!(s.chaos.is_empty());
                 assert_eq!(s.deadline_ms, 0);
+                assert_eq!(s.n_seq, 1);
                 assert_eq!(s, SampleRequest::default());
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn version_gate_is_strict() {
+        // absent, 1 and 2 all parse; anything else is rejected
+        for line in [
+            r#"{"op":"sample"}"#,
+            r#"{"op":"sample","v":1}"#,
+            r#"{"op":"sample","v":2}"#,
+        ] {
+            assert!(Request::parse(line).is_ok(), "{line}");
+        }
+        assert!(Request::parse(r#"{"op":"sample","v":3}"#).is_err());
+        assert!(Request::parse(r#"{"op":"ping","v":9}"#).is_err());
     }
 
     #[test]
@@ -408,6 +641,30 @@ mod tests {
         assert_eq!(
             Request::parse(r#"{"op":"metrics"}"#).unwrap(),
             Request::Metrics { delta: false }
+        );
+    }
+
+    #[test]
+    fn err_codes_roundtrip_and_error_response_is_structured() {
+        for code in ErrCode::ALL {
+            assert_eq!(ErrCode::parse(code.as_str()), Some(code));
+            let line = error_response(code, "boom");
+            assert_eq!(response_err_code(&line), Some(code));
+            assert_eq!(response_detail(&line), "boom");
+            // v1 compatibility: the free-form "error" field still carries
+            // the same text
+            let j = Json::parse(&line).unwrap();
+            assert_eq!(j.str_at("error"), Some("boom"));
+            assert_eq!(j.str_at("err"), Some(code.as_str()));
+        }
+        assert_eq!(ErrCode::parse("nonsense"), None);
+        // an ok response classifies as no error; garbage as Failed
+        let stats = SampleStats::default();
+        assert_eq!(response_err_code(&ok_response(&[], &stats)), None);
+        assert_eq!(response_err_code("not json"), Some(ErrCode::Failed));
+        assert_eq!(
+            response_err_code(r#"{"error":"legacy free-form","ok":false}"#),
+            Some(ErrCode::Failed)
         );
     }
 
@@ -453,31 +710,34 @@ mod tests {
         let line = ok_response(&evs, &stats);
         let (parsed, _) = parse_response(&line).unwrap();
         assert_eq!(parsed, evs);
-        assert!(parse_response(&err_response("boom")).is_err());
+        let err = parse_response(&error_response(ErrCode::Failed, "boom"));
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("failed") && msg.contains("boom"), "{msg}");
     }
 
     #[test]
     fn fleet_request_roundtrip() {
-        let r = Request::SampleFleet(FleetRequest {
-            base: SampleRequest {
-                dataset: "hawkes".into(),
-                encoder: "attnhp".into(),
-                method: "sd".into(),
-                gamma: 10,
-                t_end: 30.0,
-                seed: 5,
-                draft_size: "draft".into(),
-                cached: true,
-                chaos: String::new(),
-                deadline_ms: 0,
-            },
-            n_seq: 8,
-        });
+        let r = Request::SampleFleet(SampleRequest::builder().seed(5).n_seq(8).build());
         let line = r.to_line();
+        // the alias keeps its v1 wire shape: op=sample_fleet, no "v"
+        assert!(line.contains("\"op\":\"sample_fleet\""), "{line}");
+        assert!(!line.contains("\"v\":"), "{line}");
         assert_eq!(Request::parse(&line).unwrap(), r);
         // n_seq defaults to 1 and is clamped to ≥ 1
         match Request::parse(r#"{"op":"sample_fleet"}"#).unwrap() {
             Request::SampleFleet(f) => assert_eq!(f.n_seq, 1),
+            other => panic!("{other:?}"),
+        }
+        match Request::parse(r#"{"n_seq":0,"op":"sample_fleet"}"#).unwrap() {
+            Request::SampleFleet(f) => assert_eq!(f.n_seq, 1),
+            other => panic!("{other:?}"),
+        }
+        // v2 spells the same thing as op=sample + n_seq
+        match Request::parse(r#"{"n_seq":8,"op":"sample","seed":5,"v":2}"#).unwrap() {
+            Request::Sample(s) => {
+                assert_eq!(s.n_seq, 8);
+                assert_eq!(s.seed, 5);
+            }
             other => panic!("{other:?}"),
         }
     }
@@ -500,6 +760,15 @@ mod tests {
         assert_eq!(parsed[0], runs[0].0);
         assert_eq!(parsed[1], runs[1].0);
         assert_eq!(parsed[2], runs[2].0);
-        assert!(parse_fleet_response(&err_response("boom")).is_err());
+        assert!(parse_fleet_response(&error_response(ErrCode::Failed, "boom")).is_err());
+    }
+
+    #[test]
+    fn builder_clamps_and_defaults() {
+        let d = SampleRequest::builder().build();
+        assert_eq!(d, SampleRequest::default());
+        assert_eq!(SampleRequest::builder().n_seq(0).build().n_seq, 1);
+        let r = SampleRequest::builder().dataset("taxi_sim").n_seq(4).build();
+        assert_eq!(r.route_fields(), ("taxi_sim", "attnhp", "draft"));
     }
 }

@@ -4,6 +4,12 @@
 //! [`crate::runtime::Backend`] registry. It also owns one lazily spawned
 //! continuous-batching [`Scheduler`] per routed pair, so every request for
 //! a pair shares one rolling session pool (DESIGN.md §16).
+//!
+//! The in-process routing key `(dataset, encoder, draft_size)` is the
+//! same key the shard tier hashes for its consistent cross-replica
+//! routing ([`super::shard::route_key`]) — the proxy keeps sending a pair
+//! to the same replica precisely so this router's lazily-spawned
+//! executors and scheduler stay hot there.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};

@@ -52,7 +52,17 @@ use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
 
 /// Admission-control limits of a [`Scheduler`].
+///
+/// `#[non_exhaustive]` so future admission knobs never break downstream
+/// constructors — build one with [`SchedulerCfg::builder`]:
+///
+/// ```
+/// use tpp_sd::coordinator::SchedulerCfg;
+/// let cfg = SchedulerCfg::builder().max_live(2).queue_depth(4).build();
+/// assert_eq!(cfg.max_live, 2);
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[non_exhaustive]
 pub struct SchedulerCfg {
     /// Most sessions resident in the pool at once. A request is admitted
     /// only when all of its sessions fit under the cap (whole requests
@@ -66,6 +76,38 @@ pub struct SchedulerCfg {
 impl Default for SchedulerCfg {
     fn default() -> Self {
         SchedulerCfg { max_live: 64, queue_depth: 128 }
+    }
+}
+
+impl SchedulerCfg {
+    /// A builder starting from the defaults (the only way to construct
+    /// one outside this crate — the struct is `#[non_exhaustive]`).
+    pub fn builder() -> SchedulerCfgBuilder {
+        SchedulerCfgBuilder::default()
+    }
+}
+
+/// Builder for [`SchedulerCfg`] — starts from the defaults; every setter
+/// is optional and chainable.
+#[derive(Debug, Clone, Default)]
+pub struct SchedulerCfgBuilder {
+    cfg: SchedulerCfg,
+}
+
+impl SchedulerCfgBuilder {
+    /// Cap on co-resident sessions (clamped ≥ 1).
+    pub fn max_live(mut self, v: usize) -> Self {
+        self.cfg.max_live = v.max(1);
+        self
+    }
+    /// Bound on the pending admission queue (clamped ≥ 1).
+    pub fn queue_depth(mut self, v: usize) -> Self {
+        self.cfg.queue_depth = v.max(1);
+        self
+    }
+    /// Finish the builder.
+    pub fn build(self) -> SchedulerCfg {
+        self.cfg
     }
 }
 
@@ -86,16 +128,17 @@ pub enum SchedReject {
 }
 
 impl SchedReject {
-    /// The stable machine-readable code of the wire's `"err"` field.
-    pub fn code(&self) -> &'static str {
+    /// The stable machine-readable code of the wire's `"err"` field
+    /// (serialized via [`super::protocol::error_response`]).
+    pub fn code(&self) -> super::protocol::ErrCode {
         match self {
-            SchedReject::Overloaded(_) => "overloaded",
-            SchedReject::Expired(_) => "expired",
-            SchedReject::Failed(_) => "failed",
+            SchedReject::Overloaded(_) => super::protocol::ErrCode::Overloaded,
+            SchedReject::Expired(_) => super::protocol::ErrCode::Expired,
+            SchedReject::Failed(_) => super::protocol::ErrCode::Failed,
         }
     }
 
-    /// The human-readable detail of the wire's `"error"` field.
+    /// The human-readable detail of the wire's `"detail"` field.
     pub fn message(&self) -> &str {
         match self {
             SchedReject::Overloaded(m) | SchedReject::Expired(m) | SchedReject::Failed(m) => m,

@@ -27,8 +27,8 @@ use std::time::Duration;
 use anyhow::Result;
 
 use super::protocol::{
-    batcher_stats_json, err_response, fleet_ok_response, ok_response, overload_response,
-    FleetRequest, Request, SampleRequest,
+    batcher_stats_json, error_response, fleet_ok_response, ok_response, ErrCode, Request,
+    SampleRequest,
 };
 use super::router::Router;
 use super::scheduler::{build_sessions, SchedReject, SchedulerCfg};
@@ -183,21 +183,12 @@ fn handle_conn(stream: TcpStream, ctx: &Ctx) -> Result<()> {
                 metrics_base = now;
                 metrics_response(ctx, &view)
             }
-            Ok(Request::Sample(req)) => match ctx
-                .router_for(&req.chaos)
-                .and_then(|router| run_sample(&router, &req))
-            {
-                Ok(resp) => resp,
-                Err(e) => err_response(&format!("{e:#}")),
-            },
-            Ok(Request::SampleFleet(req)) => match ctx
-                .router_for(&req.base.chaos)
-                .and_then(|router| run_sample_fleet(&router, &req))
-            {
-                Ok(resp) => resp,
-                Err(e) => err_response(&format!("{e:#}")),
-            },
-            Err(e) => err_response(&format!("{e:#}")),
+            // v2 merged op: events-shaped at n_seq == 1, sequences-shaped
+            // beyond; the v1 `sample_fleet` alias is always
+            // sequences-shaped, exactly as v1 clients expect.
+            Ok(Request::Sample(req)) => dispatch_sample(ctx, &req, false),
+            Ok(Request::SampleFleet(req)) => dispatch_sample(ctx, &req, true),
+            Err(e) => error_response(ErrCode::BadRequest, &format!("{e:#}")),
         };
         writer.write_all(resp.as_bytes())?;
         writer.write_all(b"\n")?;
@@ -206,62 +197,66 @@ fn handle_conn(stream: TcpStream, ctx: &Ctx) -> Result<()> {
 }
 
 /// Map a scheduler rejection to its wire form: a structured
-/// `{"ok":false,"err":code,"error":msg}` the client can branch on.
+/// `{"ok":false,"err":code,"detail":msg,...}` the client can branch on.
 fn reject_response(rej: &SchedReject) -> String {
-    overload_response(rej.code(), rej.message())
+    error_response(rej.code(), rej.message())
 }
 
-/// Shared dispatch of both sample ops: build one session per seed and
-/// submit the whole request to the pair's continuous-batching scheduler.
-/// The single-sample op is the 1-seed case — fleet(N=1) is bit-for-bit the
-/// blocking sampler (`rust/tests/fleet.rs`, `rust/tests/scheduler.rs`), so
-/// the server has exactly one dispatch and every concurrent request
-/// co-batches in the same pool.
+/// Hard cap on sequences per request (keeps one connection from
+/// monopolizing the executors). Requests beyond it are rejected with
+/// `err=bad_request`, not silently truncated.
+const MAX_FLEET_SEQ: usize = 64;
+
+/// Route + run one sample request and map every failure class onto its
+/// [`ErrCode`]: request-content problems (bad chaos spec, unknown
+/// dataset/encoder/method, over-cap `n_seq`) are `bad_request` — every
+/// replica would reject them identically, so a proxy must not retry them
+/// — while scheduler rejections keep their own codes.
+fn dispatch_sample(ctx: &Ctx, req: &SampleRequest, fleet_shape: bool) -> String {
+    let router = match ctx.router_for(&req.chaos) {
+        Ok(r) => r,
+        Err(e) => return error_response(ErrCode::BadRequest, &format!("{e:#}")),
+    };
+    match run_sample(&router, req, fleet_shape) {
+        Ok(resp) => resp,
+        Err(e) => error_response(ErrCode::BadRequest, &format!("{e:#}")),
+    }
+}
+
+/// The one dispatch path of both request shapes: build one session per
+/// seed and submit the whole request to the pair's continuous-batching
+/// scheduler. `n_seq == 1` is just the 1-seed case — fleet(N=1) is
+/// bit-for-bit the blocking sampler (`rust/tests/fleet.rs`,
+/// `rust/tests/scheduler.rs`), so every concurrent request co-batches in
+/// the same pool whatever its size; `fleet_shape` only picks the response
+/// rendering (the v1 `sample_fleet` alias is always sequences-shaped).
 ///
 /// `cached: false` admits the request's sessions without incremental
 /// streams, forcing full-window forwards — the wire-level A/B knob; the
 /// events are bit-identical either way.
-fn run_sample(router: &Router, req: &SampleRequest) -> Result<String> {
+fn run_sample(router: &Router, req: &SampleRequest, fleet_shape: bool) -> Result<String> {
+    if req.n_seq > MAX_FLEET_SEQ {
+        anyhow::bail!("n_seq {} exceeds the per-request cap {MAX_FLEET_SEQ}", req.n_seq);
+    }
     let pair = router.route(&req.dataset, &req.encoder, &req.draft_size)?;
     let cfg = SampleCfg {
         num_types: pair.num_types,
         t_end: req.t_end,
         max_events: 16 * 1024,
     };
-    let sessions = build_sessions(&pair, &req.method, req.gamma, cfg, &[req.seed])?;
+    let seeds = fleet_seeds(req.seed, req.n_seq.max(1));
+    let sessions = build_sessions(&pair, &req.method, req.gamma, cfg, &seeds)?;
     let sched = router.scheduler(&req.dataset, &req.encoder, &req.draft_size)?;
     let deadline = (req.deadline_ms > 0).then(|| Duration::from_millis(req.deadline_ms));
     match sched.submit(sessions, req.cached, deadline) {
-        Ok((mut runs, _)) => {
-            let (events, stats) = runs.pop().expect("one run per seed");
-            Ok(ok_response(&events, &stats))
+        Ok((mut runs, fleet)) => {
+            if fleet_shape || req.n_seq > 1 {
+                Ok(fleet_ok_response(&runs, &fleet))
+            } else {
+                let (events, stats) = runs.pop().expect("one run per seed");
+                Ok(ok_response(&events, &stats))
+            }
         }
-        Err(rej) => Ok(reject_response(&rej)),
-    }
-}
-
-/// Hard cap on sequences per fleet request (keeps one connection from
-/// monopolizing the executors). Requests beyond it are rejected, not
-/// silently truncated.
-const MAX_FLEET_SEQ: usize = 64;
-
-fn run_sample_fleet(router: &Router, req: &FleetRequest) -> Result<String> {
-    let base = &req.base;
-    if req.n_seq > MAX_FLEET_SEQ {
-        anyhow::bail!("n_seq {} exceeds the per-request cap {MAX_FLEET_SEQ}", req.n_seq);
-    }
-    let pair = router.route(&base.dataset, &base.encoder, &base.draft_size)?;
-    let cfg = SampleCfg {
-        num_types: pair.num_types,
-        t_end: base.t_end,
-        max_events: 16 * 1024,
-    };
-    let seeds = fleet_seeds(base.seed, req.n_seq.max(1));
-    let sessions = build_sessions(&pair, &base.method, base.gamma, cfg, &seeds)?;
-    let sched = router.scheduler(&base.dataset, &base.encoder, &base.draft_size)?;
-    let deadline = (base.deadline_ms > 0).then(|| Duration::from_millis(base.deadline_ms));
-    match sched.submit(sessions, base.cached, deadline) {
-        Ok((runs, fleet)) => Ok(fleet_ok_response(&runs, &fleet)),
         Err(rej) => Ok(reject_response(&rej)),
     }
 }
@@ -358,6 +353,15 @@ impl Client {
         Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
     }
 
+    /// Connect with a bounded connect wait — the proxy tier's upstream
+    /// dials go through this so a dead replica costs `timeout`, not the
+    /// OS's (much longer) SYN retry ladder.
+    pub fn connect_timeout(addr: std::net::SocketAddr, timeout: Duration) -> Result<Client> {
+        let stream = TcpStream::connect_timeout(&addr, timeout)?;
+        stream.set_read_timeout(Some(CLIENT_READ_TIMEOUT))?;
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
     /// Adjust the read timeout (`None` blocks forever). The reader and
     /// writer share one socket, so this covers [`Client::call`]'s reply
     /// wait.
@@ -373,12 +377,19 @@ impl Client {
     /// downstream JSON parsing misreport a dead server as a protocol
     /// error.
     pub fn call(&mut self, req: &Request) -> Result<String> {
-        self.writer.write_all(req.to_line().as_bytes())?;
+        self.call_line(&req.to_line())
+    }
+
+    /// Send one raw request line and read one response line — the
+    /// forwarding primitive of the proxy tier, which relays an
+    /// already-serialized request without re-interpreting it.
+    pub fn call_line(&mut self, line: &str) -> Result<String> {
+        self.writer.write_all(line.as_bytes())?;
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
-        let mut line = String::new();
-        let n = self.reader.read_line(&mut line)?;
+        let mut resp = String::new();
+        let n = self.reader.read_line(&mut resp)?;
         anyhow::ensure!(n > 0, "connection closed: server hung up before sending a response");
-        Ok(line)
+        Ok(resp)
     }
 }

@@ -1,0 +1,814 @@
+//! Shard/replica tier (DESIGN.md §17): `tppsd proxy` — a wire-compatible
+//! front-end that routes each request to one of N backend `tppsd serve`
+//! replicas.
+//!
+//! The proxy speaks exactly the protocol of `serve` (a client cannot tell
+//! which it is talking to, except for the extra fields in `ping`/`stats`
+//! responses) and adds four behaviours:
+//!
+//! - **Consistent routing**: sample requests hash their
+//!   `(dataset, encoder, draft_size)` routing key ([`route_key`], FNV-1a)
+//!   to a *home* replica, so each replica's continuous-batching scheduler
+//!   keeps co-batching the same model pair and its executors stay hot.
+//!   Routing never touches sampler RNG — a seeded request returns
+//!   bit-identical events whichever replica serves it
+//!   (`rust/tests/shard.rs`).
+//! - **Spill-to-least-loaded**: a home replica answering
+//!   `err=overloaded` (its admission queue is full — the scheduler's own
+//!   load-shedding signal) has the request re-sent once per attempt to
+//!   the least-loaded healthy replica instead of being bounced back to
+//!   the client. Only when *no* other replica is available does the
+//!   overload verdict surface.
+//! - **Health checks**: a background prober `ping`s every replica each
+//!   [`ShardCfg::health_interval`]; [`ShardCfg::eject_after`] consecutive
+//!   failures (probe or transport) eject the replica from routing, and
+//!   probes keep running while ejected — one success re-admits it.
+//! - **Transparent failover**: sample requests are idempotent (seeded),
+//!   so a replica that fails mid-run (`err=failed`/`unavailable`, or a
+//!   transport error) has the request retried on another healthy replica
+//!   under the existing [`RetryPolicy`] budget (attempts, exponential
+//!   backoff, deadline). `err=expired` and `err=bad_request` are returned
+//!   verbatim — every replica would answer those identically, so retrying
+//!   only burns budget. When the budget runs dry the client gets
+//!   `err=upstream_exhausted`.
+//!
+//! `stats`/`metrics` fan out to every replica and return an aggregated
+//! response: a per-backend section (each replica's full response,
+//! embedded), the summed scheduler counters across replicas
+//! (`schedulers_merged` — gauges `max_live`/`queue_depth`/`max_live_seen`
+//! take the max instead), and the proxy's own [`ShardStats`]. Each
+//! upstream round-trip is timed under
+//! [`Stage::ProxyUpstream`](crate::telemetry::Stage::ProxyUpstream).
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::batcher::RetryPolicy;
+use super::protocol::{
+    error_response, response_detail, response_err_code, ErrCode, Request, SampleRequest,
+};
+use super::server::{Client, CLIENT_READ_TIMEOUT};
+use crate::telemetry::{self, Stage};
+use crate::util::json::{obj, Json};
+
+/// Health-check and failover knobs of a [`Shard`].
+///
+/// `#[non_exhaustive]` like every wire-adjacent config struct (ADR-008) —
+/// build one with [`ShardCfg::builder`]:
+///
+/// ```
+/// use std::time::Duration;
+/// use tpp_sd::coordinator::ShardCfg;
+/// let cfg = ShardCfg::builder().eject_after(2).health_interval(Duration::from_millis(50)).build();
+/// assert_eq!(cfg.eject_after, 2);
+/// ```
+#[derive(Debug, Clone)]
+#[non_exhaustive]
+pub struct ShardCfg {
+    /// period of the background `ping` prober ([`Duration::ZERO`]
+    /// disables the prober — tests drive health transitions directly)
+    pub health_interval: Duration,
+    /// consecutive probe/transport failures that eject a replica from
+    /// routing (≥ 1); one successful probe re-admits it
+    pub eject_after: u32,
+    /// failover budget of one sample request: `max_attempts` replicas
+    /// tried, exponential `backoff` between failover retries (spills
+    /// re-dispatch immediately), all under `deadline`
+    pub retry: RetryPolicy,
+    /// bound on each upstream TCP dial (a dead replica costs this, not
+    /// the OS's SYN retry ladder)
+    pub connect_timeout: Duration,
+    /// read timeout of pooled upstream connections (covers one full
+    /// sample round-trip)
+    pub read_timeout: Duration,
+}
+
+impl Default for ShardCfg {
+    fn default() -> Self {
+        ShardCfg {
+            health_interval: Duration::from_millis(250),
+            eject_after: 3,
+            retry: RetryPolicy::default(),
+            connect_timeout: Duration::from_secs(2),
+            read_timeout: CLIENT_READ_TIMEOUT,
+        }
+    }
+}
+
+impl ShardCfg {
+    /// A builder starting from the defaults (the only way to construct
+    /// one outside this crate — the struct is `#[non_exhaustive]`).
+    pub fn builder() -> ShardCfgBuilder {
+        ShardCfgBuilder::default()
+    }
+}
+
+/// Builder for [`ShardCfg`] — starts from the defaults; every setter is
+/// optional and chainable.
+#[derive(Debug, Clone, Default)]
+pub struct ShardCfgBuilder {
+    cfg: ShardCfg,
+}
+
+impl ShardCfgBuilder {
+    /// period of the background `ping` prober (`Duration::ZERO` disables)
+    pub fn health_interval(mut self, v: Duration) -> Self {
+        self.cfg.health_interval = v;
+        self
+    }
+    /// consecutive failures that eject a replica (clamped ≥ 1)
+    pub fn eject_after(mut self, v: u32) -> Self {
+        self.cfg.eject_after = v.max(1);
+        self
+    }
+    /// failover budget (attempts / backoff / deadline)
+    pub fn retry(mut self, v: RetryPolicy) -> Self {
+        self.cfg.retry = v;
+        self
+    }
+    /// bound on each upstream TCP dial
+    pub fn connect_timeout(mut self, v: Duration) -> Self {
+        self.cfg.connect_timeout = v;
+        self
+    }
+    /// read timeout of pooled upstream connections
+    pub fn read_timeout(mut self, v: Duration) -> Self {
+        self.cfg.read_timeout = v;
+        self
+    }
+    /// Finish the builder.
+    pub fn build(self) -> ShardCfg {
+        self.cfg
+    }
+}
+
+/// Lock-free proxy-tier counters, the shard's reconciliation surface
+/// (`rust/tests/shard.rs` pins them against client-observed outcomes).
+/// Serialized into every aggregated `stats`/`metrics` response and
+/// printed by [`crate::bench::shard_report`].
+#[derive(Debug, Default)]
+pub struct ShardStats {
+    /// sample requests dispatched through the shard (each counted once,
+    /// however many attempts it took)
+    pub routed: AtomicUsize,
+    /// re-dispatches to the least-loaded replica after a home
+    /// `err=overloaded` verdict
+    pub spilled: AtomicUsize,
+    /// failover retries on another replica after a replica failure
+    /// (structured `failed`/`unavailable` or a transport error)
+    pub failovers: AtomicUsize,
+    /// replicas ejected from routing after consecutive failures
+    pub ejections: AtomicUsize,
+    /// ejected replicas re-admitted by a successful probe
+    pub readmissions: AtomicUsize,
+    /// individual upstream attempts that failed (transport or structured
+    /// replica failure)
+    pub upstream_errors: AtomicUsize,
+    /// `stats`/`metrics` fan-outs served
+    pub fanouts: AtomicUsize,
+}
+
+/// Grow cap of each backend's idle-connection free list.
+const CONN_POOL_CAP: usize = 4;
+
+/// Backoff growth cap between failover retries.
+const MAX_FAILOVER_BACKOFF: Duration = Duration::from_millis(100);
+
+/// Mutable slot state: health + the idle-connection free list.
+struct SlotState {
+    healthy: bool,
+    consecutive_failures: u32,
+    pool: Vec<Client>,
+}
+
+/// One backend replica: its address, health state, idle-connection pool
+/// and per-backend counters.
+pub struct BackendSlot {
+    /// the `host:port` string the proxy was configured with
+    pub label: String,
+    /// the resolved socket address
+    pub addr: SocketAddr,
+    state: Mutex<SlotState>,
+    in_flight: AtomicUsize,
+    /// successful sample responses served by this replica
+    pub served: AtomicUsize,
+    /// failed upstream attempts against this replica
+    pub errors: AtomicUsize,
+}
+
+impl BackendSlot {
+    fn new(label: &str) -> Result<BackendSlot> {
+        let addr = label
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("cannot resolve backend address {label}"))?;
+        Ok(BackendSlot {
+            label: label.to_string(),
+            addr,
+            state: Mutex::new(SlotState {
+                healthy: true,
+                consecutive_failures: 0,
+                pool: Vec::new(),
+            }),
+            in_flight: AtomicUsize::new(0),
+            served: AtomicUsize::new(0),
+            errors: AtomicUsize::new(0),
+        })
+    }
+
+    /// Is this replica currently in the routing set?
+    pub fn healthy(&self) -> bool {
+        self.state.lock().unwrap().healthy
+    }
+
+    /// Upstream calls in flight right now (the spill target picks the
+    /// minimum of these).
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Relaxed)
+    }
+
+    /// Consecutive probe/transport failures so far.
+    pub fn consecutive_failures(&self) -> u32 {
+        self.state.lock().unwrap().consecutive_failures
+    }
+
+    /// Record a probe/transport failure; returns true when this crossed
+    /// the ejection threshold (healthy → ejected). Pooled connections to
+    /// a failing replica are dropped — they are suspect.
+    fn note_failure(&self, eject_after: u32) -> bool {
+        let mut st = self.state.lock().unwrap();
+        st.consecutive_failures = st.consecutive_failures.saturating_add(1);
+        st.pool.clear();
+        if st.healthy && st.consecutive_failures >= eject_after {
+            st.healthy = false;
+            return true;
+        }
+        false
+    }
+
+    /// Record a successful round-trip; returns true when this re-admitted
+    /// an ejected replica.
+    fn note_success(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        st.consecutive_failures = 0;
+        if !st.healthy {
+            st.healthy = true;
+            return true;
+        }
+        false
+    }
+
+    /// One upstream round-trip over a pooled (or fresh) connection. On
+    /// success the connection returns to the free list; on error it is
+    /// dropped — a half-read line would desynchronize the stream.
+    fn call(&self, line: &str, cfg: &ShardCfg) -> Result<String> {
+        let pooled = self.state.lock().unwrap().pool.pop();
+        let mut cli = match pooled {
+            Some(c) => c,
+            None => {
+                let c = Client::connect_timeout(self.addr, cfg.connect_timeout)?;
+                c.set_read_timeout(Some(cfg.read_timeout))?;
+                c
+            }
+        };
+        self.in_flight.fetch_add(1, Ordering::Relaxed);
+        let out = {
+            let _span = telemetry::Span::start(Stage::ProxyUpstream);
+            cli.call_line(line)
+        };
+        self.in_flight.fetch_sub(1, Ordering::Relaxed);
+        let resp = out?;
+        let mut st = self.state.lock().unwrap();
+        if st.pool.len() < CONN_POOL_CAP {
+            st.pool.push(cli);
+        }
+        Ok(resp)
+    }
+
+    fn json(&self) -> Json {
+        let st = self.state.lock().unwrap();
+        obj(vec![
+            ("addr", Json::Str(self.label.clone())),
+            ("healthy", Json::Bool(st.healthy)),
+            ("consecutive_failures", Json::Num(st.consecutive_failures as f64)),
+            ("in_flight", Json::Num(self.in_flight.load(Ordering::Relaxed) as f64)),
+            ("served", Json::Num(self.served.load(Ordering::Relaxed) as f64)),
+            ("errors", Json::Num(self.errors.load(Ordering::Relaxed) as f64)),
+        ])
+    }
+}
+
+/// Consistent-routing key of a sample request: FNV-1a over
+/// `(dataset, encoder, draft_size)`. Deterministic across processes and
+/// runs (no `RandomState`), so tests — and operators reading logs — can
+/// predict a request's home replica.
+pub fn route_key(dataset: &str, encoder: &str, draft_size: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for part in [dataset, "/", encoder, "/", draft_size] {
+        for b in part.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// The home replica index of a routing key among `n` backends.
+pub fn home_index(key: u64, n: usize) -> usize {
+    (key % n.max(1) as u64) as usize
+}
+
+/// The routing/health/failover core of the proxy tier: N backend replicas
+/// plus the policy that picks one per request. See the module docs for
+/// the four behaviours; [`ProxyServer`] is the TCP front-end over this.
+pub struct Shard {
+    backends: Vec<Arc<BackendSlot>>,
+    cfg: ShardCfg,
+    stats: Arc<ShardStats>,
+}
+
+impl Shard {
+    /// Build a shard over `host:port` backend addresses and start the
+    /// background health prober (unless `cfg.health_interval` is zero).
+    pub fn new(addrs: &[String], cfg: ShardCfg) -> Result<Shard> {
+        anyhow::ensure!(!addrs.is_empty(), "a shard needs at least one backend address");
+        let mut backends = Vec::with_capacity(addrs.len());
+        for a in addrs {
+            backends.push(Arc::new(BackendSlot::new(a)?));
+        }
+        let stats = Arc::new(ShardStats::default());
+        if cfg.health_interval > Duration::ZERO {
+            let backends = backends.clone();
+            let stats = stats.clone();
+            let cfg = cfg.clone();
+            std::thread::spawn(move || health_loop(&backends, &stats, &cfg));
+        }
+        Ok(Shard { backends, cfg, stats })
+    }
+
+    /// The proxy-tier counters.
+    pub fn stats(&self) -> &ShardStats {
+        &self.stats
+    }
+
+    /// The backend replicas, in configuration order.
+    pub fn backends(&self) -> &[Arc<BackendSlot>] {
+        &self.backends
+    }
+
+    /// Replicas currently in the routing set.
+    pub fn healthy_count(&self) -> usize {
+        self.backends.iter().filter(|b| b.healthy()).count()
+    }
+
+    /// The [`ShardStats`] + per-backend health as one JSON object (the
+    /// `"shard"` section of aggregated responses).
+    pub fn stats_json(&self) -> Json {
+        let load = |a: &AtomicUsize| Json::Num(a.load(Ordering::Relaxed) as f64);
+        obj(vec![
+            ("routed", load(&self.stats.routed)),
+            ("spilled", load(&self.stats.spilled)),
+            ("failovers", load(&self.stats.failovers)),
+            ("ejections", load(&self.stats.ejections)),
+            ("readmissions", load(&self.stats.readmissions)),
+            ("upstream_errors", load(&self.stats.upstream_errors)),
+            ("fanouts", load(&self.stats.fanouts)),
+            ("healthy", Json::Num(self.healthy_count() as f64)),
+            (
+                "backends",
+                Json::Arr(self.backends.iter().map(|b| b.json()).collect()),
+            ),
+        ])
+    }
+
+    /// Serve one parsed request: answer `ping` locally, fan `stats`/
+    /// `metrics` out to every replica, and route/failover sample
+    /// requests. Always returns a response line (errors are structured,
+    /// never panics across the wire).
+    pub fn dispatch(&self, req: &Request) -> String {
+        match req {
+            Request::Ping => obj(vec![
+                ("ok", Json::Bool(true)),
+                ("pong", Json::Bool(true)),
+                ("proxy", Json::Bool(true)),
+                ("backends", Json::Num(self.backends.len() as f64)),
+                ("healthy", Json::Num(self.healthy_count() as f64)),
+            ])
+            .to_string(),
+            Request::Stats | Request::Metrics { .. } => self.fan_out(&req.to_line()),
+            Request::Sample(s) | Request::SampleFleet(s) => self.proxy_sample(s, &req.to_line()),
+        }
+    }
+
+    /// The eligible replica for the next attempt: the home replica when
+    /// it is healthy and untried, else the least-loaded healthy untried
+    /// one (ties break on configuration order). `None` when the routing
+    /// set is exhausted.
+    fn pick(&self, home: usize, tried: &[usize]) -> Option<usize> {
+        let eligible = |i: usize| !tried.contains(&i) && self.backends[i].healthy();
+        if eligible(home) {
+            return Some(home);
+        }
+        self.backends
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| eligible(*i))
+            .min_by_key(|(i, b)| (b.in_flight(), *i))
+            .map(|(i, _)| i)
+    }
+
+    /// Route one idempotent sample request: home replica first, then
+    /// spill (on `overloaded`) or failover (on replica failure) per the
+    /// module-level policy, all under the [`RetryPolicy`] budget.
+    fn proxy_sample(&self, s: &SampleRequest, line: &str) -> String {
+        self.stats.routed.fetch_add(1, Ordering::Relaxed);
+        let (dataset, encoder, draft_size) = s.route_fields();
+        let home = home_index(route_key(dataset, encoder, draft_size), self.backends.len());
+        let deadline = Instant::now() + self.cfg.retry.deadline;
+        let mut backoff = self.cfg.retry.backoff;
+        let mut tried: Vec<usize> = Vec::new();
+        let mut last_err = String::from("no replica attempted");
+        for _attempt in 0..self.cfg.retry.max_attempts.max(1) {
+            let Some(idx) = self.pick(home, &tried) else { break };
+            let slot = &self.backends[idx];
+            match slot.call(line, &self.cfg) {
+                Ok(resp) => match response_err_code(&resp) {
+                    None => {
+                        if slot.note_success() {
+                            self.stats.readmissions.fetch_add(1, Ordering::Relaxed);
+                        }
+                        slot.served.fetch_add(1, Ordering::Relaxed);
+                        return resp;
+                    }
+                    // The replica's own admission control shed the
+                    // request: spill to the least-loaded other replica
+                    // (immediately — the cluster is not in trouble, one
+                    // queue is). No other replica left ⇒ the overload
+                    // verdict stands.
+                    Some(ErrCode::Overloaded) => {
+                        tried.push(idx);
+                        if self.pick(home, &tried).is_none() {
+                            return resp;
+                        }
+                        self.stats.spilled.fetch_add(1, Ordering::Relaxed);
+                        last_err = format!("{} overloaded", slot.label);
+                        continue;
+                    }
+                    // Deterministic verdicts: every replica would answer
+                    // these identically, so retrying only burns budget.
+                    Some(ErrCode::Expired) | Some(ErrCode::BadRequest) => return resp,
+                    // Replica-local failure (err=failed/unavailable/…):
+                    // the request is idempotent — fail over. The replica
+                    // itself is still answering, so this does not count
+                    // toward ejection (the prober owns that verdict).
+                    Some(_) => {
+                        slot.errors.fetch_add(1, Ordering::Relaxed);
+                        self.stats.upstream_errors.fetch_add(1, Ordering::Relaxed);
+                        tried.push(idx);
+                        last_err = format!("{}: {}", slot.label, response_detail(&resp));
+                    }
+                },
+                // Transport failure: fail over AND count toward ejection.
+                Err(e) => {
+                    slot.errors.fetch_add(1, Ordering::Relaxed);
+                    self.stats.upstream_errors.fetch_add(1, Ordering::Relaxed);
+                    if slot.note_failure(self.cfg.eject_after) {
+                        self.stats.ejections.fetch_add(1, Ordering::Relaxed);
+                    }
+                    tried.push(idx);
+                    last_err = format!("{}: {e:#}", slot.label);
+                }
+            }
+            if Instant::now() >= deadline || self.pick(home, &tried).is_none() {
+                break;
+            }
+            self.stats.failovers.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(backoff.min(MAX_FAILOVER_BACKOFF));
+            backoff = backoff.saturating_mul(2).min(MAX_FAILOVER_BACKOFF);
+        }
+        if tried.is_empty() {
+            return error_response(
+                ErrCode::Unavailable,
+                &format!(
+                    "no healthy backend for {dataset}/{encoder}/{draft_size} ({} replicas, 0 in the routing set)",
+                    self.backends.len()
+                ),
+            );
+        }
+        error_response(
+            ErrCode::UpstreamExhausted,
+            &format!(
+                "sample failed on every available replica ({} tried, last: {last_err})",
+                tried.len()
+            ),
+        )
+    }
+
+    /// Fan one `stats`/`metrics` line out to every replica and aggregate:
+    /// per-backend sections, merged scheduler counters, shard counters.
+    fn fan_out(&self, line: &str) -> String {
+        self.stats.fanouts.fetch_add(1, Ordering::Relaxed);
+        let mut sections = Vec::new();
+        let mut merged: BTreeMap<String, f64> = BTreeMap::new();
+        let mut merged_pairs = 0usize;
+        let mut any_ok = false;
+        for slot in &self.backends {
+            let section = match slot.call(line, &self.cfg) {
+                Ok(resp) => match Json::parse(resp.trim()) {
+                    Ok(j) => {
+                        let ok = j.get("ok") == Some(&Json::Bool(true));
+                        any_ok |= ok;
+                        if ok {
+                            merge_scheduler_counters(&j, &mut merged, &mut merged_pairs);
+                        }
+                        obj(vec![
+                            ("addr", Json::Str(slot.label.clone())),
+                            ("healthy", Json::Bool(slot.healthy())),
+                            ("ok", Json::Bool(ok)),
+                            ("response", j),
+                        ])
+                    }
+                    Err(e) => backend_error_section(slot, &format!("unparseable response: {e}")),
+                },
+                Err(e) => backend_error_section(slot, &format!("{e:#}")),
+            };
+            sections.push(section);
+        }
+        if !any_ok {
+            return error_response(ErrCode::Unavailable, "no backend answered the fan-out");
+        }
+        let mut merged_fields: Vec<(&str, Json)> = merged
+            .iter()
+            .map(|(k, v)| (k.as_str(), Json::Num(*v)))
+            .collect();
+        merged_fields.push(("pairs", Json::Num(merged_pairs as f64)));
+        obj(vec![
+            ("ok", Json::Bool(true)),
+            ("backends", Json::Arr(sections)),
+            ("schedulers_merged", obj(merged_fields)),
+            ("shard", self.stats_json()),
+        ])
+        .to_string()
+    }
+}
+
+/// The per-backend section of a fan-out when the replica could not be
+/// queried (section-level failure, not response-level).
+fn backend_error_section(slot: &BackendSlot, detail: &str) -> Json {
+    obj(vec![
+        ("addr", Json::Str(slot.label.clone())),
+        ("healthy", Json::Bool(slot.healthy())),
+        ("ok", Json::Bool(false)),
+        ("detail", Json::Str(detail.to_string())),
+    ])
+}
+
+/// Sum one backend's per-pair scheduler counters into `merged`.
+/// Configured limits and high-water marks (`max_live`, `queue_depth`,
+/// `max_live_seen`) take the max — summing a cap across replicas would
+/// fabricate capacity the cluster does not have.
+fn merge_scheduler_counters(
+    resp: &Json,
+    merged: &mut BTreeMap<String, f64>,
+    pairs: &mut usize,
+) {
+    let Some(entries) = resp.get("schedulers").and_then(Json::as_arr) else {
+        return;
+    };
+    for entry in entries {
+        let Some(stats) = entry.get("stats").and_then(Json::as_obj) else {
+            continue;
+        };
+        *pairs += 1;
+        for (k, v) in stats {
+            let Some(x) = v.as_f64() else { continue };
+            let slot = merged.entry(k.clone()).or_insert(0.0);
+            if matches!(k.as_str(), "max_live" | "queue_depth" | "max_live_seen") {
+                *slot = slot.max(x);
+            } else {
+                *slot += x;
+            }
+        }
+    }
+}
+
+/// The background prober: `ping` every replica each interval; failures
+/// count toward ejection, one success re-admits. Runs for the process
+/// lifetime (like the server's accept loop).
+fn health_loop(backends: &[Arc<BackendSlot>], stats: &ShardStats, cfg: &ShardCfg) {
+    let ping = Request::Ping.to_line();
+    loop {
+        for b in backends {
+            if probe(b, cfg, &ping) {
+                if b.note_success() {
+                    stats.readmissions.fetch_add(1, Ordering::Relaxed);
+                }
+            } else if b.note_failure(cfg.eject_after) {
+                stats.ejections.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        std::thread::sleep(cfg.health_interval);
+    }
+}
+
+/// One health probe: fresh connection (a wedged pooled connection must
+/// not mask a live replica, or vice versa), short timeout, `ping`.
+fn probe(b: &BackendSlot, cfg: &ShardCfg, ping: &str) -> bool {
+    let Ok(mut c) = Client::connect_timeout(b.addr, cfg.connect_timeout) else {
+        return false;
+    };
+    if c.set_read_timeout(Some(cfg.connect_timeout)).is_err() {
+        return false;
+    }
+    matches!(c.call_line(ping), Ok(r) if r.contains("\"ok\":true"))
+}
+
+/// The TCP front-end of the shard tier: accept loop + per-connection
+/// threads, every line answered by [`Shard::dispatch`]. Bound by
+/// `tppsd proxy`; embed it the same way as
+/// [`Server`](super::server::Server) (see `rust/tests/shard.rs`).
+pub struct ProxyServer {
+    /// the bound address (useful with port 0)
+    pub addr: SocketAddr,
+    listener: TcpListener,
+    shard: Arc<Shard>,
+}
+
+impl ProxyServer {
+    /// Bind the proxy (port 0 for an ephemeral port) over `host:port`
+    /// backend replica addresses.
+    pub fn bind(host_port: &str, backends: &[String], cfg: ShardCfg) -> Result<ProxyServer> {
+        let shard = Arc::new(Shard::new(backends, cfg)?);
+        let listener = TcpListener::bind(host_port)?;
+        let addr = listener.local_addr()?;
+        Ok(ProxyServer { addr, listener, shard })
+    }
+
+    /// Shared handle to the routing core (stats, tests).
+    pub fn shard(&self) -> Arc<Shard> {
+        self.shard.clone()
+    }
+
+    /// Accept loop; blocks forever. Call from a dedicated thread when
+    /// embedding.
+    pub fn serve(&self) -> Result<()> {
+        for stream in self.listener.incoming() {
+            let stream = match stream {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let shard = self.shard.clone();
+            std::thread::spawn(move || {
+                let _ = handle_conn(stream, &shard);
+            });
+        }
+        Ok(())
+    }
+}
+
+fn handle_conn(stream: TcpStream, shard: &Shard) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // connection closed
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match Request::parse(&line) {
+            Ok(req) => shard.dispatch(&req),
+            Err(e) => error_response(ErrCode::BadRequest, &format!("{e:#}")),
+        };
+        writer.write_all(resp.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A shard with no prober and unreachable (but resolvable) backends —
+    /// routing policy is testable without sockets.
+    fn offline_shard(n: usize) -> Shard {
+        let addrs: Vec<String> =
+            (0..n).map(|i| format!("127.0.0.1:{}", 1 + i)).collect();
+        let cfg = ShardCfg::builder().health_interval(Duration::ZERO).build();
+        Shard::new(&addrs, cfg).unwrap()
+    }
+
+    #[test]
+    fn route_key_is_deterministic_and_spreads() {
+        let k1 = route_key("hawkes", "attnhp", "draft");
+        assert_eq!(k1, route_key("hawkes", "attnhp", "draft"));
+        // the separator matters: ("ab","c") must not collide with ("a","bc")
+        assert_ne!(route_key("ab", "c", "d"), route_key("a", "bc", "d"));
+        // distinct pairs land on more than one replica out of 3
+        let homes: std::collections::BTreeSet<usize> = [
+            ("hawkes", "thp"),
+            ("hawkes", "sahp"),
+            ("hawkes", "attnhp"),
+            ("taxi_sim", "thp"),
+            ("taxi_sim", "attnhp"),
+            ("self_correcting", "sahp"),
+        ]
+        .iter()
+        .map(|(d, e)| home_index(route_key(d, e, "draft"), 3))
+        .collect();
+        assert!(homes.len() > 1, "all pairs hashed to one replica: {homes:?}");
+        assert!(homes.iter().all(|&h| h < 3));
+        // n is clamped so home_index never divides by zero
+        assert_eq!(home_index(route_key("a", "b", "c"), 0), 0);
+    }
+
+    #[test]
+    fn health_transitions_eject_and_readmit() {
+        let shard = offline_shard(1);
+        let b = &shard.backends()[0];
+        assert!(b.healthy());
+        assert!(!b.note_failure(3));
+        assert!(!b.note_failure(3));
+        assert!(b.note_failure(3), "third consecutive failure ejects");
+        assert!(!b.healthy());
+        assert!(!b.note_failure(3), "already ejected: no double-count");
+        assert!(b.note_success(), "one success re-admits");
+        assert!(b.healthy());
+        assert_eq!(b.consecutive_failures(), 0);
+        assert!(!b.note_success(), "healthy stays healthy: no re-admission count");
+    }
+
+    #[test]
+    fn pick_prefers_home_then_least_loaded_healthy() {
+        let shard = offline_shard(3);
+        assert_eq!(shard.pick(1, &[]), Some(1), "healthy home wins");
+        // home tried: least-loaded other replica wins
+        shard.backends()[0].in_flight.store(5, Ordering::Relaxed);
+        shard.backends()[2].in_flight.store(2, Ordering::Relaxed);
+        assert_eq!(shard.pick(1, &[1]), Some(2));
+        // ejected replicas leave the routing set
+        shard.backends()[2].note_failure(1);
+        assert_eq!(shard.pick(1, &[1]), Some(0));
+        shard.backends()[0].note_failure(1);
+        assert_eq!(shard.pick(1, &[1]), None, "routing set exhausted");
+        assert_eq!(shard.healthy_count(), 1);
+    }
+
+    #[test]
+    fn stats_json_has_every_counter_and_backend_section() {
+        let shard = offline_shard(2);
+        shard.stats().routed.store(7, Ordering::Relaxed);
+        shard.stats().spilled.store(1, Ordering::Relaxed);
+        let j = shard.stats_json();
+        for key in [
+            "routed",
+            "spilled",
+            "failovers",
+            "ejections",
+            "readmissions",
+            "upstream_errors",
+            "fanouts",
+            "healthy",
+        ] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        assert_eq!(j.f64_at("routed"), Some(7.0));
+        assert_eq!(j.f64_at("healthy"), Some(2.0));
+        let backends = j.get("backends").and_then(Json::as_arr).unwrap();
+        assert_eq!(backends.len(), 2);
+        for b in backends {
+            for key in
+                ["addr", "healthy", "consecutive_failures", "in_flight", "served", "errors"]
+            {
+                assert!(b.get(key).is_some(), "missing backend key {key}");
+            }
+        }
+    }
+
+    #[test]
+    fn merged_counters_sum_counts_and_max_limits() {
+        let mk = |completed: f64, max_live: f64| {
+            format!(
+                r#"{{"ok":true,"schedulers":[{{"chaos":"","pair":"p","stats":{{"completed":{completed},"max_live":{max_live},"shed":1}}}}]}}"#
+            )
+        };
+        let mut merged = BTreeMap::new();
+        let mut pairs = 0;
+        for line in [mk(3.0, 64.0), mk(4.0, 16.0)] {
+            merge_scheduler_counters(&Json::parse(&line).unwrap(), &mut merged, &mut pairs);
+        }
+        assert_eq!(pairs, 2);
+        assert_eq!(merged.get("completed"), Some(&7.0));
+        assert_eq!(merged.get("shed"), Some(&2.0));
+        assert_eq!(merged.get("max_live"), Some(&64.0), "caps take max, not sum");
+    }
+}

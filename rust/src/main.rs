@@ -2,13 +2,14 @@
 //!
 //! Subcommands:
 //!   serve   — start the sampling coordinator (TCP line protocol)
+//!   proxy   — start the shard tier over N serve replicas
 //!   sample  — sample sequences from a model (ar | sd | sd-adaptive)
 //!   info    — list backends, datasets and model configurations
 
 use std::time::Duration;
 
 use anyhow::{bail, Result};
-use tpp_sd::coordinator::{SchedulerCfg, Server};
+use tpp_sd::coordinator::{ProxyServer, RetryPolicy, SchedulerCfg, Server, ShardCfg};
 use tpp_sd::runtime::{backend_from_arg, Backend, ChaosBackend, FaultPlan, Uncached};
 use tpp_sd::sampler::{
     fleet_seeds, sample_ar_fleet, sample_sd_fleet, FleetRuns, Gamma, SampleCfg, SampleStats, SdCfg,
@@ -52,6 +53,21 @@ commands:
           [--queue-depth 128]       bound on the pending admission queue;
                                     submits past it are shed, not queued
           (wire protocol and every knob: docs/OPERATIONS.md)
+  proxy   --backend host:port [--backend host:port ...]
+                                    shard tier: same wire protocol as
+                                    serve, routed across N replicas
+                                    (repeatable; commas also split)
+          [--listen 127.0.0.1:7078] proxy listen address
+          [--health-interval-ms 250] period of the background ping prober
+          [--eject-after 3]         consecutive probe/transport failures
+                                    that eject a replica; one successful
+                                    probe re-admits it
+          [--failover-attempts 4]   replicas tried per sample request
+          [--failover-backoff-us 500] first failover backoff (doubles,
+                                    capped at 100ms; spills don't back off)
+          [--failover-deadline-ms 30000] total budget per sample request
+          [--connect-timeout-ms 2000] bound on each upstream TCP dial
+          (topology + aggregation semantics: docs/OPERATIONS.md)
 
 options (all commands):
   --backend auto|native|xla         inference backend [auto]
@@ -69,6 +85,7 @@ fn main() -> Result<()> {
         "info" => info(&args),
         "sample" => sample(&args),
         "serve" => serve(&args),
+        "proxy" => proxy(&args),
         _ => {
             print!("{USAGE}");
             Ok(())
@@ -235,10 +252,10 @@ fn report_fleet(runs: &[(Vec<Event>, SampleStats)], occupancy: f64, wall: std::t
 fn serve(args: &Args) -> Result<()> {
     let backend = pick_backend(args)?;
     let name = backend.name();
-    let sched_cfg = SchedulerCfg {
-        max_live: args.usize_or("max-live", 64),
-        queue_depth: args.usize_or("queue-depth", 128),
-    };
+    let sched_cfg = SchedulerCfg::builder()
+        .max_live(args.usize_or("max-live", 64))
+        .queue_depth(args.usize_or("queue-depth", 128))
+        .build();
     let server = Server::bind_with_scheduler(
         backend,
         args.str_or("listen", "127.0.0.1:7077"),
@@ -249,6 +266,34 @@ fn serve(args: &Args) -> Result<()> {
     println!(
         "tppsd serving on {} (backend: {name}, max-live {}, queue-depth {})",
         server.addr, sched_cfg.max_live, sched_cfg.queue_depth
+    );
+    server.serve()
+}
+
+/// `tppsd proxy`: the shard tier — same wire protocol as `serve`, routed
+/// across N replicas with health checks, spill and failover
+/// (DESIGN.md §17, `docs/OPERATIONS.md`).
+fn proxy(args: &Args) -> Result<()> {
+    let backends = args.all("backend");
+    if backends.is_empty() {
+        bail!("proxy needs at least one --backend host:port (repeatable)");
+    }
+    let cfg = ShardCfg::builder()
+        .health_interval(Duration::from_millis(args.u64_or("health-interval-ms", 250)))
+        .eject_after(args.u64_or("eject-after", 3) as u32)
+        .retry(RetryPolicy {
+            max_attempts: args.usize_or("failover-attempts", 4),
+            backoff: Duration::from_micros(args.u64_or("failover-backoff-us", 500)),
+            deadline: Duration::from_millis(args.u64_or("failover-deadline-ms", 30_000)),
+        })
+        .connect_timeout(Duration::from_millis(args.u64_or("connect-timeout-ms", 2_000)))
+        .build();
+    let server = ProxyServer::bind(args.str_or("listen", "127.0.0.1:7078"), &backends, cfg)?;
+    println!(
+        "tppsd proxy on {} over {} backend(s): {}",
+        server.addr,
+        backends.len(),
+        backends.join(", ")
     );
     server.serve()
 }

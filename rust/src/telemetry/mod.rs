@@ -57,11 +57,14 @@ pub enum Stage {
     /// Time a request spent in the scheduler's pending queue between
     /// submission and its admission verdict (admitted, shed or expired).
     QueueWait,
+    /// One proxy-tier upstream call: connect/forward/reply round-trip to
+    /// a backend replica (`coordinator::shard`), failures included.
+    ProxyUpstream,
 }
 
 impl Stage {
     /// Every stage, in wire/report order.
-    pub const ALL: [Stage; 9] = [
+    pub const ALL: [Stage; 10] = [
         Stage::DraftForward,
         Stage::VerifyForward,
         Stage::DeltaWave,
@@ -71,6 +74,7 @@ impl Stage {
         Stage::StreamRecovery,
         Stage::EventLatency,
         Stage::QueueWait,
+        Stage::ProxyUpstream,
     ];
 
     /// Stable snake_case name used in JSON snapshots and reports.
@@ -85,6 +89,7 @@ impl Stage {
             Stage::StreamRecovery => "stream_recovery",
             Stage::EventLatency => "event_latency",
             Stage::QueueWait => "queue_wait",
+            Stage::ProxyUpstream => "proxy_upstream",
         }
     }
 }

@@ -6,9 +6,14 @@
 use std::collections::BTreeMap;
 
 /// Parsed command line.
+///
+/// Every occurrence of a repeated option is kept in order
+/// (`--backend a --backend b`): [`Args::get`] returns the last one (the
+/// usual "rightmost wins" override rule), [`Args::all`] returns them all
+/// (the shard tier's `--backend` list).
 #[derive(Debug, Default)]
 pub struct Args {
-    opts: BTreeMap<String, String>,
+    opts: BTreeMap<String, Vec<String>>,
     flags: Vec<String>,
     positional: Vec<String>,
     spec: Vec<(String, String, String)>, // (name, default, help)
@@ -22,14 +27,14 @@ impl Args {
         while let Some(a) = it.next() {
             if let Some(rest) = a.strip_prefix("--") {
                 if let Some((k, v)) = rest.split_once('=') {
-                    out.opts.insert(k.to_string(), v.to_string());
+                    out.opts.entry(k.to_string()).or_default().push(v.to_string());
                 } else if it
                     .peek()
                     .map(|n| !n.starts_with("--"))
                     .unwrap_or(false)
                 {
                     let v = it.next().unwrap();
-                    out.opts.insert(rest.to_string(), v);
+                    out.opts.entry(rest.to_string()).or_default().push(v);
                 } else {
                     out.flags.push(rest.to_string());
                 }
@@ -66,9 +71,28 @@ impl Args {
         self.flags.iter().any(|f| f == flag) || self.opts.contains_key(flag)
     }
 
-    /// Raw option value, if present.
+    /// Raw option value, if present (the last occurrence when repeated).
     pub fn get(&self, key: &str) -> Option<&str> {
-        self.opts.get(key).map(|s| s.as_str())
+        self.opts
+            .get(key)
+            .and_then(|v| v.last())
+            .map(|s| s.as_str())
+    }
+
+    /// Every occurrence of a repeated option, in order, with each value
+    /// further split on commas — `--backend a:1 --backend b:2,c:3` yields
+    /// `["a:1", "b:2", "c:3"]`. Empty when the option is absent.
+    pub fn all(&self, key: &str) -> Vec<String> {
+        self.opts
+            .get(key)
+            .map(|vals| {
+                vals.iter()
+                    .flat_map(|v| v.split(','))
+                    .map(|x| x.trim().to_string())
+                    .filter(|x| !x.is_empty())
+                    .collect()
+            })
+            .unwrap_or_default()
     }
 
     /// String option with a default.
@@ -138,5 +162,14 @@ mod tests {
         let a = parse("--fast --gamma 3");
         assert!(a.has("fast"));
         assert_eq!(a.usize_or("gamma", 0), 3);
+    }
+
+    #[test]
+    fn repeated_options_collect_in_order() {
+        let a = parse("--backend a:1 --backend b:2,c:3 --gamma 5 --gamma 7");
+        assert_eq!(a.all("backend"), vec!["a:1", "b:2", "c:3"]);
+        // scalar accessors keep the rightmost-wins override rule
+        assert_eq!(a.usize_or("gamma", 0), 7);
+        assert!(a.all("missing").is_empty());
     }
 }

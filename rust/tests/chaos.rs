@@ -280,18 +280,17 @@ fn server_chaos_errors_are_structured_and_recoverable_specs_are_exact() {
     let mut cli = Client::connect(addr).unwrap();
 
     let mk = |chaos: &str, seed: u64| {
-        Request::Sample(SampleRequest {
-            dataset: "hawkes".into(),
-            encoder: "thp".into(),
-            method: "sd".into(),
-            gamma: 5,
-            t_end: 2.0,
-            seed,
-            draft_size: "draft".into(),
-            cached: true,
-            chaos: chaos.into(),
-            deadline_ms: 0,
-        })
+        Request::Sample(
+            SampleRequest::builder()
+                .dataset("hawkes")
+                .encoder("thp")
+                .method("sd")
+                .gamma(5)
+                .t_end(2.0)
+                .seed(seed)
+                .chaos(chaos)
+                .build(),
+        )
     };
 
     // err=1: every forward fails; bounded retries exhaust -> structured error

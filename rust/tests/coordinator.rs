@@ -7,7 +7,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use tpp_sd::coordinator::{
-    Client, ExecutorHandle, FleetRequest, Request, RetryPolicy, Router, SampleRequest, Server,
+    Client, ExecutorHandle, Request, RetryPolicy, Router, SampleRequest, Server,
 };
 use tpp_sd::runtime::{
     Backend, BatchForward, CachedForward, ChaosBackend, FaultPlan, Forward, ModelBackend, SeqDelta,
@@ -191,18 +191,16 @@ fn server_roundtrip_ar_and_sd() {
 
     for method in ["ar", "sd", "sd-adaptive"] {
         let resp = cli
-            .call(&Request::Sample(SampleRequest {
-                dataset: "hawkes".into(),
-                encoder: "thp".into(),
-                method: method.into(),
-                gamma: 5,
-                t_end: 2.0,
-                seed: 1,
-                draft_size: "draft".into(),
-                cached: true,
-                chaos: String::new(),
-                deadline_ms: 0,
-            }))
+            .call(&Request::Sample(
+                SampleRequest::builder()
+                    .dataset("hawkes")
+                    .encoder("thp")
+                    .method(method)
+                    .gamma(5)
+                    .t_end(2.0)
+                    .seed(1)
+                    .build(),
+            ))
             .unwrap();
         let (events, wall_ms) =
             tpp_sd::coordinator::protocol::parse_response(&resp).unwrap();
@@ -212,18 +210,15 @@ fn server_roundtrip_ar_and_sd() {
 
     // unknown dataset → clean error, connection stays usable
     let resp = cli
-        .call(&Request::Sample(SampleRequest {
-            dataset: "bogus".into(),
-            encoder: "thp".into(),
-            method: "ar".into(),
-            gamma: 1,
-            t_end: 1.0,
-            seed: 0,
-            draft_size: "draft".into(),
-            cached: true,
-            chaos: String::new(),
-            deadline_ms: 0,
-        }))
+        .call(&Request::Sample(
+            SampleRequest::builder()
+                .dataset("bogus")
+                .encoder("thp")
+                .method("ar")
+                .gamma(1)
+                .t_end(1.0)
+                .build(),
+        ))
         .unwrap();
     assert!(resp.contains("\"ok\":false"));
     assert!(cli.call(&Request::Ping).unwrap().contains("pong"));
@@ -240,18 +235,17 @@ fn server_cached_flag_does_not_change_events() {
     let mut cli = Client::connect(addr).unwrap();
     for method in ["ar", "sd"] {
         let mk = |cached: bool| {
-            Request::Sample(SampleRequest {
-                dataset: "hawkes".into(),
-                encoder: "thp".into(),
-                method: method.into(),
-                gamma: 6,
-                t_end: 4.0,
-                seed: 9,
-                draft_size: "draft".into(),
-                cached,
-                chaos: String::new(),
-                deadline_ms: 0,
-            })
+            Request::Sample(
+                SampleRequest::builder()
+                    .dataset("hawkes")
+                    .encoder("thp")
+                    .method(method)
+                    .gamma(6)
+                    .t_end(4.0)
+                    .seed(9)
+                    .cached(cached)
+                    .build(),
+            )
         };
         let (on, _) =
             tpp_sd::coordinator::protocol::parse_response(&cli.call(&mk(true)).unwrap()).unwrap();
@@ -272,21 +266,17 @@ fn server_fleet_matches_single_samples() {
     std::thread::spawn(move || server.serve());
     let mut cli = Client::connect(addr).unwrap();
 
-    let base = SampleRequest {
-        dataset: "hawkes".into(),
-        encoder: "thp".into(),
-        method: "sd".into(),
-        gamma: 5,
-        t_end: 3.0,
-        seed: 10,
-        draft_size: "draft".into(),
-        cached: true,
-        chaos: String::new(),
-        deadline_ms: 0,
-    };
-    let resp = cli
-        .call(&Request::SampleFleet(FleetRequest { base: base.clone(), n_seq: 3 }))
-        .unwrap();
+    let base = SampleRequest::builder()
+        .dataset("hawkes")
+        .encoder("thp")
+        .method("sd")
+        .gamma(5)
+        .t_end(3.0)
+        .seed(10)
+        .build();
+    let mut fleet = base.clone();
+    fleet.n_seq = 3;
+    let resp = cli.call(&Request::SampleFleet(fleet)).unwrap();
     let sequences = tpp_sd::coordinator::protocol::parse_fleet_response(&resp).unwrap();
     assert_eq!(sequences.len(), 3);
     for (i, seq) in sequences.iter().enumerate() {
@@ -388,18 +378,16 @@ fn stats_reports_executor_counters() {
     let mut cli = Client::connect(addr).unwrap();
 
     // one sample so the router holds exactly one pair (2 executors)
-    cli.call(&Request::Sample(SampleRequest {
-        dataset: "hawkes".into(),
-        encoder: "thp".into(),
-        method: "sd".into(),
-        gamma: 4,
-        t_end: 2.0,
-        seed: 3,
-        draft_size: "draft".into(),
-        cached: true,
-        chaos: String::new(),
-        deadline_ms: 0,
-    }))
+    cli.call(&Request::Sample(
+        SampleRequest::builder()
+            .dataset("hawkes")
+            .encoder("thp")
+            .method("sd")
+            .gamma(4)
+            .t_end(2.0)
+            .seed(3)
+            .build(),
+    ))
     .unwrap();
 
     let resp = cli.call(&Request::Stats).unwrap();
@@ -455,18 +443,16 @@ fn metrics_roundtrip_and_delta_windows() {
     let mut cli = Client::connect(addr).unwrap();
 
     let sample = |cli: &mut Client, seed: u64| {
-        cli.call(&Request::Sample(SampleRequest {
-            dataset: "hawkes".into(),
-            encoder: "thp".into(),
-            method: "sd".into(),
-            gamma: 5,
-            t_end: 2.0,
-            seed,
-            draft_size: "draft".into(),
-            cached: true,
-            chaos: String::new(),
-            deadline_ms: 0,
-        }))
+        cli.call(&Request::Sample(
+            SampleRequest::builder()
+                .dataset("hawkes")
+                .encoder("thp")
+                .method("sd")
+                .gamma(5)
+                .t_end(2.0)
+                .seed(seed)
+                .build(),
+        ))
         .unwrap()
     };
     sample(&mut cli, 1);

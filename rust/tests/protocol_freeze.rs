@@ -1,0 +1,247 @@
+//! Wire-protocol freeze (ADR-008): two complementary locks.
+//!
+//! 1. **Golden fixture** — the canonical v2 serialization of every
+//!    request variant and response shape, byte-for-byte, in
+//!    `tests/golden/protocol_v2.txt`. First run writes (blesses) the
+//!    fixture; later runs fail on any byte difference. A serialization
+//!    change is a *protocol* change: re-bless deliberately (delete the
+//!    file and rerun) and bump ADR-008.
+//!
+//! 2. **v1 document lock** — the exact v1 request lines published in
+//!    `docs/OPERATIONS.md` must (a) appear there verbatim, (b) parse, and
+//!    (c) serve over a live wire server with their v1 response shapes.
+//!    This pins the compatibility promise to the documentation itself: a
+//!    doc edit that drops an example, or a parser change that breaks one,
+//!    fails the same test.
+
+use std::time::Duration;
+
+use tpp_sd::coordinator::protocol::{
+    error_response, fleet_ok_response, ok_response, parse_fleet_response, parse_response,
+};
+use tpp_sd::coordinator::{Client, ErrCode, Request, SampleRequest, Server};
+use tpp_sd::events::Event;
+use tpp_sd::sampler::{FleetStats, SampleStats};
+use tpp_sd::util::json::Json;
+
+/// Golden fixture directory (under the crate, so the files are committed
+/// and reviewed like source).
+fn golden_path() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join("protocol_v2.txt")
+}
+
+/// A sample request with every field away from its default, so the
+/// fixture exercises the full field set (and any new field changes it).
+fn full_request() -> SampleRequest {
+    SampleRequest::builder()
+        .dataset("taxi_sim")
+        .encoder("thp")
+        .method("sd-adaptive")
+        .gamma(7)
+        .t_end(12.5)
+        .seed(42)
+        .draft_size("draft2")
+        .cached(false)
+        .chaos("seed=7,err=0.25,loss=0.1")
+        .deadline_ms(250)
+        .n_seq(4)
+        .build()
+}
+
+/// Render the whole canonical wire surface into one deterministic text
+/// blob. Durations are powers of two in seconds so `wall_ms` is exact in
+/// f64 and the fixture is bit-stable across platforms.
+fn canonical_surface() -> String {
+    let mut out = String::new();
+    let mut line = |label: &str, s: String| {
+        out.push_str(label);
+        out.push_str(": ");
+        out.push_str(&s);
+        out.push('\n');
+    };
+
+    line("request ping", Request::Ping.to_line());
+    line("request stats", Request::Stats.to_line());
+    line("request metrics", Request::Metrics { delta: false }.to_line());
+    line("request metrics_delta", Request::Metrics { delta: true }.to_line());
+    line("request sample_v2", Request::Sample(full_request()).to_line());
+    line("request sample_v2_defaults", Request::Sample(SampleRequest::default()).to_line());
+    line("request sample_fleet_v1", Request::SampleFleet(full_request()).to_line());
+
+    let events = vec![Event::new(0.5, 1), Event::new(1.25, 0), Event::new(2.0, 3)];
+    let stats = SampleStats {
+        events: 3,
+        rounds: 2,
+        target_forwards: 2,
+        draft_forwards: 8,
+        drafted: 8,
+        accepted: 2,
+        resampled: 1,
+        bonus: 0,
+        adjust_proposals: 5,
+        wall: Duration::from_millis(250),
+    };
+    line("response ok", ok_response(&events, &stats));
+
+    let runs = vec![
+        (vec![Event::new(0.5, 1)], SampleStats { events: 1, wall: Duration::from_millis(250), ..Default::default() }),
+        (vec![], SampleStats::default()),
+        (
+            vec![Event::new(1.0, 0), Event::new(2.0, 3)],
+            SampleStats { events: 2, wall: Duration::from_millis(500), ..Default::default() },
+        ),
+    ];
+    let fleet = FleetStats {
+        steps: 4,
+        draft_batches: 2,
+        draft_seqs: 4,
+        target_batches: 2,
+        target_seqs: 6,
+        delta_batches: 1,
+        delta_seqs: 2,
+        stream_recoveries: 1,
+        degraded_uncached: 0,
+        ..Default::default()
+    };
+    line("response fleet_ok", fleet_ok_response(&runs, &fleet));
+
+    for code in ErrCode::ALL {
+        line(
+            &format!("response error_{code}"),
+            error_response(code, "<detail text>"),
+        );
+    }
+    out
+}
+
+/// Byte-for-byte freeze of the canonical serializations. Missing fixture
+/// ⇒ bless it (and pass); present ⇒ exact match required.
+#[test]
+fn golden_wire_surface_is_frozen() {
+    let got = canonical_surface();
+    // the canonical surface must itself round-trip before freezing it
+    for line in got.lines() {
+        let (label, payload) = line.split_once(": ").unwrap();
+        if let Some(rest) = label.strip_prefix("request ") {
+            let req = Request::parse(payload).unwrap_or_else(|e| panic!("{label}: {e:#}"));
+            if !rest.ends_with("_defaults") {
+                assert_eq!(req.to_line(), payload, "{label}: not a fixpoint");
+            }
+        }
+    }
+    let path = golden_path();
+    match std::fs::read_to_string(&path) {
+        Ok(want) => assert_eq!(
+            got, want,
+            "canonical wire serialization changed; if intentional (a protocol change!), \
+             delete {path:?}, rerun to re-bless, and update ADR-008"
+        ),
+        Err(_) => {
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, &got).unwrap();
+            eprintln!("blessed new golden fixture {path:?}");
+        }
+    }
+}
+
+/// The v1 request lines published verbatim in `docs/OPERATIONS.md` (its
+/// "v1 compatibility" section). Changing either side — the docs or this
+/// list — without the other fails `v1_doc_examples_parse_and_serve`.
+const V1_DOC_LINES: [&str; 5] = [
+    r#"{"op":"ping"}"#,
+    r#"{"op":"stats"}"#,
+    r#"{"op":"metrics","delta":true}"#,
+    r#"{"op":"sample","dataset":"hawkes","encoder":"thp","method":"sd","gamma":5,"t_end":2.0,"seed":1}"#,
+    r#"{"op":"sample_fleet","encoder":"thp","method":"sd","gamma":5,"n_seq":2,"seed":7,"t_end":2.0}"#,
+];
+
+/// Every published v1 example must (a) be in the operator docs verbatim,
+/// (b) parse as v1 (no `"v"` field), and (c) serve over a live server
+/// with the response shape a v1 client expects: events-shaped `sample`,
+/// always-sequences `sample_fleet`, and `sample_fleet` sequences equal to
+/// v2 `sample` singles at `seed + i`.
+#[test]
+fn v1_doc_examples_parse_and_serve() {
+    let docs = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../docs/OPERATIONS.md"
+    ))
+    .expect("docs/OPERATIONS.md");
+    for line in V1_DOC_LINES {
+        assert!(docs.contains(line), "docs/OPERATIONS.md lost the v1 example {line}");
+        Request::parse(line).unwrap_or_else(|e| panic!("v1 example no longer parses: {line}: {e:#}"));
+    }
+
+    let backend = tpp_sd::runtime::discover_backend().expect("backend");
+    let server = Server::bind(backend, "127.0.0.1:0", 8, Duration::from_millis(1)).unwrap();
+    let addr = server.addr;
+    std::thread::spawn(move || server.serve());
+    let mut cli = Client::connect(addr).unwrap();
+
+    // ping: pong, and no proxy marker on a plain server
+    let resp = cli.call_line(V1_DOC_LINES[0]).unwrap();
+    assert!(resp.contains("\"pong\":true"), "{resp}");
+    assert!(!resp.contains("proxy"), "{resp}");
+
+    // stats / metrics: ok + their v1 section keys
+    let resp = cli.call_line(V1_DOC_LINES[1]).unwrap();
+    let j = Json::parse(&resp).unwrap();
+    assert_eq!(j.bool_at("ok"), Some(true), "{resp}");
+    assert!(j.get("executors").is_some() && j.get("sessions").is_some(), "{resp}");
+    let resp = cli.call_line(V1_DOC_LINES[2]).unwrap();
+    let j = Json::parse(&resp).unwrap();
+    assert_eq!(j.bool_at("ok"), Some(true), "{resp}");
+    assert!(j.get("telemetry").is_some(), "{resp}");
+
+    // v1 sample: events-shaped, and bit-identical to the canonical v2
+    // spelling of the same request
+    let resp = cli.call_line(V1_DOC_LINES[3]).unwrap();
+    let j = Json::parse(&resp).unwrap();
+    assert!(j.get("events").is_some() && j.get("sequences").is_none(), "{resp}");
+    let (v1_events, _) = parse_response(&resp).unwrap();
+    assert!(!v1_events.is_empty(), "degenerate v1 sample");
+    let v2 = Request::Sample(
+        SampleRequest::builder()
+            .dataset("hawkes")
+            .encoder("thp")
+            .method("sd")
+            .gamma(5)
+            .t_end(2.0)
+            .seed(1)
+            .build(),
+    );
+    let (v2_events, _) = parse_response(&cli.call(&v2).unwrap()).unwrap();
+    assert_eq!(v1_events, v2_events, "v1 and v2 spellings of one request diverged");
+
+    // v1 sample_fleet: always sequences-shaped; sequence i == v2 single
+    // seeded seed + i
+    let resp = cli.call_line(V1_DOC_LINES[4]).unwrap();
+    let sequences = parse_fleet_response(&resp).unwrap();
+    assert_eq!(sequences.len(), 2);
+    for (i, seq) in sequences.iter().enumerate() {
+        let single = Request::Sample(
+            SampleRequest::builder()
+                .dataset("hawkes")
+                .encoder("thp")
+                .method("sd")
+                .gamma(5)
+                .t_end(2.0)
+                .seed(7 + i as u64)
+                .build(),
+        );
+        let (events, _) = parse_response(&cli.call(&single).unwrap()).unwrap();
+        assert_eq!(seq, &events, "fleet sequence {i} vs v2 single");
+    }
+
+    // the alias stays sequences-shaped even at n_seq == 1
+    let alias = Request::SampleFleet(
+        SampleRequest::builder().dataset("hawkes").encoder("thp").t_end(2.0).seed(9).build(),
+    );
+    let resp = cli.call(&alias).unwrap();
+    let j = Json::parse(&resp).unwrap();
+    assert!(j.get("sequences").is_some() && j.get("events").is_none(), "{resp}");
+    assert_eq!(parse_fleet_response(&resp).unwrap().len(), 1);
+}

@@ -13,8 +13,8 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use tpp_sd::coordinator::{
-    build_sessions, Client, FleetRequest, Request, Router, SampleRequest, SchedReject, Scheduler,
-    SchedulerCfg, Server,
+    build_sessions, Client, Request, Router, SampleRequest, SchedReject, Scheduler, SchedulerCfg,
+    Server,
 };
 use tpp_sd::runtime::{Backend, ChaosBackend, FaultPlan};
 use tpp_sd::sampler::{
@@ -201,7 +201,7 @@ fn overload_sheds_and_deadlines_expire() {
     // long enough to build a queue behind it
     let plan = FaultPlan::parse("seed=1,delay=1,delay-ms=25").unwrap();
     let chaotic: Arc<dyn Backend> = Arc::new(ChaosBackend::new(backend(), plan));
-    let scfg = SchedulerCfg { max_live: 1, queue_depth: 1 };
+    let scfg = SchedulerCfg::builder().max_live(1).queue_depth(1).build();
     let router =
         Arc::new(Router::with_scheduler(chaotic, 8, Duration::from_millis(1), scfg).unwrap());
     let pair = router.route("hawkes", "thp", "draft").unwrap();
@@ -257,18 +257,17 @@ fn overload_sheds_and_deadlines_expire() {
 }
 
 fn slow_fleet(seed: u64, deadline_ms: u64) -> Request {
-    Request::SampleFleet(FleetRequest {
-        base: SampleRequest {
-            encoder: "thp".into(),
-            method: "ar".into(),
-            t_end: 1.0,
-            seed,
-            chaos: "seed=2,delay=1,delay-ms=30".into(),
-            deadline_ms,
-            ..Default::default()
-        },
-        n_seq: 1,
-    })
+    Request::SampleFleet(
+        SampleRequest::builder()
+            .encoder("thp")
+            .method("ar")
+            .t_end(1.0)
+            .seed(seed)
+            .chaos("seed=2,delay=1,delay-ms=30")
+            .deadline_ms(deadline_ms)
+            .n_seq(1)
+            .build(),
+    )
 }
 
 /// Read the chaos scheduler's counter from a `stats` response (`None`
@@ -288,7 +287,7 @@ fn sched_counter(resp: &str, chaos: &str, key: &str) -> Option<f64> {
 /// clients observed — 2 ok, 1 expired, 1 overloaded.
 #[test]
 fn server_overload_errors_reconcile_with_stats() {
-    let scfg = SchedulerCfg { max_live: 1, queue_depth: 2 };
+    let scfg = SchedulerCfg::builder().max_live(1).queue_depth(2).build();
     let server = Server::bind_with_scheduler(
         backend(),
         "127.0.0.1:0",
@@ -363,14 +362,15 @@ fn concurrent_wire_samples_are_reproducible() {
     std::thread::spawn(move || server.serve());
 
     let sample = |seed: u64, method: &str| {
-        Request::Sample(SampleRequest {
-            encoder: "thp".into(),
-            method: method.into(),
-            gamma: 5,
-            t_end: 2.0,
-            seed,
-            ..Default::default()
-        })
+        Request::Sample(
+            SampleRequest::builder()
+                .encoder("thp")
+                .method(method)
+                .gamma(5)
+                .t_end(2.0)
+                .seed(seed)
+                .build(),
+        )
     };
 
     let mix = [(20u64, "sd"), (21, "ar"), (22, "sd-adaptive"), (23, "sd")];

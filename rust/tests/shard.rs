@@ -1,0 +1,409 @@
+//! Shard/replica tier tests (`tppsd proxy`, DESIGN.md §17).
+//!
+//! The core oracle is determinism through indirection: a seeded sample
+//! request must return bit-identical events whether it is served by one
+//! replica directly, through a 1-backend proxy, or through a 3-backend
+//! proxy — including when the request's *home* replica is a chaos-killed
+//! (`die=1`) server and the proxy fails over. The `ShardStats` counters
+//! are pinned against client-observed outcomes to the unit, the same
+//! reconciliation discipline as the scheduler suite.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tpp_sd::coordinator::protocol::{parse_fleet_response, parse_response};
+use tpp_sd::coordinator::shard::{home_index, route_key};
+use tpp_sd::coordinator::{
+    Client, ProxyServer, Request, SampleRequest, SchedulerCfg, Server, ShardCfg,
+};
+use tpp_sd::runtime::{Backend, ChaosBackend, FaultPlan};
+use tpp_sd::util::json::Json;
+
+fn backend() -> Arc<dyn Backend> {
+    tpp_sd::runtime::discover_backend().expect("backend")
+}
+
+/// Start one clean replica on an ephemeral port; returns its address.
+fn spawn_replica() -> std::net::SocketAddr {
+    let server = Server::bind(backend(), "127.0.0.1:0", 8, Duration::from_millis(1)).unwrap();
+    let addr = server.addr;
+    std::thread::spawn(move || server.serve());
+    addr
+}
+
+/// Start a replica whose whole backend is wrapped in a chaos plan at bind
+/// time — unlike a request-carried `"chaos"` spec, the faults apply to
+/// the replica's fault-free router, so a proxied request (which would
+/// carry the spec along on failover) observes a *replica-local* failure.
+fn spawn_chaotic_replica(spec: &str) -> std::net::SocketAddr {
+    spawn_chaotic_replica_with(spec, SchedulerCfg::default())
+}
+
+fn spawn_chaotic_replica_with(spec: &str, scfg: SchedulerCfg) -> std::net::SocketAddr {
+    let chaotic: Arc<dyn Backend> =
+        Arc::new(ChaosBackend::new(backend(), FaultPlan::parse(spec).unwrap()));
+    let server = Server::bind_with_scheduler(
+        chaotic,
+        "127.0.0.1:0",
+        8,
+        Duration::from_millis(1),
+        scfg,
+    )
+    .unwrap();
+    let addr = server.addr;
+    std::thread::spawn(move || server.serve());
+    addr
+}
+
+/// A proxy with the prober disabled (tests that need deterministic
+/// health state) and a tight failover backoff.
+fn spawn_proxy(backends: &[std::net::SocketAddr]) -> ProxyServer {
+    let addrs: Vec<String> = backends.iter().map(|a| a.to_string()).collect();
+    let cfg = ShardCfg::builder()
+        .health_interval(Duration::ZERO)
+        .connect_timeout(Duration::from_millis(500))
+        .build();
+    ProxyServer::bind("127.0.0.1:0", &addrs, cfg).unwrap()
+}
+
+fn sample_req(method: &str, seed: u64) -> Request {
+    Request::Sample(
+        SampleRequest::builder()
+            .dataset("hawkes")
+            .encoder("thp")
+            .method(method)
+            .gamma(5)
+            .t_end(2.0)
+            .seed(seed)
+            .build(),
+    )
+}
+
+fn load(c: &std::sync::atomic::AtomicUsize) -> usize {
+    c.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+/// Spin until `f` holds (prober/scheduler threads run asynchronously).
+fn poll(what: &str, mut f: impl FnMut() -> bool) {
+    let t0 = std::time::Instant::now();
+    while !f() {
+        assert!(t0.elapsed() < Duration::from_secs(60), "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Seeded requests are byte-identical through a 1-backend proxy, a
+/// 3-backend proxy, and a direct replica connection — consistent routing
+/// never touches sampler RNG. Fleet requests decompose through the proxy
+/// exactly like they do against a single server: sequence `i` equals a
+/// single sample seeded `seed + i`.
+#[test]
+fn proxy_is_bit_identical_one_vs_three_replicas() {
+    let replicas = [spawn_replica(), spawn_replica(), spawn_replica()];
+    let proxy3 = spawn_proxy(&replicas);
+    let proxy1 = spawn_proxy(&replicas[..1]);
+    let shard3 = proxy3.shard();
+    let p3 = proxy3.addr;
+    let p1 = proxy1.addr;
+    std::thread::spawn(move || proxy3.serve());
+    std::thread::spawn(move || proxy1.serve());
+
+    let mut via3 = Client::connect(p3).unwrap();
+    let mut via1 = Client::connect(p1).unwrap();
+    let mut direct = Client::connect(replicas[0]).unwrap();
+
+    // the proxy identifies itself on ping but is otherwise transparent
+    let pong = via3.call(&Request::Ping).unwrap();
+    assert!(pong.contains("\"pong\":true") && pong.contains("\"proxy\":true"), "{pong}");
+    assert!(pong.contains("\"backends\":3") && pong.contains("\"healthy\":3"), "{pong}");
+
+    let mut sent = 0usize;
+    for method in ["ar", "sd"] {
+        for seed in [11u64, 12] {
+            let req = sample_req(method, seed);
+            let (a, _) = parse_response(&via3.call(&req).unwrap()).unwrap();
+            let (b, _) = parse_response(&via1.call(&req).unwrap()).unwrap();
+            let (c, _) = parse_response(&direct.call(&req).unwrap()).unwrap();
+            assert!(!a.is_empty(), "{method}/{seed}: degenerate sample");
+            assert_eq!(a, b, "{method}/{seed}: 3-replica vs 1-replica proxy");
+            assert_eq!(a, c, "{method}/{seed}: proxy vs direct");
+            sent += 3; // via3 + via1 + per-proxy bookkeeping below
+        }
+    }
+
+    // v2 merged op through the proxy: n_seq sequences == singles seed+i
+    let fleet = Request::Sample(
+        SampleRequest::builder()
+            .dataset("hawkes")
+            .encoder("thp")
+            .method("sd")
+            .gamma(5)
+            .t_end(2.0)
+            .seed(40)
+            .n_seq(3)
+            .build(),
+    );
+    let sequences = parse_fleet_response(&via3.call(&fleet).unwrap()).unwrap();
+    assert_eq!(sequences.len(), 3);
+    for (i, seq) in sequences.iter().enumerate() {
+        let (single, _) = parse_response(&via3.call(&sample_req("sd", 40 + i as u64)).unwrap())
+            .unwrap();
+        assert_eq!(seq, &single, "fleet sequence {i} vs proxied single");
+    }
+
+    // all replicas healthy: everything routed, nothing spilled/failed over
+    let s = shard3.stats();
+    // via3 carried: 4 method/seed samples + 1 fleet + 3 singles = 8
+    assert_eq!(load(&s.routed), 8, "sent {sent} total across proxies");
+    assert_eq!(load(&s.spilled), 0);
+    assert_eq!(load(&s.failovers), 0);
+    assert_eq!(load(&s.upstream_errors), 0);
+    assert_eq!(load(&s.ejections), 0);
+    let served: usize = shard3.backends().iter().map(|b| load(&b.served)).sum();
+    assert_eq!(served, 8, "every routed request served by exactly one replica");
+    // consistent routing: one (dataset,encoder,draft_size) key, one home
+    let home = home_index(route_key("hawkes", "thp", "draft"), 3);
+    assert_eq!(load(&shard3.backends()[home].served), 8, "all requests share one home");
+}
+
+/// Failover oracle: the home replica is a `die=1` chaos server whose
+/// executors die on first use, answering every sample with a structured
+/// `err=failed`. The proxy must retry each request on a healthy replica
+/// and return events bit-identical to a clean run — and the `ShardStats`
+/// must reconcile exactly: every request routed once, failed over once,
+/// with zero spills or ejections (the home keeps *answering*, so only
+/// the prober may eject it — and the prober is off here).
+#[test]
+fn failover_under_die_chaos_is_exact_and_reconciles() {
+    let home = home_index(route_key("hawkes", "thp", "draft"), 3);
+    let mut replicas = [spawn_replica(), spawn_replica(), spawn_replica()];
+    replicas[home] = spawn_chaotic_replica("seed=1,die=1");
+
+    let proxy = spawn_proxy(&replicas);
+    let shard = proxy.shard();
+    let addr = proxy.addr;
+    std::thread::spawn(move || proxy.serve());
+
+    // clean reference replica, outside the proxy's routing set
+    let reference = spawn_replica();
+    let mut refcli = Client::connect(reference).unwrap();
+    let mut cli = Client::connect(addr).unwrap();
+
+    let seeds = [21u64, 22, 23];
+    for &seed in &seeds {
+        let req = sample_req("sd", seed);
+        let (got, _) = parse_response(&cli.call(&req).unwrap()).unwrap();
+        let (want, _) = parse_response(&refcli.call(&req).unwrap()).unwrap();
+        assert!(!want.is_empty(), "seed {seed}: degenerate reference");
+        assert_eq!(got, want, "seed {seed}: failover changed the events");
+    }
+
+    let s = shard.stats();
+    assert_eq!(load(&s.routed), seeds.len());
+    assert_eq!(load(&s.failovers), seeds.len(), "home fails once per request");
+    assert_eq!(load(&s.upstream_errors), seeds.len());
+    assert_eq!(load(&s.spilled), 0);
+    assert_eq!(load(&s.ejections), 0, "a replica that answers is the prober's call");
+    assert!(shard.backends()[home].healthy(), "structured failures must not eject");
+    assert_eq!(load(&shard.backends()[home].errors), seeds.len());
+    assert_eq!(load(&shard.backends()[home].served), 0);
+    let served: usize =
+        shard.backends().iter().map(|b| load(&b.served)).sum();
+    assert_eq!(served, seeds.len(), "each request served exactly once elsewhere");
+}
+
+/// Read one scheduler counter from a replica's `stats` response.
+fn sched_counter(resp: &str, key: &str) -> Option<f64> {
+    let j = Json::parse(resp).unwrap();
+    let entries = j.path("schedulers").and_then(Json::as_arr)?;
+    entries.first().and_then(|e| e.f64_at(&format!("stats.{key}")))
+}
+
+/// Spill-to-least-loaded: the home replica is saturated (max_live 1,
+/// queue depth 1, slow forwards), so its admission control sheds the
+/// proxied request with `err=overloaded` — and the proxy re-sends it to
+/// the other replica instead of bouncing the overload to the client.
+#[test]
+fn overloaded_home_spills_to_other_replica() {
+    let home = home_index(route_key("hawkes", "thp", "draft"), 2);
+    // slow forwards + tiny admission limits: two direct requests saturate
+    // the home (one admitted, one queued)
+    let saturated = spawn_chaotic_replica_with(
+        "seed=3,delay=1,delay-ms=200",
+        SchedulerCfg::builder().max_live(1).queue_depth(1).build(),
+    );
+    let mut replicas = [spawn_replica(), spawn_replica()];
+    replicas[home] = saturated;
+
+    let proxy = spawn_proxy(&replicas);
+    let shard = proxy.shard();
+    let addr = proxy.addr;
+    std::thread::spawn(move || proxy.serve());
+
+    // occupy the home directly (not through the proxy): A admitted, B queued
+    let occupy = |seed: u64| {
+        std::thread::spawn(move || {
+            Client::connect(saturated).unwrap().call(&sample_req("ar", seed)).unwrap()
+        })
+    };
+    let a = occupy(31);
+    let mut probe = Client::connect(saturated).unwrap();
+    poll("A admitted", || {
+        sched_counter(&probe.call(&Request::Stats).unwrap(), "admitted") == Some(1.0)
+    });
+    let b = occupy(32);
+    poll("B queued", || {
+        sched_counter(&probe.call(&Request::Stats).unwrap(), "queued") == Some(1.0)
+    });
+
+    // the proxied request hits the full queue at home, spills, succeeds
+    let mut cli = Client::connect(addr).unwrap();
+    let req = sample_req("ar", 33);
+    let (got, _) = parse_response(&cli.call(&req).unwrap()).unwrap();
+    let other = replicas[1 - home];
+    let (want, _) =
+        parse_response(&Client::connect(other).unwrap().call(&req).unwrap()).unwrap();
+    assert!(!want.is_empty(), "degenerate spill sample");
+    assert_eq!(got, want, "the spilled request's events moved");
+
+    let s = shard.stats();
+    assert_eq!(load(&s.routed), 1);
+    assert_eq!(load(&s.spilled), 1, "exactly one spill off the saturated home");
+    assert_eq!(load(&s.failovers), 0, "a spill is not a failover");
+    assert_eq!(load(&s.upstream_errors), 0, "overload is not a replica failure");
+    assert!(shard.backends()[home].healthy());
+    assert_eq!(load(&shard.backends()[1 - home].served), 1);
+
+    // the occupancy requests drain normally afterwards
+    assert!(a.join().unwrap().contains("\"ok\":true"));
+    assert!(b.join().unwrap().contains("\"ok\":true"));
+}
+
+/// `stats`/`metrics` fan out: per-backend sections embedding each
+/// replica's own response, merged scheduler counters, and the shard's
+/// counter block — the aggregation shape operators script against.
+#[test]
+fn stats_and_metrics_fan_out_and_aggregate() {
+    let replicas = [spawn_replica(), spawn_replica()];
+    let proxy = spawn_proxy(&replicas);
+    let addr = proxy.addr;
+    std::thread::spawn(move || proxy.serve());
+    let mut cli = Client::connect(addr).unwrap();
+
+    // one sample through the proxy so some replica has a scheduler
+    parse_response(&cli.call(&sample_req("sd", 50)).unwrap()).unwrap();
+
+    let resp = cli.call(&Request::Stats).unwrap();
+    let j = Json::parse(&resp).unwrap();
+    assert_eq!(j.bool_at("ok"), Some(true), "{resp}");
+    let sections = j.path("backends").and_then(Json::as_arr).expect("backends array");
+    assert_eq!(sections.len(), 2, "one section per replica");
+    for sec in sections {
+        assert!(sec.str_at("addr").is_some());
+        assert_eq!(sec.bool_at("healthy"), Some(true));
+        assert_eq!(sec.bool_at("ok"), Some(true));
+        // the embedded response is the replica's own full stats payload
+        assert_eq!(sec.bool_at("response.ok"), Some(true));
+        assert!(sec.path("response.executors").is_some(), "{sec:?}");
+    }
+    // merged scheduler counters: the sample above completed somewhere
+    assert_eq!(j.f64_at("schedulers_merged.completed"), Some(1.0), "{resp}");
+    assert!(j.f64_at("schedulers_merged.pairs").unwrap_or(0.0) >= 1.0);
+    assert!(j.f64_at("schedulers_merged.max_live").unwrap_or(0.0) >= 1.0);
+    // the shard's own counters ride along
+    assert_eq!(j.f64_at("shard.routed"), Some(1.0));
+    assert_eq!(j.f64_at("shard.fanouts"), Some(1.0));
+    assert_eq!(j.f64_at("shard.healthy"), Some(2.0));
+
+    // metrics fans out the same way, embedding telemetry per replica
+    let resp = cli.call(&Request::Metrics { delta: false }).unwrap();
+    let j = Json::parse(&resp).unwrap();
+    assert_eq!(j.bool_at("ok"), Some(true), "{resp}");
+    let sections = j.path("backends").and_then(Json::as_arr).expect("backends array");
+    assert_eq!(sections.len(), 2);
+    assert!(
+        sections.iter().any(|s| s.path("response.telemetry").is_some()),
+        "no replica telemetry embedded: {resp}"
+    );
+    assert_eq!(j.f64_at("shard.fanouts"), Some(2.0));
+}
+
+/// Health ejection and re-admission over the wire: a dead backend address
+/// is ejected after `eject_after` failed probes (sample traffic keeps
+/// flowing via failover), and a replica that comes back on that address
+/// is re-admitted by one successful probe.
+#[test]
+fn prober_ejects_dead_backend_and_readmits_on_recovery() {
+    // reserve a port, then free it — the "dead replica" address
+    let parked = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let dead = parked.local_addr().unwrap();
+    drop(parked);
+
+    let live = spawn_replica();
+    let addrs = vec![live.to_string(), dead.to_string()];
+    let cfg = ShardCfg::builder()
+        .health_interval(Duration::from_millis(25))
+        .eject_after(2)
+        .connect_timeout(Duration::from_millis(200))
+        .build();
+    let proxy = ProxyServer::bind("127.0.0.1:0", &addrs, cfg).unwrap();
+    let shard = proxy.shard();
+    let addr = proxy.addr;
+    std::thread::spawn(move || proxy.serve());
+
+    poll("ejection", || load(&shard.stats().ejections) >= 1);
+    assert_eq!(shard.healthy_count(), 1);
+    assert!(!shard.backends()[1].healthy());
+
+    // sample traffic flows regardless (failover covers the dead home case)
+    let mut cli = Client::connect(addr).unwrap();
+    let (events, _) = parse_response(&cli.call(&sample_req("sd", 60)).unwrap()).unwrap();
+    assert!(!events.is_empty(), "degenerate sample during ejection");
+
+    // the replica comes back on the same address: one good probe re-admits
+    let server = Server::bind(backend(), &dead.to_string(), 8, Duration::from_millis(1))
+        .expect("rebind the parked port");
+    std::thread::spawn(move || server.serve());
+    poll("re-admission", || load(&shard.stats().readmissions) >= 1);
+    assert_eq!(shard.healthy_count(), 2);
+    assert!(shard.backends()[1].healthy());
+}
+
+/// Failover budget exhaustion: when every replica answers a structured
+/// replica-local failure, the proxy reports `err=upstream_exhausted`
+/// (with the last failure's detail), not a raw upstream error.
+#[test]
+fn exhausted_failover_budget_reports_upstream_exhausted() {
+    let replicas = [
+        spawn_chaotic_replica("seed=5,die=1"),
+        spawn_chaotic_replica("seed=6,die=1"),
+    ];
+    let proxy = spawn_proxy(&replicas);
+    let addr = proxy.addr;
+    std::thread::spawn(move || proxy.serve());
+    let mut cli = Client::connect(addr).unwrap();
+    let resp = cli.call(&sample_req("sd", 70)).unwrap();
+    assert!(resp.contains("\"ok\":false"), "{resp}");
+    assert!(resp.contains("\"err\":\"upstream_exhausted\""), "{resp}");
+    // the connection survives the failure
+    assert!(cli.call(&Request::Ping).unwrap().contains("pong"));
+}
+
+/// Deterministic verdicts pass through verbatim: `bad_request` (here: an
+/// unknown dataset) must not be retried on other replicas — every
+/// replica would answer it identically.
+#[test]
+fn bad_requests_are_not_retried() {
+    let replicas = [spawn_replica(), spawn_replica()];
+    let proxy = spawn_proxy(&replicas);
+    let shard = proxy.shard();
+    let addr = proxy.addr;
+    std::thread::spawn(move || proxy.serve());
+    let mut cli = Client::connect(addr).unwrap();
+    let req = Request::Sample(SampleRequest::builder().dataset("bogus").build());
+    let resp = cli.call(&req).unwrap();
+    assert!(resp.contains("\"err\":\"bad_request\""), "{resp}");
+    assert_eq!(load(&shard.stats().failovers), 0, "deterministic verdicts never retry");
+    assert_eq!(load(&shard.stats().upstream_errors), 0, "a client mistake is not a replica failure");
+    assert!(shard.backends().iter().all(|b| b.healthy()));
+}
